@@ -1,0 +1,88 @@
+//! Constellation tour: exercises the orbital substrate on its own.
+//!
+//! Prints the paper-shell Walker constellation, ground-station visibility
+//! windows over one orbital period, and how satellite clusters (Eq. 13–15)
+//! decay as the constellation rotates — the churn that drives FedHC's
+//! re-clustering trigger.
+
+use fedhc::clustering::kmeans::KMeans;
+use fedhc::clustering::recluster::changed_members;
+use fedhc::orbit::geo::default_ground_segment;
+use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::visibility::{visible_sats, windows};
+use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::util::Rng;
+
+fn main() {
+    let walker = WalkerConstellation::paper_shell(8, 12);
+    let c = Constellation::from_walker(&walker);
+    let period = c.min_period();
+    println!(
+        "Walker shell: {} sats, {} planes × {} slots, alt 1300 km, incl 53°",
+        c.len(),
+        walker.planes,
+        walker.sats_per_plane
+    );
+    println!(
+        "orbital period: {:.1} min, speed {:.2} km/s\n",
+        period / 60.0,
+        c.elements[0].speed() / 1e3
+    );
+
+    // ground-station visibility
+    for gs in default_ground_segment() {
+        let now = visible_sats(&gs, &c, 0.0);
+        let ws = windows(&gs, &c, 0.0, period, 30.0);
+        let mean_pass = if ws.is_empty() {
+            0.0
+        } else {
+            ws.iter().map(|w| w.duration()).sum::<f64>() / ws.len() as f64
+        };
+        println!(
+            "{:<10} ({:>6.1}°, {:>7.1}°): sees {:>2} sats now; {:>3} passes/orbit, mean {:>5.1} min",
+            gs.name,
+            gs.lat_deg,
+            gs.lon_deg,
+            now.len(),
+            ws.len(),
+            mean_pass / 60.0
+        );
+    }
+
+    // cluster decay over a quarter orbit
+    println!("\ncluster decay (K=5, Eq. 13–15 clustering frozen at t=0):");
+    let mut rng = Rng::new(7);
+    let feats0 = c.snapshot(0.0).features_km();
+    let res = KMeans::new(5).run(&feats0, &mut rng);
+    println!("  t=0: sizes {:?}, inertia {:.0}", res.sizes(), res.inertia);
+    for pct in [5, 10, 15, 20, 25] {
+        let t = period * pct as f64 / 100.0;
+        let feats = c.snapshot(t).features_km();
+        // natural assignment at time t against the frozen centroids
+        let natural: Vec<usize> = feats
+            .iter()
+            .map(|f| {
+                (0..5)
+                    .min_by(|&a, &b| {
+                        let da: f64 = (0..3)
+                            .map(|d| (f[d] - res.centroids[a][d]).powi(2))
+                            .sum();
+                        let db: f64 = (0..3)
+                            .map(|d| (f[d] - res.centroids[b][d]).powi(2))
+                            .sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        let moved = changed_members(&res.assignment, &natural).len();
+        println!(
+            "  t={:>4.1} min: {:>2}/{} satellites drifted out of their cluster ({:.0}% dropout)",
+            t / 60.0,
+            moved,
+            c.len(),
+            100.0 * moved as f64 / c.len() as f64
+        );
+    }
+    println!("\n(a dropout rate above Z triggers FedHC's re-clustering + MAML warm start)");
+}

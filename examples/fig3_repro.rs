@@ -1,0 +1,80 @@
+//! Fig. 3 reproduction: accuracy vs training round for the four methods
+//! under K ∈ {3,4,5}, fixed round budget (no early stop).
+//!
+//!     cargo run --release --example fig3_repro [tiny|mnist|cifar10] [rounds]
+//!
+//! Each (method, K) series runs in its own thread; the series are printed
+//! as aligned tables and written to results/ as CSV for plotting.
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::metrics::recorder::write_series;
+use fedhc::metrics::report::format_fig3;
+use fedhc::metrics::Ledger;
+use fedhc::runtime::{Manifest, ModelRuntime};
+use std::path::Path;
+
+const METHODS: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
+
+fn run_series(cfg: ExperimentConfig, method: &'static str) -> anyhow::Result<Ledger> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let rt = ModelRuntime::load(&manifest, cfg.variant())?;
+    let mut trial = Trial::new(cfg, &manifest, &rt)?;
+    let res = match method {
+        "C-FedAvg" => run_cfedavg(&mut trial)?,
+        "H-BASE" => run_clustered(&mut trial, Strategy::hbase())?,
+        "FedCE" => run_clustered(&mut trial, Strategy::fedce())?,
+        "FedHC" => run_clustered(&mut trial, Strategy::fedhc())?,
+        _ => unreachable!(),
+    };
+    Ok(res.ledger)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(|s| s.as_str()).unwrap_or("tiny");
+    let mut base = ExperimentConfig::preset(preset).expect("unknown preset");
+    base.target_accuracy = None;
+    if let Some(r) = args.get(1).and_then(|s| s.parse().ok()) {
+        base.rounds = r;
+    } else if preset == "tiny" {
+        base.rounds = 20;
+    } else {
+        // single-core-image scale (see table1_repro)
+        base.clients = 16;
+        base.train_samples = 4096;
+        base.test_samples = 256;
+        base.rounds = 20;
+        base.eval_batches = 2;
+        base.lr = 0.15;
+        base.dirichlet_alpha = 1.0;
+    }
+
+    for k in [3usize, 4, 5] {
+        eprintln!("fig3: K={k} ...");
+        let mut handles = Vec::new();
+        for &method in METHODS {
+            let mut cfg = base.clone();
+            cfg.clusters = k;
+            handles.push((method, std::thread::spawn(move || run_series(cfg, method))));
+        }
+        let mut ledgers = Vec::new();
+        for (method, h) in handles {
+            ledgers.push((method, h.join().expect("worker panicked")?));
+        }
+        let series: Vec<(&str, &Ledger)> = ledgers.iter().map(|(n, l)| (*n, l)).collect();
+        let every = (base.rounds / 10).max(1);
+        println!("{}", format_fig3(base.dataset.name(), k, &series, every));
+        for (name, ledger) in &ledgers {
+            let stem = format!(
+                "fig3_{}_{}_k{k}",
+                name.to_lowercase().replace('-', ""),
+                base.dataset.name()
+            );
+            write_series(ledger, Path::new("results"), &stem)?;
+        }
+    }
+    eprintln!("series written under results/");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Table I reproduction: time + energy to target accuracy for all four
+//! methods × K ∈ {3,4,5} on one dataset.
+//!
+//!     cargo run --release --example table1_repro [tiny|mnist|cifar10] [--fast]
+//!
+//! Configurations are independent, so each (method, K) cell runs in its own
+//! OS thread with its own PJRT runtime (the xla client is not Sync).
+//! `--fast` shrinks the workload so the table regenerates in minutes; the
+//! full preset matches EXPERIMENTS.md.
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::metrics::report::{format_table1, TimeEnergy};
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+const METHODS: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
+
+fn run_cell(cfg: ExperimentConfig, method: &'static str) -> anyhow::Result<TimeEnergy> {
+    // per-thread runtime: the PJRT client is thread-local by construction
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let rt = ModelRuntime::load(&manifest, cfg.variant())?;
+    let mut trial = Trial::new(cfg, &manifest, &rt)?;
+    let res = match method {
+        "C-FedAvg" => run_cfedavg(&mut trial)?,
+        "H-BASE" => run_clustered(&mut trial, Strategy::hbase())?,
+        "FedCE" => run_clustered(&mut trial, Strategy::fedce())?,
+        "FedHC" => run_clustered(&mut trial, Strategy::fedhc())?,
+        _ => unreachable!(),
+    };
+    Ok(match res.converged_at {
+        Some((_, t, e)) => TimeEnergy { time_s: t, energy_j: e, converged: true },
+        None => TimeEnergy {
+            time_s: res.ledger.time_s,
+            energy_j: res.ledger.energy_j,
+            converged: false,
+        },
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .map(|s| s.as_str())
+        .unwrap_or("tiny");
+    let fast = args.iter().any(|a| a == "--fast") || preset == "tiny";
+    let mut base = ExperimentConfig::preset(preset).expect("unknown preset");
+    if preset == "tiny" {
+        base.target_accuracy = Some(0.6);
+        base.rounds = 40;
+    }
+    if fast && preset != "tiny" {
+        // single-core-image scale: 16 clients × 256 samples; the target is
+        // lowered with the scale (fewer clients → noisier aggregate) — the
+        // paper-scale run is the default (no --fast) configuration
+        base.clients = 16;
+        base.train_samples = 4096;
+        base.test_samples = 256;
+        base.rounds = 25;
+        base.eval_batches = 2;
+        base.lr = 0.15;
+        base.dirichlet_alpha = 1.0;
+        base.target_accuracy = Some(if base.dataset == fedhc::data::DatasetKind::Cifar10 {
+            0.30
+        } else {
+            0.60
+        });
+    }
+    // optional positional round budget: table1_repro mnist --fast 15
+    if let Some(r) = args.iter().filter_map(|a| a.parse::<usize>().ok()).next() {
+        base.rounds = r;
+    }
+    let ks = [3usize, 4, 5];
+    let target = base.target_accuracy.unwrap_or(0.8);
+    eprintln!(
+        "table1 ({preset}{}): {} methods × K={ks:?}, target {:.0}%",
+        if fast { ", fast" } else { "" },
+        METHODS.len(),
+        target * 100.0
+    );
+
+    // spawn one thread per cell
+    let mut handles = Vec::new();
+    for &method in METHODS {
+        for &k in &ks {
+            let mut cfg = base.clone();
+            cfg.clusters = k;
+            handles.push((
+                method,
+                k,
+                std::thread::spawn(move || run_cell(cfg, method)),
+            ));
+        }
+    }
+    let mut cells: std::collections::BTreeMap<(&str, usize), TimeEnergy> = Default::default();
+    for (method, k, h) in handles {
+        let cell = h.join().expect("worker panicked")?;
+        eprintln!(
+            "  {method:<9} K={k}: t={:.0}s e={:.0}J{}",
+            cell.time_s,
+            cell.energy_j,
+            if cell.converged { "" } else { " (budget)" }
+        );
+        cells.insert((method, k), cell);
+    }
+
+    let rows: Vec<(&str, Vec<TimeEnergy>)> = METHODS
+        .iter()
+        .map(|&m| (m, ks.iter().map(|&k| cells[&(m, k)]).collect()))
+        .collect();
+    println!("\n{}", format_table1(base.dataset.name(), target, &ks, &rows));
+    Ok(())
+}

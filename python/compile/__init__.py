@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime — `make artifacts` runs
+`compile.aot` once, and the Rust coordinator only touches the HLO text and
+manifest it emits.
+"""

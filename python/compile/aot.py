@@ -1,0 +1,125 @@
+"""AOT lowering: every L2 entry point × model variant → HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id protos, while
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under ``--out`` (default ``../artifacts``):
+  <variant>_<entry>.hlo.txt   one per entry point
+  init_<variant>.bin          initial flat parameters, little-endian f32
+  manifest.json               shapes/dtypes/param counts for the Rust loader
+
+Run via ``make artifacts``; python never runs after that.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .maml import make_maml_step
+from .models import VARIANTS, ModelSpec
+from .train import CHUNK_STEPS, make_eval_step, make_train_chunk, make_train_step
+from .kernels.aggregate import aggregate
+
+# aggregation stack height fixed at AOT time (coordinator zero-pads)
+AGG_SLOTS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def entry_points(spec: ModelSpec):
+    """(name, fn, input_shapes, output_shapes) per entry point."""
+    p = spec.param_count
+    b = spec.batch
+    d = spec.input_chw[0] * spec.input_chw[1] * spec.input_chw[2]
+    s = CHUNK_STEPS
+    return [
+        ("train_step", make_train_step(spec),
+         [(p,), (b, d), (b,), (1,)], [(p,), ()]),
+        ("train_chunk", make_train_chunk(spec),
+         [(p,), (s, b, d), (s, b), (1,)], [(p,), ()]),
+        ("eval_step", make_eval_step(spec),
+         [(p,), (b, d), (b,)], [(), ()]),
+        ("maml_step", make_maml_step(spec),
+         [(p,), (b, d), (b,), (b, d), (b,), (1,), (1,)], [(p,), ()]),
+        ("aggregate", lambda stack, w: (aggregate(stack, w),),
+         [(AGG_SLOTS, p), (AGG_SLOTS,)], [(p,)]),
+    ]
+
+
+def lower_variant(spec: ModelSpec, out_dir: str, manifest: dict) -> None:
+    entries = {}
+    for name, fn, in_shapes, out_shapes in entry_points(spec):
+        args = [spec_f32(*s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{spec.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": [list(s) for s in in_shapes],
+            "outputs": [list(s) for s in out_shapes],
+        }
+        print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+
+    init = spec.init(seed=0)
+    init_file = f"init_{spec.name}.bin"
+    with open(os.path.join(out_dir, init_file), "wb") as f:
+        import numpy as np
+        f.write(np.asarray(init, dtype="<f4").tobytes())
+
+    manifest["variants"][spec.name] = {
+        "param_count": spec.param_count,
+        "batch": spec.batch,
+        "chunk_steps": CHUNK_STEPS,
+        "agg_slots": AGG_SLOTS,
+        "input_chw": list(spec.input_chw),
+        "classes": spec.classes,
+        "init_file": init_file,
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(VARIANTS.keys()),
+                    help="comma-separated subset to lower")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    # merge with an existing manifest so per-variant lowering composes
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    else:
+        manifest = {"format": 1, "chunk_steps": CHUNK_STEPS,
+                    "agg_slots": AGG_SLOTS, "variants": {}}
+    for name in args.variants.split(","):
+        spec = VARIANTS[name]
+        print(f"lowering {name} (P={spec.param_count})", file=sys.stderr)
+        lower_variant(spec, args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}/manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .aggregate import aggregate
+from .dense import dense
+from .matmul import matmul
+from .sgd import sgd_update
+
+__all__ = ["aggregate", "dense", "matmul", "sgd_update"]

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: weighted parameter aggregation (paper Eq. 5 / Eq. 12).
+
+Given a stack of client parameter vectors ``stack[N, P]`` and aggregation
+weights ``w[N]`` (already normalised by the coordinator — data-size weights
+for FedAvg, inverse-loss quality weights for FedHC), produce the aggregated
+vector ``out[P] = w @ stack``.
+
+Grid tiles the parameter axis: each program instance holds an (N, bp)
+panel of the stack and the full weight vector in VMEM and contracts on the
+MXU. N is fixed at AOT time (the coordinator zero-pads weights for smaller
+clusters, which is exact since padded weights are 0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _ceil_to
+
+DEFAULT_BP = 4096
+
+
+def _agg_kernel(stack_ref, w_ref, o_ref):
+    # (N, bp) contracted with (N,) -> (bp,)
+    o_ref[...] = jnp.dot(w_ref[...], stack_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def aggregate(stack, w, bp: int = DEFAULT_BP):
+    """``w @ stack`` for ``stack[N, P]``, ``w[N]`` → ``[P]``."""
+    n, p = stack.shape
+    assert w.shape == (n,)
+    bp = min(bp, _ceil_to(p, 8))
+    pp = _ceil_to(p, bp)
+    sp = jnp.pad(stack, ((0, 0), (0, pp - p))) if pp != p else stack
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(sp, w)
+    return out[:p] if pp != p else out

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: tiled matrix multiply.
+
+The workhorse behind every dense layer in the L2 model (forward *and*
+backward — see ``dense.py``). The grid tiles the output matrix; each
+program instance keeps an (bm, K) row-panel of ``x`` and a (K, bn)
+column-panel of ``w`` resident in VMEM and contracts them on the MXU
+(``jnp.dot`` with float32 accumulation).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): block sizes default to
+128×128 — the MXU systolic-array native tile — and the K panel streams
+through VMEM via the BlockSpec index map. On this CPU image the kernel
+runs under ``interpret=True`` (real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. Shapes smaller than a tile collapse to a single program
+# instance (the wrapper pads, see `matmul`).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, w, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """``x @ w`` for 2-D float32 operands via the Pallas kernel.
+
+    Arbitrary (M, K) @ (K, N): operands are zero-padded to tile multiples,
+    the kernel runs on the padded grid, and the result is sliced back.
+    Zero padding is exact for matmul (no renormalisation needed).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def vmem_bytes(m: int, k: int, n: int, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN) -> int:
+    """Estimated per-instance VMEM footprint of the kernel in bytes
+    (x panel + w panel + output tile, f32). Used by the §Perf analysis."""
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    return 4 * (bm * k + k * bn + bm * bn)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every L1 kernel — the build-time correctness signal.
+
+Each function computes the same quantity as its Pallas counterpart with
+plain jax.numpy; pytest asserts allclose across shape/dtype sweeps
+(``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dense_ref(x, w, b, activation: str = "relu"):
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        z = jnp.maximum(z, 0.0)
+    return z
+
+
+def dense_grads_ref(x, w, b, dy, activation: str = "relu"):
+    """Reference VJP of the dense layer."""
+    z = jnp.dot(x, w) + b[None, :]
+    if activation == "relu":
+        dz = dy * (z > 0.0).astype(dy.dtype)
+    else:
+        dz = dy
+    return dz @ w.T, x.T @ dz, jnp.sum(dz, axis=0)
+
+
+def aggregate_ref(stack, w):
+    return jnp.dot(w, stack, preferred_element_type=jnp.float32)
+
+
+def sgd_ref(w, g, lr):
+    return w - lr[0] * g

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: fused SGD update ``w' = w - lr * g`` (paper Eq. 4).
+
+Element-wise over the flat parameter vector, tiled so each program
+instance updates one VMEM-resident block. The learning rate arrives as a
+length-1 array so it stays a runtime input (no re-AOT for lr sweeps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _ceil_to
+
+DEFAULT_BP = 8192
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def sgd_update(w, g, lr, bp: int = DEFAULT_BP):
+    """``w - lr[0] * g`` for flat f32 vectors ``w``, ``g`` and ``lr[1]``."""
+    (p,) = w.shape
+    assert g.shape == (p,)
+    assert lr.shape == (1,)
+    bp = min(bp, _ceil_to(p, 8))
+    pp = _ceil_to(p, bp)
+    wp = jnp.pad(w, (0, pp - p)) if pp != p else w
+    gp = jnp.pad(g, (0, pp - p)) if pp != p else g
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(wp, gp, lr)
+    return out[:p] if pp != p else out

@@ -1,0 +1,38 @@
+"""L2 MAML graphs (paper §III-C, Eq. 16–17).
+
+First-order MAML (FOMAML): the inner loop adapts the global model on the
+satellite's support data (Eq. 16, via the Pallas SGD kernel); the outer
+meta-update applies the gradient of the *query* loss evaluated at the
+adapted parameters (Eq. 17 with the first-order approximation — the
+standard practical choice; second-order terms are dropped, which Finn et
+al. showed costs little accuracy and which avoids double-backward through
+the custom-VJP dense kernels).
+
+The coordinator calls ``maml_step`` once per newly-(re)assigned satellite
+after a re-clustering event, using the new cluster PS's recent batch as the
+support set and the satellite's own data as the query set.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sgd import sgd_update
+from .models import ModelSpec
+from .train import make_loss
+
+
+def make_maml_step(spec: ModelSpec):
+    """(params[P], sx[B,D], sy[B], qx[B,D], qy[B], alpha[1], beta[1])
+    -> (params'[P], query_loss[])."""
+    loss_fn = make_loss(spec)
+
+    def maml_step(flat, sx, sy, qx, qy, alpha, beta):
+        # inner-loop adaptation on the support task (Eq. 16)
+        g_inner = jax.grad(loss_fn)(flat, sx, sy)
+        adapted = sgd_update(flat, g_inner, alpha)
+        # outer meta-update from the query loss at the adapted params (Eq. 17, FO)
+        q_loss, g_outer = jax.value_and_grad(loss_fn)(adapted, qx, qy)
+        new = sgd_update(flat, g_outer, beta)
+        return new, q_loss
+
+    return maml_step

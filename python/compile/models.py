@@ -1,0 +1,122 @@
+"""L2 model definitions: LeNet-5 and an MLP over flat parameter vectors.
+
+Parameters cross the Rust↔HLO boundary as a single flat f32 vector, so the
+model is defined by a *spec*: an ordered list of (name, shape) arrays plus
+pure functions ``apply(flat_params, x_flat) -> logits``. Convolutions use
+``lax.conv_general_dilated`` (XLA-native, fused by the compiler); every
+dense layer goes through the L1 Pallas ``dense`` kernel, which therefore
+sits on the forward AND backward hot path of all three model variants.
+"""
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import dense
+
+
+class ModelSpec:
+    """Ordered parameter layout + apply function for one model variant."""
+
+    def __init__(self, name: str, input_chw: Tuple[int, int, int], classes: int,
+                 shapes: List[Tuple[str, Tuple[int, ...]]], batch: int):
+        self.name = name
+        self.input_chw = input_chw
+        self.classes = classes
+        self.shapes = shapes
+        self.batch = batch
+        self.sizes = [int(math.prod(s)) for _, s in shapes]
+        self.param_count = sum(self.sizes)
+
+    def unflatten(self, flat):
+        """Split the flat vector into the named arrays."""
+        out = {}
+        off = 0
+        for (name, shape), size in zip(self.shapes, self.sizes):
+            out[name] = flat[off:off + size].reshape(shape)
+            off += size
+        return out
+
+    def init(self, seed: int):
+        """He-uniform init, returned as the flat vector (numpy for AOT dump)."""
+        key = jax.random.PRNGKey(seed)
+        parts = []
+        for name, shape in self.shapes:
+            key, sub = jax.random.split(key)
+            if name.endswith("_b"):
+                parts.append(jnp.zeros(shape, jnp.float32))
+            else:
+                fan_in = int(math.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+                bound = math.sqrt(6.0 / max(fan_in, 1))
+                parts.append(jax.random.uniform(sub, shape, jnp.float32, -bound, bound))
+        return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+def _conv(x, w, b):
+    """NCHW valid conv + bias + relu."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    y = y + b[None, :, None, None]
+    return jnp.maximum(y, 0.0)
+
+
+def _avgpool2(x):
+    """2x2 average pool, NCHW."""
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID") * 0.25
+
+
+def lenet_spec(name: str, in_ch: int, side: int, batch: int) -> ModelSpec:
+    """LeNet-5 (paper's model): conv(6,5x5) → pool → conv(16,5x5) → pool →
+    fc120 → fc84 → fc10. 61,706 params for MNIST geometry."""
+    s1 = side - 4          # after conv1 (valid 5x5)
+    s2 = s1 // 2           # after pool
+    s3 = s2 - 4            # after conv2
+    s4 = s3 // 2           # after pool
+    flat = 16 * s4 * s4
+    shapes = [
+        ("conv1_w", (6, in_ch, 5, 5)), ("conv1_b", (6,)),
+        ("conv2_w", (16, 6, 5, 5)), ("conv2_b", (16,)),
+        ("fc1_w", (flat, 120)), ("fc1_b", (120,)),
+        ("fc2_w", (120, 84)), ("fc2_b", (84,)),
+        ("fc3_w", (84, 10)), ("fc3_b", (10,)),
+    ]
+    return ModelSpec(name, (in_ch, side, side), 10, shapes, batch)
+
+
+def mlp_spec(name: str, in_dim: int, hidden: int, batch: int, side: int) -> ModelSpec:
+    shapes = [
+        ("fc1_w", (in_dim, hidden)), ("fc1_b", (hidden,)),
+        ("fc2_w", (hidden, 10)), ("fc2_b", (10,)),
+    ]
+    return ModelSpec(name, (1, side, side), 10, shapes, batch)
+
+
+def apply_model(spec: ModelSpec, flat, x_flat):
+    """Forward pass: ``x_flat[B, C*H*W]`` → logits ``[B, 10]``."""
+    p = spec.unflatten(flat)
+    b = x_flat.shape[0]
+    c, h, w = spec.input_chw
+    if spec.name.endswith("mlp"):
+        y = dense(x_flat, p["fc1_w"], p["fc1_b"], "relu")
+        return dense(y, p["fc2_w"], p["fc2_b"], "none")
+    x = x_flat.reshape(b, c, h, w)
+    x = _avgpool2(_conv(x, p["conv1_w"], p["conv1_b"]))
+    x = _avgpool2(_conv(x, p["conv2_w"], p["conv2_b"]))
+    x = x.reshape(b, -1)
+    x = dense(x, p["fc1_w"], p["fc1_b"], "relu")
+    x = dense(x, p["fc2_w"], p["fc2_b"], "relu")
+    return dense(x, p["fc3_w"], p["fc3_b"], "none")
+
+
+# The three variants the experiments use. Batch sizes: paper uses 64;
+# tiny_mlp is the fast-test variant.
+VARIANTS = {
+    "tiny_mlp": mlp_spec("tiny_mlp", 64, 32, 16, 8),
+    "mnist_lenet": lenet_spec("mnist_lenet", 1, 28, 64),
+    "cifar_lenet": lenet_spec("cifar_lenet", 3, 32, 64),
+}

@@ -1,0 +1,72 @@
+"""L2 training graphs: loss, SGD train step (paper Eq. 3–4), chunked
+multi-step training (one PJRT call = S SGD steps via lax.scan), and
+evaluation. All entry points take/return the flat parameter vector and are
+AOT-lowered by ``aot.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sgd import sgd_update
+from .models import ModelSpec, apply_model
+
+# steps folded into one train_chunk call (fixed at AOT time)
+CHUNK_STEPS = 4
+
+
+def cross_entropy(logits, labels_f):
+    """Mean softmax cross-entropy; labels arrive as f32 class ids."""
+    labels = labels_f.astype(jnp.int32)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logz, axis=-1))
+
+
+def make_loss(spec: ModelSpec):
+    def loss_fn(flat, x, y):
+        return cross_entropy(apply_model(spec, flat, x), y)
+    return loss_fn
+
+
+def make_train_step(spec: ModelSpec):
+    """(params[P], x[B,D], y[B], lr[1]) -> (params'[P], loss[])."""
+    loss_fn = make_loss(spec)
+
+    def train_step(flat, x, y, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, x, y)
+        new = sgd_update(flat, grad, lr)
+        return new, loss
+
+    return train_step
+
+
+def make_train_chunk(spec: ModelSpec, steps: int = CHUNK_STEPS):
+    """(params[P], xs[S,B,D], ys[S,B], lr[1]) -> (params'[P], mean_loss[]).
+
+    S consecutive SGD steps in one executable — amortises the PJRT call
+    and keeps the whole loop inside XLA where it fuses.
+    """
+    loss_fn = make_loss(spec)
+
+    def train_chunk(flat, xs, ys, lr):
+        def step(carry, batch):
+            x, y = batch
+            loss, grad = jax.value_and_grad(loss_fn)(carry, x, y)
+            return sgd_update(carry, grad, lr), loss
+
+        new, losses = jax.lax.scan(step, flat, (xs, ys), length=steps)
+        return new, jnp.mean(losses)
+
+    return train_chunk
+
+
+def make_eval_step(spec: ModelSpec):
+    """(params[P], x[B,D], y[B]) -> (loss[], correct[]) with correct = #hits."""
+    def eval_step(flat, x, y):
+        logits = apply_model(spec, flat, x)
+        loss = cross_entropy(logits, y)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32))
+        return loss, correct
+
+    return eval_step

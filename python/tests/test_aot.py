@@ -1,0 +1,73 @@
+"""AOT pipeline sanity: manifest structure, HLO text parseability markers,
+and init binary size. Runs against the artifacts/ produced by `make
+artifacts` when present; otherwise lowers tiny_mlp into a temp dir."""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts_dir(tmp_path_factory):
+    if os.path.exists(os.path.join(ART, "manifest.json")):
+        return ART
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--variants", "tiny_mlp"],
+        check=True, cwd=os.path.join(os.path.dirname(__file__), ".."))
+    return str(out)
+
+
+@pytest.fixture(scope="module")
+def manifest(artifacts_dir):
+    with open(os.path.join(artifacts_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_format_and_variants(self, manifest):
+        assert manifest["format"] == 1
+        assert "tiny_mlp" in manifest["variants"]
+
+    def test_entry_shapes_consistent(self, manifest):
+        for name, v in manifest["variants"].items():
+            p = v["param_count"]
+            b = v["batch"]
+            c, h, w = v["input_chw"]
+            d = c * h * w
+            e = v["entries"]
+            assert e["train_step"]["inputs"] == [[p], [b, d], [b], [1]]
+            assert e["train_step"]["outputs"] == [[p], []]
+            assert e["eval_step"]["inputs"] == [[p], [b, d], [b]]
+            s = v["chunk_steps"]
+            assert e["train_chunk"]["inputs"] == [[p], [s, b, d], [s, b], [1]]
+            n = v["agg_slots"]
+            assert e["aggregate"]["inputs"] == [[n, p], [n]]
+            assert e["maml_step"]["inputs"][0] == [p]
+
+    def test_hlo_files_exist_and_look_like_hlo(self, manifest, artifacts_dir):
+        for v in manifest["variants"].values():
+            for e in v["entries"].values():
+                path = os.path.join(artifacts_dir, e["file"])
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    head = f.read(400)
+                assert "HloModule" in head, f"{path} missing HloModule header"
+
+    def test_init_binary_matches_param_count(self, manifest, artifacts_dir):
+        for v in manifest["variants"].values():
+            path = os.path.join(artifacts_dir, v["init_file"])
+            size = os.path.getsize(path)
+            assert size == 4 * v["param_count"]
+            # spot-check the floats are finite
+            with open(path, "rb") as f:
+                data = f.read(4 * min(v["param_count"], 256))
+            vals = struct.unpack(f"<{len(data) // 4}f", data)
+            assert all(abs(x) < 10.0 for x in vals)

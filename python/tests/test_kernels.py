@@ -1,0 +1,176 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, including hypothesis
+shape sweeps — the CORE build-time correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate, dense, matmul, sgd_update
+from compile.kernels import ref
+from compile.kernels.matmul import vmem_bytes
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 8, 8), (64, 256, 128), (64, 400, 120), (1, 64, 10),
+        (65, 33, 17),   # non-tile-multiple shapes exercise the padding path
+        (128, 128, 128),
+        (3, 7, 5),
+    ])
+    def test_matches_ref(self, m, k, n):
+        rng = np.random.default_rng(0)
+        x, w = rand(rng, m, k), rand(rng, k, n)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, w)), np.asarray(ref.matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shape_sweep(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = rand(rng, m, k), rand(rng, k, n)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, w)), np.asarray(x) @ np.asarray(w),
+            rtol=2e-4, atol=2e-4)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(1)
+        x, w = rand(rng, 64, 96), rand(rng, 96, 48)
+        a = matmul(x, w, bm=16, bn=16)
+        b = matmul(x, w, bm=128, bn=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    def test_vmem_estimate_positive_and_monotone(self):
+        small = vmem_bytes(64, 256, 120, bm=32, bn=32)
+        big = vmem_bytes(64, 256, 120, bm=128, bn=128)
+        assert 0 < small <= big
+
+
+class TestDense:
+    @pytest.mark.parametrize("activation", ["relu", "none"])
+    @pytest.mark.parametrize("m,k,n", [(16, 64, 32), (64, 256, 120), (5, 13, 11)])
+    def test_forward_matches_ref(self, activation, m, k, n):
+        rng = np.random.default_rng(2)
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        got = dense(x, w, b, activation)
+        want = ref.dense_ref(x, w, b, activation)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("activation", ["relu", "none"])
+    def test_vjp_matches_ref(self, activation):
+        rng = np.random.default_rng(3)
+        x, w, b = rand(rng, 8, 24), rand(rng, 24, 12), rand(rng, 12)
+        dy = rand(rng, 8, 12)
+        _, vjp = jax.vjp(lambda *a: dense(*a, activation), x, w, b)
+        dx, dw, db = vjp(dy)
+        rx, rw, rb = ref.dense_grads_ref(x, w, b, dy, activation)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(rx), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(rw), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(rb), rtol=1e-4, atol=1e-4)
+
+    def test_grad_through_loss_matches_autodiff_of_ref(self):
+        """End-to-end: grad of a scalar loss through the Pallas dense must
+        equal grad through the pure-jnp reference implementation."""
+        rng = np.random.default_rng(4)
+        x, w, b = rand(rng, 8, 20), rand(rng, 20, 10), rand(rng, 10)
+
+        def loss_pallas(w, b):
+            return jnp.sum(dense(x, w, b, "relu") ** 2)
+
+        def loss_ref(w, b):
+            return jnp.sum(ref.dense_ref(x, w, b, "relu") ** 2)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1))(w, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+        for a, c in zip(gp, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_forward(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        np.testing.assert_allclose(
+            np.asarray(dense(x, w, b, "relu")),
+            np.asarray(ref.dense_ref(x, w, b, "relu")),
+            rtol=2e-4, atol=2e-4)
+
+
+class TestAggregate:
+    @pytest.mark.parametrize("n,p", [(2, 64), (16, 2410), (16, 61706), (7, 999)])
+    def test_matches_ref(self, n, p):
+        rng = np.random.default_rng(5)
+        stack, w = rand(rng, n, p), rand(rng, n)
+        np.testing.assert_allclose(
+            np.asarray(aggregate(stack, w)),
+            np.asarray(ref.aggregate_ref(stack, w)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_zero_padded_slots_are_inert(self):
+        """The coordinator pads unused slots with zero weight — the result
+        must equal aggregation over only the live rows."""
+        rng = np.random.default_rng(6)
+        live = rand(rng, 5, 301)
+        stack = jnp.concatenate([live, rand(rng, 11, 301)], axis=0)
+        w_live = jnp.asarray(np.random.default_rng(7).random(5, dtype=np.float32))
+        w = jnp.concatenate([w_live, jnp.zeros(11, jnp.float32)])
+        np.testing.assert_allclose(
+            np.asarray(aggregate(stack, w)),
+            np.asarray(ref.aggregate_ref(live, w_live)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_convexity_preserved(self):
+        """A convex combination of identical vectors is the vector itself."""
+        v = jnp.linspace(-2, 2, 137, dtype=jnp.float32)
+        stack = jnp.tile(v[None, :], (4, 1))
+        w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+        np.testing.assert_allclose(np.asarray(aggregate(stack, w)), np.asarray(v),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 24), p=st.integers(1, 4096), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n, p, seed):
+        rng = np.random.default_rng(seed)
+        stack, w = rand(rng, n, p), rand(rng, n)
+        np.testing.assert_allclose(
+            np.asarray(aggregate(stack, w)),
+            np.asarray(w) @ np.asarray(stack),
+            rtol=2e-4, atol=2e-4)
+
+
+class TestSgd:
+    @pytest.mark.parametrize("p", [1, 64, 2410, 61706, 8193])
+    def test_matches_ref(self, p):
+        rng = np.random.default_rng(8)
+        w, g = rand(rng, p), rand(rng, p)
+        lr = jnp.asarray([0.05], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(sgd_update(w, g, lr)),
+            np.asarray(ref.sgd_ref(w, g, lr)),
+            rtol=1e-6, atol=1e-6)
+
+    def test_zero_lr_is_identity(self):
+        rng = np.random.default_rng(9)
+        w, g = rand(rng, 500), rand(rng, 500)
+        out = sgd_update(w, g, jnp.asarray([0.0], jnp.float32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w))
+
+    @settings(max_examples=15, deadline=None)
+    @given(p=st.integers(1, 20000), lr=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, p, lr, seed):
+        rng = np.random.default_rng(seed)
+        w, g = rand(rng, p), rand(rng, p)
+        out = sgd_update(w, g, jnp.asarray([lr], jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(w) - np.float32(lr) * np.asarray(g),
+            rtol=1e-5, atol=1e-5)

@@ -1,0 +1,61 @@
+//! Aggregation bench: Pallas-kernel (PJRT) vs host weighted-sum across
+//! cluster sizes and parameter counts — the data behind the dispatcher
+//! threshold in `fl::aggregate` and the §Perf L3 aggregation numbers.
+//!
+//!     cargo bench --bench bench_aggregation
+
+use fedhc::runtime::host::aggregate_host_into;
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // host path scaling: N × P
+    println!("== host aggregation (allocation-free weighted sum) ==");
+    for &(n, p) in &[(4usize, 44_426usize), (16, 44_426), (16, 62_006), (64, 44_426), (16, 2_410)] {
+        let stack: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..p).map(|_| rng.uniform_f32()).collect())
+            .collect();
+        let rows: Vec<&[f32]> = stack.iter().map(|r| r.as_slice()).collect();
+        let w = vec![1.0 / n as f32; n];
+        let mut out = vec![0.0f32; p];
+        let t = bench_loop(3, 50, || {
+            aggregate_host_into(&rows, &w, &mut out);
+        });
+        let gb = (n * p * 4) as f64 / 1e9;
+        let mean = t.iter().sum::<f64>() / t.len() as f64;
+        println!(
+            "{}   ({:.2} GB/s)",
+            bench_report(&format!("host N={n} P={p}"), &t),
+            gb / mean
+        );
+    }
+
+    // kernel path (PJRT) vs host at the AOT slot count
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        eprintln!("no artifacts; skipping kernel comparison");
+        return;
+    };
+    println!("\n== Pallas kernel (PJRT) vs host, per variant ==");
+    for name in ["tiny_mlp", "mnist_lenet", "cifar_lenet"] {
+        let Ok(rt) = ModelRuntime::load(&manifest, name) else { continue };
+        let p = rt.spec.param_count;
+        let n = rt.spec.agg_slots;
+        let stack: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..p).map(|_| rng.uniform_f32()).collect())
+            .collect();
+        let rows: Vec<&[f32]> = stack.iter().map(|r| r.as_slice()).collect();
+        let w = vec![1.0 / n as f32; n];
+        let t = bench_loop(2, 30, || {
+            rt.aggregate(&rows, &w).unwrap();
+        });
+        println!("{}", bench_report(&format!("kernel {name} N={n} P={p}"), &t));
+        let mut out = vec![0.0f32; p];
+        let t = bench_loop(2, 30, || {
+            aggregate_host_into(&rows, &w, &mut out);
+        });
+        println!("{}", bench_report(&format!("host   {name} N={n} P={p}"), &t));
+    }
+}

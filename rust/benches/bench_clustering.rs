@@ -1,0 +1,41 @@
+//! Clustering bench: the satellite-clustered PS selection algorithm
+//! (Eq. 13–15) across constellation sizes and K — it runs on every
+//! re-clustering event, so it must stay far off the critical path.
+//!
+//!     cargo bench --bench bench_clustering
+
+use fedhc::clustering::kmeans::KMeans;
+use fedhc::clustering::ps_select::select_parameter_servers;
+use fedhc::network::{LinkModel, NetworkParams};
+use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::util::Rng;
+
+fn main() {
+    let link = LinkModel::new(NetworkParams::default());
+    for &(planes, spp) in &[(4usize, 6usize), (8, 12), (12, 20), (24, 34)] {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(planes, spp));
+        let n = c.len();
+        let feats = c.snapshot(0.0).features_km();
+        let positions = c.snapshot(0.0).positions;
+        for &k in &[3usize, 5, 10] {
+            if k > n {
+                continue;
+            }
+            let t = bench_loop(2, 20, || {
+                let mut rng = Rng::new(7);
+                let res = KMeans::new(k).run(&feats, &mut rng);
+                std::hint::black_box(&res);
+            });
+            println!("{}", bench_report(&format!("kmeans n={n} k={k}"), &t));
+            let mut rng = Rng::new(7);
+            let res = KMeans::new(k).run(&feats, &mut rng);
+            let t = bench_loop(2, 20, || {
+                let ps = select_parameter_servers(&res, &positions, &link);
+                std::hint::black_box(&ps);
+            });
+            println!("{}", bench_report(&format!("ps_select n={n} k={k}"), &t));
+        }
+    }
+}

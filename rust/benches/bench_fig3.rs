@@ -1,0 +1,67 @@
+//! Fig. 3 bench target: accuracy-vs-round curves for the four methods at
+//! K=3 on the tiny preset (fast). Paper-scale curves:
+//! `cargo run --release --example fig3_repro mnist 40`.
+//!
+//!     cargo bench --bench bench_fig3
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::metrics::report::format_fig3;
+use fedhc::metrics::Ledger;
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+const METHODS: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
+
+fn series(cfg: ExperimentConfig, method: &'static str) -> Ledger {
+    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    match method {
+        "C-FedAvg" => run_cfedavg(&mut trial).unwrap().ledger,
+        "H-BASE" => run_clustered(&mut trial, Strategy::hbase()).unwrap().ledger,
+        "FedCE" => run_clustered(&mut trial, Strategy::fedce()).unwrap().ledger,
+        "FedHC" => run_clustered(&mut trial, Strategy::fedhc()).unwrap().ledger,
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let mut base = ExperimentConfig::tiny();
+    base.target_accuracy = None;
+    base.rounds = 20;
+
+    let mut handles = Vec::new();
+    for &method in METHODS {
+        let cfg = base.clone();
+        handles.push((method, std::thread::spawn(move || series(cfg, method))));
+    }
+    let mut ledgers = Vec::new();
+    for (m, h) in handles {
+        ledgers.push((m, h.join().expect("worker panicked")));
+    }
+    let refs: Vec<(&str, &Ledger)> = ledgers.iter().map(|(n, l)| (*n, l)).collect();
+    println!("{}", format_fig3("tiny (synthetic)", base.clusters, &refs, 2));
+
+    // qualitative check: FedHC's final accuracy is at least on par with
+    // the clustered baselines (within noise) — the paper's Fig. 3 claim
+    let acc = |name: &str| {
+        ledgers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap()
+            .1
+            .best_accuracy()
+    };
+    let fedhc = acc("FedHC");
+    let hbase = acc("H-BASE");
+    println!(
+        "final: FedHC {:.1}% vs H-BASE {:.1}%",
+        fedhc * 100.0,
+        hbase * 100.0
+    );
+    assert!(
+        fedhc > hbase - 0.10,
+        "FedHC accuracy collapsed vs H-BASE: {fedhc} vs {hbase}"
+    );
+}

@@ -1,0 +1,35 @@
+//! Orbit substrate bench: snapshot propagation (runs every round) and
+//! visibility-window computation (runs at setup / analysis time).
+//!
+//!     cargo bench --bench bench_orbit
+
+use fedhc::orbit::geo::default_ground_segment;
+use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::visibility::{visible_sats, windows};
+use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::util::stats::{bench_loop, bench_report};
+
+fn main() {
+    for &(planes, spp) in &[(8usize, 12usize), (24, 34), (40, 50)] {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(planes, spp));
+        let n = c.len();
+        let t = bench_loop(3, 100, || {
+            let s = c.snapshot(1234.5);
+            std::hint::black_box(&s);
+        });
+        println!("{}", bench_report(&format!("snapshot n={n}"), &t));
+    }
+
+    let c = Constellation::from_walker(&WalkerConstellation::paper_shell(8, 12));
+    let gs = &default_ground_segment()[0];
+    let t = bench_loop(3, 100, || {
+        std::hint::black_box(visible_sats(gs, &c, 777.0));
+    });
+    println!("{}", bench_report("visible_sats n=96", &t));
+
+    let period = c.min_period();
+    let t = bench_loop(1, 5, || {
+        std::hint::black_box(windows(gs, &c, 0.0, period, 30.0));
+    });
+    println!("{}", bench_report("windows n=96 one-period", &t));
+}

@@ -1,0 +1,71 @@
+//! Runtime micro-bench: per-entry-point PJRT latency for each variant.
+//! The §Perf L2/L3 numbers in EXPERIMENTS.md come from here.
+//!
+//!     cargo bench --bench bench_runtime
+
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::util::Rng;
+
+fn bench_variant(manifest: &Manifest, name: &str, iters: usize) {
+    let rt = match ModelRuntime::load(manifest, name) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping {name}: {e}");
+            return;
+        }
+    };
+    let spec = &rt.spec;
+    let p = spec.param_count;
+    let b = spec.batch;
+    let d = spec.input_dim();
+    let s = spec.chunk_steps;
+    let mut rng = Rng::new(1);
+    let params = manifest.init_params(spec).unwrap();
+    let x: Vec<f32> = (0..b * d).map(|_| rng.uniform_f32()).collect();
+    let y: Vec<f32> = (0..b).map(|_| rng.below(10) as f32).collect();
+    let xs: Vec<f32> = (0..s * b * d).map(|_| rng.uniform_f32()).collect();
+    let ys: Vec<f32> = (0..s * b).map(|_| rng.below(10) as f32).collect();
+    let stack: Vec<Vec<f32>> = (0..spec.agg_slots)
+        .map(|_| (0..p).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let rows: Vec<&[f32]> = stack.iter().map(|r| r.as_slice()).collect();
+    let w = vec![1.0 / spec.agg_slots as f32; spec.agg_slots];
+
+    println!("== {name} (P={p}, B={b}) ==");
+    let t = bench_loop(2, iters, || {
+        rt.train_step(&params, &x, &y, 0.01).unwrap();
+    });
+    println!("{}", bench_report(&format!("{name}/train_step"), &t));
+    let t = bench_loop(2, iters, || {
+        rt.train_chunk(&params, &xs, &ys, 0.01).unwrap();
+    });
+    println!(
+        "{}  ({}x steps/call)",
+        bench_report(&format!("{name}/train_chunk[{s}]"), &t),
+        s
+    );
+    let t = bench_loop(2, iters, || {
+        rt.eval_step(&params, &x, &y).unwrap();
+    });
+    println!("{}", bench_report(&format!("{name}/eval_step"), &t));
+    let t = bench_loop(2, iters, || {
+        rt.maml_step(&params, &x, &y, &x, &y, 1e-3, 1e-3).unwrap();
+    });
+    println!("{}", bench_report(&format!("{name}/maml_step"), &t));
+    let t = bench_loop(2, iters, || {
+        rt.aggregate(&rows, &w).unwrap();
+    });
+    println!(
+        "{}",
+        bench_report(&format!("{name}/aggregate[{}]", spec.agg_slots), &t)
+    );
+}
+
+fn main() {
+    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts` first");
+    let fast = std::env::args().any(|a| a == "--fast");
+    bench_variant(&manifest, "tiny_mlp", if fast { 10 } else { 30 });
+    bench_variant(&manifest, "mnist_lenet", if fast { 5 } else { 15 });
+    bench_variant(&manifest, "cifar_lenet", if fast { 3 } else { 10 });
+}

@@ -1,0 +1,75 @@
+//! Table I bench target: regenerates the paper's headline table (time +
+//! energy to target accuracy, 4 methods × K ∈ {3,4,5}) on the tiny preset
+//! so `cargo bench` completes in minutes. The paper-scale MNIST/CIFAR
+//! versions are `cargo run --release --example table1_repro mnist|cifar10`
+//! (results recorded in EXPERIMENTS.md).
+//!
+//!     cargo bench --bench bench_table1
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::metrics::report::{format_table1, TimeEnergy};
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+const METHODS: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
+
+fn cell(cfg: ExperimentConfig, method: &'static str) -> TimeEnergy {
+    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = match method {
+        "C-FedAvg" => run_cfedavg(&mut trial).unwrap(),
+        "H-BASE" => run_clustered(&mut trial, Strategy::hbase()).unwrap(),
+        "FedCE" => run_clustered(&mut trial, Strategy::fedce()).unwrap(),
+        "FedHC" => run_clustered(&mut trial, Strategy::fedhc()).unwrap(),
+        _ => unreachable!(),
+    };
+    match res.converged_at {
+        Some((_, t, e)) => TimeEnergy { time_s: t, energy_j: e, converged: true },
+        None => TimeEnergy {
+            time_s: res.ledger.time_s,
+            energy_j: res.ledger.energy_j,
+            converged: false,
+        },
+    }
+}
+
+fn main() {
+    let mut base = ExperimentConfig::tiny();
+    base.target_accuracy = Some(0.6);
+    base.rounds = 40;
+    let ks = [3usize, 4, 5];
+
+    let mut handles = Vec::new();
+    for &method in METHODS {
+        for &k in &ks {
+            let mut cfg = base.clone();
+            cfg.clusters = k;
+            handles.push((method, k, std::thread::spawn(move || cell(cfg, method))));
+        }
+    }
+    let mut cells: std::collections::BTreeMap<(&str, usize), TimeEnergy> = Default::default();
+    for (m, k, h) in handles {
+        cells.insert((m, k), h.join().expect("worker panicked"));
+    }
+    let rows: Vec<(&str, Vec<TimeEnergy>)> = METHODS
+        .iter()
+        .map(|&m| (m, ks.iter().map(|&k| cells[&(m, k)]).collect()))
+        .collect();
+    println!(
+        "{}",
+        format_table1("tiny (synthetic)", base.target_accuracy.unwrap(), &ks, &rows)
+    );
+
+    // the paper's qualitative ordering must hold on every K
+    for &k in &ks {
+        let t_fedhc = cells[&("FedHC", k)].time_s;
+        let t_central = cells[&("C-FedAvg", k)].time_s;
+        assert!(
+            t_fedhc < t_central,
+            "K={k}: FedHC time {t_fedhc} not below C-FedAvg {t_central}"
+        );
+    }
+    println!("ordering check: FedHC beats C-FedAvg on time for all K ✓");
+}

@@ -1,0 +1,190 @@
+//! C-FedAvg baseline (§IV-A, [7]): "all data collected from each client is
+//! transmitted to a designated central satellite server for centralized
+//! learning."
+//!
+//! Cost structure per round: satellites continuously collect data, so each
+//! round every client ships its current shard to the central satellite
+//! (time = slowest upload, energy = Eq. 8 over the raw-data payloads) and
+//! the central node then runs its training epoch *sequentially* over the
+//! union dataset (time + Eq. 9 energy on one CPU — no cluster parallelism,
+//! which is exactly the inefficiency the paper's hierarchy removes).
+//! Independent of K by construction — Table I reports one column
+//! replicated across K.
+
+use crate::coordinator::fedhc::RunResult;
+use crate::coordinator::round::data_upload;
+use crate::coordinator::trial::Trial;
+use crate::data::Dataset;
+use crate::fl::client::SatClient;
+use crate::fl::evaluate::evaluate;
+use crate::fl::local::{local_train, TrainScratch};
+use anyhow::Result;
+
+/// Pick the central satellite: the client nearest any ground station at
+/// t=0 (a well-connected hub, mirroring "designated central server").
+fn pick_central(trial: &Trial) -> usize {
+    let positions = trial.positions();
+    let t = trial.clock.now();
+    (0..trial.clients.len())
+        .min_by(|&a, &b| {
+            let da = trial
+                .ground
+                .iter()
+                .map(|g| positions[a].dist(g.eci(t)))
+                .fold(f64::INFINITY, f64::min);
+            let db = trial
+                .ground
+                .iter()
+                .map(|g| positions[b].dist(g.eci(t)))
+                .fold(f64::INFINITY, f64::min);
+            da.partial_cmp(&db).unwrap()
+        })
+        .unwrap()
+}
+
+/// Run centralised FedAvg to target accuracy or the round budget.
+pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
+    let cfg = trial.cfg.clone();
+    let rt = trial.rt;
+    let central = pick_central(trial);
+    let bits_per_sample = (trial.clients[0].shard.kind.sample_len() * 32 + 8) as f64;
+
+    // union dataset at the central node
+    let kind = trial.clients[0].shard.kind;
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for c in &trial.clients {
+        images.extend_from_slice(&c.shard.images);
+        labels.extend_from_slice(&c.shard.labels);
+    }
+    let union = Dataset::new(kind, images, labels);
+    let cpu_hz = trial.clients[central].cpu_hz;
+    let init = trial.clients[central].params.clone();
+    let mut node = SatClient::new(central, union, init, cpu_hz);
+    let mut scratch = TrainScratch::new(rt);
+
+    // ---- per-round: raw-data collection upload, then centralised epochs
+    let mut converged_at = None;
+    for round in 1..=cfg.rounds {
+        // every client ships the data it collected this round (its shard)
+        let positions = trial.positions();
+        let uploads: Vec<(usize, crate::orbit::Vec3)> = trial
+            .clients
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != central)
+            .map(|(i, c)| (c.data_size(), positions[i]))
+            .collect();
+        let (t_up, e_up) = data_upload(
+            &trial.link,
+            &trial.energy,
+            &uploads,
+            bits_per_sample,
+            positions[central],
+        );
+        trial.ledger.add_time(t_up);
+        trial.ledger.add_energy(e_up);
+        trial.clock.advance(t_up);
+
+        let out = {
+            let mut rng = trial.rng.fork(round as u64);
+            local_train(rt, &mut node, cfg.local_epochs, cfg.lr, &mut scratch, &mut rng)?
+        };
+        // Eq. 9 compute at the central node; one epoch is sequential over
+        // the union data — no parallelism to exploit (the paper's point)
+        let t_cmp = trial.link.compute_time(out.samples, cpu_hz);
+        trial.ledger.add_time(t_cmp);
+        trial.ledger.add_energy(trial.energy.compute_energy(out.samples, cpu_hz));
+        trial.clock.advance(t_cmp);
+
+        if round % cfg.eval_every == 0 || round == cfg.rounds {
+            let eval = evaluate(rt, &node.params, &trial.test, cfg.eval_batches)?;
+            trial.ledger.record(round, eval.accuracy, eval.loss, false);
+            if let Some(target) = cfg.target_accuracy {
+                if eval.accuracy >= target {
+                    converged_at = Some((round, trial.ledger.time_s, trial.ledger.energy_j));
+                    break;
+                }
+            }
+        }
+    }
+
+    let final_accuracy = trial.ledger.best_accuracy();
+    Ok(RunResult {
+        name: "C-FedAvg",
+        ledger: std::mem::take(&mut trial.ledger),
+        converged_at,
+        final_accuracy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::runtime::{Manifest, ModelRuntime};
+
+    fn with_runtime<F: FnOnce(&Manifest, &ModelRuntime)>(f: F) {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        f(&m, &rt);
+    }
+
+    #[test]
+    fn centralised_run_learns() {
+        with_runtime(|m, rt| {
+            let mut cfg = ExperimentConfig::tiny();
+            cfg.rounds = 8;
+            let mut trial = Trial::new(cfg, m, rt).unwrap();
+            let res = run_cfedavg(&mut trial).unwrap();
+            assert_eq!(res.name, "C-FedAvg");
+            let first = res.ledger.records.first().unwrap().accuracy;
+            assert!(res.final_accuracy > first);
+        });
+    }
+
+    #[test]
+    fn upload_cost_precedes_training() {
+        with_runtime(|m, rt| {
+            let mut cfg = ExperimentConfig::tiny();
+            cfg.rounds = 1;
+            let mut trial = Trial::new(cfg, m, rt).unwrap();
+            let res = run_cfedavg(&mut trial).unwrap();
+            // even the first record carries the data-upload time
+            let first = res.ledger.records.first().unwrap();
+            assert!(first.time_s > 0.0);
+            assert!(first.energy_j > 0.0);
+        });
+    }
+
+    #[test]
+    fn costlier_than_fedhc_per_round() {
+        with_runtime(|m, rt| {
+            // same budget, same data: the centralised method's sequential
+            // training + raw-data uploads must cost more simulated time
+            // than FedHC's parallel clusters (the paper's headline claim)
+            let mut cfg = ExperimentConfig::tiny();
+            cfg.rounds = 6;
+            cfg.target_accuracy = None;
+            let mut t1 = Trial::new(cfg.clone(), m, rt).unwrap();
+            let central = run_cfedavg(&mut t1).unwrap();
+            let mut t2 = Trial::new(cfg, m, rt).unwrap();
+            let fedhc = crate::coordinator::run_clustered(
+                &mut t2,
+                crate::coordinator::Strategy::fedhc(),
+            )
+            .unwrap();
+            assert!(
+                central.ledger.time_s > fedhc.ledger.time_s,
+                "central {} s vs fedhc {} s",
+                central.ledger.time_s,
+                fedhc.ledger.time_s
+            );
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Comparison methods from §IV-A.
+//!
+//! * [`cfedavg`] — C-FedAvg [7]: raw client data is shipped to one central
+//!   satellite which learns alone (the paper's centralised reference; flat
+//!   across K by construction).
+//! * H-BASE [11] and FedCE [12] share the clustered driver — see
+//!   [`crate::coordinator::Strategy::hbase`] / [`Strategy::fedce`].
+
+pub mod cfedavg;
+
+pub use crate::coordinator::fedhc::Strategy;
+pub use cfedavg::run_cfedavg;

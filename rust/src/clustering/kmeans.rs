@@ -1,0 +1,340 @@
+//! Lloyd's k-means over satellite positions (paper Eq. 13–15).
+//!
+//! Initialisation is k-means++ seeded by the experiment RNG; assignment
+//! uses the Euclidean metric of Eq. 13; the update step is the centroid
+//! mean of Eq. 14; convergence is the summed squared centroid displacement
+//! of Eq. 15.
+
+use crate::util::Rng;
+
+/// Configuration for a k-means run.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeans {
+    pub k: usize,
+    /// Eq. 15 convergence threshold ε on Σ‖K_new − K_old‖².
+    pub epsilon: f64,
+    pub max_iters: usize,
+}
+
+/// Result of a clustering run.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub centroids: Vec<[f64; 3]>,
+    /// Cluster id per point.
+    pub assignment: Vec<usize>,
+    pub iterations: usize,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+}
+
+impl Default for KMeans {
+    fn default() -> Self {
+        KMeans {
+            k: 3,
+            epsilon: 1e-6,
+            max_iters: 200,
+        }
+    }
+}
+
+#[inline]
+fn d2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    dx * dx + dy * dy + dz * dz
+}
+
+impl KMeans {
+    pub fn new(k: usize) -> Self {
+        KMeans {
+            k,
+            ..KMeans::default()
+        }
+    }
+
+    /// Run Lloyd's algorithm on `points` (e.g. satellite positions in km).
+    pub fn run(&self, points: &[[f64; 3]], rng: &mut Rng) -> KMeansResult {
+        let n = points.len();
+        assert!(self.k >= 1, "k must be >= 1");
+        assert!(
+            n >= self.k,
+            "cannot form {} clusters from {} points",
+            self.k,
+            n
+        );
+
+        let mut centroids = self.init_pp(points, rng);
+        let mut assignment = vec![0usize; n];
+        let mut iterations = 0;
+
+        loop {
+            iterations += 1;
+            // assignment step (Eq. 13)
+            for (i, p) in points.iter().enumerate() {
+                let mut best = 0;
+                let mut best_d = f64::INFINITY;
+                for (c, cent) in centroids.iter().enumerate() {
+                    let d = d2(p, cent);
+                    if d < best_d {
+                        best_d = d;
+                        best = c;
+                    }
+                }
+                assignment[i] = best;
+            }
+            // update step (Eq. 14)
+            let mut sums = vec![[0.0f64; 3]; self.k];
+            let mut counts = vec![0usize; self.k];
+            for (i, p) in points.iter().enumerate() {
+                let c = assignment[i];
+                sums[c][0] += p[0];
+                sums[c][1] += p[1];
+                sums[c][2] += p[2];
+                counts[c] += 1;
+            }
+            let mut shift = 0.0;
+            for c in 0..self.k {
+                let new = if counts[c] == 0 {
+                    // empty cluster: re-seed at the point farthest from its centroid
+                    let far = points
+                        .iter()
+                        .enumerate()
+                        .max_by(|(_, a), (_, b)| {
+                            d2(a, &centroids[assignment_of(a, &centroids)])
+                                .partial_cmp(&d2(b, &centroids[assignment_of(b, &centroids)]))
+                                .unwrap()
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    points[far]
+                } else {
+                    [
+                        sums[c][0] / counts[c] as f64,
+                        sums[c][1] / counts[c] as f64,
+                        sums[c][2] / counts[c] as f64,
+                    ]
+                };
+                shift += d2(&centroids[c], &new);
+                centroids[c] = new;
+            }
+            // convergence (Eq. 15)
+            if shift < self.epsilon || iterations >= self.max_iters {
+                break;
+            }
+        }
+
+        // final assignment + inertia under the converged centroids
+        let mut inertia = 0.0;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = d2(p, cent);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            assignment[i] = best;
+            inertia += best_d;
+        }
+
+        KMeansResult {
+            centroids,
+            assignment,
+            iterations,
+            inertia,
+        }
+    }
+
+    /// k-means++ seeding.
+    fn init_pp(&self, points: &[[f64; 3]], rng: &mut Rng) -> Vec<[f64; 3]> {
+        let n = points.len();
+        let mut centroids = Vec::with_capacity(self.k);
+        centroids.push(points[rng.below_usize(n)]);
+        let mut dist = vec![f64::INFINITY; n];
+        while centroids.len() < self.k {
+            let last = centroids.last().unwrap();
+            for (i, p) in points.iter().enumerate() {
+                dist[i] = dist[i].min(d2(p, last));
+            }
+            let total: f64 = dist.iter().sum();
+            let next = if total <= 0.0 {
+                rng.below_usize(n)
+            } else {
+                let mut t = rng.uniform() * total;
+                let mut pick = n - 1;
+                for (i, &d) in dist.iter().enumerate() {
+                    t -= d;
+                    if t <= 0.0 {
+                        pick = i;
+                        break;
+                    }
+                }
+                pick
+            };
+            centroids.push(points[next]);
+        }
+        centroids
+    }
+}
+
+fn assignment_of(p: &[f64; 3], centroids: &[[f64; 3]]) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (c, cent) in centroids.iter().enumerate() {
+        let d = d2(p, cent);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+impl KMeansResult {
+    /// Members of each cluster.
+    pub fn clusters(&self) -> Vec<Vec<usize>> {
+        let k = self.centroids.len();
+        let mut out = vec![Vec::new(); k];
+        for (i, &c) in self.assignment.iter().enumerate() {
+            out[c].push(i);
+        }
+        out
+    }
+
+    /// Size of each cluster.
+    pub fn sizes(&self) -> Vec<usize> {
+        let k = self.centroids.len();
+        let mut out = vec![0usize; k];
+        for &c in &self.assignment {
+            out[c] += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Rng, centers: &[[f64; 3]], per: usize, spread: f64) -> Vec<[f64; 3]> {
+        let mut pts = Vec::new();
+        for c in centers {
+            for _ in 0..per {
+                pts.push([
+                    c[0] + spread * rng.normal(),
+                    c[1] + spread * rng.normal(),
+                    c[2] + spread * rng.normal(),
+                ]);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let centers = [[0.0, 0.0, 0.0], [100.0, 0.0, 0.0], [0.0, 100.0, 0.0]];
+        let pts = blobs(&mut rng, &centers, 40, 2.0);
+        let res = KMeans::new(3).run(&pts, &mut rng);
+        // every blob should map to a single cluster
+        for b in 0..3 {
+            let ids: Vec<usize> = (b * 40..(b + 1) * 40).map(|i| res.assignment[i]).collect();
+            assert!(ids.iter().all(|&c| c == ids[0]), "blob {b} split: {ids:?}");
+        }
+        // and each centroid should be near a true center
+        for c in &res.centroids {
+            let nearest = centers
+                .iter()
+                .map(|t| d2(c, t))
+                .fold(f64::INFINITY, f64::min);
+            assert!(nearest < 4.0, "centroid {c:?} off by {nearest}");
+        }
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid() {
+        let mut rng = Rng::new(2);
+        let pts = blobs(&mut rng, &[[0.0; 3], [50.0, 0.0, 0.0]], 30, 5.0);
+        let res = KMeans::new(2).run(&pts, &mut rng);
+        for (i, p) in pts.iter().enumerate() {
+            let assigned = res.assignment[i];
+            for (c, cent) in res.centroids.iter().enumerate() {
+                assert!(
+                    d2(p, &res.centroids[assigned]) <= d2(p, cent) + 1e-9,
+                    "point {i} nearer to {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let mut rng = Rng::new(3);
+        let pts = vec![[0.0, 0.0, 0.0], [10.0, 0.0, 0.0], [0.0, 10.0, 0.0]];
+        let res = KMeans::new(3).run(&pts, &mut rng);
+        assert!(res.inertia < 1e-9);
+        let mut sizes = res.sizes();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn k_one_centroid_is_mean() {
+        let mut rng = Rng::new(4);
+        let pts = vec![[0.0, 0.0, 0.0], [2.0, 4.0, 6.0]];
+        let res = KMeans::new(1).run(&pts, &mut rng);
+        assert!((res.centroids[0][0] - 1.0).abs() < 1e-9);
+        assert!((res.centroids[0][1] - 2.0).abs() < 1e-9);
+        assert!((res.centroids[0][2] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_in_k() {
+        let mut rng = Rng::new(5);
+        let pts = blobs(
+            &mut rng,
+            &[[0.0; 3], [30.0, 0.0, 0.0], [0.0, 30.0, 0.0], [0.0, 0.0, 30.0]],
+            25,
+            4.0,
+        );
+        let mut prev = f64::INFINITY;
+        for k in 1..=6 {
+            // best of 3 restarts to smooth out seeding luck
+            let best = (0..3)
+                .map(|s| {
+                    let mut r = Rng::new(100 + s);
+                    KMeans::new(k).run(&pts, &mut r).inertia
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                best <= prev * 1.05,
+                "inertia went up at k={k}: {best} > {prev}"
+            );
+            prev = best;
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let pts = blobs(&mut Rng::new(8), &[[0.0; 3], [20.0, 0.0, 0.0]], 50, 3.0);
+        let a = KMeans::new(2).run(&pts, &mut r1);
+        let b = KMeans::new(2).run(&pts, &mut r2);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn every_cluster_nonempty_on_spread_data() {
+        let mut rng = Rng::new(10);
+        let pts: Vec<[f64; 3]> = (0..200)
+            .map(|_| [rng.uniform() * 100.0, rng.uniform() * 100.0, rng.uniform() * 100.0])
+            .collect();
+        let res = KMeans::new(5).run(&pts, &mut rng);
+        assert!(res.sizes().iter().all(|&s| s > 0), "{:?}", res.sizes());
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's satellite-clustered parameter-server selection algorithm
+//! (§III-B, Eq. 13–15) and the re-clustering trigger (§III-A, Algorithm 1
+//! lines 14–18).
+
+pub mod kmeans;
+pub mod ps_select;
+pub mod quality;
+pub mod recluster;
+
+pub use kmeans::{KMeans, KMeansResult};
+pub use ps_select::select_parameter_servers;
+pub use recluster::ReclusterPolicy;

@@ -1,0 +1,160 @@
+//! Parameter-server selection (§III-B final step): within each cluster the
+//! satellite nearest the converged centroid becomes the PS; ties and
+//! communication quality are broken by the achievable-rate the candidate
+//! offers to its cluster peers ("strong communication capabilities").
+
+use super::kmeans::KMeansResult;
+use crate::network::LinkModel;
+use crate::orbit::Vec3;
+
+/// Per-cluster parameter-server choice.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PsChoice {
+    pub cluster: usize,
+    pub ps: usize,
+    /// Distance from the PS to the centroid, km.
+    pub centroid_dist_km: f64,
+}
+
+/// Select one PS per cluster. `positions` are ECI meters (same order as the
+/// clustering input), `result.centroids` are km (features space).
+///
+/// Score: primarily centroid proximity (the paper's criterion), with the
+/// mean achievable rate to cluster members as a tie-breaker within a 5 %
+/// distance band — this encodes the paper's "strong communication
+/// capabilities" qualifier.
+pub fn select_parameter_servers(
+    result: &KMeansResult,
+    positions: &[Vec3],
+    link: &LinkModel,
+) -> Vec<PsChoice> {
+    let clusters = result.clusters();
+    let mut out = Vec::with_capacity(clusters.len());
+    for (c, members) in clusters.iter().enumerate() {
+        assert!(!members.is_empty(), "cluster {c} is empty");
+        let cent = result.centroids[c];
+        let cent_m = Vec3::new(cent[0] * 1e3, cent[1] * 1e3, cent[2] * 1e3);
+
+        // distance of every member to the centroid
+        let dists: Vec<f64> = members
+            .iter()
+            .map(|&i| positions[i].dist(cent_m))
+            .collect();
+        let min_d = dists.iter().cloned().fold(f64::INFINITY, f64::min);
+        let band = min_d * 1.05 + 1.0;
+
+        // among near-minimal candidates, pick the best mean rate to peers
+        let mut best: Option<(usize, f64)> = None;
+        for (mi, &i) in members.iter().enumerate() {
+            if dists[mi] > band {
+                continue;
+            }
+            let mean_rate = if members.len() == 1 {
+                f64::INFINITY
+            } else {
+                members
+                    .iter()
+                    .filter(|&&j| j != i)
+                    .map(|&j| link.rate(positions[i].dist(positions[j]).max(1.0)))
+                    .sum::<f64>()
+                    / (members.len() - 1) as f64
+            };
+            if best.map(|(_, r)| mean_rate > r).unwrap_or(true) {
+                best = Some((i, mean_rate));
+            }
+        }
+        let (ps, _) = best.unwrap();
+        let mi = members.iter().position(|&i| i == ps).unwrap();
+        out.push(PsChoice {
+            cluster: c,
+            ps,
+            centroid_dist_km: dists[mi] / 1e3,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans::KMeans;
+    use crate::network::params::NetworkParams;
+    use crate::util::Rng;
+
+    fn setup(n_blob: usize) -> (KMeansResult, Vec<Vec3>, LinkModel) {
+        let mut rng = Rng::new(77);
+        let centers = [[0.0f64, 0.0, 7000.0], [7000.0, 0.0, 0.0]];
+        let mut pts_km = Vec::new();
+        for c in &centers {
+            for _ in 0..n_blob {
+                pts_km.push([
+                    c[0] + 50.0 * rng.normal(),
+                    c[1] + 50.0 * rng.normal(),
+                    c[2] + 50.0 * rng.normal(),
+                ]);
+            }
+        }
+        let res = KMeans::new(2).run(&pts_km, &mut rng);
+        let pos: Vec<Vec3> = pts_km
+            .iter()
+            .map(|p| Vec3::new(p[0] * 1e3, p[1] * 1e3, p[2] * 1e3))
+            .collect();
+        (res, pos, LinkModel::new(NetworkParams::default()))
+    }
+
+    #[test]
+    fn one_ps_per_cluster() {
+        let (res, pos, link) = setup(20);
+        let ps = select_parameter_servers(&res, &pos, &link);
+        assert_eq!(ps.len(), 2);
+        assert_ne!(ps[0].ps, ps[1].ps);
+    }
+
+    #[test]
+    fn ps_belongs_to_its_cluster() {
+        let (res, pos, link) = setup(20);
+        for choice in select_parameter_servers(&res, &pos, &link) {
+            assert_eq!(res.assignment[choice.ps], choice.cluster);
+        }
+    }
+
+    #[test]
+    fn ps_is_near_centroid() {
+        let (res, pos, link) = setup(30);
+        for choice in select_parameter_servers(&res, &pos, &link) {
+            // the PS must be within the 5% band of the minimal distance
+            let members: Vec<usize> = res
+                .assignment
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c == choice.cluster)
+                .map(|(i, _)| i)
+                .collect();
+            let cent = res.centroids[choice.cluster];
+            let cent_m = Vec3::new(cent[0] * 1e3, cent[1] * 1e3, cent[2] * 1e3);
+            let min_d = members
+                .iter()
+                .map(|&i| pos[i].dist(cent_m))
+                .fold(f64::INFINITY, f64::min);
+            let d_ps = pos[choice.ps].dist(cent_m);
+            assert!(d_ps <= min_d * 1.05 + 1.0, "ps {d_ps} vs min {min_d}");
+        }
+    }
+
+    #[test]
+    fn singleton_cluster_ps_is_member() {
+        let mut rng = Rng::new(5);
+        let pts = vec![[0.0, 0.0, 0.0], [1000.0, 0.0, 0.0]];
+        let res = KMeans::new(2).run(&pts, &mut rng);
+        let pos: Vec<Vec3> = pts
+            .iter()
+            .map(|p| Vec3::new(p[0] * 1e3, p[1] * 1e3, p[2] * 1e3))
+            .collect();
+        let link = LinkModel::new(NetworkParams::default());
+        let ps = select_parameter_servers(&res, &pos, &link);
+        assert_eq!(ps.len(), 2);
+        let mut ids: Vec<usize> = ps.iter().map(|p| p.ps).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Clustering-quality diagnostics used by tests, the ablation bench, and
+//! the FedCE baseline (which clusters on data distributions rather than
+//! positions).
+
+/// Within-cluster sum of squares for arbitrary-dimension points.
+pub fn inertia(points: &[Vec<f64>], assignment: &[usize], centroids: &[Vec<f64>]) -> f64 {
+    assert_eq!(points.len(), assignment.len());
+    points
+        .iter()
+        .zip(assignment.iter())
+        .map(|(p, &c)| dist2(p, &centroids[c]))
+        .sum()
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Mean silhouette coefficient (O(n²); diagnostics only, not hot path).
+pub fn silhouette(points: &[Vec<f64>], assignment: &[usize], k: usize) -> f64 {
+    let n = points.len();
+    if n < 2 || k < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..n {
+        let ci = assignment[i];
+        let mut intra = 0.0;
+        let mut intra_n = 0usize;
+        let mut inter = vec![(0.0, 0usize); k];
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = dist2(&points[i], &points[j]).sqrt();
+            if assignment[j] == ci {
+                intra += d;
+                intra_n += 1;
+            } else {
+                let e = &mut inter[assignment[j]];
+                e.0 += d;
+                e.1 += 1;
+            }
+        }
+        if intra_n == 0 {
+            continue; // singleton: silhouette undefined, skip
+        }
+        let a = intra / intra_n as f64;
+        let b = inter
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(s, n)| s / *n as f64)
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            continue;
+        }
+        total += (b - a) / a.max(b);
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+/// k-means over arbitrary-dimension points (used by FedCE on label
+/// histograms). Returns (assignment, centroids).
+pub fn kmeans_nd(
+    points: &[Vec<f64>],
+    k: usize,
+    iters: usize,
+    rng: &mut crate::util::Rng,
+) -> (Vec<usize>, Vec<Vec<f64>>) {
+    let n = points.len();
+    assert!(n >= k && k >= 1);
+    let dim = points[0].len();
+    // seed with distinct random points
+    let seeds = rng.sample_indices(n, k);
+    let mut centroids: Vec<Vec<f64>> = seeds.iter().map(|&i| points[i].clone()).collect();
+    let mut assignment = vec![0usize; n];
+    for _ in 0..iters {
+        for (i, p) in points.iter().enumerate() {
+            assignment[i] = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(p, &centroids[a])
+                        .partial_cmp(&dist2(p, &centroids[b]))
+                        .unwrap()
+                })
+                .unwrap();
+        }
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            let c = assignment[i];
+            counts[c] += 1;
+            for d in 0..dim {
+                sums[c][d] += p[d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..dim {
+                    centroids[c][d] = sums[c][d] / counts[c] as f64;
+                }
+            }
+        }
+    }
+    (assignment, centroids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn inertia_zero_when_points_are_centroids() {
+        let pts = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let cents = pts.clone();
+        assert_eq!(inertia(&pts, &[0, 1], &cents), 0.0);
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_blobs() {
+        let mut rng = Rng::new(3);
+        let mut pts = Vec::new();
+        let mut asg = Vec::new();
+        for (c, center) in [[0.0, 0.0], [100.0, 0.0]].iter().enumerate() {
+            for _ in 0..20 {
+                pts.push(vec![center[0] + rng.normal(), center[1] + rng.normal()]);
+                asg.push(c);
+            }
+        }
+        let s = silhouette(&pts, &asg, 2);
+        assert!(s > 0.9, "silhouette {s}");
+    }
+
+    #[test]
+    fn silhouette_low_for_random_labels() {
+        let mut rng = Rng::new(4);
+        let pts: Vec<Vec<f64>> = (0..60)
+            .map(|_| vec![rng.uniform() * 10.0, rng.uniform() * 10.0])
+            .collect();
+        let asg: Vec<usize> = (0..60).map(|_| rng.below_usize(3)).collect();
+        let s = silhouette(&pts, &asg, 3);
+        assert!(s < 0.25, "silhouette {s}");
+    }
+
+    #[test]
+    fn kmeans_nd_separates_histograms() {
+        // two groups of label histograms: classes 0-4 heavy vs 5-9 heavy
+        let mut rng = Rng::new(5);
+        let mut pts = Vec::new();
+        for g in 0..2 {
+            for _ in 0..15 {
+                let mut h = vec![0.02; 10];
+                for c in 0..5 {
+                    h[g * 5 + c] = 0.18 + 0.02 * rng.uniform();
+                }
+                pts.push(h);
+            }
+        }
+        let (asg, _) = kmeans_nd(&pts, 2, 20, &mut rng);
+        let first = asg[0];
+        assert!(asg[..15].iter().all(|&a| a == first));
+        assert!(asg[15..].iter().all(|&a| a != first));
+    }
+}

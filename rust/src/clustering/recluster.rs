@@ -1,0 +1,232 @@
+//! Re-clustering trigger (Algorithm 1 lines 14–18): during aggregation each
+//! cluster monitors its dropout rate `d_r = C^d / C^k`; when `d_r > Z` the
+//! constellation is re-clustered and newly-assigned satellites are
+//! warm-started via MAML (handled by the coordinator).
+
+/// Dropout-threshold policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ReclusterPolicy {
+    /// Z — dropout-rate threshold that triggers re-clustering.
+    pub threshold: f64,
+}
+
+impl Default for ReclusterPolicy {
+    fn default() -> Self {
+        // the paper does not state Z; 0.25 makes churn events meaningful but
+        // not constant at LEO orbital rates (configurable)
+        ReclusterPolicy { threshold: 0.25 }
+    }
+}
+
+/// Dropout observation for one cluster in one round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DropoutStats {
+    /// C^k — cluster membership at the start of the round.
+    pub members: usize,
+    /// C^d — members that left (lost ISL contact / drifted to another
+    /// cluster's region) during the round.
+    pub dropped: usize,
+}
+
+impl DropoutStats {
+    /// `d_r = C^d / C^k` (0 for an empty cluster).
+    pub fn dropout_rate(&self) -> f64 {
+        if self.members == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.members as f64
+        }
+    }
+}
+
+impl ReclusterPolicy {
+    pub fn new(threshold: f64) -> Self {
+        assert!((0.0..=1.0).contains(&threshold));
+        ReclusterPolicy { threshold }
+    }
+
+    /// Whether any cluster's dropout rate exceeds Z.
+    pub fn should_recluster(&self, stats: &[DropoutStats]) -> bool {
+        stats.iter().any(|s| s.dropout_rate() > self.threshold)
+    }
+
+    /// Clusters that individually breached the threshold (for logging).
+    pub fn breached(&self, stats: &[DropoutStats]) -> Vec<usize> {
+        stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.dropout_rate() > self.threshold)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Diff two assignments: satellites whose cluster id changed — these are the
+/// "newly joined" members that receive the MAML warm start (§III-C).
+pub fn changed_members(old: &[usize], new: &[usize]) -> Vec<usize> {
+    assert_eq!(old.len(), new.len());
+    old.iter()
+        .zip(new.iter())
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Relabel `new` cluster ids to maximise overlap with `old` clusters
+/// (maximum-weight matching on the contingency table — exact via
+/// permutation search for k ≤ 8, greedy beyond). Keeps cluster identities
+/// stable across re-clustering so per-cluster model state carries over to
+/// the successor cluster; the exact matching guarantees relabelled churn
+/// never exceeds raw churn.
+pub fn align_labels(old: &[usize], new: &[usize], k: usize) -> Vec<usize> {
+    assert_eq!(old.len(), new.len());
+    let mut table = vec![vec![0usize; k]; k]; // [new][old] overlap counts
+    for (&o, &n) in old.iter().zip(new.iter()) {
+        if o < k && n < k {
+            table[n][o] += 1;
+        }
+    }
+    let mapping = if k <= 8 {
+        best_permutation(&table, k)
+    } else {
+        greedy_matching(&table, k)
+    };
+    new.iter().map(|&n| mapping[n]).collect()
+}
+
+/// Exact maximum-overlap assignment: search all k! mappings new→old.
+fn best_permutation(table: &[Vec<usize>], k: usize) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..k).collect();
+    let mut best = perm.clone();
+    let mut best_score = score(table, &perm);
+    // Heap's algorithm, iterative
+    let mut c = vec![0usize; k];
+    let mut i = 0;
+    while i < k {
+        if c[i] < i {
+            if i % 2 == 0 {
+                perm.swap(0, i);
+            } else {
+                perm.swap(c[i], i);
+            }
+            let s = score(table, &perm);
+            if s > best_score {
+                best_score = s;
+                best = perm.clone();
+            }
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+    best
+}
+
+fn score(table: &[Vec<usize>], perm: &[usize]) -> usize {
+    perm.iter().enumerate().map(|(n, &o)| table[n][o]).sum()
+}
+
+fn greedy_matching(table: &[Vec<usize>], k: usize) -> Vec<usize> {
+    let mut mapping = vec![usize::MAX; k]; // new label -> old label
+    let mut used_old = vec![false; k];
+    for _ in 0..k {
+        let mut best = (0usize, 0usize, 0usize); // (count, new, old)
+        let mut found = false;
+        for n in 0..k {
+            if mapping[n] != usize::MAX {
+                continue;
+            }
+            for o in 0..k {
+                if used_old[o] {
+                    continue;
+                }
+                if !found || table[n][o] >= best.0 {
+                    best = (table[n][o], n, o);
+                    found = true;
+                }
+            }
+        }
+        mapping[best.1] = best.2;
+        used_old[best.2] = true;
+    }
+    mapping
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropout_rate_formula() {
+        let s = DropoutStats {
+            members: 20,
+            dropped: 5,
+        };
+        assert!((s.dropout_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(DropoutStats::default().dropout_rate(), 0.0);
+    }
+
+    #[test]
+    fn trigger_fires_above_threshold_only() {
+        let p = ReclusterPolicy::new(0.25);
+        let below = [DropoutStats {
+            members: 20,
+            dropped: 5,
+        }];
+        // exactly Z does NOT trigger (paper: d_r > Z)
+        assert!(!p.should_recluster(&below));
+        let above = [DropoutStats {
+            members: 20,
+            dropped: 6,
+        }];
+        assert!(p.should_recluster(&above));
+    }
+
+    #[test]
+    fn any_cluster_can_trigger() {
+        let p = ReclusterPolicy::default();
+        let stats = [
+            DropoutStats {
+                members: 10,
+                dropped: 0,
+            },
+            DropoutStats {
+                members: 10,
+                dropped: 9,
+            },
+        ];
+        assert!(p.should_recluster(&stats));
+        assert_eq!(p.breached(&stats), vec![1]);
+    }
+
+    #[test]
+    fn changed_members_diff() {
+        let old = [0, 0, 1, 1, 2];
+        let new = [0, 1, 1, 2, 2];
+        assert_eq!(changed_members(&old, &new), vec![1, 3]);
+        assert!(changed_members(&old, &old).is_empty());
+    }
+
+    #[test]
+    fn align_labels_recovers_permutation() {
+        // new labels are a pure permutation of old: alignment should undo it
+        let old = [0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let new = [2, 2, 2, 0, 0, 0, 1, 1, 1];
+        let aligned = align_labels(&old, &new, 3);
+        assert_eq!(aligned.to_vec(), old.to_vec());
+        assert!(changed_members(&old, &aligned).is_empty());
+    }
+
+    #[test]
+    fn align_labels_minimises_churn() {
+        // one satellite truly moved; after alignment only that one differs
+        let old = [0, 0, 0, 0, 1, 1, 1, 1];
+        let new = [1, 1, 1, 0, 0, 0, 0, 0]; // labels flipped + sat 3 moved
+        let aligned = align_labels(&old, &new, 2);
+        let changed = changed_members(&old, &aligned);
+        assert_eq!(changed, vec![3]);
+    }
+}

@@ -1,0 +1,255 @@
+//! Experiment configuration: one struct with everything a run needs,
+//! presets matching the paper's setups, a flat `key = value` config-file
+//! parser, and CLI overrides.
+
+pub mod parse;
+
+use crate::data::DatasetKind;
+use crate::util::cli::Args;
+
+/// Complete configuration of one FL experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset geometry (drives the model variant too).
+    pub dataset: DatasetKind,
+    /// Number of satellite clients C.
+    pub clients: usize,
+    /// Number of clusters K.
+    pub clusters: usize,
+    /// Max intra-cluster FL rounds M (budget; runs may stop at target).
+    pub rounds: usize,
+    /// Local epochs λ per round.
+    pub local_epochs: usize,
+    /// SGD learning rate η (paper: 0.01).
+    pub lr: f32,
+    /// Ground aggregation every this many cluster rounds.
+    pub ground_every: usize,
+    /// Re-clustering dropout threshold Z.
+    pub recluster_threshold: f64,
+    /// MAML inner learning rate α (paper: 1e-3).
+    pub maml_alpha: f32,
+    /// MAML outer learning rate β (paper: 1e-3).
+    pub maml_beta: f32,
+    /// Stop when global accuracy reaches this (None = run all rounds).
+    pub target_accuracy: Option<f64>,
+    /// Training samples to generate/load.
+    pub train_samples: usize,
+    /// Test samples (sized to a batch multiple).
+    pub test_samples: usize,
+    /// Dirichlet α for non-IID sharding (f64::INFINITY = IID).
+    pub dirichlet_alpha: f64,
+    /// Walker constellation geometry.
+    pub planes: usize,
+    pub sats_per_plane: usize,
+    /// Per-round client outage probability.
+    pub outage_prob: f64,
+    /// Client CPU heterogeneity: f_i uniform in [cpu_hz*lo, cpu_hz*hi].
+    pub cpu_het: (f64, f64),
+    /// Eval batches per evaluation (0 = full test set).
+    pub eval_batches: usize,
+    /// Evaluate every this many cluster rounds.
+    pub eval_every: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Paper's model variant name for the dataset.
+    pub fn variant(&self) -> &'static str {
+        match self.dataset {
+            DatasetKind::Mnist => "mnist_lenet",
+            DatasetKind::Cifar10 => "cifar_lenet",
+            DatasetKind::Tiny => "tiny_mlp",
+        }
+    }
+
+    /// Fast smoke preset (tiny model, small constellation) — used by tests
+    /// and the quickstart example.
+    pub fn tiny() -> Self {
+        ExperimentConfig {
+            dataset: DatasetKind::Tiny,
+            clients: 24,
+            clusters: 3,
+            rounds: 20,
+            local_epochs: 1,
+            lr: 0.2,
+            ground_every: 2,
+            recluster_threshold: 0.25,
+            maml_alpha: 0.05,
+            maml_beta: 0.05,
+            target_accuracy: None,
+            train_samples: 1536,
+            test_samples: 256,
+            dirichlet_alpha: 0.5,
+            planes: 4,
+            sats_per_plane: 6,
+            outage_prob: 0.02,
+            cpu_het: (0.5, 2.0),
+            eval_batches: 0,
+            eval_every: 1,
+            seed: 42,
+        }
+    }
+
+    /// MNIST preset following §IV-A (scaled client count; see DESIGN.md §3).
+    pub fn mnist() -> Self {
+        ExperimentConfig {
+            dataset: DatasetKind::Mnist,
+            clients: 96,
+            clusters: 3,
+            rounds: 300,
+            local_epochs: 1,
+            lr: 0.05,
+            ground_every: 5,
+            recluster_threshold: 0.25,
+            maml_alpha: 1e-3,
+            maml_beta: 1e-3,
+            target_accuracy: Some(0.80),
+            train_samples: 12_288,
+            test_samples: 1024,
+            dirichlet_alpha: 0.5,
+            planes: 8,
+            sats_per_plane: 12,
+            outage_prob: 0.02,
+            cpu_het: (0.5, 2.0),
+            eval_batches: 8,
+            eval_every: 1,
+            seed: 42,
+        }
+    }
+
+    /// CIFAR-10 preset (§IV-A; target accuracy 40 %).
+    pub fn cifar10() -> Self {
+        ExperimentConfig {
+            dataset: DatasetKind::Cifar10,
+            rounds: 400,
+            lr: 0.03,
+            target_accuracy: Some(0.40),
+            ..Self::mnist()
+        }
+    }
+
+    /// Preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "mnist" => Some(Self::mnist()),
+            "cifar10" | "cifar" => Some(Self::cifar10()),
+            _ => None,
+        }
+    }
+
+    /// Apply CLI overrides (`--clients 48 --k 4 --rounds 100 ...`).
+    pub fn with_args(mut self, args: &Args) -> Self {
+        if let Some(d) = args.get("dataset") {
+            let kind = DatasetKind::parse(d).unwrap_or_else(|| panic!("unknown dataset '{d}'"));
+            // switch preset family when the dataset changes
+            if kind != self.dataset {
+                let mut base = match kind {
+                    DatasetKind::Mnist => Self::mnist(),
+                    DatasetKind::Cifar10 => Self::cifar10(),
+                    DatasetKind::Tiny => Self::tiny(),
+                };
+                base.seed = self.seed;
+                self = base;
+            }
+        }
+        self.clients = args.get_usize("clients", self.clients);
+        self.clusters = args.get_usize("k", self.clusters);
+        self.rounds = args.get_usize("rounds", self.rounds);
+        self.local_epochs = args.get_usize("epochs", self.local_epochs);
+        self.lr = args.get_f64("lr", self.lr as f64) as f32;
+        self.ground_every = args.get_usize("ground-every", self.ground_every);
+        self.recluster_threshold = args.get_f64("z", self.recluster_threshold);
+        self.maml_alpha = args.get_f64("alpha", self.maml_alpha as f64) as f32;
+        self.maml_beta = args.get_f64("beta", self.maml_beta as f64) as f32;
+        if let Some(t) = args.get("target") {
+            self.target_accuracy = Some(t.parse().expect("--target expects a number"));
+        }
+        if args.flag("no-target") {
+            self.target_accuracy = None;
+        }
+        self.train_samples = args.get_usize("train-samples", self.train_samples);
+        self.test_samples = args.get_usize("test-samples", self.test_samples);
+        self.dirichlet_alpha = args.get_f64("dirichlet", self.dirichlet_alpha);
+        self.planes = args.get_usize("planes", self.planes);
+        self.sats_per_plane = args.get_usize("sats-per-plane", self.sats_per_plane);
+        self.outage_prob = args.get_f64("outage", self.outage_prob);
+        self.eval_batches = args.get_usize("eval-batches", self.eval_batches);
+        self.eval_every = args.get_usize("eval-every", self.eval_every);
+        self.seed = args.get_u64("seed", self.seed);
+        self.validate();
+        self
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) {
+        assert!(self.clients >= self.clusters, "fewer clients than clusters");
+        assert!(
+            self.planes * self.sats_per_plane >= self.clients,
+            "constellation smaller than client count"
+        );
+        assert!(self.clusters >= 1 && self.rounds >= 1 && self.local_epochs >= 1);
+        assert!(self.lr > 0.0);
+        assert!((0.0..=1.0).contains(&self.recluster_threshold));
+        assert!((0.0..1.0).contains(&self.outage_prob));
+        assert!(self.cpu_het.0 > 0.0 && self.cpu_het.1 >= self.cpu_het.0);
+        if let Some(t) = self.target_accuracy {
+            assert!((0.0..=1.0).contains(&t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for name in ["tiny", "mnist", "cifar10"] {
+            ExperimentConfig::preset(name).unwrap().validate();
+        }
+        assert!(ExperimentConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn variant_follows_dataset() {
+        assert_eq!(ExperimentConfig::mnist().variant(), "mnist_lenet");
+        assert_eq!(ExperimentConfig::cifar10().variant(), "cifar_lenet");
+        assert_eq!(ExperimentConfig::tiny().variant(), "tiny_mlp");
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = Args::parse(
+            ["--k", "5", "--rounds", "7", "--lr", "0.5", "--no-target"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["no-target"],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args);
+        assert_eq!(c.clusters, 5);
+        assert_eq!(c.rounds, 7);
+        assert!((c.lr - 0.5).abs() < 1e-6);
+        assert!(c.target_accuracy.is_none());
+    }
+
+    #[test]
+    fn dataset_switch_changes_family() {
+        let args = Args::parse(
+            ["--dataset", "cifar10"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::mnist().with_args(&args);
+        assert_eq!(c.dataset, DatasetKind::Cifar10);
+        assert_eq!(c.target_accuracy, Some(0.40));
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer clients than clusters")]
+    fn validate_catches_bad_k() {
+        let mut c = ExperimentConfig::tiny();
+        c.clusters = c.clients + 1;
+        c.validate();
+    }
+}

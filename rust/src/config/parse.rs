@@ -1,0 +1,91 @@
+//! Flat `key = value` config-file parser (TOML subset: comments with `#`,
+//! bare sections `[name]` flattened to `name.key`). Files feed the same
+//! override path as CLI flags, so `fedhc run --config exp.toml --k 5`
+//! works with the CLI winning.
+
+use crate::util::cli::Args;
+use std::collections::BTreeMap;
+
+/// Parse the subset grammar into a flat key→value map.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        if key.is_empty() || val.is_empty() {
+            return Err(format!("line {}: empty key or value", lineno + 1));
+        }
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+/// Merge a config file into parsed CLI args: file values become options
+/// unless the CLI already set them (CLI wins). Section prefixes are
+/// dropped (sections are organisational only).
+pub fn merge_file_into_args(args: &mut Args, text: &str) -> Result<(), String> {
+    for (k, v) in parse_kv(text)? {
+        let key = k.rsplit('.').next().unwrap().to_string();
+        args.options.entry(key).or_insert(v);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let text = r#"
+            # experiment
+            k = 4
+            lr = 0.01
+            [maml]
+            alpha = 0.001   # inner
+        "#;
+        let kv = parse_kv(text).unwrap();
+        assert_eq!(kv["k"], "4");
+        assert_eq!(kv["lr"], "0.01");
+        assert_eq!(kv["maml.alpha"], "0.001");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_kv("novalue").is_err());
+        assert!(parse_kv("x =").is_err());
+    }
+
+    #[test]
+    fn quoted_values_unquoted() {
+        let kv = parse_kv("dataset = \"mnist\"").unwrap();
+        assert_eq!(kv["dataset"], "mnist");
+    }
+
+    #[test]
+    fn cli_wins_over_file() {
+        let mut args = Args::parse(
+            ["--k", "9"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        merge_file_into_args(&mut args, "k = 3\nrounds = 50").unwrap();
+        assert_eq!(args.get("k"), Some("9"));
+        assert_eq!(args.get("rounds"), Some("50"));
+    }
+}

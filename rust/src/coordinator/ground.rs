@@ -1,0 +1,123 @@
+//! Ground-station aggregation stage (paper §III-A step 4).
+//!
+//! The designated ground station (the one seeing the most cluster PSes at
+//! the current time) collects the models of its visible clusters,
+//! aggregates them with data-size weights (Eq. 5 over clusters), and
+//! broadcasts the global model back to those clusters. Invisible clusters
+//! keep training on their own model until a later pass — the paper's
+//! assumption is only that *at least one* cluster is reachable.
+
+use crate::orbit::{GroundStation, Vec3};
+
+/// Which ground station leads this pass and which clusters participate.
+#[derive(Clone, Debug)]
+pub struct GroundPlan {
+    pub station: usize,
+    /// Participating cluster ids (their PS is visible).
+    pub clusters: Vec<usize>,
+}
+
+/// Like [`plan`] but enforcing the paper's connectivity assumption ("the
+/// ground station can connect at least one satellite cluster throughout the
+/// FL process"): when no PS is geometrically visible, the nearest PS/GS
+/// pair is scheduled anyway (the pass is deferred within the round until
+/// the next contact window; the link budget uses the actual distance).
+pub fn plan_with_fallback(stations: &[GroundStation], ps_pos: &[Vec3], t: f64) -> GroundPlan {
+    if let Some(p) = plan(stations, ps_pos, t) {
+        return p;
+    }
+    let (gs, k) = stations
+        .iter()
+        .flat_map(|g| {
+            let gp = g.eci(t);
+            ps_pos
+                .iter()
+                .enumerate()
+                .map(move |(k, &p)| (g.id, k, p.dist(gp)))
+        })
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .map(|(g, k, _)| (g, k))
+        .expect("no stations or no clusters");
+    GroundPlan {
+        station: gs,
+        clusters: vec![k],
+    }
+}
+
+/// Choose the station seeing the most PSes. `ps_pos[k]` is cluster k's PS
+/// position at time `t`. Returns None when nobody sees anything.
+pub fn plan(stations: &[GroundStation], ps_pos: &[Vec3], t: f64) -> Option<GroundPlan> {
+    let mut best: Option<GroundPlan> = None;
+    for gs in stations {
+        let visible: Vec<usize> = ps_pos
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| gs.sees(p, t))
+            .map(|(k, _)| k)
+            .collect();
+        if !visible.is_empty()
+            && best
+                .as_ref()
+                .map(|b| visible.len() > b.clusters.len())
+                .unwrap_or(true)
+        {
+            best = Some(GroundPlan {
+                station: gs.id,
+                clusters: visible,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::geo::default_ground_segment;
+    use crate::orbit::EARTH_RADIUS;
+
+    #[test]
+    fn picks_station_with_most_visible() {
+        let stations = default_ground_segment();
+        // one PS directly over station 0 (wuhan ~30.6N 114.3E at t=0),
+        // three over nobody (deep space on the far side is still "visible"
+        // if above horizon — use antipodal points)
+        let wuhan = stations[0].eci(0.0);
+        let above = wuhan.scale((EARTH_RADIUS + 1.3e6) / wuhan.norm());
+        let anti = above.scale(-1.0);
+        let plan = plan(&stations, &[above, anti], 0.0).unwrap();
+        assert_eq!(plan.station, 0);
+        assert_eq!(plan.clusters, vec![0]);
+    }
+
+    #[test]
+    fn none_when_nothing_visible() {
+        let stations = vec![GroundStation::new(0, "eq", 0.0, 0.0, 10.0)];
+        let anti = Vec3::new(-(EARTH_RADIUS + 1.3e6), 0.0, 0.0);
+        assert!(plan(&stations, &[anti], 0.0).is_none());
+    }
+
+    #[test]
+    fn fallback_always_schedules_someone() {
+        let stations = vec![GroundStation::new(0, "eq", 0.0, 0.0, 10.0)];
+        let anti = Vec3::new(-(EARTH_RADIUS + 1.3e6), 0.0, 0.0);
+        // 90° away: still below the horizon but much closer than the antipode
+        let near_anti = Vec3::new(0.0, EARTH_RADIUS + 1.3e6, 0.0);
+        let p = plan_with_fallback(&stations, &[anti, near_anti], 0.0);
+        assert_eq!(p.clusters.len(), 1);
+        assert_eq!(p.clusters[0], 1, "nearest PS should be picked");
+    }
+
+    #[test]
+    fn ties_broken_deterministically() {
+        let stations = default_ground_segment();
+        let p0 = stations[0].eci(0.0);
+        let above0 = p0.scale((EARTH_RADIUS + 1.3e6) / p0.norm());
+        let p1 = stations[1].eci(0.0);
+        let above1 = p1.scale((EARTH_RADIUS + 1.3e6) / p1.norm());
+        // one PS over each of two stations: each sees one → first wins ties
+        let a = plan(&stations, &[above0, above1], 0.0).unwrap();
+        let b = plan(&stations, &[above0, above1], 0.0).unwrap();
+        assert_eq!(a.station, b.station);
+    }
+}

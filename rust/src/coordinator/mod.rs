@@ -1,0 +1,12 @@
+//! The FedHC coordinator (paper §III): two-stage hierarchical clustered FL
+//! with satellite-clustered PS selection and meta-learning-driven
+//! re-clustering, plus the shared trial context and round accounting that
+//! the baselines reuse for apples-to-apples comparison.
+
+pub mod fedhc;
+pub mod ground;
+pub mod round;
+pub mod trial;
+
+pub use fedhc::{run_clustered, RunResult, Strategy};
+pub use trial::Trial;

@@ -1,0 +1,175 @@
+//! Per-round time and energy accounting (paper Eq. 7–10).
+//!
+//! * Cluster stage (Eq. 7 inner max): each member computes for
+//!   `t_cmp = D·Q/f_i` and uploads its model to the PS over the live ISL;
+//!   the synchronous round takes the max over members; the PS broadcast
+//!   back is one transmission per member. Clusters run in parallel, so the
+//!   stage advances the clock by the max over clusters.
+//! * Ground stage (Eq. 7 outer sum): each participating cluster PS
+//!   uploads to / downloads from its ground station; the stage time is the
+//!   sum over those links, as the paper writes it.
+//! * Energy (Eq. 8–10): transmission energy of every upload/broadcast plus
+//!   ε0·f²·cycles computation energy of every trained sample.
+
+use crate::network::{EnergyModel, LinkModel};
+use crate::orbit::Vec3;
+
+/// Per-member inputs to the cluster-stage accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct MemberWork {
+    /// Samples trained this round (λ epochs × batches × B).
+    pub samples: usize,
+    /// CPU frequency f_i.
+    pub cpu_hz: f64,
+    /// Member position.
+    pub pos: Vec3,
+}
+
+/// Time + energy of one cluster's intra-cluster round (Eq. 7 inner term
+/// for this cluster, Eq. 8+9 contributions).
+pub fn cluster_round(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    members: &[MemberWork],
+    ps_pos: Vec3,
+    model_bits: f64,
+) -> (f64, f64) {
+    let mut t_max = 0.0f64;
+    let mut e_total = 0.0f64;
+    for m in members {
+        let d = m.pos.dist(ps_pos).max(1.0);
+        let t_cmp = link.compute_time(m.samples, m.cpu_hz);
+        let t_com = link.comm_time(model_bits, d);
+        t_max = t_max.max(t_cmp + t_com);
+        // Eq. 8 upload + Eq. 9 compute
+        e_total += energy.tx_energy(model_bits, d);
+        e_total += energy.compute_energy(m.samples, m.cpu_hz);
+        // PS broadcast of the aggregated model back to this member
+        e_total += energy.tx_energy(model_bits, d);
+    }
+    // broadcast time: the PS transmit to the farthest member overlaps the
+    // next round's compute only partially; count the slowest broadcast once
+    if let Some(far) = members
+        .iter()
+        .map(|m| m.pos.dist(ps_pos).max(1.0))
+        .fold(None::<f64>, |acc, d| Some(acc.map_or(d, |a: f64| a.max(d))))
+    {
+        t_max += link.comm_time(model_bits, far);
+    }
+    (t_max, e_total)
+}
+
+/// Time + energy of the ground-station stage for one PS link: model up to
+/// the GS and the global model back down (Eq. 7 `t_j^com`, doubled for the
+/// return broadcast; Eq. 8 energy on the satellite side).
+pub fn ground_exchange(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    ps_pos: Vec3,
+    gs_pos: Vec3,
+    model_bits: f64,
+) -> (f64, f64) {
+    let d = ps_pos.dist(gs_pos).max(1.0);
+    let t = 2.0 * link.ground_comm_time(model_bits, d);
+    // satellite transmits up once; the downlink is ground-powered
+    let e = energy.ground_tx_energy(model_bits, d);
+    (t, e)
+}
+
+/// Raw-data upload for the C-FedAvg baseline: every client ships its shard
+/// to the central node once (bits = samples × bits_per_sample).
+pub fn data_upload(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    members: &[(usize, Vec3)],
+    bits_per_sample: f64,
+    central_pos: Vec3,
+) -> (f64, f64) {
+    let mut t_max = 0.0f64;
+    let mut e = 0.0f64;
+    for &(samples, pos) in members {
+        let d = pos.dist(central_pos).max(1.0);
+        let bits = samples as f64 * bits_per_sample;
+        t_max = t_max.max(link.comm_time(bits, d));
+        e += energy.tx_energy(bits, d);
+    }
+    (t_max, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NetworkParams;
+
+    fn models() -> (LinkModel, EnergyModel) {
+        let l = LinkModel::new(NetworkParams::default().with_model_params(44_426));
+        (l, EnergyModel::new(l))
+    }
+
+    fn member(samples: usize, cpu: f64, x: f64) -> MemberWork {
+        MemberWork {
+            samples,
+            cpu_hz: cpu,
+            pos: Vec3::new(x, 0.0, 7.0e6),
+        }
+    }
+
+    #[test]
+    fn round_time_is_slowest_member() {
+        let (l, e) = models();
+        let ps = Vec3::new(0.0, 0.0, 7.0e6);
+        let bits = 44_426.0 * 32.0;
+        let fast = member(640, 2e9, 1.0e5);
+        let slow = member(640, 0.5e9, 1.0e5);
+        let (t_fast, _) = cluster_round(&l, &e, &[fast], ps, bits);
+        let (t_both, _) = cluster_round(&l, &e, &[fast, slow], ps, bits);
+        let (t_slow, _) = cluster_round(&l, &e, &[slow], ps, bits);
+        assert!(t_both >= t_slow && t_slow > t_fast);
+    }
+
+    #[test]
+    fn energy_additive_in_members() {
+        let (l, e) = models();
+        let ps = Vec3::new(0.0, 0.0, 7.0e6);
+        let bits = 1e6;
+        let m = member(320, 1e9, 2.0e5);
+        let (_, e1) = cluster_round(&l, &e, &[m], ps, bits);
+        let (_, e2) = cluster_round(&l, &e, &[m, m], ps, bits);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn farther_ps_costs_more() {
+        let (l, e) = models();
+        let bits = 1e6;
+        let m = member(320, 1e9, 1.0e5);
+        let (t_near, e_near) = cluster_round(&l, &e, &[m], Vec3::new(2.0e5, 0.0, 7.0e6), bits);
+        let (t_far, e_far) = cluster_round(&l, &e, &[m], Vec3::new(3.0e6, 0.0, 7.0e6), bits);
+        assert!(t_far > t_near);
+        assert!(e_far > e_near);
+    }
+
+    #[test]
+    fn ground_exchange_roundtrip() {
+        let (l, e) = models();
+        let ps = Vec3::new(7.0e6, 0.0, 0.0);
+        let gs = Vec3::new(6.371e6, 0.0, 0.0);
+        let (t, en) = ground_exchange(&l, &e, ps, gs, 1e6);
+        assert!(t > 0.0 && en > 0.0);
+        // up+down takes twice one-way
+        let d = ps.dist(gs);
+        assert!((t - 2.0 * l.ground_comm_time(1e6, d)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn data_upload_dominated_by_biggest_shard() {
+        let (l, e) = models();
+        let central = Vec3::new(0.0, 0.0, 7.0e6);
+        let near_small = (100usize, Vec3::new(1.0e5, 0.0, 7.0e6));
+        let near_big = (10_000usize, Vec3::new(1.0e5, 0.0, 7.0e6));
+        let (t_small, e_small) = data_upload(&l, &e, &[near_small], 6e3, central);
+        let (t_big, e_big) = data_upload(&l, &e, &[near_small, near_big], 6e3, central);
+        assert!(t_big > 10.0 * t_small);
+        assert!(e_big > e_small);
+    }
+}

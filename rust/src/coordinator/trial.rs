@@ -1,0 +1,171 @@
+//! Shared run context: constellation, ground segment, clients with data
+//! shards, link/energy models, simulated clock and ledger.
+
+use crate::config::ExperimentConfig;
+use crate::data::idx::load_or_synth;
+use crate::data::{partition_dirichlet, partition_iid, Dataset};
+use crate::fl::SatClient;
+use crate::metrics::Ledger;
+use crate::network::{EnergyModel, LinkModel, NetworkParams};
+use crate::orbit::geo::default_ground_segment;
+use crate::orbit::propagate::Constellation;
+use crate::orbit::walker::WalkerConstellation;
+use crate::orbit::{GroundStation, Vec3};
+use crate::runtime::{Manifest, ModelRuntime};
+use crate::sim::{MobilityModel, SimClock};
+use crate::util::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Everything one FL run needs, independent of the method.
+pub struct Trial<'rt> {
+    pub cfg: ExperimentConfig,
+    pub rt: &'rt ModelRuntime,
+    /// Sub-constellation containing exactly the client satellites
+    /// (client i ↔ element i).
+    pub constellation: Constellation,
+    pub ground: Vec<GroundStation>,
+    pub link: LinkModel,
+    pub energy: EnergyModel,
+    pub mobility: MobilityModel,
+    pub clients: Vec<SatClient>,
+    pub test: Dataset,
+    pub clock: SimClock,
+    pub ledger: Ledger,
+    pub rng: Rng,
+    /// Whether real benchmark files were found (vs synthetic substitute).
+    pub real_data: bool,
+}
+
+impl<'rt> Trial<'rt> {
+    /// Build a trial: constellation, data shards, initial models.
+    pub fn new(cfg: ExperimentConfig, manifest: &Manifest, rt: &'rt ModelRuntime) -> Result<Trial<'rt>> {
+        cfg.validate();
+        assert_eq!(
+            rt.spec.name,
+            cfg.variant(),
+            "runtime variant {} does not match config dataset {:?}",
+            rt.spec.name,
+            cfg.dataset
+        );
+        let mut rng = Rng::new(cfg.seed);
+
+        // constellation: Walker shell, first `clients` slots become clients
+        let walker = WalkerConstellation::paper_shell(cfg.planes, cfg.sats_per_plane);
+        let all = walker.elements();
+        let mut ids: Vec<usize> = (0..all.len()).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(cfg.clients);
+        ids.sort_unstable();
+        let elements = ids.iter().map(|&i| all[i]).collect();
+        let constellation = Constellation::new(elements);
+
+        // data: real files if present, synthetic otherwise
+        let (train, test, real_data) = load_or_synth(
+            cfg.dataset,
+            Path::new("data"),
+            cfg.train_samples,
+            cfg.test_samples,
+            cfg.seed ^ 0xDA7A,
+        );
+        let shards = if cfg.dirichlet_alpha.is_finite() {
+            partition_dirichlet(&train, cfg.clients, cfg.dirichlet_alpha, rt.spec.batch, &mut rng)
+        } else {
+            partition_iid(&train, cfg.clients, &mut rng)
+        };
+
+        // clients with CPU heterogeneity
+        let params = NetworkParams::default().with_model_params(rt.spec.param_count);
+        let init = manifest.init_params(&rt.spec)?;
+        let base_hz = params.cpu_hz;
+        let clients: Vec<SatClient> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let hz = base_hz * rng.uniform_in(cfg.cpu_het.0, cfg.cpu_het.1);
+                SatClient::new(i, shard, init.clone(), hz)
+            })
+            .collect();
+
+        let link = LinkModel::new(params);
+        Ok(Trial {
+            cfg,
+            rt,
+            constellation,
+            ground: default_ground_segment(),
+            link,
+            energy: EnergyModel::new(link),
+            mobility: MobilityModel::default(),
+            clients,
+            test,
+            clock: SimClock::new(),
+            ledger: Ledger::new(),
+            rng,
+            real_data,
+        })
+    }
+
+    /// ECI positions of all client satellites at the current sim time.
+    pub fn positions(&self) -> Vec<Vec3> {
+        self.constellation.snapshot(self.clock.now()).positions
+    }
+
+    /// Clustering features (km) at the current sim time.
+    pub fn features_km(&self) -> Vec<[f64; 3]> {
+        self.constellation.snapshot(self.clock.now()).features_km()
+    }
+
+    /// Total data across clients.
+    pub fn total_data(&self) -> usize {
+        self.clients.iter().map(|c| c.data_size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_runtime<F: FnOnce(&Manifest, &ModelRuntime)>(f: F) {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        f(&m, &rt);
+    }
+
+    #[test]
+    fn builds_consistent_trial() {
+        with_runtime(|m, rt| {
+            let cfg = ExperimentConfig::tiny();
+            let t = Trial::new(cfg.clone(), m, rt).unwrap();
+            assert_eq!(t.clients.len(), cfg.clients);
+            assert_eq!(t.constellation.len(), cfg.clients);
+            assert_eq!(t.total_data(), cfg.train_samples);
+            assert_eq!(t.positions().len(), cfg.clients);
+            // every client got the same init
+            for c in &t.clients {
+                assert_eq!(c.params.len(), rt.spec.param_count);
+            }
+            // heterogeneous CPUs within the configured band
+            let base = NetworkParams::default().cpu_hz;
+            for c in &t.clients {
+                assert!(c.cpu_hz >= base * cfg.cpu_het.0 && c.cpu_hz <= base * cfg.cpu_het.1);
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        with_runtime(|m, rt| {
+            let a = Trial::new(ExperimentConfig::tiny(), m, rt).unwrap();
+            let b = Trial::new(ExperimentConfig::tiny(), m, rt).unwrap();
+            for (x, y) in a.clients.iter().zip(&b.clients) {
+                assert_eq!(x.shard.labels, y.shard.labels);
+                assert_eq!(x.cpu_hz, y.cpu_hz);
+            }
+        });
+    }
+}

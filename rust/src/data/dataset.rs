@@ -1,0 +1,183 @@
+//! In-memory image-classification dataset with shard views.
+
+/// Which benchmark geometry a dataset follows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 1×28×28 grayscale, 10 classes (MNIST geometry).
+    Mnist,
+    /// 3×32×32 color, 10 classes (CIFAR-10 geometry).
+    Cifar10,
+    /// 1×8×8, 10 classes — tiny synthetic used by fast tests.
+    Tiny,
+}
+
+impl DatasetKind {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            DatasetKind::Mnist => (1, 28, 28),
+            DatasetKind::Cifar10 => (3, 32, 32),
+            DatasetKind::Tiny => (1, 8, 8),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        10
+    }
+
+    pub fn sample_len(&self) -> usize {
+        let (c, h, w) = self.dims();
+        c * h * w
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Mnist => "mnist",
+            DatasetKind::Cifar10 => "cifar10",
+            DatasetKind::Tiny => "tiny",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s {
+            "mnist" => Some(DatasetKind::Mnist),
+            "cifar10" | "cifar" => Some(DatasetKind::Cifar10),
+            "tiny" => Some(DatasetKind::Tiny),
+            _ => None,
+        }
+    }
+}
+
+/// A dense dataset: images flattened row-major as `[n, c*h*w]` f32 in
+/// [0, 1] (normalised), labels in `[0, classes)`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn new(kind: DatasetKind, images: Vec<f32>, labels: Vec<u8>) -> Self {
+        assert_eq!(images.len(), labels.len() * kind.sample_len());
+        Dataset {
+            kind,
+            images,
+            labels,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Slice of one sample's pixels.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let s = self.kind.sample_len();
+        &self.images[i * s..(i + 1) * s]
+    }
+
+    /// Gather a sub-dataset by indices (used by the partitioner).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let s = self.kind.sample_len();
+        let mut images = Vec::with_capacity(indices.len() * s);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            images.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset {
+            kind: self.kind,
+            images,
+            labels,
+        }
+    }
+
+    /// Normalised label histogram (the FedCE clustering feature).
+    pub fn label_histogram(&self) -> Vec<f64> {
+        let mut h = vec![0.0f64; self.kind.classes()];
+        for &l in &self.labels {
+            h[l as usize] += 1.0;
+        }
+        let n = self.len().max(1) as f64;
+        for v in h.iter_mut() {
+            *v /= n;
+        }
+        h
+    }
+
+    /// Copy batch `b` (of size `bs`, wrapping around the end) into the
+    /// provided buffers — allocation-free hot path for the trainer.
+    pub fn fill_batch(&self, b: usize, bs: usize, xs: &mut [f32], ys: &mut [f32]) {
+        assert!(!self.is_empty());
+        let s = self.kind.sample_len();
+        assert_eq!(xs.len(), bs * s);
+        assert_eq!(ys.len(), bs);
+        let n = self.len();
+        for j in 0..bs {
+            let i = (b * bs + j) % n;
+            xs[j * s..(j + 1) * s].copy_from_slice(self.image(i));
+            ys[j] = self.labels[i] as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> Dataset {
+        let s = DatasetKind::Tiny.sample_len();
+        let images: Vec<f32> = (0..n * s).map(|i| (i % 7) as f32 / 7.0).collect();
+        let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+        Dataset::new(DatasetKind::Tiny, images, labels)
+    }
+
+    #[test]
+    fn dims_and_lengths() {
+        assert_eq!(DatasetKind::Mnist.sample_len(), 784);
+        assert_eq!(DatasetKind::Cifar10.sample_len(), 3072);
+        assert_eq!(DatasetKind::Tiny.sample_len(), 64);
+        let d = tiny(30);
+        assert_eq!(d.len(), 30);
+        assert_eq!(d.image(3).len(), 64);
+    }
+
+    #[test]
+    fn subset_gathers_right_rows() {
+        let d = tiny(20);
+        let s = d.subset(&[3, 7, 11]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.labels, vec![3, 7, 1]);
+        assert_eq!(s.image(1), d.image(7));
+    }
+
+    #[test]
+    fn histogram_sums_to_one() {
+        let d = tiny(25);
+        let h = d.label_histogram();
+        assert_eq!(h.len(), 10);
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_batch_wraps() {
+        let d = tiny(5);
+        let s = d.kind.sample_len();
+        let mut xs = vec![0.0; 4 * s];
+        let mut ys = vec![0.0; 4];
+        d.fill_batch(1, 4, &mut xs, &mut ys); // rows 4,0,1,2
+        assert_eq!(ys, vec![4.0, 0.0, 1.0, 2.0]);
+        assert_eq!(&xs[0..s], d.image(4));
+        assert_eq!(&xs[s..2 * s], d.image(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_sizes_panic() {
+        Dataset::new(DatasetKind::Tiny, vec![0.0; 10], vec![0, 1]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Loaders for the real benchmark files when they are available:
+//! * MNIST IDX (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`),
+//! * CIFAR-10 binary batches (`data_batch_N.bin`, 1 + 3072 bytes/record).
+//!
+//! `load_or_synth` is the single entry point: it probes `data/<name>/` and
+//! falls back to the synthetic generator (DESIGN.md §3 substitution).
+
+use super::dataset::{Dataset, DatasetKind};
+use super::synth;
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub enum IdxError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IdxError::Io(e) => write!(f, "idx io error: {e}"),
+            IdxError::Format(m) => write!(f, "idx format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IdxError {}
+
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        IdxError::Io(e)
+    }
+}
+
+fn read_u32_be(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX file into (dims, payload bytes).
+pub fn parse_idx(bytes: &[u8]) -> Result<(Vec<usize>, &[u8]), IdxError> {
+    if bytes.len() < 4 {
+        return Err(IdxError::Format("truncated header".into()));
+    }
+    if bytes[0] != 0 || bytes[1] != 0 {
+        return Err(IdxError::Format("bad magic".into()));
+    }
+    if bytes[2] != 0x08 {
+        return Err(IdxError::Format(format!(
+            "unsupported dtype 0x{:02x} (only u8)",
+            bytes[2]
+        )));
+    }
+    let ndim = bytes[3] as usize;
+    let header = 4 + 4 * ndim;
+    if bytes.len() < header {
+        return Err(IdxError::Format("truncated dims".into()));
+    }
+    let dims: Vec<usize> = (0..ndim)
+        .map(|i| read_u32_be(bytes, 4 + 4 * i) as usize)
+        .collect();
+    let expect: usize = dims.iter().product();
+    let payload = &bytes[header..];
+    if payload.len() != expect {
+        return Err(IdxError::Format(format!(
+            "payload {} != dims product {}",
+            payload.len(),
+            expect
+        )));
+    }
+    Ok((dims, payload))
+}
+
+/// Load an MNIST-format pair of IDX files.
+pub fn load_mnist_idx(images_path: &Path, labels_path: &Path) -> Result<Dataset, IdxError> {
+    let img_bytes = fs::read(images_path)?;
+    let lbl_bytes = fs::read(labels_path)?;
+    let (idims, ipay) = parse_idx(&img_bytes)?;
+    let (ldims, lpay) = parse_idx(&lbl_bytes)?;
+    if idims.len() != 3 || idims[1] != 28 || idims[2] != 28 {
+        return Err(IdxError::Format(format!("unexpected image dims {idims:?}")));
+    }
+    if ldims.len() != 1 || ldims[0] != idims[0] {
+        return Err(IdxError::Format("label/image count mismatch".into()));
+    }
+    let images: Vec<f32> = ipay.iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(Dataset::new(DatasetKind::Mnist, images, lpay.to_vec()))
+}
+
+/// Load CIFAR-10 binary batches (each record: 1 label byte + 3072 pixels).
+pub fn load_cifar_bin(paths: &[PathBuf]) -> Result<Dataset, IdxError> {
+    const REC: usize = 1 + 3072;
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for p in paths {
+        let mut bytes = Vec::new();
+        fs::File::open(p)?.read_to_end(&mut bytes)?;
+        if bytes.len() % REC != 0 {
+            return Err(IdxError::Format(format!(
+                "{} not a multiple of {REC}",
+                bytes.len()
+            )));
+        }
+        for rec in bytes.chunks_exact(REC) {
+            labels.push(rec[0]);
+            images.extend(rec[1..].iter().map(|&b| b as f32 / 255.0));
+        }
+    }
+    if labels.is_empty() {
+        return Err(IdxError::Format("no records".into()));
+    }
+    Ok(Dataset::new(DatasetKind::Cifar10, images, labels))
+}
+
+/// Probe for real data under `root`; otherwise synthesize (train, test).
+pub fn load_or_synth(
+    kind: DatasetKind,
+    root: &Path,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Dataset, Dataset, bool) {
+    match kind {
+        DatasetKind::Mnist => {
+            let d = root.join("mnist");
+            let ti = d.join("train-images-idx3-ubyte");
+            let tl = d.join("train-labels-idx1-ubyte");
+            let si = d.join("t10k-images-idx3-ubyte");
+            let sl = d.join("t10k-labels-idx1-ubyte");
+            if ti.exists() && tl.exists() && si.exists() && sl.exists() {
+                if let (Ok(tr), Ok(te)) = (load_mnist_idx(&ti, &tl), load_mnist_idx(&si, &sl)) {
+                    return (tr, te, true);
+                }
+            }
+        }
+        DatasetKind::Cifar10 => {
+            let d = root.join("cifar-10-batches-bin");
+            let train: Vec<PathBuf> = (1..=5).map(|i| d.join(format!("data_batch_{i}.bin"))).collect();
+            let test = vec![d.join("test_batch.bin")];
+            if train.iter().all(|p| p.exists()) && test[0].exists() {
+                if let (Ok(tr), Ok(te)) = (load_cifar_bin(&train), load_cifar_bin(&test)) {
+                    return (tr, te, true);
+                }
+            }
+        }
+        DatasetKind::Tiny => {}
+    }
+    let (tr, te) = synth::generate(kind, train_n, test_n, seed);
+    (tr, te, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx(dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut v = vec![0, 0, 0x08, dims.len() as u8];
+        for d in dims {
+            v.extend_from_slice(&d.to_be_bytes());
+        }
+        v.extend_from_slice(payload);
+        v
+    }
+
+    #[test]
+    fn parse_idx_roundtrip() {
+        let payload: Vec<u8> = (0..24).collect();
+        let bytes = make_idx(&[2, 3, 4], &payload);
+        let (dims, pay) = parse_idx(&bytes).unwrap();
+        assert_eq!(dims, vec![2, 3, 4]);
+        assert_eq!(pay, &payload[..]);
+    }
+
+    #[test]
+    fn parse_idx_rejects_bad_magic() {
+        let mut bytes = make_idx(&[4], &[1, 2, 3, 4]);
+        bytes[0] = 9;
+        assert!(parse_idx(&bytes).is_err());
+    }
+
+    #[test]
+    fn parse_idx_rejects_size_mismatch() {
+        let bytes = make_idx(&[5], &[1, 2, 3]);
+        assert!(parse_idx(&bytes).is_err());
+    }
+
+    #[test]
+    fn load_mnist_idx_from_temp_files() {
+        let dir = std::env::temp_dir().join("fedhc_idx_test");
+        fs::create_dir_all(&dir).unwrap();
+        let n = 7;
+        let images = make_idx(&[n, 28, 28], &vec![128u8; (n * 28 * 28) as usize]);
+        let labels = make_idx(&[n], &(0..n as u8).collect::<Vec<u8>>());
+        let ip = dir.join("imgs");
+        let lp = dir.join("lbls");
+        fs::write(&ip, &images).unwrap();
+        fs::write(&lp, &labels).unwrap();
+        let d = load_mnist_idx(&ip, &lp).unwrap();
+        assert_eq!(d.len(), 7);
+        assert!((d.images[0] - 128.0 / 255.0).abs() < 1e-6);
+        assert_eq!(d.labels, (0..7).collect::<Vec<u8>>());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_cifar_bin_from_temp_file() {
+        let dir = std::env::temp_dir().join("fedhc_cifar_test");
+        fs::create_dir_all(&dir).unwrap();
+        let mut bytes = Vec::new();
+        for lbl in 0..3u8 {
+            bytes.push(lbl);
+            bytes.extend(std::iter::repeat(255u8).take(3072));
+        }
+        let p = dir.join("batch.bin");
+        fs::write(&p, &bytes).unwrap();
+        let d = load_cifar_bin(&[p]).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.labels, vec![0, 1, 2]);
+        assert_eq!(d.images[0], 1.0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_synth_falls_back() {
+        let (tr, te, real) = load_or_synth(
+            DatasetKind::Tiny,
+            Path::new("/nonexistent"),
+            40,
+            10,
+            1,
+        );
+        assert!(!real);
+        assert_eq!(tr.len(), 40);
+        assert_eq!(te.len(), 10);
+    }
+}

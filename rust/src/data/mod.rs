@@ -1,0 +1,16 @@
+//! Dataset substrate.
+//!
+//! The paper trains LeNet on MNIST and CIFAR-10. This module provides:
+//! * loaders for the real files when present (`idx`: MNIST IDX format and
+//!   the CIFAR-10 binary batches),
+//! * procedural synthetic substitutes with identical geometry
+//!   (`synth`) for the offline image — see DESIGN.md §3,
+//! * client sharding, IID and Dirichlet non-IID (`partition`).
+
+pub mod dataset;
+pub mod idx;
+pub mod partition;
+pub mod synth;
+
+pub use dataset::{Dataset, DatasetKind};
+pub use partition::{partition_dirichlet, partition_iid};

@@ -1,0 +1,165 @@
+//! Client sharding: split a dataset across satellite clients.
+//!
+//! The paper partitions "the original dataset into different subsets
+//! corresponding to the number of satellite clients". We provide the two
+//! standard regimes: IID (random equal shards) and Dirichlet(α) label-skew
+//! non-IID, which FedCE's distribution-based clustering needs to have any
+//! structure to find.
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+/// IID partition into `clients` equal shards (remainder spread across the
+/// first shards).
+pub fn partition_iid(data: &Dataset, clients: usize, rng: &mut Rng) -> Vec<Dataset> {
+    assert!(clients > 0);
+    assert!(
+        data.len() >= clients,
+        "{} samples cannot cover {} clients",
+        data.len(),
+        clients
+    );
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut idx);
+    let base = data.len() / clients;
+    let extra = data.len() % clients;
+    let mut shards = Vec::with_capacity(clients);
+    let mut off = 0;
+    for c in 0..clients {
+        let take = base + usize::from(c < extra);
+        shards.push(data.subset(&idx[off..off + take]));
+        off += take;
+    }
+    shards
+}
+
+/// Dirichlet(α) label-skew partition: for each class, the class's samples
+/// are split across clients by a Dirichlet draw. Small α → highly skewed.
+/// Every client is guaranteed at least `min_per_client` samples by
+/// stealing from the largest shard.
+pub fn partition_dirichlet(
+    data: &Dataset,
+    clients: usize,
+    alpha: f64,
+    min_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<Dataset> {
+    assert!(clients > 0 && alpha > 0.0);
+    let classes = data.kind.classes();
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut client_indices: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    for class_samples in by_class.iter_mut() {
+        rng.shuffle(class_samples);
+        let props = rng.dirichlet(alpha, clients);
+        // convert proportions to cumulative cut points
+        let n = class_samples.len();
+        let mut start = 0usize;
+        let mut acc = 0.0;
+        for (c, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if c + 1 == clients {
+                n
+            } else {
+                (acc * n as f64).round() as usize
+            }
+            .min(n);
+            client_indices[c].extend_from_slice(&class_samples[start..end.max(start)]);
+            start = end.max(start);
+        }
+    }
+    // enforce the floor
+    for c in 0..clients {
+        while client_indices[c].len() < min_per_client {
+            let donor = (0..clients)
+                .max_by_key(|&d| client_indices[d].len())
+                .unwrap();
+            if donor == c || client_indices[donor].len() <= min_per_client {
+                break;
+            }
+            let moved = client_indices[donor].pop().unwrap();
+            client_indices[c].push(moved);
+        }
+    }
+    client_indices
+        .iter()
+        .map(|idx| data.subset(idx))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_tiny;
+
+    #[test]
+    fn iid_covers_everything_once() {
+        let mut rng = Rng::new(1);
+        let d = synth_tiny(103, &mut rng);
+        let shards = partition_iid(&d, 10, &mut rng);
+        assert_eq!(shards.len(), 10);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 103);
+        // sizes differ by at most 1
+        let min = shards.iter().map(|s| s.len()).min().unwrap();
+        let max = shards.iter().map(|s| s.len()).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn iid_shards_have_balanced_labels() {
+        let mut rng = Rng::new(2);
+        let d = synth_tiny(2000, &mut rng);
+        let shards = partition_iid(&d, 4, &mut rng);
+        for s in &shards {
+            let h = s.label_histogram();
+            for &p in &h {
+                assert!((p - 0.1).abs() < 0.05, "{h:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_covers_everything_once() {
+        let mut rng = Rng::new(3);
+        let d = synth_tiny(500, &mut rng);
+        let shards = partition_dirichlet(&d, 8, 0.5, 5, &mut rng);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 500);
+        assert!(shards.iter().all(|s| s.len() >= 5));
+    }
+
+    #[test]
+    fn small_alpha_skews_more_than_large() {
+        fn mean_hist_l2_from_uniform(shards: &[Dataset]) -> f64 {
+            let mut tot = 0.0;
+            for s in shards {
+                let h = s.label_histogram();
+                tot += h.iter().map(|p| (p - 0.1) * (p - 0.1)).sum::<f64>().sqrt();
+            }
+            tot / shards.len() as f64
+        }
+        let mut rng = Rng::new(4);
+        let d = synth_tiny(3000, &mut rng);
+        let skewed = partition_dirichlet(&d, 10, 0.1, 1, &mut rng);
+        let mild = partition_dirichlet(&d, 10, 100.0, 1, &mut rng);
+        let s_skew = mean_hist_l2_from_uniform(&skewed);
+        let s_mild = mean_hist_l2_from_uniform(&mild);
+        assert!(
+            s_skew > 2.0 * s_mild,
+            "alpha=0.1 skew {s_skew} vs alpha=100 skew {s_mild}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = synth_tiny(200, &mut Rng::new(5));
+        let a = partition_dirichlet(&d, 5, 0.5, 2, &mut Rng::new(9));
+        let b = partition_dirichlet(&d, 5, 0.5, 2, &mut Rng::new(9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+        }
+    }
+}

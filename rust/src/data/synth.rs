@@ -1,0 +1,318 @@
+//! Procedural synthetic datasets with MNIST / CIFAR-10 geometry.
+//!
+//! The offline image cannot download the real corpora, so we generate
+//! class-conditional data whose *learning dynamics* match what the FL
+//! framework exercises: 10 visually distinct classes, intra-class variation
+//! (affine jitter + noise), and difficulty calibrated so LeNet reaches the
+//! paper's target accuracies (MNIST 80 %, CIFAR-10 40 %) in a comparable
+//! number of rounds. If real MNIST/CIFAR files are present under
+//! `data/` they are used instead (see `idx.rs`).
+//!
+//! * MNIST-like: 10 glyph templates (coarse 7×7 digit strokes) upsampled to
+//!   28×28, randomly shifted ±3 px, scaled, with Gaussian pixel noise.
+//! * CIFAR-like: 3×32×32 class-conditional color Gabor textures with random
+//!   phase/orientation jitter and heavier noise (harder task, mirroring
+//!   CIFAR-10's difficulty relative to MNIST).
+
+use super::dataset::{Dataset, DatasetKind};
+use crate::util::Rng;
+
+/// 7×7 stroke templates, one per class (hand-drawn digit skeletons).
+const GLYPHS: [[u8; 49]; 10] = [
+    // 0
+    [
+        0, 1, 1, 1, 1, 1, 0, 1, 1, 0, 0, 0, 1, 1, 1, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 0, 1, 1, 0,
+        0, 0, 0, 0, 1, 1, 1, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 0,
+    ],
+    // 1
+    [
+        0, 0, 0, 1, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 0, 1, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 1, 1, 1, 1, 1, 0,
+    ],
+    // 2
+    [
+        0, 1, 1, 1, 1, 0, 0, 1, 0, 0, 0, 1, 1, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0,
+        1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1, 1,
+    ],
+    // 3
+    [
+        0, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0,
+        0, 0, 0, 1, 1, 1, 0, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 0,
+    ],
+    // 4
+    [
+        0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 0, 1, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1, 0, 0, 0, 1, 0, 1, 1,
+        1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 1, 0,
+    ],
+    // 5
+    [
+        1, 1, 1, 1, 1, 1, 0, 1, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 1, 1, 0, 0,
+        0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 0,
+    ],
+    // 6
+    [
+        0, 0, 1, 1, 1, 1, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1, 0, 1, 1,
+        0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 0,
+    ],
+    // 7
+    [
+        1, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0,
+        1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0,
+    ],
+    // 8
+    [
+        0, 1, 1, 1, 1, 1, 0, 1, 1, 0, 0, 0, 1, 1, 0, 1, 1, 0, 1, 1, 0, 0, 0, 1, 1, 1, 0, 0, 0, 1,
+        1, 0, 1, 1, 0, 1, 1, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 0,
+    ],
+    // 9
+    [
+        0, 1, 1, 1, 1, 1, 0, 1, 1, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 1, 0, 0,
+        0, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 1, 1, 1, 1, 0, 0,
+    ],
+];
+
+/// Generate an MNIST-geometry synthetic dataset.
+pub fn synth_mnist(n: usize, rng: &mut Rng) -> Dataset {
+    synth_glyph(DatasetKind::Mnist, n, rng, 28, 0.18)
+}
+
+/// Tiny 8×8 variant for fast unit/integration tests.
+pub fn synth_tiny(n: usize, rng: &mut Rng) -> Dataset {
+    synth_glyph(DatasetKind::Tiny, n, rng, 8, 0.10)
+}
+
+fn synth_glyph(kind: DatasetKind, n: usize, rng: &mut Rng, side: usize, noise: f64) -> Dataset {
+    let sample = kind.sample_len();
+    let mut images = vec![0.0f32; n * sample];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = rng.below_usize(10);
+        labels[i] = class as u8;
+        let glyph = &GLYPHS[class];
+        // random affine jitter: shift up to ±10% of the side, scale 0.8–1.1
+        let max_shift = (side as f64 * 0.11).floor();
+        let dx = rng.uniform_in(-max_shift, max_shift);
+        let dy = rng.uniform_in(-max_shift, max_shift);
+        let scale = rng.uniform_in(0.85, 1.1);
+        let img = &mut images[i * sample..(i + 1) * sample];
+        for py in 0..side {
+            for px in 0..side {
+                // map the output pixel back into glyph space
+                let gx = ((px as f64 - dx) / side as f64 - 0.5) / scale + 0.5;
+                let gy = ((py as f64 - dy) / side as f64 - 0.5) / scale + 0.5;
+                let v = sample_glyph(glyph, gx, gy);
+                let noisy = v + noise * rng.normal();
+                img[py * side + px] = noisy.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+    Dataset::new(kind, images, labels)
+}
+
+/// Bilinear sample of a 7×7 glyph at normalised coordinates.
+fn sample_glyph(glyph: &[u8; 49], x: f64, y: f64) -> f64 {
+    if !(0.0..1.0).contains(&x) || !(0.0..1.0).contains(&y) {
+        return 0.0;
+    }
+    let fx = x * 6.0;
+    let fy = y * 6.0;
+    let x0 = fx.floor() as usize;
+    let y0 = fy.floor() as usize;
+    let x1 = (x0 + 1).min(6);
+    let y1 = (y0 + 1).min(6);
+    let tx = fx - x0 as f64;
+    let ty = fy - y0 as f64;
+    let g = |xx: usize, yy: usize| glyph[yy * 7 + xx] as f64;
+    g(x0, y0) * (1.0 - tx) * (1.0 - ty)
+        + g(x1, y0) * tx * (1.0 - ty)
+        + g(x0, y1) * (1.0 - tx) * ty
+        + g(x1, y1) * tx * ty
+}
+
+/// Generate a CIFAR-10-geometry synthetic dataset: class-conditional color
+/// Gabor textures. Harder than the glyph task by construction (overlapping
+/// orientations + heavy noise), mirroring CIFAR-10 vs MNIST difficulty.
+pub fn synth_cifar(n: usize, rng: &mut Rng) -> Dataset {
+    let kind = DatasetKind::Cifar10;
+    let side = 32usize;
+    let sample = kind.sample_len();
+    let mut images = vec![0.0f32; n * sample];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = rng.below_usize(10);
+        labels[i] = class as u8;
+        // class defines a base orientation, spatial frequency and color mix
+        let theta0 = class as f64 * std::f64::consts::PI / 10.0;
+        let freq0 = 2.0 + (class % 5) as f64;
+        let color = [
+            0.4 + 0.6 * ((class * 37 % 10) as f64 / 9.0),
+            0.4 + 0.6 * ((class * 73 % 10) as f64 / 9.0),
+            0.4 + 0.6 * ((class * 11 % 10) as f64 / 9.0),
+        ];
+        // sample-level jitter
+        let theta = theta0 + rng.uniform_in(-0.15, 0.15);
+        let freq = freq0 * rng.uniform_in(0.9, 1.1);
+        let phase = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+        let (st, ct) = theta.sin_cos();
+        let img = &mut images[i * sample..(i + 1) * sample];
+        for py in 0..side {
+            for px in 0..side {
+                let u = px as f64 / side as f64 - 0.5;
+                let v = py as f64 / side as f64 - 0.5;
+                let proj = u * ct + v * st;
+                let tex = 0.5 + 0.5 * (2.0 * std::f64::consts::PI * freq * proj + phase).sin();
+                for ch in 0..3 {
+                    let val = tex * color[ch] + 0.25 * rng.normal();
+                    img[ch * side * side + py * side + px] = val.clamp(0.0, 1.0) as f32;
+                }
+            }
+        }
+    }
+    Dataset::new(kind, images, labels)
+}
+
+/// Generate train+test splits for a dataset kind.
+pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(seed);
+    match kind {
+        DatasetKind::Mnist => (synth_mnist(train_n, &mut rng), synth_mnist(test_n, &mut rng)),
+        DatasetKind::Cifar10 => (synth_cifar(train_n, &mut rng), synth_cifar(test_n, &mut rng)),
+        DatasetKind::Tiny => (synth_tiny(train_n, &mut rng), synth_tiny(test_n, &mut rng)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut rng = Rng::new(1);
+        let d = synth_mnist(50, &mut rng);
+        assert_eq!(d.len(), 50);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(d.labels.iter().all(|&l| l < 10));
+        let c = synth_cifar(20, &mut rng);
+        assert_eq!(c.images.len(), 20 * 3072);
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let mut rng = Rng::new(2);
+        let d = synth_mnist(500, &mut rng);
+        let h = d.label_histogram();
+        assert!(h.iter().all(|&p| p > 0.03), "{h:?}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let (a, _) = generate(DatasetKind::Tiny, 30, 5, 42);
+        let (b, _) = generate(DatasetKind::Tiny, 30, 5, 42);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+        let (c, _) = generate(DatasetKind::Tiny, 30, 5, 43);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // a nearest-class-mean classifier on raw pixels must beat chance by
+        // a wide margin — otherwise the FL task would be unlearnable
+        let mut rng = Rng::new(3);
+        let train = synth_mnist(800, &mut rng);
+        let test = synth_mnist(200, &mut rng);
+        let s = train.kind.sample_len();
+        let mut means = vec![vec![0.0f64; s]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..train.len() {
+            let c = train.labels[i] as usize;
+            counts[c] += 1;
+            for (j, &v) in train.image(i).iter().enumerate() {
+                means[c][j] += v as f64;
+            }
+        }
+        for c in 0..10 {
+            for v in means[c].iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let img = test.image(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = img
+                        .iter()
+                        .zip(&means[a])
+                        .map(|(&x, &m)| (x as f64 - m).powi(2))
+                        .sum();
+                    let db: f64 = img
+                        .iter()
+                        .zip(&means[b])
+                        .map(|(&x, &m)| (x as f64 - m).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.6, "nearest-mean accuracy only {acc}");
+    }
+
+    #[test]
+    fn cifar_harder_than_mnist() {
+        // same nearest-mean probe: the CIFAR-like task should be harder
+        fn nm_acc(train: &Dataset, test: &Dataset) -> f64 {
+            let s = train.kind.sample_len();
+            let mut means = vec![vec![0.0f64; s]; 10];
+            let mut counts = [0usize; 10];
+            for i in 0..train.len() {
+                let c = train.labels[i] as usize;
+                counts[c] += 1;
+                for (j, &v) in train.image(i).iter().enumerate() {
+                    means[c][j] += v as f64;
+                }
+            }
+            for c in 0..10 {
+                for v in means[c].iter_mut() {
+                    *v /= counts[c].max(1) as f64;
+                }
+            }
+            let mut correct = 0;
+            for i in 0..test.len() {
+                let img = test.image(i);
+                let best = (0..10)
+                    .min_by(|&a, &b| {
+                        let da: f64 = img
+                            .iter()
+                            .zip(&means[a])
+                            .map(|(&x, &m)| (x as f64 - m).powi(2))
+                            .sum();
+                        let db: f64 = img
+                            .iter()
+                            .zip(&means[b])
+                            .map(|(&x, &m)| (x as f64 - m).powi(2))
+                            .sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                if best == test.labels[i] as usize {
+                    correct += 1;
+                }
+            }
+            correct as f64 / test.len() as f64
+        }
+        let mut rng = Rng::new(4);
+        let mtr = synth_mnist(600, &mut rng);
+        let mte = synth_mnist(150, &mut rng);
+        let ctr = synth_cifar(600, &mut rng);
+        let cte = synth_cifar(150, &mut rng);
+        let ma = nm_acc(&mtr, &mte);
+        let ca = nm_acc(&ctr, &cte);
+        assert!(ca < ma, "cifar-like ({ca}) should be harder than mnist-like ({ma})");
+        assert!(ca > 0.15, "cifar-like must still beat chance: {ca}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Aggregation weighting schemes and the aggregation dispatcher.
+
+use crate::runtime::host::aggregate_host_into;
+use crate::runtime::ModelRuntime;
+use anyhow::Result;
+
+/// FedAvg weights (Eq. 5): `p_i = |D_i| / |D|`.
+pub fn fedavg_weights(sizes: &[usize]) -> Vec<f32> {
+    let total: usize = sizes.iter().sum();
+    assert!(total > 0, "no data across clients");
+    sizes
+        .iter()
+        .map(|&s| s as f32 / total as f32)
+        .collect()
+}
+
+/// Loss-quality weights (Eq. 12): `p_i = (1/L_i) / Σ_j (1/L_j)`.
+/// Non-finite or non-positive losses get the weight of the worst finite
+/// loss (a client that has never trained shouldn't dominate).
+pub fn quality_weights(losses: &[f32]) -> Vec<f32> {
+    assert!(!losses.is_empty());
+    let worst = losses
+        .iter()
+        .copied()
+        .filter(|l| l.is_finite() && *l > 0.0)
+        .fold(f32::MIN_POSITIVE, f32::max);
+    let inv: Vec<f32> = losses
+        .iter()
+        .map(|&l| {
+            let l = if l.is_finite() && l > 0.0 { l } else { worst };
+            1.0 / l
+        })
+        .collect();
+    let sum: f32 = inv.iter().sum();
+    inv.iter().map(|&x| x / sum).collect()
+}
+
+/// Aggregate client parameter rows with the given weights. Uses the Pallas
+/// kernel through PJRT when the cluster fits the AOT slot count, otherwise
+/// the host fallback (identical numerics — see runtime tests).
+pub fn aggregate(
+    rt: &ModelRuntime,
+    rows: &[&[f32]],
+    weights: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    assert_eq!(rows.len(), weights.len());
+    if rows.len() <= rt.spec.agg_slots {
+        *out = rt.aggregate(rows, weights)?;
+    } else {
+        out.resize(rt.spec.param_count, 0.0);
+        aggregate_host_into(rows, weights, out);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::{property, Gen};
+
+    #[test]
+    fn fedavg_weights_proportional() {
+        let w = fedavg_weights(&[10, 30, 60]);
+        assert!((w[0] - 0.1).abs() < 1e-6);
+        assert!((w[1] - 0.3).abs() < 1e-6);
+        assert!((w[2] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quality_weights_inverse_loss() {
+        // L = [1, 2] → inverse [1, 0.5] → normalised [2/3, 1/3]
+        let w = quality_weights(&[1.0, 2.0]);
+        assert!((w[0] - 2.0 / 3.0).abs() < 1e-6);
+        assert!((w[1] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quality_weights_lower_loss_gets_more() {
+        let w = quality_weights(&[0.1, 1.0, 10.0]);
+        assert!(w[0] > w[1] && w[1] > w[2]);
+    }
+
+    #[test]
+    fn quality_weights_handle_infinite_loss() {
+        let w = quality_weights(&[f32::INFINITY, 1.0, 2.0]);
+        assert!(w.iter().all(|x| x.is_finite() && *x > 0.0));
+        // the infinite-loss client is treated as worst (2.0), not dominant
+        assert!((w[0] - w[2]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_vectors_are_distributions() {
+        property("weights sum to 1", 64, |g: &mut Gen| {
+            let n = g.usize_in(1, 20);
+            let sizes: Vec<usize> = (0..n).map(|_| g.usize_in(1, 500)).collect();
+            let w1 = fedavg_weights(&sizes);
+            assert!((w1.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            assert!(w1.iter().all(|&x| x >= 0.0));
+            let losses: Vec<f32> = (0..n).map(|_| g.f64_in(0.01, 5.0) as f32).collect();
+            let w2 = quality_weights(&losses);
+            assert!((w2.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            assert!(w2.iter().all(|&x| x >= 0.0));
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! Satellite client state.
+
+use crate::data::Dataset;
+
+/// One satellite client: its data shard, current model, and the compute
+/// heterogeneity the time/energy models consume.
+#[derive(Clone, Debug)]
+pub struct SatClient {
+    /// Index into the constellation (position source).
+    pub sat: usize,
+    /// Local data shard D_i.
+    pub shard: Dataset,
+    /// Current local model (flat parameter vector).
+    pub params: Vec<f32>,
+    /// CPU frequency f_i, Hz.
+    pub cpu_hz: f64,
+    /// Most recent local training loss L_i (drives Eq. 12 weights).
+    pub last_loss: f32,
+    /// Rounds of local training performed (diagnostics).
+    pub rounds_trained: usize,
+}
+
+impl SatClient {
+    pub fn new(sat: usize, shard: Dataset, params: Vec<f32>, cpu_hz: f64) -> Self {
+        SatClient {
+            sat,
+            shard,
+            params,
+            cpu_hz,
+            last_loss: f32::INFINITY,
+            rounds_trained: 0,
+        }
+    }
+
+    /// |D_i|.
+    pub fn data_size(&self) -> usize {
+        self.shard.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_tiny;
+    use crate::util::Rng;
+
+    #[test]
+    fn construction() {
+        let shard = synth_tiny(12, &mut Rng::new(1));
+        let c = SatClient::new(7, shard, vec![0.0; 10], 1e9);
+        assert_eq!(c.sat, 7);
+        assert_eq!(c.data_size(), 12);
+        assert_eq!(c.rounds_trained, 0);
+        assert!(c.last_loss.is_infinite());
+    }
+}

@@ -1,0 +1,106 @@
+//! Test-set evaluation through the AOT eval graph.
+
+use crate::data::Dataset;
+use crate::runtime::ModelRuntime;
+use anyhow::Result;
+
+/// Accuracy/loss of `params` on (a prefix of) `test`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub samples: usize,
+}
+
+/// Evaluate on up to `max_batches` full batches (0 = whole set). The tail
+/// that doesn't fill a batch is dropped (shapes are AOT-fixed); callers
+/// size their test sets to batch multiples.
+pub fn evaluate(
+    rt: &ModelRuntime,
+    params: &[f32],
+    test: &Dataset,
+    max_batches: usize,
+) -> Result<EvalResult> {
+    let b = rt.spec.batch;
+    let d = rt.spec.input_dim();
+    let n_batches = test.len() / b;
+    let use_batches = if max_batches == 0 {
+        n_batches
+    } else {
+        n_batches.min(max_batches)
+    };
+    assert!(use_batches > 0, "test set smaller than one batch");
+    let mut xs = vec![0.0f32; b * d];
+    let mut ys = vec![0.0f32; b];
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    for bi in 0..use_batches {
+        test.fill_batch(bi, b, &mut xs, &mut ys);
+        let (loss, corr) = rt.eval_step(params, &xs, &ys)?;
+        loss_sum += loss as f64;
+        correct += corr as f64;
+    }
+    let samples = use_batches * b;
+    Ok(EvalResult {
+        loss: loss_sum / use_batches as f64,
+        accuracy: correct / samples as f64,
+        samples,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_tiny;
+    use crate::fl::client::SatClient;
+    use crate::fl::local::{local_train, TrainScratch};
+    use crate::runtime::Manifest;
+    use crate::util::Rng;
+
+    #[test]
+    fn accuracy_improves_with_training() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let init = m.init_params(&rt.spec).unwrap();
+        let mut rng = Rng::new(1);
+        let train = synth_tiny(256, &mut rng);
+        let test = synth_tiny(64, &mut rng);
+
+        let before = evaluate(&rt, &init, &test, 0).unwrap();
+        assert_eq!(before.samples, 64);
+        assert!((0.0..=1.0).contains(&before.accuracy));
+
+        let mut client = SatClient::new(0, train, init, 1e9);
+        let mut scratch = TrainScratch::new(&rt);
+        for _ in 0..12 {
+            local_train(&rt, &mut client, 1, 0.2, &mut scratch, &mut rng).unwrap();
+        }
+        let after = evaluate(&rt, &client.params, &test, 0).unwrap();
+        assert!(
+            after.accuracy > before.accuracy + 0.2,
+            "accuracy {} -> {}",
+            before.accuracy,
+            after.accuracy
+        );
+        assert!(after.loss < before.loss);
+    }
+
+    #[test]
+    fn max_batches_limits_work() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let init = m.init_params(&rt.spec).unwrap();
+        let test = synth_tiny(4 * rt.spec.batch, &mut Rng::new(2));
+        let r = evaluate(&rt, &init, &test, 2).unwrap();
+        assert_eq!(r.samples, 2 * rt.spec.batch);
+    }
+}

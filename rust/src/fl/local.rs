@@ -1,0 +1,188 @@
+//! Local training loop (Algorithm 1 lines 7–10): λ epochs of minibatch SGD
+//! on the client's shard, executed through the AOT train graphs.
+//!
+//! Batches can be packed into `train_chunk` calls (S SGD steps per PJRT
+//! execution, numerically identical — see runtime tests). §Perf note: on
+//! the vendored XLA 0.5.1 CPU backend the scan-based chunk compiles to a
+//! while loop that blocks fusion and runs ~2.5× slower per step than
+//! unrolled `train_step` calls (bench_runtime), so per-step dispatch is
+//! the default; set `TrainScratch::use_chunk` (env `FEDHC_CHUNK=1`) on
+//! backends where the scan wins (e.g. real accelerators, where the call
+//! overhead dominates).
+
+use super::client::SatClient;
+use crate::runtime::ModelRuntime;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Outcome of one client's local round.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalOutcome {
+    /// Mean training loss over the round (drives Eq. 12 weights).
+    pub mean_loss: f32,
+    /// Samples processed (drives the Eq. 7/9 time & energy models).
+    pub samples: usize,
+    /// SGD steps taken.
+    pub steps: usize,
+}
+
+/// Scratch buffers reused across clients (allocation-free hot path).
+pub struct TrainScratch {
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    /// Pack batches into scan-based `train_chunk` calls (see module docs).
+    pub use_chunk: bool,
+}
+
+impl TrainScratch {
+    pub fn new(rt: &ModelRuntime) -> TrainScratch {
+        let s = rt.spec.chunk_steps;
+        let b = rt.spec.batch;
+        let d = rt.spec.input_dim();
+        TrainScratch {
+            xs: vec![0.0; s * b * d],
+            ys: vec![0.0; s * b],
+            use_chunk: std::env::var("FEDHC_CHUNK").map(|v| v == "1").unwrap_or(false),
+        }
+    }
+}
+
+/// Train `client` in place for `epochs` local epochs at learning rate `lr`.
+/// `rng` shuffles the batch order per epoch.
+pub fn local_train(
+    rt: &ModelRuntime,
+    client: &mut SatClient,
+    epochs: usize,
+    lr: f32,
+    scratch: &mut TrainScratch,
+    rng: &mut Rng,
+) -> Result<LocalOutcome> {
+    let b = rt.spec.batch;
+    let d = rt.spec.input_dim();
+    let s = rt.spec.chunk_steps;
+    let n_batches = client.shard.len().div_ceil(b).max(1);
+    let mut loss_sum = 0.0f64;
+    let mut loss_n = 0usize;
+    let mut steps = 0usize;
+
+    for _ in 0..epochs {
+        // random batch phase each epoch approximates reshuffling without
+        // regathering the shard
+        let phase = rng.below_usize(n_batches);
+        let mut batch_ids: Vec<usize> = (0..n_batches).map(|i| (i + phase) % n_batches).collect();
+        rng.shuffle(&mut batch_ids);
+
+        let mut i = 0;
+        while i < batch_ids.len() {
+            let remaining = batch_ids.len() - i;
+            if scratch.use_chunk && remaining >= s {
+                // pack S batches into one chunk call
+                for (slot, &bi) in batch_ids[i..i + s].iter().enumerate() {
+                    let (xs_part, ys_part) = (
+                        &mut scratch.xs[slot * b * d..(slot + 1) * b * d],
+                        &mut scratch.ys[slot * b..(slot + 1) * b],
+                    );
+                    client.shard.fill_batch(bi, b, xs_part, ys_part);
+                }
+                let (p, loss) = rt.train_chunk(&client.params, &scratch.xs, &scratch.ys, lr)?;
+                client.params = p;
+                loss_sum += loss as f64;
+                loss_n += 1;
+                steps += s;
+                i += s;
+            } else {
+                let (xs_part, ys_part) =
+                    (&mut scratch.xs[..b * d], &mut scratch.ys[..b]);
+                client.shard.fill_batch(batch_ids[i], b, xs_part, ys_part);
+                let (p, loss) = rt.train_step(&client.params, xs_part, ys_part, lr)?;
+                client.params = p;
+                loss_sum += loss as f64;
+                loss_n += 1;
+                steps += 1;
+                i += 1;
+            }
+        }
+    }
+
+    let mean_loss = if loss_n == 0 {
+        f32::INFINITY
+    } else {
+        (loss_sum / loss_n as f64) as f32
+    };
+    client.last_loss = mean_loss;
+    client.rounds_trained += 1;
+    Ok(LocalOutcome {
+        mean_loss,
+        samples: epochs * n_batches * b,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_tiny;
+    use crate::runtime::Manifest;
+
+    fn runtime() -> Option<(Manifest, ModelRuntime)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        Some((m, rt))
+    }
+
+    #[test]
+    fn local_train_reduces_loss_over_rounds() {
+        let Some((m, rt)) = runtime() else { return };
+        let init = m.init_params(&rt.spec).unwrap();
+        let shard = synth_tiny(96, &mut Rng::new(1));
+        let mut client = SatClient::new(0, shard, init, 1e9);
+        let mut scratch = TrainScratch::new(&rt);
+        let mut rng = Rng::new(2);
+        let first = local_train(&rt, &mut client, 1, 0.1, &mut scratch, &mut rng)
+            .unwrap()
+            .mean_loss;
+        let mut last = first;
+        for _ in 0..6 {
+            last = local_train(&rt, &mut client, 1, 0.1, &mut scratch, &mut rng)
+                .unwrap()
+                .mean_loss;
+        }
+        assert!(last < first, "loss {first} -> {last}");
+        assert_eq!(client.rounds_trained, 7);
+        assert_eq!(client.last_loss, last);
+    }
+
+    #[test]
+    fn outcome_accounting() {
+        let Some((m, rt)) = runtime() else { return };
+        let init = m.init_params(&rt.spec).unwrap();
+        // 40 samples, batch 16 → 3 batches/epoch (ceil)
+        let shard = synth_tiny(40, &mut Rng::new(3));
+        let mut client = SatClient::new(0, shard, init, 1e9);
+        let mut scratch = TrainScratch::new(&rt);
+        let out = local_train(&rt, &mut client, 2, 0.05, &mut scratch, &mut Rng::new(4)).unwrap();
+        assert_eq!(out.samples, 2 * 3 * 16);
+        assert_eq!(out.steps, 2 * 3);
+        assert!(out.mean_loss.is_finite());
+    }
+
+    #[test]
+    fn chunk_packing_uses_fewer_pjrt_calls() {
+        let Some((m, rt)) = runtime() else { return };
+        let init = m.init_params(&rt.spec).unwrap();
+        // 8 batches/epoch with chunk_steps=4 → 2 chunk calls instead of 8
+        let shard = synth_tiny(8 * rt.spec.batch, &mut Rng::new(5));
+        let mut client = SatClient::new(0, shard, init, 1e9);
+        let mut scratch = TrainScratch::new(&rt);
+        scratch.use_chunk = true;
+        let before = rt.call_count();
+        local_train(&rt, &mut client, 1, 0.05, &mut scratch, &mut Rng::new(6)).unwrap();
+        let calls = rt.call_count() - before;
+        assert_eq!(calls, 2, "expected 2 chunked calls, got {calls}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Federated-learning engine (paper §II-B): satellite clients, local
+//! training (Eq. 3–4), weighted aggregation (Eq. 5 FedAvg, Eq. 12 loss-
+//! quality weights), and test-set evaluation. The engine is shared by
+//! FedHC and all three baselines so the accounting is apples-to-apples.
+
+pub mod aggregate;
+pub mod client;
+pub mod evaluate;
+pub mod local;
+
+pub use aggregate::{fedavg_weights, quality_weights};
+pub use client::SatClient;

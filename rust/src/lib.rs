@@ -1,0 +1,39 @@
+//! # FedHC — Hierarchical Clustered Federated Learning for Satellite Networks
+//!
+//! Reproduction of "FedHC: A Hierarchical Clustered Federated Learning
+//! Framework for Satellite Networks" (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: LEO
+//!   constellation simulation, satellite-clustered parameter-server
+//!   selection, the two-stage (cluster → ground-station) aggregation
+//!   hierarchy, meta-learning-driven re-clustering, and the time/energy
+//!   accounting of the paper's evaluation. Plus every substrate the paper
+//!   depends on: orbital mechanics, link models, k-means clustering,
+//!   dataset synthesis/partitioning, a discrete-event simulator, and the
+//!   three comparison baselines (C-FedAvg, H-BASE, FedCE).
+//! * **Layer 2 (python/compile)** — LeNet/MLP forward+backward, MAML
+//!   inner/outer steps, and weighted aggregation written in JAX and
+//!   AOT-lowered to HLO text once at build time (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot spots (fused dense layers, weighted parameter aggregation, fused
+//!   SGD update), validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: the Rust binary loads the HLO
+//! artifacts through PJRT (`runtime`) and drives everything itself.
+
+pub mod baselines;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod metrics;
+pub mod network;
+pub mod orbit;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::{run_clustered, RunResult, Strategy, Trial};

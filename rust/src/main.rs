@@ -1,0 +1,225 @@
+//! `fedhc` — leader binary.
+//!
+//! Subcommands:
+//!   run       one method on one configuration
+//!   table1    regenerate Table I (all methods × K × dataset)
+//!   fig3      regenerate Fig. 3 (accuracy vs rounds)
+//!   inspect   print manifest / constellation / artifact info
+//!
+//! Examples:
+//!   fedhc run --preset tiny --method fedhc
+//!   fedhc run --dataset mnist --method fedce --k 4 --rounds 50
+//!   fedhc table1 --preset tiny --rounds 30
+//!   fedhc inspect
+
+use anyhow::{bail, Result};
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::parse::merge_file_into_args;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
+use fedhc::metrics::recorder;
+use fedhc::metrics::report::{format_fig3, format_table1, TimeEnergy};
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::util::cli::Args;
+use std::path::Path;
+
+const FLAGS: &[&str] = &["no-target", "verbose", "help"];
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args = Args::from_env(FLAGS);
+    if args.flag("help") || args.subcommand.is_none() {
+        print_help();
+        return Ok(());
+    }
+    if args.flag("verbose") {
+        fedhc::util::logging::set_level(fedhc::util::logging::Level::Debug);
+    }
+    if let Some(path) = args.get("config").map(str::to_string) {
+        let text = std::fs::read_to_string(&path)?;
+        merge_file_into_args(&mut args, &text).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "run" => cmd_run(&args),
+        "table1" => cmd_table1(&args),
+        "fig3" => cmd_fig3(&args),
+        "inspect" => cmd_inspect(),
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "fedhc — hierarchical clustered federated learning for satellite networks
+
+USAGE: fedhc <subcommand> [options]
+
+SUBCOMMANDS
+  run       one method on one configuration
+  table1    regenerate Table I (time/energy to target accuracy)
+  fig3      regenerate Fig. 3 (accuracy vs training round)
+  inspect   show artifacts, variants and constellation info
+
+COMMON OPTIONS
+  --preset tiny|mnist|cifar10    base configuration (default mnist)
+  --method fedhc|cfedavg|hbase|fedce|fedhc-nomaml   (run only)
+  --dataset mnist|cifar10|tiny   switch dataset family
+  --k N --clients N --rounds N --epochs N --lr F --seed N
+  --target F | --no-target       convergence target accuracy
+  --ground-every N --z F --alpha F --beta F
+  --config FILE                  key=value config file (CLI wins)
+  --out DIR                      write CSV/JSON series (default results/)
+"
+    );
+}
+
+fn config_from(args: &Args) -> ExperimentConfig {
+    let preset = args.get_or("preset", "mnist");
+    ExperimentConfig::preset(preset)
+        .unwrap_or_else(|| panic!("unknown preset '{preset}'"))
+        .with_args(args)
+}
+
+fn load_runtime(cfg: &ExperimentConfig) -> Result<(Manifest, ModelRuntime)> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let rt = ModelRuntime::load(&manifest, cfg.variant())?;
+    Ok((manifest, rt))
+}
+
+fn run_method(cfg: &ExperimentConfig, manifest: &Manifest, rt: &ModelRuntime, method: &str) -> Result<RunResult> {
+    let mut trial = Trial::new(cfg.clone(), manifest, rt)?;
+    match method {
+        "fedhc" => run_clustered(&mut trial, Strategy::fedhc()),
+        "fedhc-nomaml" => run_clustered(&mut trial, Strategy::fedhc_no_maml()),
+        "hbase" | "h-base" => run_clustered(&mut trial, Strategy::hbase()),
+        "fedce" => run_clustered(&mut trial, Strategy::fedce()),
+        "cfedavg" | "c-fedavg" => run_cfedavg(&mut trial),
+        other => bail!("unknown method '{other}'"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from(args);
+    let method = args.get_or("method", "fedhc");
+    let (manifest, rt) = load_runtime(&cfg)?;
+    eprintln!(
+        "running {method} on {} (K={}, clients={}, rounds≤{}, platform={})",
+        cfg.dataset.name(),
+        cfg.clusters,
+        cfg.clients,
+        cfg.rounds,
+        rt.platform()
+    );
+    let res = run_method(&cfg, &manifest, &rt, method)?;
+    print_result(&res);
+    let out = Path::new(args.get_or("out", "results"));
+    let stem = format!("{}_{}_k{}", res.name.to_lowercase(), cfg.dataset.name(), cfg.clusters);
+    recorder::write_series(&res.ledger, out, &stem)?;
+    eprintln!("series written to {}/{stem}.{{csv,json}}", out.display());
+    Ok(())
+}
+
+fn print_result(res: &RunResult) {
+    println!("== {} ==", res.name);
+    println!("  best accuracy : {:.2}%", res.final_accuracy * 100.0);
+    println!("  total time    : {:.0} s (simulated, Eq. 7)", res.ledger.time_s);
+    println!("  total energy  : {:.0} J (Eq. 10)", res.ledger.energy_j);
+    println!("  reclusters    : {}", res.ledger.reclusters);
+    println!("  maml adapts   : {}", res.ledger.maml_adaptations);
+    match res.converged_at {
+        Some((round, t, e)) => {
+            println!("  converged     : round {round} (t={t:.0} s, e={e:.0} J)")
+        }
+        None => println!("  converged     : no (budget exhausted)"),
+    }
+}
+
+const TABLE1_METHODS: &[&str] = &["cfedavg", "hbase", "fedce", "fedhc"];
+const TABLE1_NAMES: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let base = config_from(args);
+    let ks: Vec<usize> = args
+        .get_or("ks", "3,4,5")
+        .split(',')
+        .map(|s| s.parse().expect("--ks expects comma-separated integers"))
+        .collect();
+    let target = base.target_accuracy.unwrap_or(0.8);
+    let (manifest, rt) = load_runtime(&base)?;
+
+    let mut rows: Vec<(&str, Vec<TimeEnergy>)> = Vec::new();
+    for (mi, method) in TABLE1_METHODS.iter().enumerate() {
+        let mut cells = Vec::new();
+        for &k in &ks {
+            let mut cfg = base.clone();
+            cfg.clusters = k;
+            eprintln!("table1: {method} K={k} ...");
+            let res = run_method(&cfg, &manifest, &rt, method)?;
+            let (t, e, conv) = match res.converged_at {
+                Some((_, t, e)) => (t, e, true),
+                None => (res.ledger.time_s, res.ledger.energy_j, false),
+            };
+            cells.push(TimeEnergy {
+                time_s: t,
+                energy_j: e,
+                converged: conv,
+            });
+        }
+        rows.push((TABLE1_NAMES[mi], cells));
+    }
+    println!(
+        "{}",
+        format_table1(base.dataset.name(), target, &ks, &rows)
+    );
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let mut base = config_from(args);
+    base.target_accuracy = None; // fig3 runs a fixed round budget
+    let k = base.clusters;
+    let (manifest, rt) = load_runtime(&base)?;
+    let mut ledgers = Vec::new();
+    for method in TABLE1_METHODS {
+        eprintln!("fig3: {method} ...");
+        let res = run_method(&base, &manifest, &rt, method)?;
+        ledgers.push((res.name, res.ledger));
+    }
+    let series: Vec<(&str, &fedhc::metrics::Ledger)> =
+        ledgers.iter().map(|(n, l)| (*n, l)).collect();
+    let every = args.get_usize("sample-every", (base.rounds / 10).max(1));
+    println!("{}", format_fig3(base.dataset.name(), k, &series, every));
+    let out = Path::new(args.get_or("out", "results"));
+    for (name, ledger) in &ledgers {
+        let stem = format!("fig3_{}_{}_k{}", name.to_lowercase(), base.dataset.name(), k);
+        recorder::write_series(ledger, out, &stem)?;
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    println!("artifacts: {}", manifest.dir.display());
+    for (name, v) in &manifest.variants {
+        println!(
+            "  {name}: P={} batch={} chunk={} agg_slots={} input={:?}",
+            v.param_count, v.batch, v.chunk_steps, v.agg_slots, v.input_chw
+        );
+        for (e, spec) in &v.entries {
+            println!("    {e:<12} {}", spec.file);
+        }
+    }
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "pjrt: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Cumulative time/energy/accuracy ledger for one FL run.
+//!
+//! Time semantics (DESIGN.md §5): within the cluster stage, clusters train
+//! in parallel, so the clock advances by the *max* cluster round time
+//! (that parallelism is the paper's headline mechanism); the ground stage
+//! adds the Eq. 7 sum over the participating PS↔GS links. Energy is the
+//! unambiguous Eq. 10 total of Eq. 8 transmission + Eq. 9 computation.
+
+/// One recorded evaluation point.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    /// Intra-cluster round index (1-based).
+    pub round: usize,
+    /// Cumulative simulated processing time, seconds (Eq. 7 discipline).
+    pub time_s: f64,
+    /// Cumulative energy, joules (Eq. 10).
+    pub energy_j: f64,
+    /// Global-model test accuracy at this point.
+    pub accuracy: f64,
+    /// Global-model test loss.
+    pub loss: f64,
+    /// Whether a re-clustering event fired in this round.
+    pub reclustered: bool,
+}
+
+/// Accumulating ledger.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub records: Vec<RoundRecord>,
+    /// Count of re-clustering events.
+    pub reclusters: usize,
+    /// Count of MAML warm-starts applied.
+    pub maml_adaptations: usize,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    /// Add elapsed processing time (cluster-stage max or ground-stage sum).
+    pub fn add_time(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad time increment {dt}");
+        self.time_s += dt;
+    }
+
+    /// Add consumed energy.
+    pub fn add_energy(&mut self, de: f64) {
+        assert!(de >= 0.0 && de.is_finite(), "bad energy increment {de}");
+        self.energy_j += de;
+    }
+
+    /// Record an evaluation point at the current totals.
+    pub fn record(&mut self, round: usize, accuracy: f64, loss: f64, reclustered: bool) {
+        self.records.push(RoundRecord {
+            round,
+            time_s: self.time_s,
+            energy_j: self.energy_j,
+            accuracy,
+            loss,
+            reclustered,
+        });
+    }
+
+    /// First record meeting the target accuracy, if any.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<&RoundRecord> {
+        self.records.iter().find(|r| r.accuracy >= target)
+    }
+
+    /// Best accuracy seen.
+    pub fn best_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.accuracy)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_monotonically() {
+        let mut l = Ledger::new();
+        l.add_time(10.0);
+        l.add_energy(5.0);
+        l.record(1, 0.3, 2.0, false);
+        l.add_time(10.0);
+        l.add_energy(7.0);
+        l.record(2, 0.5, 1.5, true);
+        assert_eq!(l.records.len(), 2);
+        assert!(l.records[1].time_s > l.records[0].time_s);
+        assert_eq!(l.records[1].energy_j, 12.0);
+        assert!(l.records[1].reclustered);
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut l = Ledger::new();
+        for (i, acc) in [0.2, 0.5, 0.81, 0.85].iter().enumerate() {
+            l.add_time(100.0);
+            l.record(i + 1, *acc, 1.0, false);
+        }
+        let r = l.time_to_accuracy(0.8).unwrap();
+        assert_eq!(r.round, 3);
+        assert_eq!(r.time_s, 300.0);
+        assert!(l.time_to_accuracy(0.99).is_none());
+        assert_eq!(l.best_accuracy(), 0.85);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad time")]
+    fn rejects_negative_time() {
+        Ledger::new().add_time(-1.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: the per-round time/energy/accuracy ledger (paper Eq. 7 & 10)
+//! and recorders that emit the CSV/JSON series behind Table I and Fig. 3.
+
+pub mod ledger;
+pub mod recorder;
+pub mod report;
+
+pub use ledger::{Ledger, RoundRecord};

@@ -1,0 +1,97 @@
+//! Serialise run results to CSV and JSON for plotting / regression diffing.
+
+use super::ledger::Ledger;
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// CSV of the per-round series (round,time_s,energy_j,accuracy,loss,reclustered).
+pub fn to_csv(ledger: &Ledger) -> String {
+    let mut s = String::from("round,time_s,energy_j,accuracy,loss,reclustered\n");
+    for r in &ledger.records {
+        s.push_str(&format!(
+            "{},{:.3},{:.3},{:.4},{:.4},{}\n",
+            r.round, r.time_s, r.energy_j, r.accuracy, r.loss, r.reclustered as u8
+        ));
+    }
+    s
+}
+
+/// JSON document of the whole ledger.
+pub fn to_json(ledger: &Ledger) -> Json {
+    Json::obj(vec![
+        ("time_s", Json::num(ledger.time_s)),
+        ("energy_j", Json::num(ledger.energy_j)),
+        ("reclusters", Json::num(ledger.reclusters as f64)),
+        ("maml_adaptations", Json::num(ledger.maml_adaptations as f64)),
+        (
+            "records",
+            Json::Arr(
+                ledger
+                    .records
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("round", Json::num(r.round as f64)),
+                            ("time_s", Json::num(r.time_s)),
+                            ("energy_j", Json::num(r.energy_j)),
+                            ("accuracy", Json::num(r.accuracy)),
+                            ("loss", Json::num(r.loss)),
+                            ("reclustered", Json::Bool(r.reclustered)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write both formats under `dir` with the given stem.
+pub fn write_series(ledger: &Ledger, dir: &Path, stem: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut c = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+    c.write_all(to_csv(ledger).as_bytes())?;
+    let mut j = std::fs::File::create(dir.join(format!("{stem}.json")))?;
+    j.write_all(to_json(ledger).to_pretty().as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Ledger {
+        let mut l = Ledger::new();
+        l.add_time(5.0);
+        l.add_energy(2.0);
+        l.record(1, 0.42, 1.9, false);
+        l.reclusters = 1;
+        l
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&sample());
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[1].starts_with("1,5.000,2.000,0.4200"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = to_json(&sample());
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("reclusters").as_usize(), Some(1));
+        assert_eq!(parsed.get("records").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("fedhc_recorder_test");
+        write_series(&sample(), &dir, "unit").unwrap();
+        assert!(dir.join("unit.csv").exists());
+        assert!(dir.join("unit.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,119 @@
+//! Table/figure formatting: prints the same rows Table I reports and the
+//! Fig. 3 accuracy-vs-round series, in aligned ASCII.
+
+use super::ledger::Ledger;
+
+/// One Table-I cell pair for a (method, K) configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeEnergy {
+    pub time_s: f64,
+    pub energy_j: f64,
+    /// Whether the run reached the target accuracy (cells are annotated
+    /// with '*' when the budget ran out first, like a DNF).
+    pub converged: bool,
+}
+
+/// Render the Table I block for one dataset.
+/// `methods` rows × `ks` columns of (time, energy).
+pub fn format_table1(
+    dataset: &str,
+    target: f64,
+    ks: &[usize],
+    methods: &[(&str, Vec<TimeEnergy>)],
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Table I ({dataset}, target accuracy {:.0}%)\n",
+        target * 100.0
+    ));
+    s.push_str(&format!("{:<12}", "Method"));
+    for k in ks {
+        s.push_str(&format!("{:>11}{:>11}", format!("K={k} Time"), "Energy"));
+    }
+    s.push('\n');
+    for (name, cells) in methods {
+        s.push_str(&format!("{name:<12}"));
+        for c in cells {
+            let star = if c.converged { "" } else { "*" };
+            s.push_str(&format!(
+                "{:>11}{:>11}",
+                format!("{:.0}{star}", c.time_s),
+                format!("{:.0}{star}", c.energy_j)
+            ));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render a Fig. 3 style accuracy table: rows = sampled rounds, one column
+/// per method.
+pub fn format_fig3(
+    dataset: &str,
+    k: usize,
+    series: &[(&str, &Ledger)],
+    sample_every: usize,
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("Fig. 3 ({dataset}, K={k}) accuracy vs round\n"));
+    s.push_str(&format!("{:<8}", "round"));
+    for (name, _) in series {
+        s.push_str(&format!("{name:>12}"));
+    }
+    s.push('\n');
+    let max_round = series
+        .iter()
+        .flat_map(|(_, l)| l.records.iter().map(|r| r.round))
+        .max()
+        .unwrap_or(0);
+    let mut round = sample_every.max(1);
+    while round <= max_round {
+        s.push_str(&format!("{round:<8}"));
+        for (_, l) in series {
+            // last record at or before this round
+            let acc = l
+                .records
+                .iter()
+                .take_while(|r| r.round <= round)
+                .last()
+                .map(|r| r.accuracy)
+                .unwrap_or(0.0);
+            s.push_str(&format!("{:>12.4}", acc));
+        }
+        s.push('\n');
+        round += sample_every.max(1);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_formatting() {
+        let cells = vec![
+            TimeEnergy { time_s: 8184.0, energy_j: 3697.0, converged: true },
+            TimeEnergy { time_s: 8184.0, energy_j: 3697.0, converged: false },
+        ];
+        let out = format_table1("mnist", 0.8, &[3, 4], &[("C-FedAvg", cells)]);
+        assert!(out.contains("K=3 Time"));
+        assert!(out.contains("8184"));
+        assert!(out.contains("8184*"), "DNF marker missing:\n{out}");
+    }
+
+    #[test]
+    fn fig3_formatting() {
+        let mut a = Ledger::new();
+        a.record(1, 0.1, 2.0, false);
+        a.record(2, 0.5, 1.0, false);
+        let mut b = Ledger::new();
+        b.record(1, 0.2, 2.0, false);
+        b.record(2, 0.6, 1.0, false);
+        let out = format_fig3("mnist", 3, &[("FedHC", &a), ("H-BASE", &b)], 1);
+        assert!(out.contains("FedHC"));
+        let lines: Vec<&str> = out.trim().lines().collect();
+        assert_eq!(lines.len(), 4); // title + header + 2 rounds
+        assert!(lines[3].contains("0.5000") && lines[3].contains("0.6000"));
+    }
+}

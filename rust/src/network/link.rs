@@ -1,0 +1,126 @@
+//! Link model: achievable rate (paper Eq. 6) with a free-space path-loss
+//! channel gain, plus computation time `t_cmp = D·Q/f`.
+
+use super::params::NetworkParams;
+use crate::orbit::SPEED_OF_LIGHT;
+
+/// Achievable-rate link model. The paper writes
+/// `r_i = B_i ln(1 + P0 h_i / N0)` (nats/s with ln; we keep the paper's
+/// form). Channel gain `h_i` follows free-space path loss at the carrier:
+/// `h = G (c / (4π d f_c))²`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    pub params: NetworkParams,
+}
+
+impl LinkModel {
+    pub fn new(params: NetworkParams) -> Self {
+        LinkModel { params }
+    }
+
+    /// Free-space channel gain at distance `d` meters (linear).
+    pub fn channel_gain(&self, d: f64) -> f64 {
+        assert!(d > 0.0, "zero-distance link");
+        let lambda = SPEED_OF_LIGHT / self.params.carrier_hz;
+        let fspl = lambda / (4.0 * std::f64::consts::PI * d);
+        self.params.antenna_gain * fspl * fspl
+    }
+
+    /// Eq. 6 achievable rate over distance `d`, bits/s equivalent.
+    pub fn rate(&self, d: f64) -> f64 {
+        let p = &self.params;
+        let snr = p.tx_power_w * self.channel_gain(d) / p.noise_w;
+        p.bandwidth_hz * (1.0 + snr).ln()
+    }
+
+    /// Ground-link rate: same model scaled by the GS antenna advantage.
+    pub fn ground_rate(&self, d: f64) -> f64 {
+        self.rate(d) * self.params.ground_rate_gain
+    }
+
+    /// Communication time to upload `bits` over distance `d`:
+    /// `t_com = ζ / r_i` (paper §II-C) plus propagation delay.
+    pub fn comm_time(&self, bits: f64, d: f64) -> f64 {
+        bits / self.rate(d) + d / SPEED_OF_LIGHT
+    }
+
+    /// Communication time on a ground link.
+    pub fn ground_comm_time(&self, bits: f64, d: f64) -> f64 {
+        bits / self.ground_rate(d) + d / SPEED_OF_LIGHT
+    }
+
+    /// Computation time for `samples` local samples on a CPU running at
+    /// `cpu_hz`: `t_cmp = D·Q/f`.
+    pub fn compute_time(&self, samples: usize, cpu_hz: f64) -> f64 {
+        samples as f64 * self.params.cycles_per_sample / cpu_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkModel {
+        LinkModel::new(NetworkParams::default())
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let l = link();
+        let r1 = l.rate(500e3);
+        let r2 = l.rate(1000e3);
+        let r3 = l.rate(2500e3);
+        assert!(r1 > r2 && r2 > r3, "{r1} {r2} {r3}");
+        assert!(r3 > 0.0);
+    }
+
+    #[test]
+    fn rate_is_plausible_for_leo() {
+        // a LEO Ka-band link at 1300 km with these defaults should land in
+        // the kb/s–Gb/s envelope (the paper never states absolute rates)
+        let r = link().rate(1300e3);
+        assert!(r > 1e3 && r < 1e10, "rate {r}");
+    }
+
+    #[test]
+    fn channel_gain_inverse_square() {
+        let l = link();
+        let g1 = l.channel_gain(1e6);
+        let g2 = l.channel_gain(2e6);
+        assert!((g1 / g2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_time_scales_with_payload() {
+        let l = link();
+        let t1 = l.comm_time(1e6, 1300e3);
+        let t2 = l.comm_time(2e6, 1300e3);
+        // subtract propagation delay before comparing
+        let prop = 1300e3 / SPEED_OF_LIGHT;
+        assert!(((t2 - prop) / (t1 - prop) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ground_rate_faster() {
+        let l = link();
+        assert!(l.ground_rate(1300e3) > l.rate(1300e3));
+        assert!(l.ground_comm_time(1e6, 1300e3) < l.comm_time(1e6, 1300e3));
+    }
+
+    #[test]
+    fn compute_time_formula() {
+        let l = link();
+        // t = D*Q/f
+        let t = l.compute_time(640, 1e9);
+        assert!((t - 640.0 * 1e6 / 1e9).abs() < 1e-9);
+        // faster CPU → shorter time
+        assert!(l.compute_time(640, 2e9) < t);
+    }
+
+    #[test]
+    fn propagation_delay_included() {
+        let l = link();
+        let t = l.comm_time(0.0, 3000e3);
+        assert!((t - 3000e3 / SPEED_OF_LIGHT).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Satellite communication and energy substrate (paper §II-C).
+//!
+//! Implements the paper's link model (Eq. 6: Shannon-style achievable rate
+//! with free-space path-loss channel gain), the computation-time model
+//! (`t_cmp = D·Q/f`), the transmission-energy model (Eq. 8), and the
+//! aggregation/computation energy model (Eq. 9). Constants default to the
+//! ranges of the papers FedHC cites for its parameters ([14] Zhu & Jiang
+//! JSAC'23, [15] Zhang et al. IoT-J'23) and are fully configurable.
+
+pub mod energy;
+pub mod link;
+pub mod params;
+
+pub use energy::EnergyModel;
+pub use link::LinkModel;
+pub use params::NetworkParams;

@@ -1,0 +1,77 @@
+//! Physical-layer and compute constants.
+
+/// All constants of the paper's §II-C models in SI units.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkParams {
+    /// Transmission power P0, watts.
+    pub tx_power_w: f64,
+    /// Background noise power N0, watts.
+    pub noise_w: f64,
+    /// Per-client transmission bandwidth B_i, Hz.
+    pub bandwidth_hz: f64,
+    /// Carrier frequency for the path-loss model, Hz (Ka-band default).
+    pub carrier_hz: f64,
+    /// Antenna gain product Gt*Gr (linear).
+    pub antenna_gain: f64,
+    /// Upload payload ζ per round, bits (model weights).
+    pub upload_bits: f64,
+    /// CPU cycles per trained sample, Q.
+    pub cycles_per_sample: f64,
+    /// Client CPU frequency f_i, Hz (baseline; heterogeneity multiplies it).
+    pub cpu_hz: f64,
+    /// Effective switched capacitance ε0 (energy = ε0 · f² · t · f = ε0 f² cycles).
+    pub epsilon0: f64,
+    /// Ground-station downlink rate multiplier (GS antennas are larger).
+    pub ground_rate_gain: f64,
+}
+
+impl Default for NetworkParams {
+    fn default() -> Self {
+        // Values in the ranges used by [14], [15]: P0 ≈ 1–10 W, B ≈ 10–50 MHz,
+        // Ka-band carrier, N0 ≈ 1e-13 W, directional satcom antennas
+        // (~30 dBi each side → 60 dB product), Q ≈ 1e6 cycles/sample for
+        // LeNet fwd+bwd, f ≈ 0.5–2 GHz edge CPUs, ε0 ≈ 1e-28.
+        // At these values a 1000 km ISL carries ~60 Mb/s and a cross-shell
+        // 5000 km link ~15 Mb/s — realistic LEO link budgets.
+        NetworkParams {
+            tx_power_w: 2.0,
+            noise_w: 1e-13,
+            bandwidth_hz: 20e6,
+            carrier_hz: 20e9,
+            antenna_gain: 1e6,
+            upload_bits: 1.0, // set from the model size at runtime
+            cycles_per_sample: 1e6,
+            cpu_hz: 1e9,
+            epsilon0: 1e-28,
+            ground_rate_gain: 4.0,
+        }
+    }
+}
+
+impl NetworkParams {
+    /// Configure the upload payload from a parameter count (f32 weights).
+    pub fn with_model_params(mut self, param_count: usize) -> Self {
+        self.upload_bits = param_count as f64 * 32.0;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_physical() {
+        let p = NetworkParams::default();
+        assert!(p.tx_power_w > 0.0);
+        assert!(p.noise_w > 0.0 && p.noise_w < p.tx_power_w);
+        assert!(p.bandwidth_hz > 1e6);
+        assert!(p.cpu_hz >= 1e8);
+    }
+
+    #[test]
+    fn model_size_sets_payload() {
+        let p = NetworkParams::default().with_model_params(61_706);
+        assert_eq!(p.upload_bits, 61_706.0 * 32.0);
+    }
+}

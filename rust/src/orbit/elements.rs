@@ -1,0 +1,169 @@
+//! Circular Keplerian orbital elements and single-satellite propagation.
+//!
+//! The paper's constellation is a uniform LEO shell (circular orbits at a
+//! fixed altitude/inclination), so a circular two-body propagator is exact
+//! for the quantities the coordinator consumes (positions, periods,
+//! visibility). Eccentric orbits, J2 drift, and drag are out of scope and
+//! documented as such in DESIGN.md.
+
+use super::geo::Vec3;
+use super::{EARTH_RADIUS, MU_EARTH};
+
+/// Circular orbit elements.
+#[derive(Clone, Copy, Debug)]
+pub struct OrbitalElements {
+    /// Semi-major axis (= orbit radius for circular), meters.
+    pub semi_major_axis: f64,
+    /// Inclination, radians.
+    pub inclination: f64,
+    /// Right ascension of the ascending node, radians.
+    pub raan: f64,
+    /// Argument of latitude at epoch (true anomaly + arg of perigee for a
+    /// circular orbit), radians.
+    pub phase: f64,
+}
+
+impl OrbitalElements {
+    /// Construct from altitude above the mean Earth radius.
+    pub fn circular(altitude_m: f64, inclination_deg: f64, raan_rad: f64, phase_rad: f64) -> Self {
+        assert!(altitude_m > 0.0, "altitude must be positive");
+        OrbitalElements {
+            semi_major_axis: EARTH_RADIUS + altitude_m,
+            inclination: inclination_deg.to_radians(),
+            raan: raan_rad,
+            phase: phase_rad,
+        }
+    }
+
+    /// Orbital period, seconds: 2π√(a³/μ).
+    pub fn period(&self) -> f64 {
+        2.0 * std::f64::consts::PI * (self.semi_major_axis.powi(3) / MU_EARTH).sqrt()
+    }
+
+    /// Mean motion, rad/s.
+    pub fn mean_motion(&self) -> f64 {
+        (MU_EARTH / self.semi_major_axis.powi(3)).sqrt()
+    }
+
+    /// Orbital speed, m/s (circular: v = √(μ/a)).
+    pub fn speed(&self) -> f64 {
+        (MU_EARTH / self.semi_major_axis).sqrt()
+    }
+
+    /// ECI position at time `t` seconds after epoch.
+    ///
+    /// Perifocal position for a circular orbit is (a·cos u, a·sin u, 0) with
+    /// argument of latitude u = phase + n·t; rotate by inclination about x,
+    /// then by RAAN about z.
+    pub fn position_eci(&self, t: f64) -> Vec3 {
+        let u = self.phase + self.mean_motion() * t;
+        let (su, cu) = u.sin_cos();
+        let (si, ci) = self.inclination.sin_cos();
+        let (so, co) = self.raan.sin_cos();
+        let a = self.semi_major_axis;
+        // in-plane
+        let xp = a * cu;
+        let yp = a * su;
+        // rotate: R_z(raan) * R_x(inc) * [xp, yp, 0]
+        Vec3::new(
+            co * xp - so * ci * yp,
+            so * xp + co * ci * yp,
+            si * yp,
+        )
+    }
+
+    /// ECI velocity at time `t` (analytic derivative of `position_eci`).
+    pub fn velocity_eci(&self, t: f64) -> Vec3 {
+        let n = self.mean_motion();
+        let u = self.phase + n * t;
+        let (su, cu) = u.sin_cos();
+        let (si, ci) = self.inclination.sin_cos();
+        let (so, co) = self.raan.sin_cos();
+        let v = self.semi_major_axis * n;
+        let xp = -v * su;
+        let yp = v * cu;
+        Vec3::new(
+            co * xp - so * ci * yp,
+            so * xp + co * ci * yp,
+            si * yp,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leo() -> OrbitalElements {
+        // the paper's shell: 1300 km, 53°
+        OrbitalElements::circular(1_300_000.0, 53.0, 0.3, 1.1)
+    }
+
+    #[test]
+    fn period_is_about_111_minutes() {
+        // a = 7671 km → T ≈ 2π√(a³/μ) ≈ 6700 s
+        let t = leo().period();
+        assert!((6500.0..7000.0).contains(&t), "T={t}");
+    }
+
+    #[test]
+    fn radius_constant_over_orbit() {
+        let e = leo();
+        for i in 0..100 {
+            let t = i as f64 * 70.0;
+            let r = e.position_eci(t).norm();
+            assert!((r - e.semi_major_axis).abs() < 1e-3, "t={t} r={r}");
+        }
+    }
+
+    #[test]
+    fn periodicity() {
+        let e = leo();
+        let p0 = e.position_eci(0.0);
+        let p1 = e.position_eci(e.period());
+        assert!(p0.dist(p1) < 1.0, "drift {}", p0.dist(p1));
+    }
+
+    #[test]
+    fn inclination_bounds_latitude() {
+        let e = leo();
+        let max_z = e.semi_major_axis * e.inclination.sin();
+        for i in 0..200 {
+            let z = e.position_eci(i as f64 * 33.0).z.abs();
+            assert!(z <= max_z + 1e-3);
+        }
+    }
+
+    #[test]
+    fn equatorial_orbit_stays_in_plane() {
+        let e = OrbitalElements::circular(500_000.0, 0.0, 0.0, 0.0);
+        for i in 0..50 {
+            assert!(e.position_eci(i as f64 * 100.0).z.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn velocity_is_tangential_and_correct_magnitude() {
+        let e = leo();
+        for &t in &[0.0, 500.0, 3000.0] {
+            let p = e.position_eci(t);
+            let v = e.velocity_eci(t);
+            // circular: velocity ⟂ position
+            assert!(p.dot(v).abs() / (p.norm() * v.norm()) < 1e-9);
+            assert!((v.norm() - e.speed()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn velocity_matches_finite_difference() {
+        let e = leo();
+        let t = 777.0;
+        let h = 1e-3;
+        let fd = e
+            .position_eci(t + h)
+            .sub(e.position_eci(t - h))
+            .scale(1.0 / (2.0 * h));
+        let v = e.velocity_eci(t);
+        assert!(fd.dist(v) < 1e-2, "fd={fd:?} v={v:?}");
+    }
+}

@@ -1,0 +1,250 @@
+//! Geometry primitives: 3-vectors, ECI↔ECEF conversion, geodetic ground
+//! stations, and elevation angles.
+
+use super::{EARTH_OMEGA, EARTH_RADIUS};
+
+/// A 3-vector in meters (frame documented at each use site).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 {
+        x: 0.0,
+        y: 0.0,
+        z: 0.0,
+    };
+
+    pub fn new(x: f64, y: f64, z: f64) -> Vec3 {
+        Vec3 { x, y, z }
+    }
+
+    #[inline]
+    pub fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+
+    #[inline]
+    pub fn scale(self, k: f64) -> Vec3 {
+        Vec3::new(self.x * k, self.y * k, self.z * k)
+    }
+
+    #[inline]
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    #[inline]
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    #[inline]
+    pub fn norm(self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    #[inline]
+    pub fn dist(self, o: Vec3) -> f64 {
+        self.sub(o).norm()
+    }
+
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        assert!(n > 0.0, "normalizing zero vector");
+        self.scale(1.0 / n)
+    }
+}
+
+/// Rotate an ECI position into the Earth-fixed (ECEF) frame at time `t`
+/// seconds after frame alignment (Greenwich angle = EARTH_OMEGA * t).
+pub fn eci_to_ecef(p: Vec3, t: f64) -> Vec3 {
+    let theta = EARTH_OMEGA * t;
+    let (s, c) = theta.sin_cos();
+    Vec3::new(c * p.x + s * p.y, -s * p.x + c * p.y, p.z)
+}
+
+/// Rotate an ECEF position into ECI at time `t`.
+pub fn ecef_to_eci(p: Vec3, t: f64) -> Vec3 {
+    let theta = EARTH_OMEGA * t;
+    let (s, c) = theta.sin_cos();
+    Vec3::new(c * p.x - s * p.y, s * p.x + c * p.y, p.z)
+}
+
+/// Geodetic ground station (spherical-Earth model — adequate for link
+/// budgets and visibility windows at LEO altitudes).
+#[derive(Clone, Debug)]
+pub struct GroundStation {
+    pub id: usize,
+    pub name: String,
+    /// Latitude in degrees, +north.
+    pub lat_deg: f64,
+    /// Longitude in degrees, +east.
+    pub lon_deg: f64,
+    /// Minimum elevation angle for a usable link, degrees.
+    pub min_elevation_deg: f64,
+}
+
+impl GroundStation {
+    pub fn new(id: usize, name: &str, lat_deg: f64, lon_deg: f64, min_elevation_deg: f64) -> Self {
+        GroundStation {
+            id,
+            name: name.to_string(),
+            lat_deg,
+            lon_deg,
+            min_elevation_deg,
+        }
+    }
+
+    /// Position in the Earth-fixed frame (constant).
+    pub fn ecef(&self) -> Vec3 {
+        let lat = self.lat_deg.to_radians();
+        let lon = self.lon_deg.to_radians();
+        Vec3::new(
+            EARTH_RADIUS * lat.cos() * lon.cos(),
+            EARTH_RADIUS * lat.cos() * lon.sin(),
+            EARTH_RADIUS * lat.sin(),
+        )
+    }
+
+    /// Position in ECI at time `t`.
+    pub fn eci(&self, t: f64) -> Vec3 {
+        ecef_to_eci(self.ecef(), t)
+    }
+
+    /// Elevation angle (radians) of a satellite at ECI position `sat` as
+    /// seen from this station at time `t`. Negative when below horizon.
+    pub fn elevation(&self, sat: Vec3, t: f64) -> f64 {
+        let gs = self.eci(t);
+        let up = gs.normalized();
+        let rel = sat.sub(gs);
+        let r = rel.norm();
+        if r == 0.0 {
+            return std::f64::consts::FRAC_PI_2;
+        }
+        (rel.dot(up) / r).asin()
+    }
+
+    /// Whether the satellite is visible (elevation above the mask).
+    pub fn sees(&self, sat: Vec3, t: f64) -> bool {
+        self.elevation(sat, t) >= self.min_elevation_deg.to_radians()
+    }
+
+    /// Slant range to the satellite, meters.
+    pub fn range(&self, sat: Vec3, t: f64) -> f64 {
+        sat.dist(self.eci(t))
+    }
+}
+
+/// A small default ground-segment: three stations spread in longitude, all
+/// with the paper's 10° elevation mask.
+pub fn default_ground_segment() -> Vec<GroundStation> {
+    vec![
+        GroundStation::new(0, "wuhan", 30.6, 114.3, 10.0),
+        GroundStation::new(1, "melbourne", -37.8, 145.0, 10.0),
+        GroundStation::new(2, "svalbard", 78.2, 15.4, 10.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn vec3_algebra() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(-1.0, 0.5, 2.0);
+        assert_eq!(a.add(b), Vec3::new(0.0, 2.5, 5.0));
+        assert_eq!(a.sub(b), Vec3::new(2.0, 1.5, 1.0));
+        assert!((a.dot(b) - (-1.0 + 1.0 + 6.0)).abs() < 1e-12);
+        let c = a.cross(b);
+        // orthogonality of the cross product
+        assert!(c.dot(a).abs() < 1e-12);
+        assert!(c.dot(b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eci_ecef_roundtrip() {
+        let p = Vec3::new(7.0e6, -1.2e6, 3.3e6);
+        for &t in &[0.0, 100.0, 5000.0, 86400.0] {
+            let q = ecef_to_eci(eci_to_ecef(p, t), t);
+            assert!(p.dist(q) < 1e-6, "t={t}");
+        }
+    }
+
+    #[test]
+    fn ecef_rotation_preserves_norm_and_z() {
+        let p = Vec3::new(7.0e6, -1.2e6, 3.3e6);
+        let q = eci_to_ecef(p, 1234.0);
+        assert!((p.norm() - q.norm()).abs() < 1e-6);
+        assert_eq!(p.z, q.z);
+    }
+
+    #[test]
+    fn ground_station_on_sphere() {
+        for gs in default_ground_segment() {
+            assert!((gs.ecef().norm() - EARTH_RADIUS).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn equator_station_position() {
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        let p = gs.ecef();
+        assert!((p.x - EARTH_RADIUS).abs() < 1e-6);
+        assert!(p.y.abs() < 1e-6);
+        assert!(p.z.abs() < 1e-6);
+    }
+
+    #[test]
+    fn zenith_satellite_has_90deg_elevation() {
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        // directly overhead at t=0: along +x
+        let sat = Vec3::new(EARTH_RADIUS + 1_300_000.0, 0.0, 0.0);
+        let el = gs.elevation(sat, 0.0);
+        assert!((el - PI / 2.0).abs() < 1e-9);
+        assert!(gs.sees(sat, 0.0));
+    }
+
+    #[test]
+    fn antipodal_satellite_below_horizon() {
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        let sat = Vec3::new(-(EARTH_RADIUS + 1_300_000.0), 0.0, 0.0);
+        assert!(gs.elevation(sat, 0.0) < 0.0);
+        assert!(!gs.sees(sat, 0.0));
+    }
+
+    #[test]
+    fn elevation_mask_boundary() {
+        // a satellite exactly on the geometric horizon has elevation ~0,
+        // which fails a 10° mask but passes a -5° mask.
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        let horizon_sat = Vec3::new(EARTH_RADIUS, 2_000_000.0, 0.0);
+        assert!(!gs.sees(horizon_sat, 0.0));
+        let gs_loose = GroundStation::new(0, "eq", 0.0, 0.0, -45.0);
+        assert!(gs_loose.sees(horizon_sat, 0.0));
+    }
+
+    #[test]
+    fn station_rotates_with_earth() {
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        let p0 = gs.eci(0.0);
+        // quarter sidereal day later the station has rotated ~90°
+        let quarter = 0.25 * 2.0 * PI / EARTH_OMEGA;
+        let p1 = gs.eci(quarter);
+        assert!(p0.normalized().dot(p1.normalized()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,29 @@
+//! LEO orbital-mechanics substrate.
+//!
+//! The paper evaluates FedHC on a simulated LEO constellation (1300 km
+//! altitude, 53° inclination, ground stations with a 10° minimum elevation
+//! angle). This module provides everything the coordinator consumes from
+//! that testbed: satellite positions over time (circular Keplerian
+//! propagation in an Earth-centered inertial frame), Walker-delta
+//! constellation generation, ground-station geometry, elevation-angle
+//! visibility, and satellite–satellite / satellite–ground ranges.
+
+pub mod elements;
+pub mod geo;
+pub mod propagate;
+pub mod visibility;
+pub mod walker;
+
+pub use elements::OrbitalElements;
+pub use geo::{GroundStation, Vec3};
+pub use propagate::Constellation;
+pub use walker::WalkerConstellation;
+
+/// Standard gravitational parameter of Earth, m^3/s^2.
+pub const MU_EARTH: f64 = 3.986_004_418e14;
+/// Mean Earth radius, m.
+pub const EARTH_RADIUS: f64 = 6_371_000.0;
+/// Earth rotation rate, rad/s (sidereal).
+pub const EARTH_OMEGA: f64 = 7.292_115_0e-5;
+/// Speed of light, m/s.
+pub const SPEED_OF_LIGHT: f64 = 299_792_458.0;

@@ -1,0 +1,126 @@
+//! Constellation-level propagation: snapshot every satellite position at a
+//! simulated time, cached per epoch for the coordinator's clustering step.
+
+use super::elements::OrbitalElements;
+use super::geo::Vec3;
+use super::walker::WalkerConstellation;
+
+/// A propagatable set of satellites.
+#[derive(Clone, Debug)]
+pub struct Constellation {
+    pub elements: Vec<OrbitalElements>,
+}
+
+/// Positions of every satellite at one instant.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub t: f64,
+    pub positions: Vec<Vec3>,
+}
+
+impl Constellation {
+    pub fn new(elements: Vec<OrbitalElements>) -> Self {
+        assert!(!elements.is_empty(), "empty constellation");
+        Constellation { elements }
+    }
+
+    pub fn from_walker(w: &WalkerConstellation) -> Self {
+        Constellation::new(w.elements())
+    }
+
+    pub fn len(&self) -> usize {
+        self.elements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elements.is_empty()
+    }
+
+    /// ECI positions of all satellites at time `t`.
+    pub fn snapshot(&self, t: f64) -> Snapshot {
+        Snapshot {
+            t,
+            positions: self.elements.iter().map(|e| e.position_eci(t)).collect(),
+        }
+    }
+
+    /// Shortest orbital period in the set (used to pick simulation steps).
+    pub fn min_period(&self) -> f64 {
+        self.elements
+            .iter()
+            .map(|e| e.period())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Range between two satellites at time `t`, meters.
+    pub fn range_between(&self, i: usize, j: usize, t: f64) -> f64 {
+        self.elements[i]
+            .position_eci(t)
+            .dist(self.elements[j].position_eci(t))
+    }
+}
+
+impl Snapshot {
+    /// Flattened `[n,3]` position matrix in kilometers — the feature space
+    /// the clustering algorithm operates on (Eq. 13 of the paper).
+    pub fn features_km(&self) -> Vec<[f64; 3]> {
+        self.positions
+            .iter()
+            .map(|p| [p.x / 1e3, p.y / 1e3, p.z / 1e3])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Constellation {
+        Constellation::from_walker(&WalkerConstellation::paper_shell(4, 5))
+    }
+
+    #[test]
+    fn snapshot_has_all_sats() {
+        let c = small();
+        let s = c.snapshot(123.0);
+        assert_eq!(s.positions.len(), 20);
+        assert_eq!(s.t, 123.0);
+    }
+
+    #[test]
+    fn snapshot_changes_over_time() {
+        let c = small();
+        let a = c.snapshot(0.0);
+        let b = c.snapshot(60.0);
+        // LEO at ~7.2 km/s moves ~430 km in a minute
+        for (p, q) in a.positions.iter().zip(&b.positions) {
+            let d = p.dist(*q);
+            assert!((300_000.0..600_000.0).contains(&d), "moved {d}");
+        }
+    }
+
+    #[test]
+    fn features_in_km() {
+        let c = small();
+        let f = c.snapshot(0.0).features_km();
+        // |r| = 7671 km for the paper shell
+        for row in f {
+            let n = (row[0] * row[0] + row[1] * row[1] + row[2] * row[2]).sqrt();
+            assert!((n - 7671.0).abs() < 5.0, "norm {n}");
+        }
+    }
+
+    #[test]
+    fn min_period_uniform_shell() {
+        let c = small();
+        let p0 = c.elements[0].period();
+        assert!((c.min_period() - p0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_between_is_symmetric() {
+        let c = small();
+        assert!((c.range_between(1, 7, 55.0) - c.range_between(7, 1, 55.0)).abs() < 1e-9);
+        assert_eq!(c.range_between(3, 3, 55.0), 0.0);
+    }
+}

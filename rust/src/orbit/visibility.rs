@@ -1,0 +1,179 @@
+//! Visibility computation: which satellites a ground station can see, when,
+//! and which satellite pairs have line-of-sight (for intra-cluster links).
+
+use super::geo::{GroundStation, Vec3};
+use super::propagate::Constellation;
+use super::EARTH_RADIUS;
+
+/// A contiguous interval during which a station sees a satellite.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Window {
+    pub sat: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Window {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Indices of satellites visible from `gs` at time `t`.
+pub fn visible_sats(gs: &GroundStation, c: &Constellation, t: f64) -> Vec<usize> {
+    c.elements
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| gs.sees(e.position_eci(t), t))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Compute visibility windows for every satellite from `gs` over
+/// `[t0, t1]`, sampling every `dt` seconds and refining each edge by
+/// bisection to sub-second accuracy.
+pub fn windows(
+    gs: &GroundStation,
+    c: &Constellation,
+    t0: f64,
+    t1: f64,
+    dt: f64,
+) -> Vec<Window> {
+    assert!(t1 > t0 && dt > 0.0);
+    let mut out = Vec::new();
+    for (i, e) in c.elements.iter().enumerate() {
+        let vis = |t: f64| gs.sees(e.position_eci(t), t);
+        let mut t = t0;
+        let mut prev = vis(t0);
+        let mut start = if prev { Some(t0) } else { None };
+        while t < t1 {
+            let tn = (t + dt).min(t1);
+            let cur = vis(tn);
+            if cur != prev {
+                let edge = bisect_edge(&vis, t, tn);
+                if cur {
+                    start = Some(edge);
+                } else if let Some(s) = start.take() {
+                    out.push(Window {
+                        sat: i,
+                        start: s,
+                        end: edge,
+                    });
+                }
+            }
+            prev = cur;
+            t = tn;
+        }
+        if let Some(s) = start {
+            out.push(Window {
+                sat: i,
+                start: s,
+                end: t1,
+            });
+        }
+    }
+    out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    out
+}
+
+fn bisect_edge(vis: &dyn Fn(f64) -> bool, mut lo: f64, mut hi: f64) -> f64 {
+    // invariant: vis(lo) != vis(hi)
+    for _ in 0..30 {
+        let mid = 0.5 * (lo + hi);
+        if vis(mid) == vis(lo) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 0.25 {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Line-of-sight between two ECI points: the segment must clear the Earth
+/// (with a small atmosphere margin). Used for inter-satellite links.
+pub fn has_line_of_sight(a: Vec3, b: Vec3) -> bool {
+    const MARGIN: f64 = 80_000.0; // atmosphere grazing margin, m
+    let ab = b.sub(a);
+    let len2 = ab.dot(ab);
+    if len2 == 0.0 {
+        return true;
+    }
+    // closest point of the segment to the geocenter
+    let t = (-a.dot(ab) / len2).clamp(0.0, 1.0);
+    let closest = a.add(ab.scale(t));
+    closest.norm() >= EARTH_RADIUS + MARGIN
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::walker::WalkerConstellation;
+
+    #[test]
+    fn los_for_adjacent_sats() {
+        let r = EARTH_RADIUS + 1_300_000.0;
+        let a = Vec3::new(r, 0.0, 0.0);
+        let b = Vec3::new(r * 0.9, r * 0.43, 0.0);
+        assert!(has_line_of_sight(a, b));
+    }
+
+    #[test]
+    fn no_los_through_earth() {
+        let r = EARTH_RADIUS + 1_300_000.0;
+        let a = Vec3::new(r, 0.0, 0.0);
+        let b = Vec3::new(-r, 0.0, 0.0);
+        assert!(!has_line_of_sight(a, b));
+    }
+
+    #[test]
+    fn los_is_symmetric_and_reflexive() {
+        let r = EARTH_RADIUS + 800_000.0;
+        let a = Vec3::new(r, 100.0, -5.0);
+        let b = Vec3::new(0.0, r, 0.0);
+        assert_eq!(has_line_of_sight(a, b), has_line_of_sight(b, a));
+        assert!(has_line_of_sight(a, a));
+    }
+
+    #[test]
+    fn some_sats_visible_from_ground() {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(8, 12));
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        // with 96 sats in a 53° shell an equatorial station sees a few
+        let v = visible_sats(&gs, &c, 0.0);
+        assert!(!v.is_empty(), "no satellites visible");
+        assert!(v.len() < c.len(), "all satellites visible is impossible");
+    }
+
+    #[test]
+    fn windows_are_well_formed() {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(3, 4));
+        let gs = GroundStation::new(0, "mid", 45.0, 10.0, 10.0);
+        let period = c.min_period();
+        let ws = windows(&gs, &c, 0.0, 2.0 * period, 30.0);
+        assert!(!ws.is_empty(), "no visibility windows in two periods");
+        for w in &ws {
+            assert!(w.end > w.start, "{w:?}");
+            assert!(w.duration() < period, "window longer than an orbit: {w:?}");
+            // midpoint of a window must be visible
+            let mid = 0.5 * (w.start + w.end);
+            assert!(gs.sees(c.elements[w.sat].position_eci(mid), mid));
+        }
+    }
+
+    #[test]
+    fn window_edges_are_tight() {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(3, 4));
+        let gs = GroundStation::new(0, "mid", 45.0, 10.0, 10.0);
+        let ws = windows(&gs, &c, 0.0, c.min_period(), 30.0);
+        for w in ws.iter().take(5) {
+            if w.start > 0.0 {
+                // just before the start the satellite is not visible
+                let t = w.start - 1.0;
+                assert!(!gs.sees(c.elements[w.sat].position_eci(t), t), "{w:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Walker-delta constellation generation.
+//!
+//! The paper distributes satellites "evenly across each orbit" at a common
+//! altitude/inclination — exactly a Walker-delta pattern i:T/P/F with T
+//! total satellites in P equally-spaced planes and an inter-plane phasing
+//! factor F.
+
+use super::elements::OrbitalElements;
+use std::f64::consts::PI;
+
+/// A Walker-delta constellation specification.
+#[derive(Clone, Debug)]
+pub struct WalkerConstellation {
+    pub altitude_m: f64,
+    pub inclination_deg: f64,
+    /// Number of orbital planes (P).
+    pub planes: usize,
+    /// Satellites per plane (S); total T = P * S.
+    pub sats_per_plane: usize,
+    /// Phasing factor F in [0, P).
+    pub phasing: usize,
+}
+
+impl WalkerConstellation {
+    pub fn new(
+        altitude_m: f64,
+        inclination_deg: f64,
+        planes: usize,
+        sats_per_plane: usize,
+        phasing: usize,
+    ) -> Self {
+        assert!(planes > 0 && sats_per_plane > 0);
+        assert!(phasing < planes.max(1));
+        WalkerConstellation {
+            altitude_m,
+            inclination_deg,
+            planes,
+            sats_per_plane,
+            phasing,
+        }
+    }
+
+    /// The paper's testbed shell: 1300 km, 53°. Planes/sats chosen by the
+    /// caller to hit the desired client count.
+    pub fn paper_shell(planes: usize, sats_per_plane: usize) -> Self {
+        WalkerConstellation::new(1_300_000.0, 53.0, planes, sats_per_plane, 1.min(planes - 1))
+    }
+
+    pub fn total(&self) -> usize {
+        self.planes * self.sats_per_plane
+    }
+
+    /// Generate the orbital elements of every satellite. Satellite index
+    /// `p * sats_per_plane + s` is slot `s` of plane `p`.
+    pub fn elements(&self) -> Vec<OrbitalElements> {
+        let mut out = Vec::with_capacity(self.total());
+        let t_total = self.total() as f64;
+        for p in 0..self.planes {
+            let raan = 2.0 * PI * p as f64 / self.planes as f64;
+            for s in 0..self.sats_per_plane {
+                // in-plane spacing + Walker phasing offset between planes
+                let phase = 2.0 * PI
+                    * (s as f64 / self.sats_per_plane as f64
+                        + self.phasing as f64 * p as f64 / t_total);
+                out.push(OrbitalElements::circular(
+                    self.altitude_m,
+                    self.inclination_deg,
+                    raan,
+                    phase,
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_count() {
+        let w = WalkerConstellation::paper_shell(8, 12);
+        assert_eq!(w.total(), 96);
+        assert_eq!(w.elements().len(), 96);
+    }
+
+    #[test]
+    fn planes_have_distinct_raan() {
+        let w = WalkerConstellation::paper_shell(6, 4);
+        let els = w.elements();
+        for p in 0..6 {
+            let raan = els[p * 4].raan;
+            for s in 1..4 {
+                assert_eq!(els[p * 4 + s].raan, raan);
+            }
+            if p > 0 {
+                assert!((els[p * 4].raan - els[0].raan).abs() > 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn in_plane_spacing_uniform() {
+        let w = WalkerConstellation::paper_shell(3, 10);
+        let els = w.elements();
+        let gap = 2.0 * PI / 10.0;
+        for s in 1..10 {
+            let d = els[s].phase - els[s - 1].phase;
+            assert!((d - gap).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_sats_at_same_altitude_and_inclination() {
+        let w = WalkerConstellation::paper_shell(5, 5);
+        for e in w.elements() {
+            assert!((e.semi_major_axis - (super::super::EARTH_RADIUS + 1_300_000.0)).abs() < 1e-6);
+            assert!((e.inclination - 53f64.to_radians()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn satellites_spread_in_space() {
+        // at t=0 no two satellites should be co-located
+        let w = WalkerConstellation::paper_shell(4, 6);
+        let pos: Vec<_> = w.elements().iter().map(|e| e.position_eci(0.0)).collect();
+        for i in 0..pos.len() {
+            for j in (i + 1)..pos.len() {
+                assert!(pos[i].dist(pos[j]) > 1_000.0, "sats {i},{j} co-located");
+            }
+        }
+    }
+
+    use std::f64::consts::PI;
+}

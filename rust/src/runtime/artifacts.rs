@@ -1,0 +1,224 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted, type-checked.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// One model variant (tiny_mlp / mnist_lenet / cifar_lenet).
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub chunk_steps: usize,
+    pub agg_slots: usize,
+    pub input_chw: (usize, usize, usize),
+    pub classes: usize,
+    pub init_file: String,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl VariantSpec {
+    pub fn input_dim(&self) -> usize {
+        self.input_chw.0 * self.input_chw.1 * self.input_chw.2
+    }
+}
+
+/// Parsed manifest + its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantSpec>,
+}
+
+#[derive(Debug)]
+pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn shape_list(j: &Json, what: &str) -> Result<Vec<Vec<usize>>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| ManifestError(format!("{what} not an array")))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| ManifestError(format!("{what} entry not an array")))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| ManifestError(format!("{what} dim not usize")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .map_err(|e| ManifestError(format!("cannot read {path:?}: {e} — run `make artifacts`")))?;
+        let j = Json::parse(&text).map_err(|e| ManifestError(e.to_string()))?;
+        if j.get("format").as_usize() != Some(1) {
+            return Err(ManifestError("unsupported manifest format".into()));
+        }
+        let mut variants = BTreeMap::new();
+        let vs = j
+            .get("variants")
+            .as_obj()
+            .ok_or_else(|| ManifestError("missing variants".into()))?;
+        for (name, v) in vs {
+            let chw = v
+                .get("input_chw")
+                .as_arr()
+                .and_then(|a| {
+                    if a.len() == 3 {
+                        Some((a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?))
+                    } else {
+                        None
+                    }
+                })
+                .ok_or_else(|| ManifestError(format!("{name}: bad input_chw")))?;
+            let mut entries = BTreeMap::new();
+            let es = v
+                .get("entries")
+                .as_obj()
+                .ok_or_else(|| ManifestError(format!("{name}: missing entries")))?;
+            for (ename, e) in es {
+                entries.insert(
+                    ename.clone(),
+                    EntrySpec {
+                        file: e
+                            .get("file")
+                            .as_str()
+                            .ok_or_else(|| ManifestError(format!("{name}.{ename}: no file")))?
+                            .to_string(),
+                        inputs: shape_list(e.get("inputs"), "inputs")?,
+                        outputs: shape_list(e.get("outputs"), "outputs")?,
+                    },
+                );
+            }
+            let spec = VariantSpec {
+                name: name.clone(),
+                param_count: v
+                    .get("param_count")
+                    .as_usize()
+                    .ok_or_else(|| ManifestError(format!("{name}: no param_count")))?,
+                batch: v
+                    .get("batch")
+                    .as_usize()
+                    .ok_or_else(|| ManifestError(format!("{name}: no batch")))?,
+                chunk_steps: v.get("chunk_steps").as_usize().unwrap_or(4),
+                agg_slots: v.get("agg_slots").as_usize().unwrap_or(16),
+                input_chw: chw,
+                classes: v.get("classes").as_usize().unwrap_or(10),
+                init_file: v
+                    .get("init_file")
+                    .as_str()
+                    .ok_or_else(|| ManifestError(format!("{name}: no init_file")))?
+                    .to_string(),
+                entries,
+            };
+            variants.insert(name.clone(), spec);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    /// Default artifact directory: `$FEDHC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FEDHC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec, ManifestError> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| ManifestError(format!("unknown variant '{name}'")))
+    }
+
+    /// Load the initial flat parameter vector for a variant.
+    pub fn init_params(&self, spec: &VariantSpec) -> Result<Vec<f32>, ManifestError> {
+        let path = self.dir.join(&spec.init_file);
+        let bytes = fs::read(&path)
+            .map_err(|e| ManifestError(format!("cannot read {path:?}: {e}")))?;
+        if bytes.len() != 4 * spec.param_count {
+            return Err(ManifestError(format!(
+                "{path:?}: {} bytes, want {}",
+                bytes.len(),
+                4 * spec.param_count
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let v = m.variant("tiny_mlp").unwrap();
+        assert_eq!(v.param_count, 64 * 32 + 32 + 32 * 10 + 10);
+        assert_eq!(v.input_dim(), 64);
+        for e in ["train_step", "train_chunk", "eval_step", "maml_step", "aggregate"] {
+            assert!(v.entries.contains_key(e), "missing entry {e}");
+        }
+        let init = m.init_params(v).unwrap();
+        assert_eq!(init.len(), v.param_count);
+        assert!(init.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn entry_shapes_match_param_count() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        for v in m.variants.values() {
+            let ts = &v.entries["train_step"];
+            assert_eq!(ts.inputs[0], vec![v.param_count]);
+            assert_eq!(ts.inputs[1], vec![v.batch, v.input_dim()]);
+            let ag = &v.entries["aggregate"];
+            assert_eq!(ag.inputs[0], vec![v.agg_slots, v.param_count]);
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_graceful() {
+        let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

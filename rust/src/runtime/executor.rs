@@ -1,0 +1,325 @@
+//! PJRT execution of the AOT entry points.
+//!
+//! One `ModelRuntime` per variant: it compiles each `*.hlo.txt` once
+//! (HLO text → `HloModuleProto` → `XlaComputation` → loaded executable)
+//! and exposes typed wrappers. All tensors cross as flat `f32` slices —
+//! the manifest's shapes are only used for validation and reshaping.
+
+use super::artifacts::{EntrySpec, Manifest, VariantSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Compiled executables for one model variant.
+pub struct ModelRuntime {
+    pub spec: VariantSpec,
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// PJRT call counter (perf diagnostics).
+    pub calls: std::cell::Cell<u64>,
+}
+
+fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = shape.iter().product();
+    if data.len() != expect {
+        bail!("input has {} elements, shape {shape:?} wants {expect}", data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        Ok(lit)
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl ModelRuntime {
+    /// Load and compile every entry point of `variant`.
+    pub fn load(manifest: &Manifest, variant: &str) -> Result<ModelRuntime> {
+        let spec = manifest.variant(variant)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for (name, entry) in &spec.entries {
+            let path = manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(ModelRuntime {
+            spec,
+            client,
+            exes,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    fn entry(&self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, &EntrySpec)> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("no entry '{name}'"))?;
+        Ok((exe, &self.spec.entries[name]))
+    }
+
+    /// Execute entry `name` with flat inputs; returns the decomposed tuple
+    /// of flat f32 outputs.
+    fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (exe, spec) = self.entry(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(data, shape)| literal(data, shape))
+            .collect::<Result<_>>()?;
+        self.calls.set(self.calls.get() + 1);
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // jax lowers with return_tuple=True: decompose and flatten
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs returned, {} expected",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// One SGD step (Eq. 3–4): returns (new_params, loss).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.run("train_step", &[params, x, y, &[lr]])?;
+        let loss = out[1][0];
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), loss))
+    }
+
+    /// `chunk_steps` consecutive SGD steps in one call:
+    /// xs is `[S*B*D]`, ys `[S*B]`. Returns (new_params, mean_loss).
+    pub fn train_chunk(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.run("train_chunk", &[params, xs, ys, &[lr]])?;
+        let loss = out[1][0];
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), loss))
+    }
+
+    /// Evaluate one batch: returns (mean_loss, correct_count).
+    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        let out = self.run("eval_step", &[params, x, y])?;
+        Ok((out[0][0], out[1][0]))
+    }
+
+    /// FOMAML warm-start (Eq. 16–17): returns (new_params, query_loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn maml_step(
+        &self,
+        params: &[f32],
+        sx: &[f32],
+        sy: &[f32],
+        qx: &[f32],
+        qy: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.run("maml_step", &[params, sx, sy, qx, qy, &[alpha], &[beta]])?;
+        let loss = out[1][0];
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), loss))
+    }
+
+    /// Weighted aggregation (Eq. 5 / Eq. 12) on the Pallas kernel.
+    /// `stack` is row-major `[n][P]` with `n <= agg_slots`; weights are
+    /// zero-padded to the slot count (exact — see kernel docs).
+    pub fn aggregate(&self, stack: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let slots = self.spec.agg_slots;
+        let p = self.spec.param_count;
+        let n = stack.len();
+        if n == 0 || n > slots {
+            bail!("aggregate: {n} rows, kernel supports 1..={slots}");
+        }
+        if weights.len() != n {
+            bail!("aggregate: {n} rows vs {} weights", weights.len());
+        }
+        let mut flat = vec![0.0f32; slots * p];
+        for (i, row) in stack.iter().enumerate() {
+            if row.len() != p {
+                bail!("aggregate: row {i} has {} params, want {p}", row.len());
+            }
+            flat[i * p..(i + 1) * p].copy_from_slice(row);
+        }
+        let mut w = vec![0.0f32; slots];
+        w[..n].copy_from_slice(weights);
+        let out = self.run("aggregate", &[&flat, &w])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Number of PJRT executions so far (perf counter).
+    pub fn call_count(&self) -> u64 {
+        self.calls.get()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<ModelRuntime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        Some(ModelRuntime::load(&m, "tiny_mlp").unwrap())
+    }
+
+    fn toy_batch(spec: &VariantSpec, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::Rng::new(seed);
+        let b = spec.batch;
+        let d = spec.input_dim();
+        let mut x = vec![0.0f32; b * d];
+        let mut y = vec![0.0f32; b];
+        for i in 0..b {
+            let c = rng.below_usize(10);
+            y[i] = c as f32;
+            for j in 0..d {
+                x[i * d + j] = 0.1 * rng.normal() as f32;
+            }
+            x[i * d + c] += 2.0;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let Some(rt) = runtime() else { return };
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let mut params = m.init_params(&rt.spec).unwrap();
+        let (x, y) = toy_batch(&rt.spec, 1);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..25 {
+            let (p, loss) = rt.train_step(&params, &x, &y, 0.5).unwrap();
+            params = p;
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < 0.5 * first.unwrap(), "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn eval_step_counts() {
+        let Some(rt) = runtime() else { return };
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let params = m.init_params(&rt.spec).unwrap();
+        let (x, y) = toy_batch(&rt.spec, 2);
+        let (loss, correct) = rt.eval_step(&params, &x, &y).unwrap();
+        assert!(loss > 0.0);
+        assert!((0.0..=rt.spec.batch as f32).contains(&correct));
+    }
+
+    #[test]
+    fn chunk_matches_stepwise() {
+        let Some(rt) = runtime() else { return };
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let params0 = m.init_params(&rt.spec).unwrap();
+        let s = rt.spec.chunk_steps;
+        let b = rt.spec.batch;
+        let d = rt.spec.input_dim();
+        let mut xs = Vec::with_capacity(s * b * d);
+        let mut ys = Vec::with_capacity(s * b);
+        let mut batches = Vec::new();
+        for step in 0..s {
+            let (x, y) = toy_batch(&rt.spec, 10 + step as u64);
+            xs.extend_from_slice(&x);
+            ys.extend_from_slice(&y);
+            batches.push((x, y));
+        }
+        let (pc, _) = rt.train_chunk(&params0, &xs, &ys, 0.1).unwrap();
+        let mut ps = params0;
+        for (x, y) in &batches {
+            let (p, _) = rt.train_step(&ps, x, y, 0.1).unwrap();
+            ps = p;
+        }
+        let max_diff = pc
+            .iter()
+            .zip(&ps)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "chunk vs stepwise diff {max_diff}");
+    }
+
+    #[test]
+    fn aggregate_matches_host() {
+        let Some(rt) = runtime() else { return };
+        let p = rt.spec.param_count;
+        let mut rng = crate::util::Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let w = [0.1, 0.3, 0.2, 0.25, 0.15];
+        let got = rt.aggregate(&refs, &w).unwrap();
+        let want = crate::runtime::host::aggregate_host(&refs, &w);
+        let max_diff = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "kernel vs host diff {max_diff}");
+    }
+
+    #[test]
+    fn maml_step_runs_and_identity_at_zero_rates() {
+        let Some(rt) = runtime() else { return };
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let params = m.init_params(&rt.spec).unwrap();
+        let (sx, sy) = toy_batch(&rt.spec, 4);
+        let (qx, qy) = toy_batch(&rt.spec, 5);
+        let (p1, qloss) = rt.maml_step(&params, &sx, &sy, &qx, &qy, 0.0, 0.0).unwrap();
+        assert!(qloss > 0.0);
+        let max_diff = p1
+            .iter()
+            .zip(&params)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-6, "zero-rate maml changed params by {max_diff}");
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let Some(rt) = runtime() else { return };
+        let bad = vec![0.0f32; 3];
+        let (x, y) = toy_batch(&rt.spec, 6);
+        assert!(rt.train_step(&bad, &x, &y, 0.1).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Pure-Rust host ops.
+//!
+//! The Pallas aggregation kernel has a fixed slot count baked at AOT time;
+//! clusters larger than that (and all baseline variants that never touch
+//! PJRT) aggregate here. The hot loop is written as chunked
+//! multiply-accumulate over the flat vectors — see benches/bench_aggregation.
+
+/// Weighted sum of parameter rows: `out = Σ_i w[i] * stack[i]`.
+pub fn aggregate_host(stack: &[&[f32]], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(stack.len(), weights.len());
+    assert!(!stack.is_empty(), "empty aggregation");
+    let p = stack[0].len();
+    let mut out = vec![0.0f32; p];
+    aggregate_host_into(stack, weights, &mut out);
+    out
+}
+
+/// Allocation-free variant for the hot path.
+pub fn aggregate_host_into(stack: &[&[f32]], weights: &[f32], out: &mut [f32]) {
+    assert_eq!(stack.len(), weights.len());
+    let p = out.len();
+    out.fill(0.0);
+    for (row, &w) in stack.iter().zip(weights.iter()) {
+        assert_eq!(row.len(), p, "ragged parameter stack");
+        // simple indexed loop lets LLVM autovectorise the FMA
+        for i in 0..p {
+            out[i] += w * row[i];
+        }
+    }
+}
+
+/// In-place axpy: `y += a * x` (used by momentum-free updates and tests).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// L2 distance between two parameter vectors.
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// L2 norm.
+pub fn l2_norm(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::{property, Gen};
+
+    #[test]
+    fn aggregate_identity_on_single_row() {
+        let row = [1.0f32, -2.0, 3.5];
+        let out = aggregate_host(&[&row], &[1.0]);
+        assert_eq!(out, row.to_vec());
+    }
+
+    #[test]
+    fn aggregate_weighted_mean() {
+        let a = [2.0f32, 0.0];
+        let b = [0.0f32, 4.0];
+        let out = aggregate_host(&[&a, &b], &[0.5, 0.5]);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn convex_combination_of_identical_rows_is_identity() {
+        property("convex combo identity", 64, |g: &mut Gen| {
+            let p = g.usize_in(1, 200);
+            let n = g.usize_in(1, 8);
+            let row = g.f32_vec(p, -5.0, 5.0);
+            let mut w: Vec<f32> = g.f32_vec(n, 0.01, 1.0);
+            let s: f32 = w.iter().sum();
+            for x in w.iter_mut() {
+                *x /= s;
+            }
+            let rows: Vec<&[f32]> = (0..n).map(|_| row.as_slice()).collect();
+            let out = aggregate_host(&rows, &w);
+            for (o, r) in out.iter().zip(&row) {
+                assert!((o - r).abs() < 1e-4, "{o} vs {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn aggregate_linear_in_weights() {
+        property("aggregation linearity", 32, |g: &mut Gen| {
+            let p = g.usize_in(1, 64);
+            let a = g.f32_vec(p, -1.0, 1.0);
+            let b = g.f32_vec(p, -1.0, 1.0);
+            let w1 = g.f64_in(0.0, 2.0) as f32;
+            let w2 = g.f64_in(0.0, 2.0) as f32;
+            let out = aggregate_host(&[&a, &b], &[w1, w2]);
+            for i in 0..p {
+                let want = w1 * a[i] + w2 * b[i];
+                assert!((out[i] - want).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn l2_helpers() {
+        assert_eq!(l2_distance(&[0.0, 3.0], &[4.0, 0.0]), 5.0);
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        let mut y = vec![1.0f32, 1.0];
+        axpy(2.0, &[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, -1.0]);
+    }
+}

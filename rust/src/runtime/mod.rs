@@ -1,0 +1,18 @@
+//! Runtime bridge: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and executes them on the PJRT CPU client from the Rust
+//! hot path. Python never runs here — this module is the only consumer of
+//! what `make artifacts` produced.
+//!
+//! * [`artifacts`] — manifest parsing + initial-parameter loading.
+//! * [`executor`] — one compiled executable per entry point, with typed
+//!   wrappers (`train_step`, `train_chunk`, `eval_step`, `maml_step`,
+//!   `aggregate`).
+//! * [`host`] — pure-Rust fallbacks for variable-size aggregation and for
+//!   tests that must run without artifacts.
+
+pub mod artifacts;
+pub mod executor;
+pub mod host;
+
+pub use artifacts::{Manifest, VariantSpec};
+pub use executor::ModelRuntime;

@@ -1,0 +1,59 @@
+//! Simulated wall clock.
+//!
+//! FL time in the paper is *simulated*: a round's duration is computed from
+//! the Eq. 7 max over clients, not from host wall-clock. The clock
+//! accumulates those durations so orbital positions, visibility and churn
+//! all evolve consistently with training progress.
+
+/// Monotonic simulated clock (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock { now: 0.0 }
+    }
+
+    pub fn at(t: f64) -> SimClock {
+        assert!(t >= 0.0);
+        SimClock { now: t }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds (panics on negative dt — time is monotonic).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "negative time step {dt}");
+        assert!(dt.is_finite(), "non-finite time step");
+        self.now += dt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_accumulates() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(12.5);
+        c.advance(0.5);
+        assert!((c.now() - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn rejects_negative_steps() {
+        SimClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn at_constructor() {
+        assert_eq!(SimClock::at(100.0).now(), 100.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Mobility → membership churn.
+//!
+//! As the constellation rotates, satellites drift away from the (inertial)
+//! centroid positions their clusters were built around. A satellite whose
+//! nearest centroid changed is a *dropout* from its original cluster
+//! (paper: "satellites may dynamically join or leave a cluster"). The
+//! coordinator samples this model once per round to compute `C^d` and the
+//! dropout rate that feeds the re-clustering trigger. On top of the
+//! deterministic orbital drift, a small random outage probability models
+//! link loss / eclipse power constraints.
+
+use crate::clustering::recluster::DropoutStats;
+use crate::orbit::propagate::Constellation;
+use crate::util::Rng;
+
+/// Churn model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MobilityModel {
+    /// Probability an otherwise-healthy member is unreachable this round
+    /// (radiation upset, power save, link outage).
+    pub outage_prob: f64,
+}
+
+impl Default for MobilityModel {
+    fn default() -> Self {
+        MobilityModel { outage_prob: 0.02 }
+    }
+}
+
+/// Per-round membership report.
+#[derive(Clone, Debug)]
+pub struct ChurnReport {
+    /// Per-cluster dropout statistics (C^k, C^d).
+    pub stats: Vec<DropoutStats>,
+    /// The "natural" assignment at time `t` (nearest current centroid).
+    pub natural_assignment: Vec<usize>,
+    /// Satellites unreachable this round (outage, excluded from training).
+    pub outages: Vec<usize>,
+}
+
+impl MobilityModel {
+    pub fn new(outage_prob: f64) -> Self {
+        assert!((0.0..1.0).contains(&outage_prob));
+        MobilityModel { outage_prob }
+    }
+
+    /// Evaluate churn at simulated time `t` against the clustering that was
+    /// computed at `centroids_km` (the centroids frozen at cluster-build
+    /// time) with member assignment `assignment`.
+    pub fn churn(
+        &self,
+        constellation: &Constellation,
+        assignment: &[usize],
+        centroids_km: &[[f64; 3]],
+        t: f64,
+        rng: &mut Rng,
+    ) -> ChurnReport {
+        let k = centroids_km.len();
+        let snap = constellation.snapshot(t);
+        let feats = snap.features_km();
+        let mut natural = Vec::with_capacity(feats.len());
+        for f in &feats {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, cent) in centroids_km.iter().enumerate() {
+                let dx = f[0] - cent[0];
+                let dy = f[1] - cent[1];
+                let dz = f[2] - cent[2];
+                let d = dx * dx + dy * dy + dz * dz;
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            natural.push(best);
+        }
+        let mut stats = vec![DropoutStats::default(); k];
+        let mut outages = Vec::new();
+        for (i, &home) in assignment.iter().enumerate() {
+            stats[home].members += 1;
+            let moved = natural[i] != home;
+            let outage = rng.uniform() < self.outage_prob;
+            if outage {
+                outages.push(i);
+            }
+            if moved || outage {
+                stats[home].dropped += 1;
+            }
+        }
+        ChurnReport {
+            stats,
+            natural_assignment: natural,
+            outages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans::KMeans;
+    use crate::orbit::walker::WalkerConstellation;
+
+    fn setup() -> (Constellation, Vec<usize>, Vec<[f64; 3]>) {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(4, 8));
+        let feats = c.snapshot(0.0).features_km();
+        let mut rng = Rng::new(1);
+        let res = KMeans::new(4).run(&feats, &mut rng);
+        (c, res.assignment, res.centroids)
+    }
+
+    #[test]
+    fn no_drift_at_build_time_without_outage() {
+        let (c, asg, cents) = setup();
+        let m = MobilityModel::new(1e-12);
+        let mut rng = Rng::new(2);
+        let rep = m.churn(&c, &asg, &cents, 0.0, &mut rng);
+        let dropped: usize = rep.stats.iter().map(|s| s.dropped).sum();
+        assert_eq!(dropped, 0, "churn at t=0 should be zero");
+        assert_eq!(rep.natural_assignment, asg);
+    }
+
+    #[test]
+    fn drift_grows_with_time() {
+        let (c, asg, cents) = setup();
+        let m = MobilityModel::new(1e-12);
+        let mut rng = Rng::new(3);
+        let period = c.min_period();
+        let d_small: usize = m
+            .churn(&c, &asg, &cents, 0.01 * period, &mut rng)
+            .stats
+            .iter()
+            .map(|s| s.dropped)
+            .sum();
+        let d_large: usize = m
+            .churn(&c, &asg, &cents, 0.25 * period, &mut rng)
+            .stats
+            .iter()
+            .map(|s| s.dropped)
+            .sum();
+        assert!(
+            d_large > d_small,
+            "quarter-orbit churn {d_large} <= early churn {d_small}"
+        );
+        assert!(d_large > 0);
+    }
+
+    #[test]
+    fn members_partition_is_preserved() {
+        let (c, asg, cents) = setup();
+        let m = MobilityModel::default();
+        let mut rng = Rng::new(4);
+        let rep = m.churn(&c, &asg, &cents, 500.0, &mut rng);
+        let members: usize = rep.stats.iter().map(|s| s.members).sum();
+        assert_eq!(members, asg.len());
+        for s in &rep.stats {
+            assert!(s.dropped <= s.members);
+        }
+    }
+
+    #[test]
+    fn outage_prob_one_drops_everyone() {
+        let (c, asg, cents) = setup();
+        let m = MobilityModel::new(0.999999);
+        let mut rng = Rng::new(5);
+        let rep = m.churn(&c, &asg, &cents, 0.0, &mut rng);
+        let dropped: usize = rep.stats.iter().map(|s| s.dropped).sum();
+        assert_eq!(dropped, asg.len());
+        assert_eq!(rep.outages.len(), asg.len());
+    }
+}

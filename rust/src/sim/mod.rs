@@ -1,0 +1,10 @@
+//! Discrete-time simulation substrate: the simulated clock the FL rounds
+//! advance, and the mobility process that turns orbital motion into
+//! cluster-membership churn (join/leave events that drive the paper's
+//! re-clustering trigger).
+
+pub mod clock;
+pub mod mobility;
+
+pub use clock::SimClock;
+pub use mobility::MobilityModel;

@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (the image has no `clap`).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! Keys may also be given as `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        out.options.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(argv("run --clusters 5 --dataset mnist"), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("clusters"), Some("5"));
+        assert_eq!(a.get("dataset"), Some("mnist"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(argv("bench --rounds=100"), &[]);
+        assert_eq!(a.get_usize("rounds", 0), 100);
+    }
+
+    #[test]
+    fn known_flags_take_no_value() {
+        let a = Args::parse(argv("run --verbose positional1"), &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["positional1"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(argv("run --fast"), &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = Args::parse(argv("run --quiet --k 3"), &["quiet"]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get_usize("k", 0), 3);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse(argv("x --lr 0.01"), &[]);
+        assert_eq!(a.get_f64("lr", 1.0), 0.01);
+        assert_eq!(a.get_f64("missing", 2.5), 2.5);
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+}

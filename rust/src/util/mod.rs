@@ -1,0 +1,13 @@
+//! Foundational substrates the offline image does not provide as crates:
+//! a deterministic PRNG, a JSON parser/writer (for the artifact manifest and
+//! experiment records), a CLI argument parser, a leveled logger, a small
+//! property-testing harness, and summary statistics.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

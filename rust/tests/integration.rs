@@ -1,0 +1,161 @@
+//! Integration tests over the full stack (artifacts → PJRT → coordinator).
+//! All tests skip gracefully when artifacts are missing so `cargo test`
+//! stays usable before `make artifacts`; CI runs them via `make test`.
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+fn with_runtime<F: FnOnce(&Manifest, &ModelRuntime)>(f: F) {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+    f(&m, &rt);
+}
+
+#[test]
+fn all_four_methods_complete_and_learn() {
+    with_runtime(|m, rt| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 8;
+        cfg.target_accuracy = None;
+        let run = |method: &str| {
+            let mut trial = Trial::new(cfg.clone(), m, rt).unwrap();
+            match method {
+                "cfedavg" => run_cfedavg(&mut trial).unwrap(),
+                "fedhc" => run_clustered(&mut trial, Strategy::fedhc()).unwrap(),
+                "hbase" => run_clustered(&mut trial, Strategy::hbase()).unwrap(),
+                "fedce" => run_clustered(&mut trial, Strategy::fedce()).unwrap(),
+                _ => unreachable!(),
+            }
+        };
+        for method in ["cfedavg", "fedhc", "hbase", "fedce"] {
+            let res = run(method);
+            assert!(!res.ledger.records.is_empty(), "{method}: no records");
+            let first = res.ledger.records.first().unwrap().accuracy;
+            assert!(
+                res.final_accuracy > first,
+                "{method}: accuracy {first} -> {} did not improve",
+                res.final_accuracy
+            );
+            assert!(res.ledger.time_s > 0.0 && res.ledger.energy_j > 0.0);
+        }
+    });
+}
+
+#[test]
+fn paper_orderings_hold_on_tiny() {
+    with_runtime(|m, rt| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 10;
+        cfg.target_accuracy = None;
+        let time_of = |strategy: Option<Strategy>| {
+            let mut trial = Trial::new(cfg.clone(), m, rt).unwrap();
+            let res = match strategy {
+                Some(s) => run_clustered(&mut trial, s).unwrap(),
+                None => run_cfedavg(&mut trial).unwrap(),
+            };
+            res.ledger.time_s
+        };
+        let t_central = time_of(None);
+        let t_fedhc = time_of(Some(Strategy::fedhc()));
+        let t_hbase = time_of(Some(Strategy::hbase()));
+        // headline orderings: hierarchy beats centralised; geographic
+        // clustering beats random clustering on round time
+        assert!(t_fedhc < t_central, "fedhc {t_fedhc} vs central {t_central}");
+        assert!(t_fedhc < t_hbase, "fedhc {t_fedhc} vs hbase {t_hbase}");
+    });
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    with_runtime(|m, rt| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 5;
+        cfg.target_accuracy = None;
+        let run = || {
+            let mut trial = Trial::new(cfg.clone(), m, rt).unwrap();
+            run_clustered(&mut trial, Strategy::fedhc()).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.ledger.records.len(), b.ledger.records.len());
+        for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
+            assert_eq!(x.accuracy, y.accuracy);
+            assert_eq!(x.time_s, y.time_s);
+            assert_eq!(x.energy_j, y.energy_j);
+        }
+        // different seed → different trajectory
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 777;
+        let mut trial = Trial::new(cfg2, m, rt).unwrap();
+        let c = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+        assert!(
+            a.ledger
+                .records
+                .iter()
+                .zip(&c.ledger.records)
+                .any(|(x, y)| x.accuracy != y.accuracy || x.time_s != y.time_s),
+            "different seeds produced identical runs"
+        );
+    });
+}
+
+#[test]
+fn churn_triggers_recluster_and_maml() {
+    with_runtime(|m, rt| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 12;
+        cfg.outage_prob = 0.30;
+        cfg.recluster_threshold = 0.10;
+        cfg.target_accuracy = None;
+        let mut trial = Trial::new(cfg.clone(), m, rt).unwrap();
+        let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+        assert!(res.ledger.reclusters > 0, "no re-clustering under 30% churn");
+        assert!(res.ledger.maml_adaptations > 0, "no MAML warm-starts fired");
+        // without MAML the same churn must produce zero adaptations
+        let mut trial = Trial::new(cfg, m, rt).unwrap();
+        let res2 = run_clustered(&mut trial, Strategy::fedhc_no_maml()).unwrap();
+        assert!(res2.ledger.reclusters > 0);
+        assert_eq!(res2.ledger.maml_adaptations, 0);
+    });
+}
+
+#[test]
+fn k_sweep_is_stable() {
+    with_runtime(|m, rt| {
+        for k in [2usize, 3, 5, 8] {
+            let mut cfg = ExperimentConfig::tiny();
+            cfg.clusters = k;
+            cfg.rounds = 4;
+            cfg.target_accuracy = None;
+            let mut trial = Trial::new(cfg, m, rt).unwrap();
+            let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+            assert!(res.ledger.records.len() >= 4, "K={k}: missing records");
+            assert!(res.ledger.time_s.is_finite() && res.ledger.energy_j.is_finite());
+        }
+    });
+}
+
+#[test]
+fn non_iid_sharding_still_learns() {
+    with_runtime(|m, rt| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.dirichlet_alpha = 0.1; // heavy label skew
+        cfg.rounds = 12;
+        cfg.target_accuracy = None;
+        let mut trial = Trial::new(cfg, m, rt).unwrap();
+        let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+        let first = res.ledger.records.first().unwrap().accuracy;
+        assert!(
+            res.final_accuracy > first + 0.1,
+            "non-IID: {first} -> {}",
+            res.final_accuracy
+        );
+    });
+}

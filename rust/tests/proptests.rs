@@ -1,0 +1,202 @@
+//! Property-based tests on coordinator invariants (quickprop harness —
+//! the offline image ships no proptest crate; see util::quickprop).
+
+use fedhc::clustering::kmeans::KMeans;
+use fedhc::clustering::recluster::{align_labels, changed_members, DropoutStats, ReclusterPolicy};
+use fedhc::data::synth::synth_tiny;
+use fedhc::data::{partition_dirichlet, partition_iid};
+use fedhc::fl::aggregate::{fedavg_weights, quality_weights};
+use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::util::quickprop::{property, Gen};
+use fedhc::util::Rng;
+
+#[test]
+fn prop_kmeans_partitions_all_points() {
+    property("kmeans partitions", 40, |g: &mut Gen| {
+        let n = g.usize_in(10, 120);
+        let k = g.usize_in(1, 6).min(n);
+        let pts: Vec<[f64; 3]> = (0..n)
+            .map(|_| {
+                [
+                    g.f64_in(-1000.0, 1000.0),
+                    g.f64_in(-1000.0, 1000.0),
+                    g.f64_in(-1000.0, 1000.0),
+                ]
+            })
+            .collect();
+        let res = KMeans::new(k).run(&pts, g.rng());
+        assert_eq!(res.assignment.len(), n);
+        assert!(res.assignment.iter().all(|&a| a < k));
+        assert_eq!(res.sizes().iter().sum::<usize>(), n);
+        assert!(res.inertia >= 0.0);
+    });
+}
+
+#[test]
+fn prop_label_alignment_never_increases_churn() {
+    property("alignment reduces churn", 60, |g: &mut Gen| {
+        let n = g.usize_in(4, 80);
+        let k = g.usize_in(2, 5);
+        let old: Vec<usize> = (0..n).map(|_| g.rng().below_usize(k)).collect();
+        let new: Vec<usize> = (0..n).map(|_| g.rng().below_usize(k)).collect();
+        let aligned = align_labels(&old, &new, k);
+        let raw = changed_members(&old, &new).len();
+        let after = changed_members(&old, &aligned).len();
+        assert!(
+            after <= raw,
+            "alignment increased churn {raw} -> {after} (n={n}, k={k})"
+        );
+        // alignment is a relabeling: cluster contents are preserved
+        for c in 0..k {
+            let members_new: Vec<usize> =
+                (0..n).filter(|&i| new[i] == c).collect();
+            if members_new.is_empty() {
+                continue;
+            }
+            let mapped = aligned[members_new[0]];
+            assert!(
+                members_new.iter().all(|&i| aligned[i] == mapped),
+                "relabeling split a cluster"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_recluster_trigger_monotone_in_dropouts() {
+    property("trigger monotone", 60, |g: &mut Gen| {
+        let members = g.usize_in(1, 50);
+        let dropped = g.rng().below_usize(members + 1);
+        let z = g.f64_in(0.0, 1.0);
+        let policy = ReclusterPolicy::new(z);
+        let s = DropoutStats { members, dropped };
+        if policy.should_recluster(&[s]) {
+            // adding more dropouts keeps it triggered
+            let worse = DropoutStats {
+                members,
+                dropped: members.min(dropped + 1),
+            };
+            assert!(policy.should_recluster(&[worse]));
+        }
+    });
+}
+
+#[test]
+fn prop_partitions_preserve_every_sample() {
+    property("partitions are exact covers", 25, |g: &mut Gen| {
+        let n = g.usize_in(50, 400);
+        let clients = g.usize_in(2, 12).min(n / 4).max(1);
+        let data = synth_tiny(n, g.rng());
+        let shards = if g.bool() {
+            partition_iid(&data, clients, g.rng())
+        } else {
+            partition_dirichlet(&data, clients, g.f64_in(0.05, 5.0), 1, g.rng())
+        };
+        assert_eq!(shards.len(), clients);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, n, "partition lost/duplicated samples");
+        // label mass is conserved
+        let mut global = vec![0usize; 10];
+        for &l in &data.labels {
+            global[l as usize] += 1;
+        }
+        let mut shard_sum = vec![0usize; 10];
+        for s in &shards {
+            for &l in &s.labels {
+                shard_sum[l as usize] += 1;
+            }
+        }
+        assert_eq!(global, shard_sum);
+    });
+}
+
+#[test]
+fn prop_weight_schemes_are_distributions_and_ordered() {
+    property("weights well-formed", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 30);
+        let sizes: Vec<usize> = (0..n).map(|_| g.usize_in(1, 1000)).collect();
+        let w = fedavg_weights(&sizes);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        // bigger shard → no smaller weight
+        for i in 0..n {
+            for j in 0..n {
+                if sizes[i] > sizes[j] {
+                    assert!(w[i] >= w[j] - 1e-6);
+                }
+            }
+        }
+        let losses: Vec<f32> = (0..n).map(|_| g.f64_in(0.01, 10.0) as f32).collect();
+        let q = quality_weights(&losses);
+        assert!((q.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        for i in 0..n {
+            for j in 0..n {
+                if losses[i] < losses[j] {
+                    assert!(q[i] >= q[j] - 1e-6, "lower loss must not get less weight");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_constellation_radius_invariant_under_time() {
+    property("orbit radius conserved", 30, |g: &mut Gen| {
+        let planes = g.usize_in(2, 10);
+        let spp = g.usize_in(2, 10);
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(planes, spp));
+        let t = g.f64_in(0.0, 100_000.0);
+        let r0 = c.elements[0].semi_major_axis;
+        for p in c.snapshot(t).positions {
+            assert!((p.norm() - r0).abs() < 1.0, "radius drifted at t={t}");
+        }
+    });
+}
+
+#[test]
+fn prop_dirichlet_floor_respected() {
+    property("dirichlet floor", 25, |g: &mut Gen| {
+        let clients = g.usize_in(2, 10);
+        let floor = g.usize_in(1, 8);
+        let n = clients * floor * 4;
+        let data = synth_tiny(n, g.rng());
+        let shards = partition_dirichlet(&data, clients, 0.1, floor, g.rng());
+        for (i, s) in shards.iter().enumerate() {
+            assert!(
+                s.len() >= floor,
+                "client {i} got {} < floor {floor}",
+                s.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_quality_weights_match_eq12_closed_form() {
+    // Eq. 12 is p_i = (1/L_i) / Σ(1/L_j) — check against direct computation
+    property("eq12 closed form", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 20);
+        let losses: Vec<f32> = (0..n).map(|_| g.f64_in(0.05, 8.0) as f32).collect();
+        let w = quality_weights(&losses);
+        let inv_sum: f64 = losses.iter().map(|&l| 1.0 / l as f64).sum();
+        for (i, &l) in losses.iter().enumerate() {
+            let want = (1.0 / l as f64) / inv_sum;
+            assert!(
+                (w[i] as f64 - want).abs() < 1e-5,
+                "w[{i}]={} want {want}",
+                w[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_rng_streams_do_not_collide() {
+    property("fork independence", 20, |g: &mut Gen| {
+        let mut root = Rng::new(g.u64());
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let collisions = (0..128).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(collisions < 3);
+    });
+}
