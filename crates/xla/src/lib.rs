@@ -1,0 +1,206 @@
+//! API-shape stub of the `xla` PJRT bindings.
+//!
+//! The offline build image carries no XLA shared library, so this crate
+//! provides the exact API surface `fedhc::runtime::executor` compiles
+//! against — clients, HLO protos, literals, executables — with honest
+//! runtime behaviour: literal plumbing works, but compiling or executing
+//! an HLO module returns a clear error telling the operator to either
+//! install the real XLA-backed crate (swap this path dependency) or use
+//! the built-in pure-Rust host backend, which is the default whenever no
+//! AOT artifacts are present.
+//!
+//! Everything here is plain data and therefore `Send + Sync`, which the
+//! parallel round engine relies on.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so it converts into
+/// `anyhow::Error` via `?`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real XLA/PJRT runtime; this build vendors an API stub. \
+         Use the built-in host backend (the default without artifacts) or point the \
+         workspace `xla` path dependency at an XLA-backed crate."
+    )))
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU client. Succeeds so that diagnostics (platform, device count)
+    /// work; compilation is where the stub reports itself.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an HLO computation")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file. I/O works; only execution is stubbed.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("cannot read {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Loaded (compiled) executable. Never actually constructed by the stub,
+/// but the type must exist for the executor to compile.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a compiled module")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("transferring a device buffer")
+    }
+}
+
+/// Element types a literal can be read back as.
+pub trait NativeType: Sized {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Host literal: flat f32 storage plus a shape.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape without changing element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        if expect < 0 || expect as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Shape of this literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (they only
+    /// ever come from [`Literal::vec1`]), so this reports unavailability.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("decomposing a result tuple")
+    }
+
+    /// Read the flat contents back.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_stub_platform() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        assert_eq!(c.device_count(), 1);
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            _text: String::new(),
+        });
+        assert!(c.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn types_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRtClient>();
+        assert_send_sync::<PjRtLoadedExecutable>();
+        assert_send_sync::<Literal>();
+    }
+}

@@ -34,7 +34,7 @@ fn main() -> Result<()> {
     cfg.lr = 0.1;
     cfg.target_accuracy = None; // run the full budget, log the whole curve
 
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let manifest = Manifest::load_or_host(&Manifest::default_dir())?;
     let rt = ModelRuntime::load(&manifest, cfg.variant())?;
     println!(
         "e2e: LeNet-5 (P={}) × {} clients × {} rounds, K={}, platform={}",

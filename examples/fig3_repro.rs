@@ -18,7 +18,7 @@ use std::path::Path;
 const METHODS: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
 
 fn run_series(cfg: ExperimentConfig, method: &'static str) -> anyhow::Result<Ledger> {
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let manifest = Manifest::load_or_host(&Manifest::default_dir())?;
     let rt = ModelRuntime::load(&manifest, cfg.variant())?;
     let mut trial = Trial::new(cfg, &manifest, &rt)?;
     let res = match method {

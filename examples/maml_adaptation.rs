@@ -19,7 +19,7 @@ fn main() -> Result<()> {
     cfg.recluster_threshold = 0.15;
     cfg.target_accuracy = None;
 
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let manifest = Manifest::load_or_host(&Manifest::default_dir())?;
     let rt = ModelRuntime::load(&manifest, cfg.variant())?;
 
     println!(

@@ -1,10 +1,12 @@
 //! Quickstart: run FedHC end-to-end on the fast tiny preset.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release -p fedhc --example quickstart
 //!
 //! Builds a 24-satellite constellation, clusters it with the paper's
 //! satellite-clustered PS selection, trains hierarchically with MAML-driven
 //! re-clustering, and prints the per-round accuracy/time/energy series.
+//! Uses the AOT/PJRT artifacts when present and the built-in pure-Rust
+//! host backend otherwise, so it works out of the box.
 
 use anyhow::Result;
 use fedhc::config::ExperimentConfig;
@@ -13,7 +15,7 @@ use fedhc::runtime::{Manifest, ModelRuntime};
 
 fn main() -> Result<()> {
     let cfg = ExperimentConfig::tiny();
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let manifest = Manifest::load_or_host(&Manifest::default_dir())?;
     let rt = ModelRuntime::load(&manifest, cfg.variant())?;
     println!(
         "quickstart: {} clients, K={}, {} rounds, platform={}",

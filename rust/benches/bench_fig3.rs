@@ -14,7 +14,7 @@ use fedhc::runtime::{Manifest, ModelRuntime};
 const METHODS: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
 
 fn series(cfg: ExperimentConfig, method: &'static str) -> Ledger {
-    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
+    let manifest = Manifest::load_or_host(&Manifest::default_dir()).unwrap();
     let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
     let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
     match method {

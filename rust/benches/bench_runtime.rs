@@ -1,11 +1,94 @@
-//! Runtime micro-bench: per-entry-point PJRT latency for each variant.
-//! The §Perf L2/L3 numbers in EXPERIMENTS.md come from here.
+//! Runtime bench: (1) the parallel round engine's threads-vs-wallclock
+//! sweep — first over a synthetic local-training-shaped load, then over
+//! the *actual* round loop on the host backend — and (2) the per-entry-
+//! point PJRT latency numbers when AOT artifacts are present (the §Perf
+//! L2/L3 numbers in EXPERIMENTS.md come from the latter).
 //!
-//!     cargo bench --bench bench_runtime
+//!     cargo bench --bench bench_runtime [-- --fast]
 
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
 use fedhc::runtime::{Manifest, ModelRuntime};
-use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::sim::engine::Engine;
+use fedhc::util::stats::{bench_loop, bench_report, Timer};
 use fedhc::util::Rng;
+
+const WORKER_SWEEP: &[usize] = &[1, 2, 4, 8];
+
+/// Scatter-gather over a CPU-bound per-client job (parameter-vector math
+/// shaped like one local round), isolating the engine's scaling from the
+/// simulator.
+fn engine_sweep_synthetic() {
+    println!("== engine scatter-gather: workers vs wall-clock (synthetic per-client load) ==");
+    let p = 44_426usize; // LeNet-5-sized flat parameter vector
+    let tasks: Vec<u64> = (0..48).collect();
+    let base: Vec<f32> = (0..p).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut baseline: Option<f64> = None;
+    for &w in WORKER_SWEEP {
+        let engine = Engine::new(w);
+        let timer = Timer::start();
+        let sums = engine.run(&tasks, |_, &seed| {
+            let mut v = base.clone();
+            let mut rng = Rng::new(seed);
+            for _ in 0..40 {
+                let a = rng.uniform_f32() - 0.5;
+                for x in v.iter_mut() {
+                    *x = *x * 0.999 + a * 0.001;
+                }
+            }
+            v.iter().map(|&x| x as f64).sum::<f64>()
+        });
+        std::hint::black_box(&sums);
+        let secs = timer.elapsed_secs();
+        let base_secs = *baseline.get_or_insert(secs);
+        println!(
+            "  workers {w:>2}: {:>9.1} ms   speedup x{:.2}",
+            secs * 1e3,
+            base_secs / secs
+        );
+    }
+}
+
+/// The real thing: `run_clustered` on the host backend, sweeping the
+/// engine worker count. Same seed → identical metrics at every width;
+/// only the wall-clock changes.
+fn engine_sweep_round_loop() {
+    println!("\n== full round loop: workers vs wall-clock (host backend, 48 clients, MNIST-geometry) ==");
+    let manifest = Manifest::host();
+    let mut baseline: Option<f64> = None;
+    let mut reference_time: Option<f64> = None;
+    for &w in WORKER_SWEEP {
+        let mut cfg = ExperimentConfig::mnist();
+        cfg.clients = 48;
+        cfg.train_samples = 48 * 128;
+        cfg.test_samples = 256;
+        cfg.rounds = 3;
+        cfg.eval_batches = 2;
+        cfg.target_accuracy = None;
+        cfg.workers = w;
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        let timer = Timer::start();
+        let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+        let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+        let secs = timer.elapsed_secs();
+        // determinism cross-check while we are here
+        match reference_time {
+            None => reference_time = Some(res.ledger.time_s),
+            Some(t) => assert_eq!(
+                t, res.ledger.time_s,
+                "worker count changed the simulated metrics!"
+            ),
+        }
+        let base_secs = *baseline.get_or_insert(secs);
+        println!(
+            "  workers {w:>2}: {:>9.1} ms wall   speedup x{:.2}   (sim time {:.0} s, acc {:.1}%)",
+            secs * 1e3,
+            base_secs / secs,
+            res.ledger.time_s,
+            res.final_accuracy * 100.0
+        );
+    }
+}
 
 fn bench_variant(manifest: &Manifest, name: &str, iters: usize) {
     let rt = match ModelRuntime::load(manifest, name) {
@@ -63,8 +146,17 @@ fn bench_variant(manifest: &Manifest, name: &str, iters: usize) {
 }
 
 fn main() {
-    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts` first");
+    engine_sweep_synthetic();
+    engine_sweep_round_loop();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("\nno AOT artifacts under {dir:?}; skipping per-entry-point PJRT benches");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("artifacts manifest");
     let fast = std::env::args().any(|a| a == "--fast");
+    println!();
     bench_variant(&manifest, "tiny_mlp", if fast { 10 } else { 30 });
     bench_variant(&manifest, "mnist_lenet", if fast { 5 } else { 15 });
     bench_variant(&manifest, "cifar_lenet", if fast { 3 } else { 10 });

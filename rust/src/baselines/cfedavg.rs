@@ -12,12 +12,15 @@
 //! replicated across K.
 
 use crate::coordinator::fedhc::RunResult;
-use crate::coordinator::round::data_upload;
+use crate::coordinator::round::data_upload_with;
 use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
 use crate::fl::client::SatClient;
 use crate::fl::evaluate::evaluate;
 use crate::fl::local::{local_train, TrainScratch};
+use crate::sim::engine::Engine;
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
 use anyhow::Result;
 
 /// Pick the central satellite: the client nearest any ground station at
@@ -46,6 +49,7 @@ fn pick_central(trial: &Trial) -> usize {
 pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
+    let engine = Engine::new(cfg.workers);
     let central = pick_central(trial);
     let bits_per_sample = (trial.clients[0].shard.kind.sample_len() * 32 + 8) as f64;
 
@@ -75,7 +79,9 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
             .filter(|(i, _)| *i != central)
             .map(|(i, c)| (c.data_size(), positions[i]))
             .collect();
-        let (t_up, e_up) = data_upload(
+        // per-uploader link costs fanned out on the engine (order-stable)
+        let (t_up, e_up) = data_upload_with(
+            &engine,
             &trial.link,
             &trial.energy,
             &uploads,
@@ -87,7 +93,10 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
         trial.clock.advance(t_up);
 
         let out = {
-            let mut rng = trial.rng.fork(round as u64);
+            // same stateless (seed, round, sat) stream discipline as the
+            // parallel engine — deterministic whatever else draws from
+            // the trial RNG
+            let mut rng = Rng::new(stream_seed(cfg.seed, round as u64, central as u64));
             local_train(rt, &mut node, cfg.local_epochs, cfg.lr, &mut scratch, &mut rng)?
         };
         // Eq. 9 compute at the central node; one epoch is sequential over

@@ -1,6 +1,29 @@
 //! The paper's satellite-clustered parameter-server selection algorithm
 //! (§III-B, Eq. 13–15) and the re-clustering trigger (§III-A, Algorithm 1
-//! lines 14–18).
+//! lines 14–18): k-means over satellite positions, PS choice by centroid
+//! proximity with a communication tie-break, clustering-quality
+//! diagnostics, and the dropout-rate policy with label alignment across
+//! re-clustering events.
+//!
+//! The k-means entry point is pure and deterministic given a seed:
+//!
+//! ```
+//! use fedhc::clustering::KMeans;
+//! use fedhc::util::Rng;
+//!
+//! // two well-separated pairs of "satellites" (features in km)
+//! let points = vec![
+//!     [0.0, 0.0, 0.0],
+//!     [0.1, 0.0, 0.0],
+//!     [9.0, 9.0, 9.0],
+//!     [9.1, 9.0, 9.0],
+//! ];
+//! let res = KMeans::new(2).run(&points, &mut Rng::new(7));
+//! assert_eq!(res.assignment.len(), 4);
+//! assert_eq!(res.assignment[0], res.assignment[1]);
+//! assert_eq!(res.assignment[2], res.assignment[3]);
+//! assert_ne!(res.assignment[0], res.assignment[3]);
+//! ```
 
 pub mod kmeans;
 pub mod ps_select;

@@ -49,6 +49,10 @@ pub struct ExperimentConfig {
     pub eval_batches: usize,
     /// Evaluate every this many cluster rounds.
     pub eval_every: usize,
+    /// Worker threads for the parallel round engine (0 = all available
+    /// cores). Any value produces byte-identical metrics — see
+    /// [`crate::sim::engine`].
+    pub workers: usize,
     /// Master seed.
     pub seed: u64,
 }
@@ -87,6 +91,7 @@ impl ExperimentConfig {
             cpu_het: (0.5, 2.0),
             eval_batches: 0,
             eval_every: 1,
+            workers: 0,
             seed: 42,
         }
     }
@@ -114,6 +119,7 @@ impl ExperimentConfig {
             cpu_het: (0.5, 2.0),
             eval_batches: 8,
             eval_every: 1,
+            workers: 0,
             seed: 42,
         }
     }
@@ -177,6 +183,7 @@ impl ExperimentConfig {
         self.outage_prob = args.get_f64("outage", self.outage_prob);
         self.eval_batches = args.get_usize("eval-batches", self.eval_batches);
         self.eval_every = args.get_usize("eval-every", self.eval_every);
+        self.workers = args.get_usize("workers", self.workers);
         self.seed = args.get_u64("seed", self.seed);
         self.validate();
         self
@@ -232,6 +239,17 @@ mod tests {
         assert_eq!(c.rounds, 7);
         assert!((c.lr - 0.5).abs() < 1e-6);
         assert!(c.target_accuracy.is_none());
+    }
+
+    #[test]
+    fn workers_override_applies() {
+        let args = Args::parse(
+            ["--workers", "6"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args);
+        assert_eq!(c.workers, 6);
+        assert_eq!(ExperimentConfig::tiny().workers, 0, "default is auto");
     }
 
     #[test]

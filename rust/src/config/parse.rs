@@ -47,6 +47,22 @@ pub fn merge_file_into_args(args: &mut Args, text: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Serialise a flat key→value map back to the config grammar (one sorted
+/// `key = value` line each; dotted keys stay inline rather than becoming
+/// sections). Values must not contain `#` or newlines — the comment
+/// stripper would eat them on re-parse. Round-trips through [`parse_kv`]:
+/// used to dump an effective configuration next to recorded results.
+pub fn format_kv(kv: &BTreeMap<String, String>) -> String {
+    let mut out = String::new();
+    for (k, v) in kv {
+        out.push_str(k);
+        out.push_str(" = ");
+        out.push_str(v);
+        out.push('\n');
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +86,46 @@ mod tests {
     fn rejects_bad_lines() {
         assert!(parse_kv("novalue").is_err());
         assert!(parse_kv("x =").is_err());
+        assert!(parse_kv("= 3").is_err(), "empty key must be rejected");
+        assert!(parse_kv("[unclosed\nk = 1").is_err(), "bad section header");
+        // errors carry the offending line number
+        let err = parse_kv("k = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn unknown_file_keys_leave_config_defaults_untouched() {
+        // a config file with unrelated keys merges into args but does not
+        // perturb any ExperimentConfig default
+        let mut args = Args::parse(std::iter::empty::<String>(), &[]);
+        merge_file_into_args(&mut args, "custom_note = hello").unwrap();
+        let cfg = crate::config::ExperimentConfig::tiny().with_args(&args);
+        let def = crate::config::ExperimentConfig::tiny();
+        assert_eq!(cfg.clusters, def.clusters);
+        assert_eq!(cfg.rounds, def.rounds);
+        assert_eq!(cfg.seed, def.seed);
+        assert_eq!(cfg.workers, def.workers);
+    }
+
+    #[test]
+    fn file_overrides_reach_the_config() {
+        let mut args = Args::parse(std::iter::empty::<String>(), &[]);
+        merge_file_into_args(&mut args, "k = 5\nrounds = 9\nworkers = 2").unwrap();
+        let cfg = crate::config::ExperimentConfig::tiny().with_args(&args);
+        assert_eq!(cfg.clusters, 5);
+        assert_eq!(cfg.rounds, 9);
+        assert_eq!(cfg.workers, 2);
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        let text = "alpha = 0.001\nk = 4\nlr = 0.01\nmaml.beta = 0.002\n";
+        let kv = parse_kv(text).unwrap();
+        let dumped = format_kv(&kv);
+        let reparsed = parse_kv(&dumped).unwrap();
+        assert_eq!(kv, reparsed, "format_kv did not round-trip");
+        // formatting is canonical: dumping again is a fixed point
+        assert_eq!(dumped, format_kv(&reparsed));
     }
 
     #[test]

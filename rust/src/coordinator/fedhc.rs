@@ -15,7 +15,7 @@
 //! training) and lives in `baselines::cfedavg`.
 
 use super::ground;
-use super::round::{cluster_round, ground_exchange, MemberWork};
+use super::round::{cluster_round_with, ground_exchange, MemberWork};
 use super::trial::Trial;
 use crate::clustering::kmeans::KMeans;
 use crate::clustering::ps_select::select_parameter_servers;
@@ -23,8 +23,11 @@ use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
 use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights};
 use crate::fl::evaluate::evaluate;
-use crate::fl::local::{local_train, TrainScratch};
+use crate::fl::local::{train_params, TrainScratch};
 use crate::info;
+use crate::sim::engine::Engine;
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
 use anyhow::Result;
 
 /// Clustering policy.
@@ -293,14 +296,31 @@ fn group(assignment: &[usize], k: usize) -> Vec<Vec<usize>> {
     out
 }
 
+/// Gathered result of one member's scattered local-training job.
+struct MemberOutcome {
+    member: usize,
+    params: Vec<f32>,
+    mean_loss: f32,
+    samples: usize,
+}
+
 /// Run the clustered FL algorithm (FedHC / H-BASE / FedCE) to completion.
+///
+/// The cluster stage is executed by the parallel round engine
+/// ([`crate::sim::engine::Engine`], worker count from
+/// `ExperimentConfig::workers`): local training for every active member of
+/// every cluster is scattered across worker threads, then the results are
+/// gathered and reduced **in member order** — weighted aggregation at each
+/// PS, then the Eq. 7/8–10 time/energy accounting. Each member's RNG
+/// stream is derived statelessly from `(seed, round, sat_id)`, so the
+/// metrics are byte-identical for any worker count.
 pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult> {
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
     let k = cfg.clusters;
     let model_bits = rt.spec.param_count as f64 * 32.0;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold);
-    let mut scratch = TrainScratch::new(rt);
+    let engine = Engine::new(cfg.workers);
 
     // Algorithm 1 line 1: satellite-clustered PS selection
     let global0 = trial.clients[0].params.clone();
@@ -322,34 +342,75 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
         let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
 
         // ---- satellite cluster aggregation stage (lines 6–13) ----
-        let mut stage_time = 0.0f64;
+        // Scatter: every active member of every cluster local-trains from
+        // its cluster model, fanned out across the engine's workers.
         let clusters = topo.clusters(k);
+        let mut jobs: Vec<(usize, usize)> = Vec::new(); // (member, cluster)
+        let mut active_counts = vec![0usize; k];
         for (c, members) in clusters.iter().enumerate() {
-            let active: Vec<usize> = members
-                .iter()
-                .copied()
-                .filter(|m| !outage.contains(m))
-                .collect();
-            if active.is_empty() {
+            for &m in members {
+                if !outage.contains(&m) {
+                    jobs.push((m, c));
+                    active_counts[c] += 1;
+                }
+            }
+        }
+        let round_idx = round as u64;
+        let clients = &trial.clients;
+        let models = &topo.models;
+        let scattered: Vec<Result<MemberOutcome>> = engine.run_with(
+            &jobs,
+            || TrainScratch::new(rt),
+            |scratch, _i, &(m, c)| {
+                let client = &clients[m];
+                let mut rng = Rng::new(stream_seed(cfg.seed, round_idx, client.sat as u64));
+                let (params, out) = train_params(
+                    rt,
+                    &client.shard,
+                    models[c].clone(),
+                    cfg.local_epochs,
+                    cfg.lr,
+                    scratch,
+                    &mut rng,
+                )?;
+                Ok(MemberOutcome {
+                    member: m,
+                    params,
+                    mean_loss: out.mean_loss,
+                    samples: out.samples,
+                })
+            },
+        );
+        let mut results = Vec::with_capacity(scattered.len());
+        for r in scattered {
+            results.push(r?);
+        }
+
+        // Gather: apply member results and reduce per cluster, in member
+        // order (deterministic regardless of the scatter schedule).
+        let mut stage_time = 0.0f64;
+        let mut offset = 0usize;
+        for c in 0..k {
+            let n_active = active_counts[c];
+            if n_active == 0 {
                 continue;
             }
-            // broadcast cluster model, local-train each active member
-            let mut work = Vec::with_capacity(active.len());
-            let mut losses = Vec::with_capacity(active.len());
-            let mut sizes = Vec::with_capacity(active.len());
-            for &m in &active {
-                trial.clients[m].params.clone_from(&topo.models[c]);
-                let out = {
-                    let client = &mut trial.clients[m];
-                    let mut rng = trial.rng.fork(m as u64);
-                    local_train(rt, client, cfg.local_epochs, cfg.lr, &mut scratch, &mut rng)?
-                };
+            let batch = &mut results[offset..offset + n_active];
+            offset += n_active;
+            let mut work = Vec::with_capacity(n_active);
+            let mut losses = Vec::with_capacity(n_active);
+            let mut sizes = Vec::with_capacity(n_active);
+            for r in batch.iter_mut() {
+                let m = r.member;
+                trial.clients[m].params = std::mem::take(&mut r.params);
+                trial.clients[m].last_loss = r.mean_loss;
+                trial.clients[m].rounds_trained += 1;
                 work.push(MemberWork {
-                    samples: out.samples,
+                    samples: r.samples,
                     cpu_hz: trial.clients[m].cpu_hz,
                     pos: positions[m],
                 });
-                losses.push(out.mean_loss);
+                losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
             }
             // line 13: aggregate at the PS
@@ -357,13 +418,23 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
                 WeightPolicy::Quality => quality_weights(&losses),
                 WeightPolicy::FedAvg => fedavg_weights(&sizes),
             };
-            let rows: Vec<&[f32]> = active.iter().map(|&m| trial.clients[m].params.as_slice()).collect();
+            let rows: Vec<&[f32]> = batch
+                .iter()
+                .map(|r| trial.clients[r.member].params.as_slice())
+                .collect();
             let mut new_model = Vec::new();
             aggregate(rt, &rows, &weights, &mut new_model)?;
             topo.models[c] = new_model;
 
             // Eq. 7 inner max + Eq. 8/9 energy for this cluster
-            let (t, e) = cluster_round(&trial.link, &trial.energy, &work, positions[topo.ps[c]], model_bits);
+            let (t, e) = cluster_round_with(
+                &engine,
+                &trial.link,
+                &trial.energy,
+                &work,
+                positions[topo.ps[c]],
+                model_bits,
+            );
             stage_time = stage_time.max(t); // clusters run in parallel
             trial.ledger.add_energy(e);
         }

@@ -2,6 +2,29 @@
 //! with satellite-clustered PS selection and meta-learning-driven
 //! re-clustering, plus the shared trial context and round accounting that
 //! the baselines reuse for apples-to-apples comparison.
+//!
+//! The cluster stage runs on the parallel round engine
+//! ([`crate::sim::engine::Engine`]): local training fans out across worker
+//! threads and reduces deterministically, so `--workers N` changes only
+//! wall-clock, never the simulated metrics.
+//!
+//! A full (tiny) run end to end — the built-in host backend means no AOT
+//! artifacts are needed:
+//!
+//! ```
+//! use fedhc::config::ExperimentConfig;
+//! use fedhc::coordinator::{run_clustered, Strategy, Trial};
+//! use fedhc::runtime::{Manifest, ModelRuntime};
+//!
+//! let mut cfg = ExperimentConfig::tiny();
+//! cfg.rounds = 2;
+//! let manifest = Manifest::host(); // pure-Rust backend, no artifacts
+//! let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+//! let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+//! let result = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+//! assert_eq!(result.ledger.records.len(), 2);
+//! assert!(result.ledger.time_s > 0.0);
+//! ```
 
 pub mod fedhc;
 pub mod ground;

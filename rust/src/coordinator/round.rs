@@ -13,6 +13,7 @@
 
 use crate::network::{EnergyModel, LinkModel};
 use crate::orbit::Vec3;
+use crate::sim::engine::Engine;
 
 /// Per-member inputs to the cluster-stage accounting.
 #[derive(Clone, Copy, Debug)]
@@ -25,6 +26,45 @@ pub struct MemberWork {
     pub pos: Vec3,
 }
 
+/// One member's contribution to the cluster round: `(t_cmp + t_com,
+/// Eq. 8 upload + Eq. 9 compute + Eq. 8 PS broadcast back, distance to
+/// the PS)`. Pure per-member math — the scatter job of the engine-mapped
+/// accounting.
+fn member_cost(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    m: &MemberWork,
+    ps_pos: Vec3,
+    model_bits: f64,
+) -> (f64, f64, f64) {
+    let d = m.pos.dist(ps_pos).max(1.0);
+    let t = link.compute_time(m.samples, m.cpu_hz) + link.comm_time(model_bits, d);
+    let e = energy.tx_energy(model_bits, d)
+        + energy.compute_energy(m.samples, m.cpu_hz)
+        + energy.tx_energy(model_bits, d);
+    (t, e, d)
+}
+
+/// Deterministic reduction of per-member costs, in member order: the
+/// synchronous round takes the max member time plus one PS broadcast to
+/// the farthest member; energy is additive.
+fn reduce_costs(link: &LinkModel, costs: &[(f64, f64, f64)], model_bits: f64) -> (f64, f64) {
+    let mut t_max = 0.0f64;
+    let mut e_total = 0.0f64;
+    let mut far: Option<f64> = None;
+    for &(t, e, d) in costs {
+        t_max = t_max.max(t);
+        e_total += e;
+        far = Some(far.map_or(d, |a: f64| a.max(d)));
+    }
+    // broadcast time: the PS transmit to the farthest member overlaps the
+    // next round's compute only partially; count the slowest broadcast once
+    if let Some(d) = far {
+        t_max += link.comm_time(model_bits, d);
+    }
+    (t_max, e_total)
+}
+
 /// Time + energy of one cluster's intra-cluster round (Eq. 7 inner term
 /// for this cluster, Eq. 8+9 contributions).
 pub fn cluster_round(
@@ -34,29 +74,38 @@ pub fn cluster_round(
     ps_pos: Vec3,
     model_bits: f64,
 ) -> (f64, f64) {
-    let mut t_max = 0.0f64;
-    let mut e_total = 0.0f64;
-    for m in members {
-        let d = m.pos.dist(ps_pos).max(1.0);
-        let t_cmp = link.compute_time(m.samples, m.cpu_hz);
-        let t_com = link.comm_time(model_bits, d);
-        t_max = t_max.max(t_cmp + t_com);
-        // Eq. 8 upload + Eq. 9 compute
-        e_total += energy.tx_energy(model_bits, d);
-        e_total += energy.compute_energy(m.samples, m.cpu_hz);
-        // PS broadcast of the aggregated model back to this member
-        e_total += energy.tx_energy(model_bits, d);
-    }
-    // broadcast time: the PS transmit to the farthest member overlaps the
-    // next round's compute only partially; count the slowest broadcast once
-    if let Some(far) = members
+    let costs: Vec<(f64, f64, f64)> = members
         .iter()
-        .map(|m| m.pos.dist(ps_pos).max(1.0))
-        .fold(None::<f64>, |acc, d| Some(acc.map_or(d, |a: f64| a.max(d))))
-    {
-        t_max += link.comm_time(model_bits, far);
+        .map(|m| member_cost(link, energy, m, ps_pos, model_bits))
+        .collect();
+    reduce_costs(link, &costs, model_bits)
+}
+
+/// Below this membership the per-member cost math (a handful of flops) is
+/// folded inline: a thread spawn costs orders of magnitude more than the
+/// whole map, and the engine-mapped and sequential paths are numerically
+/// identical by construction (see the
+/// `engine_mapped_costs_match_sequential_exactly` test).
+const ENGINE_MAP_MIN_MEMBERS: usize = 1024;
+
+/// [`cluster_round`] with the per-member map fanned out on the engine for
+/// production-scale memberships (small clusters fold inline — same
+/// numerics, no thread-spawn overhead in the hot round loop). Identical
+/// results for any worker count: the map is pure per-member math and the
+/// reduction always folds in member order.
+pub fn cluster_round_with(
+    engine: &Engine,
+    link: &LinkModel,
+    energy: &EnergyModel,
+    members: &[MemberWork],
+    ps_pos: Vec3,
+    model_bits: f64,
+) -> (f64, f64) {
+    if members.len() < ENGINE_MAP_MIN_MEMBERS {
+        return cluster_round(link, energy, members, ps_pos, model_bits);
     }
-    (t_max, e_total)
+    let costs = engine.run(members, |_, m| member_cost(link, energy, m, ps_pos, model_bits));
+    reduce_costs(link, &costs, model_bits)
 }
 
 /// Time + energy of the ground-station stage for one PS link: model up to
@@ -76,6 +125,32 @@ pub fn ground_exchange(
     (t, e)
 }
 
+/// One uploader's contribution to the C-FedAvg collection stage.
+fn upload_cost(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    samples: usize,
+    pos: Vec3,
+    bits_per_sample: f64,
+    central_pos: Vec3,
+) -> (f64, f64) {
+    let d = pos.dist(central_pos).max(1.0);
+    let bits = samples as f64 * bits_per_sample;
+    (link.comm_time(bits, d), energy.tx_energy(bits, d))
+}
+
+/// Fold per-uploader costs: stage time is the slowest upload, energy is
+/// additive. Always folds in member order (deterministic).
+fn reduce_upload_costs(costs: &[(f64, f64)]) -> (f64, f64) {
+    let mut t_max = 0.0f64;
+    let mut e = 0.0f64;
+    for &(t, e_i) in costs {
+        t_max = t_max.max(t);
+        e += e_i;
+    }
+    (t_max, e)
+}
+
 /// Raw-data upload for the C-FedAvg baseline: every client ships its shard
 /// to the central node once (bits = samples × bits_per_sample).
 pub fn data_upload(
@@ -85,15 +160,31 @@ pub fn data_upload(
     bits_per_sample: f64,
     central_pos: Vec3,
 ) -> (f64, f64) {
-    let mut t_max = 0.0f64;
-    let mut e = 0.0f64;
-    for &(samples, pos) in members {
-        let d = pos.dist(central_pos).max(1.0);
-        let bits = samples as f64 * bits_per_sample;
-        t_max = t_max.max(link.comm_time(bits, d));
-        e += energy.tx_energy(bits, d);
+    let costs: Vec<(f64, f64)> = members
+        .iter()
+        .map(|&(samples, pos)| upload_cost(link, energy, samples, pos, bits_per_sample, central_pos))
+        .collect();
+    reduce_upload_costs(&costs)
+}
+
+/// [`data_upload`] with the per-uploader map fanned out on the engine for
+/// production-scale client counts (small fleets fold inline — same
+/// numerics, no thread-spawn overhead in the round loop).
+pub fn data_upload_with(
+    engine: &Engine,
+    link: &LinkModel,
+    energy: &EnergyModel,
+    members: &[(usize, Vec3)],
+    bits_per_sample: f64,
+    central_pos: Vec3,
+) -> (f64, f64) {
+    if members.len() < ENGINE_MAP_MIN_MEMBERS {
+        return data_upload(link, energy, members, bits_per_sample, central_pos);
     }
-    (t_max, e)
+    let costs = engine.run(members, |_, &(samples, pos)| {
+        upload_cost(link, energy, samples, pos, bits_per_sample, central_pos)
+    });
+    reduce_upload_costs(&costs)
 }
 
 #[cfg(test)]
@@ -159,6 +250,40 @@ mod tests {
         // up+down takes twice one-way
         let d = ps.dist(gs);
         assert!((t - 2.0 * l.ground_comm_time(1e6, d)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_mapped_costs_match_sequential_exactly() {
+        let (l, e) = models();
+        let ps = Vec3::new(0.0, 0.0, 7.0e6);
+        let bits = 44_426.0 * 32.0;
+        // large enough to take the engine-mapped path (above the inline
+        // fold threshold), so the parallel map itself is exercised
+        let n = ENGINE_MAP_MIN_MEMBERS + 200;
+        let members: Vec<MemberWork> = (0..n)
+            .map(|i| member(320 + 16 * i, 0.5e9 + 1e7 * i as f64, 1.0e5 + 3.0e4 * i as f64))
+            .collect();
+        let seq = cluster_round(&l, &e, &members, ps, bits);
+        for workers in [1usize, 2, 4, 8] {
+            let eng = Engine::new(workers);
+            let par = cluster_round_with(&eng, &l, &e, &members, ps, bits);
+            assert_eq!(seq, par, "workers={workers}");
+        }
+        // small memberships short-circuit to the sequential fold
+        let small = &members[..9];
+        let eng = Engine::new(8);
+        assert_eq!(
+            cluster_round(&l, &e, small, ps, bits),
+            cluster_round_with(&eng, &l, &e, small, ps, bits)
+        );
+        let uploads: Vec<(usize, Vec3)> = (0..n)
+            .map(|i| (100 + i, Vec3::new(1.0e5 + 1.0e4 * i as f64, 0.0, 7.0e6)))
+            .collect();
+        let seq_up = data_upload(&l, &e, &uploads, 6e3, ps);
+        for workers in [1usize, 3, 8] {
+            let eng = Engine::new(workers);
+            assert_eq!(seq_up, data_upload_with(&eng, &l, &e, &uploads, 6e3, ps));
+        }
     }
 
     #[test]

@@ -47,20 +47,26 @@ impl TrainScratch {
     }
 }
 
-/// Train `client` in place for `epochs` local epochs at learning rate `lr`.
-/// `rng` shuffles the batch order per epoch.
-pub fn local_train(
+/// Train `params` on `shard` for `epochs` local epochs at learning rate
+/// `lr`, returning the updated parameters and the round outcome. `rng`
+/// shuffles the batch order per epoch.
+///
+/// This is the pure scatter job of the parallel round engine: it touches
+/// no client state, so the engine can fan it out across worker threads
+/// while the coordinator applies the results in member order afterwards.
+pub fn train_params(
     rt: &ModelRuntime,
-    client: &mut SatClient,
+    shard: &crate::data::Dataset,
+    mut params: Vec<f32>,
     epochs: usize,
     lr: f32,
     scratch: &mut TrainScratch,
     rng: &mut Rng,
-) -> Result<LocalOutcome> {
+) -> Result<(Vec<f32>, LocalOutcome)> {
     let b = rt.spec.batch;
     let d = rt.spec.input_dim();
     let s = rt.spec.chunk_steps;
-    let n_batches = client.shard.len().div_ceil(b).max(1);
+    let n_batches = shard.len().div_ceil(b).max(1);
     let mut loss_sum = 0.0f64;
     let mut loss_n = 0usize;
     let mut steps = 0usize;
@@ -82,10 +88,10 @@ pub fn local_train(
                         &mut scratch.xs[slot * b * d..(slot + 1) * b * d],
                         &mut scratch.ys[slot * b..(slot + 1) * b],
                     );
-                    client.shard.fill_batch(bi, b, xs_part, ys_part);
+                    shard.fill_batch(bi, b, xs_part, ys_part);
                 }
-                let (p, loss) = rt.train_chunk(&client.params, &scratch.xs, &scratch.ys, lr)?;
-                client.params = p;
+                let (p, loss) = rt.train_chunk(&params, &scratch.xs, &scratch.ys, lr)?;
+                params = p;
                 loss_sum += loss as f64;
                 loss_n += 1;
                 steps += s;
@@ -93,9 +99,9 @@ pub fn local_train(
             } else {
                 let (xs_part, ys_part) =
                     (&mut scratch.xs[..b * d], &mut scratch.ys[..b]);
-                client.shard.fill_batch(batch_ids[i], b, xs_part, ys_part);
-                let (p, loss) = rt.train_step(&client.params, xs_part, ys_part, lr)?;
-                client.params = p;
+                shard.fill_batch(batch_ids[i], b, xs_part, ys_part);
+                let (p, loss) = rt.train_step(&params, xs_part, ys_part, lr)?;
+                params = p;
                 loss_sum += loss as f64;
                 loss_n += 1;
                 steps += 1;
@@ -109,13 +115,34 @@ pub fn local_train(
     } else {
         (loss_sum / loss_n as f64) as f32
     };
-    client.last_loss = mean_loss;
+    Ok((
+        params,
+        LocalOutcome {
+            mean_loss,
+            samples: epochs * n_batches * b,
+            steps,
+        },
+    ))
+}
+
+/// Train `client` in place for `epochs` local epochs at learning rate `lr`
+/// and update its bookkeeping (`last_loss`, `rounds_trained`). Sequential
+/// convenience wrapper over [`train_params`] used by the centralised
+/// baseline and tests.
+pub fn local_train(
+    rt: &ModelRuntime,
+    client: &mut SatClient,
+    epochs: usize,
+    lr: f32,
+    scratch: &mut TrainScratch,
+    rng: &mut Rng,
+) -> Result<LocalOutcome> {
+    let params = std::mem::take(&mut client.params);
+    let (params, out) = train_params(rt, &client.shard, params, epochs, lr, scratch, rng)?;
+    client.params = params;
+    client.last_loss = out.mean_loss;
     client.rounds_trained += 1;
-    Ok(LocalOutcome {
-        mean_loss,
-        samples: epochs * n_batches * b,
-        steps,
-    })
+    Ok(out)
 }
 
 #[cfg(test)]

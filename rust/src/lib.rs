@@ -10,8 +10,10 @@
 //!   hierarchy, meta-learning-driven re-clustering, and the time/energy
 //!   accounting of the paper's evaluation. Plus every substrate the paper
 //!   depends on: orbital mechanics, link models, k-means clustering,
-//!   dataset synthesis/partitioning, a discrete-event simulator, and the
-//!   three comparison baselines (C-FedAvg, H-BASE, FedCE).
+//!   dataset synthesis/partitioning, a discrete-event simulator, the
+//!   deterministic parallel round engine (`sim::engine`) that fans local
+//!   training out across CPU cores, and the three comparison baselines
+//!   (C-FedAvg, H-BASE, FedCE).
 //! * **Layer 2 (python/compile)** — LeNet/MLP forward+backward, MAML
 //!   inner/outer steps, and weighted aggregation written in JAX and
 //!   AOT-lowered to HLO text once at build time (`make artifacts`).
@@ -20,7 +22,11 @@
 //!   SGD update), validated against pure-jnp oracles.
 //!
 //! Python never runs on the request path: the Rust binary loads the HLO
-//! artifacts through PJRT (`runtime`) and drives everything itself.
+//! artifacts through PJRT (`runtime`) and drives everything itself. When
+//! no artifacts are present the runtime transparently falls back to a
+//! pure-Rust host backend (`runtime::host_model`) with the same entry
+//! points, so the whole stack — binary, examples, benches, tests — runs
+//! on images without an XLA toolchain.
 
 pub mod baselines;
 pub mod clustering;

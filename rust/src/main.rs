@@ -73,8 +73,15 @@ COMMON OPTIONS
   --k N --clients N --rounds N --epochs N --lr F --seed N
   --target F | --no-target       convergence target accuracy
   --ground-every N --z F --alpha F --beta F
+  --workers N                    round-engine worker threads (0 = all cores;
+                                 any value gives identical metrics)
   --config FILE                  key=value config file (CLI wins)
   --out DIR                      write CSV/JSON series (default results/)
+
+BACKENDS
+  With AOT artifacts present (artifacts/manifest.json, from
+  python/compile/aot.py) models execute through PJRT; without them the
+  built-in pure-Rust host backend runs the same entry points.
 "
     );
 }
@@ -87,7 +94,8 @@ fn config_from(args: &Args) -> ExperimentConfig {
 }
 
 fn load_runtime(cfg: &ExperimentConfig) -> Result<(Manifest, ModelRuntime)> {
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    // AOT artifacts when present, pure-Rust host backend otherwise
+    let manifest = Manifest::load_or_host(&Manifest::default_dir())?;
     let rt = ModelRuntime::load(&manifest, cfg.variant())?;
     Ok((manifest, rt))
 }
@@ -204,22 +212,21 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect() -> Result<()> {
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let manifest = Manifest::load_or_host(&Manifest::default_dir())?;
     println!("artifacts: {}", manifest.dir.display());
     for (name, v) in &manifest.variants {
         println!(
             "  {name}: P={} batch={} chunk={} agg_slots={} input={:?}",
             v.param_count, v.batch, v.chunk_steps, v.agg_slots, v.input_chw
         );
+        if v.entries.is_empty() {
+            println!("    (no lowered entries — pure-Rust host backend)");
+        }
         for (e, spec) in &v.entries {
             println!("    {e:<12} {}", spec.file);
         }
     }
-    let client = xla::PjRtClient::cpu()?;
-    println!(
-        "pjrt: platform={} devices={}",
-        client.platform_name(),
-        client.device_count()
-    );
+    let rt = ModelRuntime::load(&manifest, "tiny_mlp")?;
+    println!("backend platform: {}", rt.platform());
     Ok(())
 }

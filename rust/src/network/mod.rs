@@ -4,8 +4,18 @@
 //! with free-space path-loss channel gain), the computation-time model
 //! (`t_cmp = D·Q/f`), the transmission-energy model (Eq. 8), and the
 //! aggregation/computation energy model (Eq. 9). Constants default to the
-//! ranges of the papers FedHC cites for its parameters ([14] Zhu & Jiang
-//! JSAC'23, [15] Zhang et al. IoT-J'23) and are fully configurable.
+//! ranges of the papers FedHC cites for its parameters (Zhu & Jiang
+//! JSAC'23, Zhang et al. IoT-J'23) and are fully configurable.
+//!
+//! ```
+//! use fedhc::network::{LinkModel, NetworkParams};
+//!
+//! let link = LinkModel::new(NetworkParams::default());
+//! // the achievable rate falls with slant range (Eq. 6)
+//! assert!(link.rate(500e3) > link.rate(2_000e3));
+//! // and a farther hop costs more upload time (ζ / r + propagation)
+//! assert!(link.comm_time(1e6, 2_000e3) > link.comm_time(1e6, 500e3));
+//! ```
 
 pub mod energy;
 pub mod link;

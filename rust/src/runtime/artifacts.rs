@@ -150,14 +150,72 @@ impl Manifest {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Built-in manifest for the pure-Rust host backend: the same variant
+    /// names the AOT pipeline emits, but with no lowered entries (which is
+    /// what routes `ModelRuntime::load` to the host model) and
+    /// deterministic in-memory initial parameters. This is what makes the
+    /// binary, examples and benches runnable on images that carry neither
+    /// artifacts nor an XLA runtime.
+    pub fn host() -> Manifest {
+        fn host_variant(name: &str, chw: (usize, usize, usize), hidden: usize) -> VariantSpec {
+            let d = chw.0 * chw.1 * chw.2;
+            let classes = 10;
+            VariantSpec {
+                name: name.to_string(),
+                param_count: d * hidden + hidden + hidden * classes + classes,
+                batch: 16,
+                chunk_steps: 4,
+                agg_slots: 16,
+                input_chw: chw,
+                classes,
+                init_file: String::new(),
+                entries: BTreeMap::new(),
+            }
+        }
+        let mut variants = BTreeMap::new();
+        for v in [
+            host_variant("tiny_mlp", (1, 8, 8), 32),
+            host_variant("mnist_lenet", (1, 28, 28), 64),
+            host_variant("cifar_lenet", (3, 32, 32), 64),
+        ] {
+            variants.insert(v.name.clone(), v);
+        }
+        Manifest {
+            dir: PathBuf::from("(built-in host backend)"),
+            variants,
+        }
+    }
+
+    /// Load `<dir>/manifest.json` when present, otherwise fall back to the
+    /// built-in host manifest ([`Manifest::host`]).
+    pub fn load_or_host(dir: &Path) -> Result<Manifest, ManifestError> {
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::host())
+        }
+    }
+
     pub fn variant(&self, name: &str) -> Result<&VariantSpec, ManifestError> {
         self.variants
             .get(name)
             .ok_or_else(|| ManifestError(format!("unknown variant '{name}'")))
     }
 
-    /// Load the initial flat parameter vector for a variant.
+    /// Load the initial flat parameter vector for a variant. Host variants
+    /// (no `init_file`) generate a deterministic initialisation instead of
+    /// reading one from disk.
     pub fn init_params(&self, spec: &VariantSpec) -> Result<Vec<f32>, ManifestError> {
+        if spec.init_file.is_empty() {
+            let model = crate::runtime::host_model::HostModel::from_spec(spec)
+                .map_err(|e| ManifestError(e.to_string()))?;
+            // stable per-variant seed: FNV-1a over the variant name
+            let mut seed = 0xcbf2_9ce4_8422_2325u64;
+            for b in spec.name.bytes() {
+                seed = (seed ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+            }
+            return Ok(model.init_params(seed));
+        }
         let path = self.dir.join(&spec.init_file);
         let bytes = fs::read(&path)
             .map_err(|e| ManifestError(format!("cannot read {path:?}: {e}")))?;
@@ -220,5 +278,31 @@ mod tests {
     fn missing_dir_is_graceful() {
         let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn host_manifest_has_consistent_variants() {
+        let m = Manifest::host();
+        for name in ["tiny_mlp", "mnist_lenet", "cifar_lenet"] {
+            let v = m.variant(name).unwrap();
+            assert!(v.entries.is_empty(), "{name}: host variant has entries");
+            assert!(v.init_file.is_empty());
+            assert_eq!(v.classes, 10);
+            let init = m.init_params(v).unwrap();
+            assert_eq!(init.len(), v.param_count);
+            assert!(init.iter().all(|x| x.is_finite()));
+            // deterministic
+            assert_eq!(init, m.init_params(v).unwrap());
+        }
+        // tiny host variant matches the AOT tiny_mlp geometry
+        let tiny = m.variant("tiny_mlp").unwrap();
+        assert_eq!(tiny.param_count, 64 * 32 + 32 + 32 * 10 + 10);
+        assert_eq!(tiny.input_dim(), 64);
+    }
+
+    #[test]
+    fn load_or_host_falls_back() {
+        let m = Manifest::load_or_host(Path::new("/nonexistent_dir_xyz")).unwrap();
+        assert!(m.variants.contains_key("tiny_mlp"));
     }
 }

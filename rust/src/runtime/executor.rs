@@ -1,21 +1,42 @@
-//! PJRT execution of the AOT entry points.
+//! Execution of the model entry points behind one `ModelRuntime` facade.
 //!
-//! One `ModelRuntime` per variant: it compiles each `*.hlo.txt` once
-//! (HLO text → `HloModuleProto` → `XlaComputation` → loaded executable)
-//! and exposes typed wrappers. All tensors cross as flat `f32` slices —
-//! the manifest's shapes are only used for validation and reshaping.
+//! Two backends:
+//!
+//! * **PJRT** — compiles each AOT `*.hlo.txt` once (HLO text →
+//!   `HloModuleProto` → `XlaComputation` → loaded executable) and executes
+//!   through the `xla` crate. Selected when the manifest variant carries
+//!   lowered entry points.
+//! * **Host** — the pure-Rust implementation in
+//!   [`crate::runtime::host_model`]. Selected for variants with no
+//!   artifacts, notably [`Manifest::host`], so the whole stack runs on
+//!   images without an XLA toolchain.
+//!
+//! All tensors cross as flat `f32` slices — the manifest's shapes are only
+//! used for validation and reshaping. `ModelRuntime` is `Sync` (the host
+//! backend is pure math and the call counter is atomic), which lets the
+//! parallel round engine ([`crate::sim::engine`]) share one runtime across
+//! worker threads.
 
 use super::artifacts::{EntrySpec, Manifest, VariantSpec};
+use super::host_model::HostModel;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Compiled executables for one model variant.
+enum Backend {
+    Pjrt {
+        client: xla::PjRtClient,
+        exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    },
+    Host(HostModel),
+}
+
+/// Compiled executables (or the host model) for one model variant.
 pub struct ModelRuntime {
     pub spec: VariantSpec,
-    client: xla::PjRtClient,
-    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
-    /// PJRT call counter (perf diagnostics).
-    pub calls: std::cell::Cell<u64>,
+    backend: Backend,
+    /// Entry-point call counter (perf diagnostics).
+    calls: AtomicU64,
 }
 
 fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
@@ -33,43 +54,51 @@ fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 }
 
 impl ModelRuntime {
-    /// Load and compile every entry point of `variant`.
+    /// Load `variant` from the manifest: compile every lowered entry point
+    /// through PJRT, or build the host model when the variant carries no
+    /// artifacts.
     pub fn load(manifest: &Manifest, variant: &str) -> Result<ModelRuntime> {
         let spec = manifest.variant(variant)?.clone();
-        let client = xla::PjRtClient::cpu()?;
-        let mut exes = BTreeMap::new();
-        for (name, entry) in &spec.entries {
-            let path = manifest.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            exes.insert(name.clone(), exe);
-        }
+        let backend = if spec.entries.is_empty() {
+            Backend::Host(HostModel::from_spec(&spec)?)
+        } else {
+            let client = xla::PjRtClient::cpu()?;
+            let mut exes = BTreeMap::new();
+            for (name, entry) in &spec.entries {
+                let path = manifest.dir.join(&entry.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))?;
+                exes.insert(name.clone(), exe);
+            }
+            Backend::Pjrt { client, exes }
+        };
         Ok(ModelRuntime {
             spec,
-            client,
-            exes,
-            calls: std::cell::Cell::new(0),
+            backend,
+            calls: AtomicU64::new(0),
         })
     }
 
-    fn entry(&self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, &EntrySpec)> {
-        let exe = self
-            .exes
+    fn pjrt_entry(&self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, &EntrySpec)> {
+        let Backend::Pjrt { exes, .. } = &self.backend else {
+            bail!("host backend has no PJRT entry '{name}'");
+        };
+        let exe = exes
             .get(name)
             .with_context(|| format!("no entry '{name}'"))?;
         Ok((exe, &self.spec.entries[name]))
     }
 
-    /// Execute entry `name` with flat inputs; returns the decomposed tuple
-    /// of flat f32 outputs.
+    /// Execute PJRT entry `name` with flat inputs; returns the decomposed
+    /// tuple of flat f32 outputs.
     fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        let (exe, spec) = self.entry(name)?;
+        let (exe, spec) = self.pjrt_entry(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "{name}: {} inputs given, {} expected",
@@ -82,7 +111,6 @@ impl ModelRuntime {
             .zip(&spec.inputs)
             .map(|(data, shape)| literal(data, shape))
             .collect::<Result<_>>()?;
-        self.calls.set(self.calls.get() + 1);
         let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
         // jax lowers with return_tuple=True: decompose and flatten
         let parts = result.to_tuple()?;
@@ -99,6 +127,10 @@ impl ModelRuntime {
             .collect()
     }
 
+    fn count(&self) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One SGD step (Eq. 3–4): returns (new_params, loss).
     pub fn train_step(
         &self,
@@ -107,10 +139,16 @@ impl ModelRuntime {
         y: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, f32)> {
-        let out = self.run("train_step", &[params, x, y, &[lr]])?;
-        let loss = out[1][0];
-        let mut it = out.into_iter();
-        Ok((it.next().unwrap(), loss))
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.train_step(params, x, y, lr),
+            Backend::Pjrt { .. } => {
+                let out = self.run("train_step", &[params, x, y, &[lr]])?;
+                let loss = out[1][0];
+                let mut it = out.into_iter();
+                Ok((it.next().unwrap(), loss))
+            }
+        }
     }
 
     /// `chunk_steps` consecutive SGD steps in one call:
@@ -122,16 +160,28 @@ impl ModelRuntime {
         ys: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, f32)> {
-        let out = self.run("train_chunk", &[params, xs, ys, &[lr]])?;
-        let loss = out[1][0];
-        let mut it = out.into_iter();
-        Ok((it.next().unwrap(), loss))
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.train_chunk(params, xs, ys, lr),
+            Backend::Pjrt { .. } => {
+                let out = self.run("train_chunk", &[params, xs, ys, &[lr]])?;
+                let loss = out[1][0];
+                let mut it = out.into_iter();
+                Ok((it.next().unwrap(), loss))
+            }
+        }
     }
 
     /// Evaluate one batch: returns (mean_loss, correct_count).
     pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
-        let out = self.run("eval_step", &[params, x, y])?;
-        Ok((out[0][0], out[1][0]))
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.eval_step(params, x, y),
+            Backend::Pjrt { .. } => {
+                let out = self.run("eval_step", &[params, x, y])?;
+                Ok((out[0][0], out[1][0]))
+            }
+        }
     }
 
     /// FOMAML warm-start (Eq. 16–17): returns (new_params, query_loss).
@@ -146,15 +196,23 @@ impl ModelRuntime {
         alpha: f32,
         beta: f32,
     ) -> Result<(Vec<f32>, f32)> {
-        let out = self.run("maml_step", &[params, sx, sy, qx, qy, &[alpha], &[beta]])?;
-        let loss = out[1][0];
-        let mut it = out.into_iter();
-        Ok((it.next().unwrap(), loss))
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.maml_step(params, sx, sy, qx, qy, alpha, beta),
+            Backend::Pjrt { .. } => {
+                let out =
+                    self.run("maml_step", &[params, sx, sy, qx, qy, &[alpha], &[beta]])?;
+                let loss = out[1][0];
+                let mut it = out.into_iter();
+                Ok((it.next().unwrap(), loss))
+            }
+        }
     }
 
-    /// Weighted aggregation (Eq. 5 / Eq. 12) on the Pallas kernel.
-    /// `stack` is row-major `[n][P]` with `n <= agg_slots`; weights are
-    /// zero-padded to the slot count (exact — see kernel docs).
+    /// Weighted aggregation (Eq. 5 / Eq. 12). On the PJRT backend this is
+    /// the Pallas kernel with a fixed slot count (`stack` rows are
+    /// zero-padded up to it — exact, see kernel docs); on the host backend
+    /// it is the same weighted sum computed directly.
     pub fn aggregate(&self, stack: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
         let slots = self.spec.agg_slots;
         let p = self.spec.param_count;
@@ -165,26 +223,38 @@ impl ModelRuntime {
         if weights.len() != n {
             bail!("aggregate: {n} rows vs {} weights", weights.len());
         }
-        let mut flat = vec![0.0f32; slots * p];
         for (i, row) in stack.iter().enumerate() {
             if row.len() != p {
                 bail!("aggregate: row {i} has {} params, want {p}", row.len());
             }
-            flat[i * p..(i + 1) * p].copy_from_slice(row);
         }
-        let mut w = vec![0.0f32; slots];
-        w[..n].copy_from_slice(weights);
-        let out = self.run("aggregate", &[&flat, &w])?;
-        Ok(out.into_iter().next().unwrap())
+        self.count();
+        match &self.backend {
+            Backend::Host(_) => Ok(super::host::aggregate_host(stack, weights)),
+            Backend::Pjrt { .. } => {
+                let mut flat = vec![0.0f32; slots * p];
+                for (i, row) in stack.iter().enumerate() {
+                    flat[i * p..(i + 1) * p].copy_from_slice(row);
+                }
+                let mut w = vec![0.0f32; slots];
+                w[..n].copy_from_slice(weights);
+                let out = self.run("aggregate", &[&flat, &w])?;
+                Ok(out.into_iter().next().unwrap())
+            }
+        }
     }
 
-    /// Number of PJRT executions so far (perf counter).
+    /// Number of entry-point executions so far (perf counter).
     pub fn call_count(&self) -> u64 {
-        self.calls.get()
+        self.calls.load(Ordering::Relaxed)
     }
 
+    /// Backend platform: the PJRT platform name, or `"host"`.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Host(_) => "host".to_string(),
+            Backend::Pjrt { client, .. } => client.platform_name(),
+        }
     }
 }
 
@@ -217,6 +287,58 @@ mod tests {
             x[i * d + c] += 2.0;
         }
         (x, y)
+    }
+
+    #[test]
+    fn host_runtime_loads_and_is_sync() {
+        fn assert_sync<T: Sync>(_: &T) {}
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        assert_sync(&rt);
+        assert_eq!(rt.platform(), "host");
+        assert_eq!(rt.call_count(), 0);
+    }
+
+    #[test]
+    fn host_runtime_trains_and_counts_calls() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut params = m.init_params(&rt.spec).unwrap();
+        let (x, y) = toy_batch(&rt.spec, 1);
+        let mut first = None;
+        for _ in 0..60 {
+            let (p, loss) = rt.train_step(&params, &x, &y, 0.5).unwrap();
+            params = p;
+            first.get_or_insert(loss);
+        }
+        assert_eq!(rt.call_count(), 60);
+        let (last, correct) = rt.eval_step(&params, &x, &y).unwrap();
+        assert!(
+            last < 0.6 * first.unwrap(),
+            "loss did not drop: {first:?} -> {last}"
+        );
+        assert!(last.is_finite());
+        assert!((0.0..=rt.spec.batch as f32).contains(&correct));
+    }
+
+    #[test]
+    fn host_aggregate_matches_host_helper() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let p = rt.spec.param_count;
+        let mut rng = crate::util::Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let w = [0.1, 0.3, 0.2, 0.25, 0.15];
+        let got = rt.aggregate(&refs, &w).unwrap();
+        let want = crate::runtime::host::aggregate_host(&refs, &w);
+        assert_eq!(got, want);
+        // slot-count validation still applies on the host backend
+        let too_many: Vec<&[f32]> = (0..rt.spec.agg_slots + 1).map(|_| refs[0]).collect();
+        let w_bad = vec![1.0f32; too_many.len()];
+        assert!(rt.aggregate(&too_many, &w_bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,406 @@
+//! Pure-Rust host backend: the model entry points (`train_step`,
+//! `train_chunk`, `eval_step`, `maml_step`) for a one-hidden-layer tanh
+//! MLP with softmax cross-entropy, operating on flat `f32` parameter
+//! vectors laid out as `[W1 | b1 | W2 | b2]` (`W1` is `[d][h]` row-major
+//! by input, `W2` is `[h][c]` row-major by hidden unit).
+//!
+//! This backend keeps the whole system — binary, examples, benches, the
+//! parallel round engine and its determinism tests — runnable on images
+//! that carry neither the AOT artifacts nor an XLA runtime. It is
+//! selected automatically for manifest variants with no lowered entries
+//! (see [`super::artifacts::Manifest::host`]).
+//!
+//! Every op is a sequential scalar loop over fixed index order, so a
+//! given `(params, batch)` pair produces bit-identical results on any
+//! worker thread — the property the engine's determinism guarantee
+//! rests on.
+
+use super::artifacts::VariantSpec;
+use anyhow::{bail, Result};
+
+/// One-hidden-layer MLP geometry recovered from a variant spec.
+#[derive(Clone, Copy, Debug)]
+pub struct HostModel {
+    /// Input dimension d.
+    pub input: usize,
+    /// Hidden width h.
+    pub hidden: usize,
+    /// Output classes c.
+    pub classes: usize,
+    /// Batch size B the spec was built for.
+    pub batch: usize,
+    /// SGD steps per `train_chunk` call.
+    pub chunk_steps: usize,
+}
+
+impl HostModel {
+    /// Recover the MLP geometry from a variant spec
+    /// (`P = d·h + h + h·c + c` must hold exactly).
+    pub fn from_spec(spec: &VariantSpec) -> Result<HostModel> {
+        let d = spec.input_dim();
+        let c = spec.classes;
+        let denom = d + c + 1;
+        let h = spec.param_count.saturating_sub(c) / denom;
+        if h == 0 || h * denom + c != spec.param_count {
+            bail!(
+                "variant '{}' (P={}, d={d}, c={c}) does not match the host MLP layout",
+                spec.name,
+                spec.param_count
+            );
+        }
+        Ok(HostModel {
+            input: d,
+            hidden: h,
+            classes: c,
+            batch: spec.batch,
+            chunk_steps: spec.chunk_steps,
+        })
+    }
+
+    /// Total parameter count for this geometry.
+    pub fn param_count(&self) -> usize {
+        self.input * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    /// Deterministic Glorot-uniform initial parameters (biases zero).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let (d, h, c) = (self.input, self.hidden, self.classes);
+        let mut rng = crate::util::Rng::new(seed);
+        let mut out = vec![0.0f32; self.param_count()];
+        let lim1 = (6.0 / (d + h) as f64).sqrt();
+        for v in &mut out[..d * h] {
+            *v = rng.uniform_in(-lim1, lim1) as f32;
+        }
+        let w2 = d * h + h;
+        let lim2 = (6.0 / (h + c) as f64).sqrt();
+        for v in &mut out[w2..w2 + h * c] {
+            *v = rng.uniform_in(-lim2, lim2) as f32;
+        }
+        out
+    }
+
+    fn check(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<()> {
+        if params.len() != self.param_count() {
+            bail!(
+                "params has {} elements, host model wants {}",
+                params.len(),
+                self.param_count()
+            );
+        }
+        if y.is_empty() || x.len() != y.len() * self.input {
+            bail!(
+                "batch shape mismatch: {} inputs vs {} labels × d={}",
+                x.len(),
+                y.len(),
+                self.input
+            );
+        }
+        let c = self.classes as f32;
+        if y.iter().any(|&v| !(0.0..c).contains(&v) || v.fract() != 0.0) {
+            bail!("labels must be integers in [0, {})", self.classes);
+        }
+        Ok(())
+    }
+
+    /// Forward pass over the batch; returns `(mean_loss, correct_count)`.
+    /// When `grad` is provided (zeroed, `param_count` long), accumulates
+    /// d(mean_loss)/d(params) into it.
+    fn batch_pass(&self, params: &[f32], x: &[f32], y: &[f32], mut grad: Option<&mut [f32]>) -> (f32, f32) {
+        let d = self.input;
+        let h = self.hidden;
+        let c = self.classes;
+        let bsz = y.len();
+        let (w1, rest) = params.split_at(d * h);
+        let (b1, rest) = rest.split_at(h);
+        let (w2, b2) = rest.split_at(h * c);
+
+        let mut a1 = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; c];
+        let mut probs = vec![0.0f32; c];
+        let mut da1 = vec![0.0f32; h];
+        let inv_b = 1.0f32 / bsz as f32;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+
+        for i in 0..bsz {
+            let xi = &x[i * d..(i + 1) * d];
+            let label = y[i] as usize;
+
+            // forward: a1 = tanh(W1ᵀx + b1), logits = W2ᵀa1 + b2
+            for j in 0..h {
+                let mut z = b1[j];
+                for k in 0..d {
+                    z += xi[k] * w1[k * h + j];
+                }
+                a1[j] = z.tanh();
+            }
+            for o in 0..c {
+                let mut z = b2[o];
+                for j in 0..h {
+                    z += a1[j] * w2[j * c + o];
+                }
+                logits[o] = z;
+            }
+
+            // softmax cross-entropy (max-shifted for stability)
+            let mut maxl = logits[0];
+            for &l in &logits[1..] {
+                if l > maxl {
+                    maxl = l;
+                }
+            }
+            let mut sum = 0.0f32;
+            for o in 0..c {
+                probs[o] = (logits[o] - maxl).exp();
+                sum += probs[o];
+            }
+            for o in 0..c {
+                probs[o] /= sum;
+            }
+            loss_sum += -(probs[label].max(1e-12) as f64).ln();
+            let mut best = 0;
+            for o in 1..c {
+                if logits[o] > logits[best] {
+                    best = o;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+
+            if let Some(g) = grad.as_deref_mut() {
+                let (gw1, grest) = g.split_at_mut(d * h);
+                let (gb1, grest) = grest.split_at_mut(h);
+                let (gw2, gb2) = grest.split_at_mut(h * c);
+                for v in da1.iter_mut() {
+                    *v = 0.0;
+                }
+                // d(mean loss)/d(logit_o) = (p_o − 1{o=y}) / B
+                for o in 0..c {
+                    let dl = (probs[o] - if o == label { 1.0 } else { 0.0 }) * inv_b;
+                    gb2[o] += dl;
+                    for j in 0..h {
+                        gw2[j * c + o] += a1[j] * dl;
+                        da1[j] += w2[j * c + o] * dl;
+                    }
+                }
+                // tanh' = 1 − a1²
+                for j in 0..h {
+                    let dz = da1[j] * (1.0 - a1[j] * a1[j]);
+                    gb1[j] += dz;
+                    for k in 0..d {
+                        gw1[k * h + j] += xi[k] * dz;
+                    }
+                }
+            }
+        }
+        ((loss_sum / bsz as f64) as f32, correct as f32)
+    }
+
+    /// One SGD step; returns `(new_params, pre-update mean loss)`.
+    pub fn train_step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        self.check(params, x, y)?;
+        let mut grad = vec![0.0f32; params.len()];
+        let (loss, _) = self.batch_pass(params, x, y, Some(&mut grad));
+        let new = params.iter().zip(&grad).map(|(p, g)| p - lr * g).collect();
+        Ok((new, loss))
+    }
+
+    /// `chunk_steps` consecutive SGD steps; returns `(params, mean loss)`.
+    pub fn train_chunk(&self, params: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        let s = self.chunk_steps;
+        let bd = self.batch * self.input;
+        if xs.len() != s * bd || ys.len() != s * self.batch {
+            bail!(
+                "chunk shape mismatch: {}×{} inputs / {} labels for S={s} B={}",
+                xs.len(),
+                self.input,
+                ys.len(),
+                self.batch
+            );
+        }
+        let mut p = params.to_vec();
+        let mut loss_sum = 0.0f64;
+        for step in 0..s {
+            let x = &xs[step * bd..(step + 1) * bd];
+            let y = &ys[step * self.batch..(step + 1) * self.batch];
+            let (np, loss) = self.train_step(&p, x, y, lr)?;
+            p = np;
+            loss_sum += loss as f64;
+        }
+        Ok((p, (loss_sum / s as f64) as f32))
+    }
+
+    /// Evaluate one batch; returns `(mean_loss, correct_count)`.
+    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        self.check(params, x, y)?;
+        Ok(self.batch_pass(params, x, y, None))
+    }
+
+    /// First-order MAML step (Eq. 16–17): inner step on the support batch,
+    /// outer step from the query gradient at the adapted parameters.
+    /// Returns `(new_params, query loss at the adapted parameters)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maml_step(
+        &self,
+        params: &[f32],
+        sx: &[f32],
+        sy: &[f32],
+        qx: &[f32],
+        qy: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.check(params, sx, sy)?;
+        self.check(params, qx, qy)?;
+        let mut gs = vec![0.0f32; params.len()];
+        let _ = self.batch_pass(params, sx, sy, Some(&mut gs));
+        let adapted: Vec<f32> = params.iter().zip(&gs).map(|(p, g)| p - alpha * g).collect();
+        let mut gq = vec![0.0f32; params.len()];
+        let (qloss, _) = self.batch_pass(&adapted, qx, qy, Some(&mut gq));
+        let new = params.iter().zip(&gq).map(|(p, g)| p - beta * g).collect();
+        Ok((new, qloss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_model() -> HostModel {
+        HostModel {
+            input: 4,
+            hidden: 3,
+            classes: 5,
+            batch: 2,
+            chunk_steps: 2,
+        }
+    }
+
+    fn toy_batch(m: &HostModel, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; n * m.input];
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let c = rng.below_usize(m.classes);
+            y[i] = c as f32;
+            for k in 0..m.input {
+                x[i * m.input + k] = 0.3 * rng.normal() as f32;
+            }
+            x[i * m.input + c % m.input] += 1.5;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn geometry_roundtrips_through_spec() {
+        let manifest = crate::runtime::Manifest::host();
+        for spec in manifest.variants.values() {
+            let m = HostModel::from_spec(spec).unwrap();
+            assert_eq!(m.param_count(), spec.param_count, "{}", spec.name);
+            assert_eq!(m.batch, spec.batch);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = toy_model();
+        let mut rng = Rng::new(9);
+        let params: Vec<f32> = (0..m.param_count())
+            .map(|_| 0.4 * rng.normal() as f32)
+            .collect();
+        let (x, y) = toy_batch(&m, 3, 10);
+        let mut grad = vec![0.0f32; params.len()];
+        let (_, _) = m.batch_pass(&params, &x, &y, Some(&mut grad));
+        let eps = 1e-3f32;
+        for i in 0..params.len() {
+            let mut plus = params.clone();
+            plus[i] += eps;
+            let mut minus = params.clone();
+            minus[i] -= eps;
+            let lp = m.batch_pass(&plus, &x, &y, None).0;
+            let lm = m.batch_pass(&minus, &x, &y, None).0;
+            let fd = (lp - lm) / (2.0 * eps);
+            let diff = (fd - grad[i]).abs();
+            assert!(
+                diff < 5e-3 + 0.05 * grad[i].abs(),
+                "param {i}: analytic {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_overfits_one_batch() {
+        let m = toy_model();
+        let mut params = m.init_params(1);
+        let (x, y) = toy_batch(&m, 4, 2);
+        let first = m.eval_step(&params, &x, &y).unwrap().0;
+        for _ in 0..150 {
+            let (p, _) = m.train_step(&params, &x, &y, 0.5).unwrap();
+            params = p;
+        }
+        let last = m.eval_step(&params, &x, &y).unwrap().0;
+        assert!(last < 0.6 * first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn chunk_equals_stepwise_exactly() {
+        let m = toy_model();
+        let params = m.init_params(3);
+        let bd = m.batch * m.input;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut batches = Vec::new();
+        for step in 0..m.chunk_steps {
+            let (x, y) = toy_batch(&m, m.batch, 20 + step as u64);
+            xs.extend_from_slice(&x);
+            ys.extend_from_slice(&y);
+            batches.push((x, y));
+        }
+        assert_eq!(xs.len(), m.chunk_steps * bd);
+        let (pc, _) = m.train_chunk(&params, &xs, &ys, 0.1).unwrap();
+        let mut ps = params;
+        for (x, y) in &batches {
+            let (p, _) = m.train_step(&ps, x, y, 0.1).unwrap();
+            ps = p;
+        }
+        assert_eq!(pc, ps, "chunk path diverged from stepwise path");
+    }
+
+    #[test]
+    fn maml_identity_at_zero_rates() {
+        let m = toy_model();
+        let params = m.init_params(4);
+        let (sx, sy) = toy_batch(&m, 2, 5);
+        let (qx, qy) = toy_batch(&m, 2, 6);
+        let (p1, qloss) = m.maml_step(&params, &sx, &sy, &qx, &qy, 0.0, 0.0).unwrap();
+        assert!(qloss > 0.0);
+        for (a, b) in p1.iter().zip(&params) {
+            assert!((a - b).abs() == 0.0, "zero-rate maml moved params");
+        }
+    }
+
+    #[test]
+    fn shape_and_label_validation() {
+        let m = toy_model();
+        let params = m.init_params(7);
+        let (x, y) = toy_batch(&m, 2, 8);
+        assert!(m.train_step(&params[..5], &x, &y, 0.1).is_err());
+        assert!(m.train_step(&params, &x[..3], &y, 0.1).is_err());
+        let bad_y = vec![99.0f32; y.len()];
+        assert!(m.eval_step(&params, &x, &bad_y).is_err());
+        assert!(m.eval_step(&params, &x, &y).is_ok());
+    }
+
+    #[test]
+    fn eval_counts_in_range() {
+        let m = toy_model();
+        let params = m.init_params(11);
+        let (x, y) = toy_batch(&m, 8, 12);
+        let (loss, correct) = m.eval_step(&params, &x, &y).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!((0.0..=8.0).contains(&correct));
+    }
+}

@@ -1,18 +1,24 @@
 //! Runtime bridge: loads the AOT artifacts (`artifacts/*.hlo.txt` +
-//! `manifest.json`) and executes them on the PJRT CPU client from the Rust
-//! hot path. Python never runs here — this module is the only consumer of
-//! what `make artifacts` produced.
+//! `manifest.json`) when present and executes them on the PJRT client, or
+//! falls back to a pure-Rust host implementation of the same entry points
+//! so the stack runs on images with neither artifacts nor XLA. Python
+//! never runs here — this module is the only consumer of what
+//! `make artifacts` produced.
 //!
-//! * [`artifacts`] — manifest parsing + initial-parameter loading.
-//! * [`executor`] — one compiled executable per entry point, with typed
-//!   wrappers (`train_step`, `train_chunk`, `eval_step`, `maml_step`,
-//!   `aggregate`).
-//! * [`host`] — pure-Rust fallbacks for variable-size aggregation and for
-//!   tests that must run without artifacts.
+//! * [`artifacts`] — manifest parsing + initial-parameter loading, plus
+//!   the built-in host manifest ([`Manifest::host`]).
+//! * [`executor`] — one runtime per variant with typed wrappers
+//!   (`train_step`, `train_chunk`, `eval_step`, `maml_step`,
+//!   `aggregate`), dispatching to PJRT or the host model.
+//! * [`host_model`] — the pure-Rust MLP backend.
+//! * [`host`] — shared pure-Rust vector ops (weighted aggregation, norms)
+//!   used by the dispatcher, the baselines, and tests.
 
 pub mod artifacts;
 pub mod executor;
 pub mod host;
+pub mod host_model;
 
 pub use artifacts::{Manifest, VariantSpec};
 pub use executor::ModelRuntime;
+pub use host_model::HostModel;

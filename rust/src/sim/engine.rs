@@ -1,0 +1,207 @@
+//! Deterministic scatter-gather executor — the parallel round engine.
+//!
+//! Per-satellite local training is embarrassingly parallel (each client
+//! trains on its own shard from the cluster model it was handed), yet the
+//! seed coordinator trained every client sequentially inside the round
+//! loop. This engine fans that work out across OS threads
+//! (`std::thread::scope`) while keeping runs **bit-for-bit deterministic
+//! in the worker count**:
+//!
+//! * Tasks are claimed from a shared atomic cursor (work stealing), but
+//!   every result is returned **in task order**, so downstream reductions
+//!   (weighted aggregation, time/energy folds) always see the same
+//!   operand order.
+//! * Jobs must not share mutable state; per-client randomness is derived
+//!   statelessly from `(seed, round, sat_id)` via
+//!   [`crate::util::rng::stream_seed`], never from a shared generator, so
+//!   the schedule cannot leak into the numerics.
+//!
+//! The worker count comes from `ExperimentConfig::workers`
+//! (`--workers N`; `0` means all available cores). `bench_runtime` sweeps
+//! workers vs wall-clock over both a synthetic load and the full round
+//! loop.
+//!
+//! ```
+//! use fedhc::sim::engine::Engine;
+//!
+//! let engine = Engine::new(4);
+//! let squares = engine.run(&[1u64, 2, 3, 4], |_, &x| x * x);
+//! assert_eq!(squares, vec![1, 4, 9, 16]);
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A fixed-width thread pool for deterministic scatter-gather rounds.
+#[derive(Clone, Copy, Debug)]
+pub struct Engine {
+    workers: usize,
+}
+
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::new(0)
+    }
+}
+
+impl Engine {
+    /// `workers == 0` selects all available cores (at least 1).
+    pub fn new(workers: usize) -> Engine {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            workers
+        };
+        Engine { workers }
+    }
+
+    /// Configured worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Map `job` over `tasks`, returning results in task order.
+    pub fn run<T, R, F>(&self, tasks: &[T], job: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.run_with(tasks, || (), |_, i, t| job(i, t))
+    }
+
+    /// Like [`Engine::run`], but each worker first builds private scratch
+    /// state with `init` (e.g. training buffers) that is reused across all
+    /// tasks that worker claims.
+    pub fn run_with<T, R, S, I, F>(&self, tasks: &[T], init: I, job: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, &T) -> R + Sync,
+    {
+        let n = tasks.len();
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            let mut state = init();
+            return tasks
+                .iter()
+                .enumerate()
+                .map(|(i, t)| job(&mut state, i, t))
+                .collect();
+        }
+
+        let cursor = AtomicUsize::new(0);
+        let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(workers);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut state = init();
+                        let mut out = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            out.push((i, job(&mut state, i, &tasks[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                parts.push(h.join().expect("engine worker panicked"));
+            }
+        });
+
+        // gather back into task order
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for (i, r) in parts.into_iter().flatten() {
+            debug_assert!(slots[i].is_none(), "task {i} produced twice");
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("engine lost a task result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::stream_seed;
+    use crate::util::Rng;
+
+    #[test]
+    fn preserves_task_order() {
+        let tasks: Vec<usize> = (0..100).collect();
+        let want: Vec<usize> = (0..100).map(|t| t * t).collect();
+        for workers in [1usize, 2, 7, 16] {
+            let out = Engine::new(workers).run(&tasks, |i, &t| {
+                assert_eq!(i, t);
+                t * t
+            });
+            assert_eq!(out, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn identical_results_for_any_worker_count() {
+        // per-task seeded RNG: results are schedule-independent by design
+        let tasks: Vec<u64> = (0..64).collect();
+        let run = |w: usize| {
+            Engine::new(w).run(&tasks, |_, &t| {
+                let mut rng = Rng::new(stream_seed(42, 1, t));
+                (0..100).map(|_| rng.uniform()).sum::<f64>()
+            })
+        };
+        let base = run(1);
+        assert_eq!(base, run(3));
+        assert_eq!(base, run(8));
+    }
+
+    #[test]
+    fn per_worker_state_is_built_once_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        let inits = AtomicUsize::new(0);
+        let tasks: Vec<usize> = (0..32).collect();
+        let engine = Engine::new(4);
+        let out = engine.run_with(
+            &tasks,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |state, _, &t| {
+                *state += 1;
+                t
+            },
+        );
+        assert_eq!(out, tasks);
+        assert!(inits.load(Ordering::Relaxed) <= 4, "state built per task?");
+    }
+
+    #[test]
+    fn auto_worker_count_is_positive() {
+        assert!(Engine::new(0).workers() >= 1);
+        assert_eq!(Engine::new(3).workers(), 3);
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let tasks: [u32; 0] = [];
+        let out = Engine::new(8).run(&tasks, |_, &t| t);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_tasks() {
+        let tasks = [10u32, 20];
+        let out = Engine::new(16).run(&tasks, |_, &t| t + 1);
+        assert_eq!(out, vec![11, 21]);
+    }
+}

@@ -1,10 +1,14 @@
 //! Discrete-time simulation substrate: the simulated clock the FL rounds
-//! advance, and the mobility process that turns orbital motion into
+//! advance, the mobility process that turns orbital motion into
 //! cluster-membership churn (join/leave events that drive the paper's
-//! re-clustering trigger).
+//! re-clustering trigger), and the deterministic parallel round engine
+//! that fans local training out across OS threads without perturbing the
+//! simulated numerics.
 
 pub mod clock;
+pub mod engine;
 pub mod mobility;
 
 pub use clock::SimClock;
+pub use engine::Engine;
 pub use mobility::MobilityModel;

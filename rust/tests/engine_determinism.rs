@@ -1,0 +1,121 @@
+//! Parallel-round-engine integration tests on the built-in host backend
+//! (these run without AOT artifacts): the same configuration and seed
+//! must produce byte-identical metrics at any worker count, and every
+//! method must run end to end.
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+fn run_with_workers(workers: usize, strategy: Strategy, rounds: usize) -> RunResult {
+    let manifest = Manifest::host();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = rounds;
+    cfg.workers = workers;
+    cfg.target_accuracy = None;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    run_clustered(&mut trial, strategy).unwrap()
+}
+
+#[test]
+fn metrics_identical_across_worker_counts() {
+    let base = run_with_workers(1, Strategy::fedhc(), 6);
+    assert_eq!(base.ledger.records.len(), 6);
+    for workers in [2usize, 4, 8] {
+        let other = run_with_workers(workers, Strategy::fedhc(), 6);
+        assert_eq!(
+            base.ledger.records.len(),
+            other.ledger.records.len(),
+            "workers={workers}"
+        );
+        for (a, b) in base.ledger.records.iter().zip(&other.ledger.records) {
+            assert_eq!(a.round, b.round);
+            assert!(
+                a.time_s == b.time_s
+                    && a.energy_j == b.energy_j
+                    && a.accuracy == b.accuracy
+                    && a.loss == b.loss
+                    && a.reclustered == b.reclustered,
+                "workers={workers}: nondeterministic metrics at round {} \
+                 ({:?} vs {:?})",
+                a.round,
+                a,
+                b
+            );
+        }
+        assert_eq!(base.ledger.reclusters, other.ledger.reclusters);
+        assert_eq!(base.ledger.maml_adaptations, other.ledger.maml_adaptations);
+        assert_eq!(base.final_accuracy, other.final_accuracy);
+    }
+}
+
+#[test]
+fn host_backend_learns_on_tiny() {
+    let res = run_with_workers(0, Strategy::fedhc(), 10);
+    let first = res.ledger.records.first().unwrap().accuracy;
+    let best = res.final_accuracy;
+    assert!(best >= first, "accuracy regressed: {first} -> {best}");
+    assert!(best > 0.25, "host backend failed to learn: best {best}");
+    assert!(res.ledger.time_s > 0.0 && res.ledger.energy_j > 0.0);
+}
+
+#[test]
+fn all_clustered_strategies_run_on_host_backend() {
+    for strategy in [
+        Strategy::fedhc(),
+        Strategy::fedhc_no_maml(),
+        Strategy::hbase(),
+        Strategy::fedce(),
+    ] {
+        let res = run_with_workers(2, strategy, 4);
+        assert_eq!(res.ledger.records.len(), 4, "{}", res.name);
+        assert!(res.ledger.time_s.is_finite() && res.ledger.time_s > 0.0);
+        assert!(res.ledger.energy_j.is_finite() && res.ledger.energy_j > 0.0);
+    }
+}
+
+#[test]
+fn cfedavg_runs_and_is_deterministic_on_host_backend() {
+    let run = |workers: usize| {
+        let manifest = Manifest::host();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 4;
+        cfg.workers = workers;
+        cfg.target_accuracy = None;
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+        run_cfedavg(&mut trial).unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    assert_eq!(a.ledger.records.len(), 4);
+    for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
+        assert!(x.time_s == y.time_s && x.accuracy == y.accuracy);
+    }
+}
+
+#[test]
+fn seeds_still_differentiate_runs() {
+    let manifest = Manifest::host();
+    let run = |seed: u64| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 5;
+        cfg.seed = seed;
+        cfg.target_accuracy = None;
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+        run_clustered(&mut trial, Strategy::fedhc()).unwrap()
+    };
+    let a = run(42);
+    let b = run(43);
+    assert!(
+        a.ledger
+            .records
+            .iter()
+            .zip(&b.ledger.records)
+            .any(|(x, y)| x.accuracy != y.accuracy || x.time_s != y.time_s),
+        "different seeds produced identical trajectories"
+    );
+}
