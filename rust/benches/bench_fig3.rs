@@ -64,4 +64,20 @@ fn main() {
         fedhc > hbase - 0.10,
         "FedHC accuracy collapsed vs H-BASE: {fedhc} vs {hbase}"
     );
+
+    // timeline sweep: the same FedHC run under the analytic Eq. 7 folds vs
+    // the visibility-gated event timeline (waits are simulated time)
+    for timeline in [fedhc::config::Timeline::Analytic, fedhc::config::Timeline::Event] {
+        let mut cfg = base.clone();
+        cfg.timeline = timeline;
+        let ledger = series(cfg, "FedHC");
+        println!(
+            "timeline {:<8}: time {:>10.0} s  energy {:>8.0} J  waits {:>8.0} s  stale {}",
+            timeline.name(),
+            ledger.time_s,
+            ledger.energy_j,
+            ledger.ground_wait_s,
+            ledger.stale_passes
+        );
+    }
 }

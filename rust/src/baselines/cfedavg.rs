@@ -13,14 +13,12 @@
 
 use crate::coordinator::fedhc::RunResult;
 use crate::coordinator::round::data_upload_with;
+use crate::coordinator::stages::{EngineLocalTrain, LocalTrainStage};
 use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
 use crate::fl::client::SatClient;
 use crate::fl::evaluate::evaluate;
-use crate::fl::local::{local_train, TrainScratch};
 use crate::sim::engine::Engine;
-use crate::util::rng::stream_seed;
-use crate::util::Rng;
 use anyhow::Result;
 
 /// Pick the central satellite: the client nearest any ground station at
@@ -65,7 +63,9 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     let cpu_hz = trial.clients[central].cpu_hz;
     let init = trial.clients[central].params.clone();
     let mut node = SatClient::new(central, union, init, cpu_hz);
-    let mut scratch = TrainScratch::new(rt);
+    // the central epoch reuses the shared local-training stage (same
+    // stateless (seed, round, sat) RNG discipline as the clustered runs)
+    let train_stage = EngineLocalTrain;
 
     // ---- per-round: raw-data collection upload, then centralised epochs
     let mut converged_at = None;
@@ -92,18 +92,28 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
         trial.ledger.add_energy(e_up);
         trial.clock.advance(t_up);
 
-        let out = {
-            // same stateless (seed, round, sat) stream discipline as the
-            // parallel engine — deterministic whatever else draws from
-            // the trial RNG
-            let mut rng = Rng::new(stream_seed(cfg.seed, round as u64, central as u64));
-            local_train(rt, &mut node, cfg.local_epochs, cfg.lr, &mut scratch, &mut rng)?
+        let samples = {
+            let models = [std::mem::take(&mut node.params)];
+            let mut outs = train_stage.train(
+                &engine,
+                rt,
+                &cfg,
+                std::slice::from_ref(&node),
+                &models,
+                &[(0, 0)],
+                round as u64,
+            )?;
+            let out = outs.pop().expect("central training job lost");
+            node.params = out.params;
+            node.last_loss = out.mean_loss;
+            node.rounds_trained += 1;
+            out.samples
         };
         // Eq. 9 compute at the central node; one epoch is sequential over
         // the union data — no parallelism to exploit (the paper's point)
-        let t_cmp = trial.link.compute_time(out.samples, cpu_hz);
+        let t_cmp = trial.link.compute_time(samples, cpu_hz);
         trial.ledger.add_time(t_cmp);
-        trial.ledger.add_energy(trial.energy.compute_energy(out.samples, cpu_hz));
+        trial.ledger.add_energy(trial.energy.compute_energy(samples, cpu_hz));
         trial.clock.advance(t_cmp);
 
         if round % cfg.eval_every == 0 || round == cfg.rounds {

@@ -6,6 +6,40 @@ pub mod parse;
 
 use crate::data::DatasetKind;
 use crate::util::cli::Args;
+use anyhow::{anyhow, bail, Result};
+
+/// Which timeline drives the simulated clock and the metrics ledger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Timeline {
+    /// Closed-form Eq. 7 folds with an always-reachable ground segment
+    /// (the original reproduction semantics; parameters "teleport" to any
+    /// station the plan picks).
+    Analytic,
+    /// Discrete-event timeline: stage durations flow through the
+    /// `sim::events` queue and PS↔GS exchanges are gated by
+    /// `orbit::visibility` windows — a PS that misses its window waits for
+    /// the next one or goes stale. Under always-visible geometry this is
+    /// bit-identical to `Analytic` (see `tests/timeline_equivalence.rs`).
+    Event,
+}
+
+impl Timeline {
+    /// Parse the `--timeline` flag value.
+    pub fn parse(s: &str) -> Option<Timeline> {
+        match s {
+            "analytic" => Some(Timeline::Analytic),
+            "event" => Some(Timeline::Event),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Timeline::Analytic => "analytic",
+            Timeline::Event => "event",
+        }
+    }
+}
 
 /// Complete configuration of one FL experiment.
 #[derive(Clone, Debug)]
@@ -53,6 +87,15 @@ pub struct ExperimentConfig {
     /// cores). Any value produces byte-identical metrics — see
     /// [`crate::sim::engine`].
     pub workers: usize,
+    /// Timeline semantics (`--timeline analytic|event`).
+    pub timeline: Timeline,
+    /// Event timeline: how long a cluster PS may wait for a ground
+    /// visibility window before it goes stale and skips the pass, seconds.
+    pub max_ground_wait_s: f64,
+    /// Event timeline: sampling step of the visibility-window search,
+    /// seconds (edges are bisection-refined; windows shorter than this can
+    /// be missed).
+    pub window_step_s: f64,
     /// Master seed.
     pub seed: u64,
 }
@@ -92,6 +135,12 @@ impl ExperimentConfig {
             eval_batches: 0,
             eval_every: 1,
             workers: 0,
+            // the smoke preset pins the analytic timeline so the fast
+            // deterministic test suite keeps the legacy Eq. 7 semantics;
+            // paper-scale presets default to the event timeline
+            timeline: Timeline::Analytic,
+            max_ground_wait_s: 7000.0,
+            window_step_s: 30.0,
             seed: 42,
         }
     }
@@ -120,6 +169,11 @@ impl ExperimentConfig {
             eval_batches: 8,
             eval_every: 1,
             workers: 0,
+            timeline: Timeline::Event,
+            // one paper-shell orbital period (≈ 6680 s) plus margin: a PS
+            // that cannot reach its station within an orbit goes stale
+            max_ground_wait_s: 7000.0,
+            window_step_s: 30.0,
             seed: 42,
         }
     }
@@ -146,9 +200,11 @@ impl ExperimentConfig {
     }
 
     /// Apply CLI overrides (`--clients 48 --k 4 --rounds 100 ...`).
-    pub fn with_args(mut self, args: &Args) -> Self {
+    /// Malformed flags return usage errors instead of panicking.
+    pub fn with_args(mut self, args: &Args) -> Result<Self> {
         if let Some(d) = args.get("dataset") {
-            let kind = DatasetKind::parse(d).unwrap_or_else(|| panic!("unknown dataset '{d}'"));
+            let kind = DatasetKind::parse(d)
+                .ok_or_else(|| anyhow!("unknown dataset '{d}' (expected mnist|cifar10|tiny)"))?;
             // switch preset family when the dataset changes
             if kind != self.dataset {
                 let mut base = match kind {
@@ -160,50 +216,79 @@ impl ExperimentConfig {
                 self = base;
             }
         }
-        self.clients = args.get_usize("clients", self.clients);
-        self.clusters = args.get_usize("k", self.clusters);
-        self.rounds = args.get_usize("rounds", self.rounds);
-        self.local_epochs = args.get_usize("epochs", self.local_epochs);
-        self.lr = args.get_f64("lr", self.lr as f64) as f32;
-        self.ground_every = args.get_usize("ground-every", self.ground_every);
-        self.recluster_threshold = args.get_f64("z", self.recluster_threshold);
-        self.maml_alpha = args.get_f64("alpha", self.maml_alpha as f64) as f32;
-        self.maml_beta = args.get_f64("beta", self.maml_beta as f64) as f32;
+        self.clients = args.get_usize("clients", self.clients)?;
+        self.clusters = args.get_usize("k", self.clusters)?;
+        self.rounds = args.get_usize("rounds", self.rounds)?;
+        self.local_epochs = args.get_usize("epochs", self.local_epochs)?;
+        self.lr = args.get_f64("lr", self.lr as f64)? as f32;
+        self.ground_every = args.get_usize("ground-every", self.ground_every)?;
+        self.recluster_threshold = args.get_f64("z", self.recluster_threshold)?;
+        self.maml_alpha = args.get_f64("alpha", self.maml_alpha as f64)? as f32;
+        self.maml_beta = args.get_f64("beta", self.maml_beta as f64)? as f32;
         if let Some(t) = args.get("target") {
-            self.target_accuracy = Some(t.parse().expect("--target expects a number"));
+            let parsed = t
+                .parse()
+                .map_err(|_| anyhow!("--target expects a number, got '{t}'"))?;
+            self.target_accuracy = Some(parsed);
         }
         if args.flag("no-target") {
             self.target_accuracy = None;
         }
-        self.train_samples = args.get_usize("train-samples", self.train_samples);
-        self.test_samples = args.get_usize("test-samples", self.test_samples);
-        self.dirichlet_alpha = args.get_f64("dirichlet", self.dirichlet_alpha);
-        self.planes = args.get_usize("planes", self.planes);
-        self.sats_per_plane = args.get_usize("sats-per-plane", self.sats_per_plane);
-        self.outage_prob = args.get_f64("outage", self.outage_prob);
-        self.eval_batches = args.get_usize("eval-batches", self.eval_batches);
-        self.eval_every = args.get_usize("eval-every", self.eval_every);
-        self.workers = args.get_usize("workers", self.workers);
-        self.seed = args.get_u64("seed", self.seed);
-        self.validate();
-        self
+        self.train_samples = args.get_usize("train-samples", self.train_samples)?;
+        self.test_samples = args.get_usize("test-samples", self.test_samples)?;
+        self.dirichlet_alpha = args.get_f64("dirichlet", self.dirichlet_alpha)?;
+        self.planes = args.get_usize("planes", self.planes)?;
+        self.sats_per_plane = args.get_usize("sats-per-plane", self.sats_per_plane)?;
+        self.outage_prob = args.get_f64("outage", self.outage_prob)?;
+        self.eval_batches = args.get_usize("eval-batches", self.eval_batches)?;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        self.workers = args.get_usize("workers", self.workers)?;
+        if let Some(t) = args.get("timeline") {
+            self.timeline = Timeline::parse(t)
+                .ok_or_else(|| anyhow!("--timeline expects 'analytic' or 'event', got '{t}'"))?;
+        }
+        self.max_ground_wait_s = args.get_f64("max-ground-wait", self.max_ground_wait_s)?;
+        self.window_step_s = args.get_f64("window-step", self.window_step_s)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.validate()?;
+        Ok(self)
     }
 
     /// Sanity-check invariants.
-    pub fn validate(&self) {
-        assert!(self.clients >= self.clusters, "fewer clients than clusters");
-        assert!(
-            self.planes * self.sats_per_plane >= self.clients,
-            "constellation smaller than client count"
-        );
-        assert!(self.clusters >= 1 && self.rounds >= 1 && self.local_epochs >= 1);
-        assert!(self.lr > 0.0);
-        assert!((0.0..=1.0).contains(&self.recluster_threshold));
-        assert!((0.0..1.0).contains(&self.outage_prob));
-        assert!(self.cpu_het.0 > 0.0 && self.cpu_het.1 >= self.cpu_het.0);
-        if let Some(t) = self.target_accuracy {
-            assert!((0.0..=1.0).contains(&t));
+    pub fn validate(&self) -> Result<()> {
+        if self.clients < self.clusters {
+            bail!("fewer clients than clusters");
         }
+        if self.planes * self.sats_per_plane < self.clients {
+            bail!("constellation smaller than client count");
+        }
+        if self.clusters < 1 || self.rounds < 1 || self.local_epochs < 1 {
+            bail!("clusters, rounds and epochs must all be at least 1");
+        }
+        if self.lr.is_nan() || self.lr <= 0.0 {
+            bail!("learning rate must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.recluster_threshold) {
+            bail!("recluster threshold must be in [0, 1]");
+        }
+        if !(0.0..1.0).contains(&self.outage_prob) {
+            bail!("outage probability must be in [0, 1)");
+        }
+        if self.cpu_het.0 <= 0.0 || self.cpu_het.1 < self.cpu_het.0 {
+            bail!("cpu heterogeneity band must be positive and ordered");
+        }
+        if let Some(t) = self.target_accuracy {
+            if !(0.0..=1.0).contains(&t) {
+                bail!("target accuracy must be in [0, 1]");
+            }
+        }
+        if !self.max_ground_wait_s.is_finite() || self.max_ground_wait_s <= 0.0 {
+            bail!("max ground wait must be positive and finite");
+        }
+        if !self.window_step_s.is_finite() || self.window_step_s <= 0.0 {
+            bail!("window step must be positive and finite");
+        }
+        Ok(())
     }
 }
 
@@ -214,9 +299,14 @@ mod tests {
     #[test]
     fn presets_are_valid() {
         for name in ["tiny", "mnist", "cifar10"] {
-            ExperimentConfig::preset(name).unwrap().validate();
+            ExperimentConfig::preset(name).unwrap().validate().unwrap();
         }
         assert!(ExperimentConfig::preset("nope").is_none());
+        // paper-scale presets default to the event timeline; the smoke
+        // preset pins analytic for the fast deterministic suite
+        assert_eq!(ExperimentConfig::mnist().timeline, Timeline::Event);
+        assert_eq!(ExperimentConfig::cifar10().timeline, Timeline::Event);
+        assert_eq!(ExperimentConfig::tiny().timeline, Timeline::Analytic);
     }
 
     #[test]
@@ -234,7 +324,7 @@ mod tests {
                 .map(|s| s.to_string()),
             &["no-target"],
         );
-        let c = ExperimentConfig::tiny().with_args(&args);
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
         assert_eq!(c.clusters, 5);
         assert_eq!(c.rounds, 7);
         assert!((c.lr - 0.5).abs() < 1e-6);
@@ -247,9 +337,25 @@ mod tests {
             ["--workers", "6"].iter().map(|s| s.to_string()),
             &[],
         );
-        let c = ExperimentConfig::tiny().with_args(&args);
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
         assert_eq!(c.workers, 6);
         assert_eq!(ExperimentConfig::tiny().workers, 0, "default is auto");
+    }
+
+    #[test]
+    fn timeline_override_applies() {
+        let args = Args::parse(
+            ["--timeline", "event", "--max-ground-wait", "1200"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.timeline, Timeline::Event);
+        assert_eq!(c.max_ground_wait_s, 1200.0);
+        let bad = Args::parse(["--timeline", "wallclock"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("--timeline"), "{e}");
     }
 
     #[test]
@@ -258,16 +364,26 @@ mod tests {
             ["--dataset", "cifar10"].iter().map(|s| s.to_string()),
             &[],
         );
-        let c = ExperimentConfig::mnist().with_args(&args);
+        let c = ExperimentConfig::mnist().with_args(&args).unwrap();
         assert_eq!(c.dataset, DatasetKind::Cifar10);
         assert_eq!(c.target_accuracy, Some(0.40));
     }
 
     #[test]
-    #[should_panic(expected = "fewer clients than clusters")]
+    fn bad_flags_are_usage_errors_not_panics() {
+        let args = Args::parse(["--k", "many"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("--k expects an integer"), "{e}");
+        let args = Args::parse(["--dataset", "imagenet"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("unknown dataset"), "{e}");
+    }
+
+    #[test]
     fn validate_catches_bad_k() {
         let mut c = ExperimentConfig::tiny();
         c.clusters = c.clients + 1;
-        c.validate();
+        let e = c.validate().unwrap_err();
+        assert!(e.to_string().contains("fewer clients than clusters"), "{e}");
     }
 }

@@ -99,7 +99,7 @@ mod tests {
         // perturb any ExperimentConfig default
         let mut args = Args::parse(std::iter::empty::<String>(), &[]);
         merge_file_into_args(&mut args, "custom_note = hello").unwrap();
-        let cfg = crate::config::ExperimentConfig::tiny().with_args(&args);
+        let cfg = crate::config::ExperimentConfig::tiny().with_args(&args).unwrap();
         let def = crate::config::ExperimentConfig::tiny();
         assert_eq!(cfg.clusters, def.clusters);
         assert_eq!(cfg.rounds, def.rounds);
@@ -111,7 +111,7 @@ mod tests {
     fn file_overrides_reach_the_config() {
         let mut args = Args::parse(std::iter::empty::<String>(), &[]);
         merge_file_into_args(&mut args, "k = 5\nrounds = 9\nworkers = 2").unwrap();
-        let cfg = crate::config::ExperimentConfig::tiny().with_args(&args);
+        let cfg = crate::config::ExperimentConfig::tiny().with_args(&args).unwrap();
         assert_eq!(cfg.clusters, 5);
         assert_eq!(cfg.rounds, 9);
         assert_eq!(cfg.workers, 2);

@@ -14,20 +14,19 @@
 //! C-FedAvg is structurally different (raw-data upload + centralised
 //! training) and lives in `baselines::cfedavg`.
 
-use super::ground;
-use super::round::{cluster_round_with, ground_exchange, MemberWork};
+use super::round::{cluster_round_with, MemberWork};
+use super::stages::{cluster_round_events, GroundCtx, Stages};
 use super::trial::Trial;
 use crate::clustering::kmeans::KMeans;
 use crate::clustering::ps_select::select_parameter_servers;
 use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
-use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights};
+use crate::config::Timeline;
+use crate::fl::aggregate::{aggregate, fedavg_weights};
 use crate::fl::evaluate::evaluate;
-use crate::fl::local::{train_params, TrainScratch};
 use crate::info;
 use crate::sim::engine::Engine;
-use crate::util::rng::stream_seed;
-use crate::util::Rng;
+use crate::sim::events::EventQueue;
 use anyhow::Result;
 
 /// Clustering policy.
@@ -296,31 +295,32 @@ fn group(assignment: &[usize], k: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Gathered result of one member's scattered local-training job.
-struct MemberOutcome {
-    member: usize,
-    params: Vec<f32>,
-    mean_loss: f32,
-    samples: usize,
+/// Run the clustered FL algorithm (FedHC / H-BASE / FedCE) to completion
+/// with the stage set derived from the configuration's timeline and the
+/// strategy's policies (see [`Stages::for_run`]).
+pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult> {
+    let stages = Stages::for_run(&trial.cfg, &strategy);
+    run_staged(trial, strategy, &stages)
 }
 
-/// Run the clustered FL algorithm (FedHC / H-BASE / FedCE) to completion.
-///
-/// The cluster stage is executed by the parallel round engine
-/// ([`crate::sim::engine::Engine`], worker count from
-/// `ExperimentConfig::workers`): local training for every active member of
-/// every cluster is scattered across worker threads, then the results are
-/// gathered and reduced **in member order** — weighted aggregation at each
-/// PS, then the Eq. 7/8–10 time/energy accounting. Each member's RNG
-/// stream is derived statelessly from `(seed, round, sat_id)`, so the
-/// metrics are byte-identical for any worker count.
-pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult> {
+/// Algorithm 1 driven through the stage traits in
+/// [`crate::coordinator::stages`]: a [`super::stages::LocalTrainStage`]
+/// scatter (the deterministic parallel round engine — metrics are
+/// byte-identical for any worker count), a
+/// [`super::stages::ClusterAggregateStage`] gather/merge **in member
+/// order**, and a [`super::stages::GroundExchangeStage`] pass every
+/// `ground_every` rounds. Under `--timeline event` the cluster and ground
+/// stages run on the `sim::events` queue and ground exchanges are gated by
+/// visibility windows; under `--timeline analytic` the legacy Eq. 7
+/// closed-form folds apply.
+pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Result<RunResult> {
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
     let k = cfg.clusters;
     let model_bits = rt.spec.param_count as f64 * 32.0;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold);
     let engine = Engine::new(cfg.workers);
+    let mut queue = EventQueue::new(); // event-timeline scratch
 
     // Algorithm 1 line 1: satellite-clustered PS selection
     let global0 = trial.clients[0].params.clone();
@@ -341,7 +341,7 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
         );
         let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
 
-        // ---- satellite cluster aggregation stage (lines 6–13) ----
+        // ---- local training stage (lines 6–10) ----
         // Scatter: every active member of every cluster local-trains from
         // its cluster model, fanned out across the engine's workers.
         let clusters = topo.clusters(k);
@@ -355,37 +355,17 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
                 }
             }
         }
-        let round_idx = round as u64;
-        let clients = &trial.clients;
-        let models = &topo.models;
-        let scattered: Vec<Result<MemberOutcome>> = engine.run_with(
+        let mut results = stages.local.train(
+            &engine,
+            rt,
+            &cfg,
+            &trial.clients,
+            &topo.models,
             &jobs,
-            || TrainScratch::new(rt),
-            |scratch, _i, &(m, c)| {
-                let client = &clients[m];
-                let mut rng = Rng::new(stream_seed(cfg.seed, round_idx, client.sat as u64));
-                let (params, out) = train_params(
-                    rt,
-                    &client.shard,
-                    models[c].clone(),
-                    cfg.local_epochs,
-                    cfg.lr,
-                    scratch,
-                    &mut rng,
-                )?;
-                Ok(MemberOutcome {
-                    member: m,
-                    params,
-                    mean_loss: out.mean_loss,
-                    samples: out.samples,
-                })
-            },
-        );
-        let mut results = Vec::with_capacity(scattered.len());
-        for r in scattered {
-            results.push(r?);
-        }
+            round as u64,
+        )?;
 
+        // ---- cluster aggregation stage (lines 11–13) ----
         // Gather: apply member results and reduce per cluster, in member
         // order (deterministic regardless of the scatter schedule).
         let mut stage_time = 0.0f64;
@@ -402,6 +382,7 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
             let mut sizes = Vec::with_capacity(n_active);
             for r in batch.iter_mut() {
                 let m = r.member;
+                debug_assert_eq!(r.cluster, c, "gather out of cluster order");
                 trial.clients[m].params = std::mem::take(&mut r.params);
                 trial.clients[m].last_loss = r.mean_loss;
                 trial.clients[m].rounds_trained += 1;
@@ -413,33 +394,44 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
                 losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
             }
-            // line 13: aggregate at the PS
-            let weights = match strategy.weights {
-                WeightPolicy::Quality => quality_weights(&losses),
-                WeightPolicy::FedAvg => fedavg_weights(&sizes),
-            };
+            // line 13: aggregate at the PS under the strategy's weighting
+            let weights = stages.cluster.member_weights(&losses, &sizes);
             let rows: Vec<&[f32]> = batch
                 .iter()
                 .map(|r| trial.clients[r.member].params.as_slice())
                 .collect();
             let mut new_model = Vec::new();
-            aggregate(rt, &rows, &weights, &mut new_model)?;
+            stages.cluster.merge(rt, &rows, &weights, &mut new_model)?;
             topo.models[c] = new_model;
 
-            // Eq. 7 inner max + Eq. 8/9 energy for this cluster
-            let (t, e) = cluster_round_with(
-                &engine,
-                &trial.link,
-                &trial.energy,
-                &work,
-                positions[topo.ps[c]],
-                model_bits,
-            );
+            // Eq. 7 inner max + Eq. 8/9 energy for this cluster: the
+            // closed-form fold and the event replay are bit-identical —
+            // the queue only changes *how* the durations are ordered
+            let (t, e) = match cfg.timeline {
+                Timeline::Analytic => cluster_round_with(
+                    &engine,
+                    &trial.link,
+                    &trial.energy,
+                    &work,
+                    positions[topo.ps[c]],
+                    model_bits,
+                ),
+                Timeline::Event => cluster_round_events(
+                    &mut queue,
+                    &trial.link,
+                    &trial.energy,
+                    &work,
+                    c,
+                    positions[topo.ps[c]],
+                    model_bits,
+                ),
+            };
             stage_time = stage_time.max(t); // clusters run in parallel
             trial.ledger.add_energy(e);
         }
-        trial.ledger.add_time(stage_time);
-        trial.clock.advance(stage_time);
+        let stage_end = trial.clock.now() + stage_time;
+        trial.clock.advance_to(stage_end);
+        trial.ledger.advance_to(stage_end);
 
         // ---- re-clustering check (lines 14–18) ----
         let mut reclustered = false;
@@ -498,46 +490,49 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
         // ---- ground station aggregation stage (lines 21–24) ----
         if round % cfg.ground_every == 0 {
             let t = trial.clock.now();
-            let positions = trial.positions();
-            let ps_pos: Vec<_> = topo.ps.iter().map(|&p| positions[p]).collect();
-            {
-                let plan = ground::plan_with_fallback(&trial.ground, &ps_pos, t);
-                let gs = &trial.ground[plan.station];
+            let ctx = GroundCtx {
+                link: &trial.link,
+                energy: &trial.energy,
+                stations: &trial.ground,
+                constellation: &trial.constellation,
+            };
+            let out = stages.ground.exchange(&ctx, &topo.ps, t, model_bits);
+            if !out.exchanged.is_empty() {
                 // Eq. 5 over the participating clusters, weighted by data
-                let sizes: Vec<usize> = plan
-                    .clusters
+                let members_of = topo.clusters(k);
+                let sizes: Vec<usize> = out
+                    .exchanged
                     .iter()
                     .map(|&c| {
-                        topo.clusters(k)[c]
+                        members_of[c]
                             .iter()
                             .map(|&m| trial.clients[m].data_size())
                             .sum()
                     })
                     .collect();
                 let weights = fedavg_weights(&sizes);
-                let rows: Vec<&[f32]> = plan
-                    .clusters
+                let rows: Vec<&[f32]> = out
+                    .exchanged
                     .iter()
                     .map(|&c| topo.models[c].as_slice())
                     .collect();
                 let mut new_global = Vec::new();
                 aggregate(rt, &rows, &weights, &mut new_global)?;
                 global = new_global;
-                // broadcast back to participating clusters
-                for &c in &plan.clusters {
+                // broadcast back to participating clusters; stale clusters
+                // keep training on their own model until a later pass
+                for &c in &out.exchanged {
                     topo.models[c].clone_from(&global);
                 }
-                // Eq. 7 outer sum over the PS↔GS links
-                let mut stage_t = 0.0;
-                for &c in &plan.clusters {
-                    let (t_x, e_x) =
-                        ground_exchange(&trial.link, &trial.energy, ps_pos[c], gs.eci(t), model_bits);
-                    stage_t += t_x;
-                    trial.ledger.add_energy(e_x);
-                }
-                trial.ledger.add_time(stage_t);
-                trial.clock.advance(stage_t);
             }
+            // Eq. 7 outer sum over the served PS↔GS links, plus (event
+            // timeline) the window waits the pass spent blocked
+            trial.ledger.add_energy(out.energy_j);
+            trial.ledger.add_stale_passes(out.stale.len());
+            trial.ledger.add_ground_wait(out.wait_s);
+            let pass_end = t + out.duration_s;
+            trial.clock.advance_to(pass_end);
+            trial.ledger.advance_to(pass_end);
         }
 
         // ---- evaluation / convergence check ----

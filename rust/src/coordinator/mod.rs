@@ -3,6 +3,15 @@
 //! re-clustering, plus the shared trial context and round accounting that
 //! the baselines reuse for apples-to-apples comparison.
 //!
+//! The round loop is decomposed into stage traits ([`stages`]) shared by
+//! FedHC, H-BASE, FedCE and C-FedAvg: local training, PS aggregation, and
+//! the ground exchange. Two timelines drive the clock
+//! (`--timeline analytic|event`, [`crate::config::Timeline`]): the
+//! analytic Eq. 7 closed forms, or a discrete-event schedule
+//! ([`crate::sim::events`]) in which PS↔GS exchanges are gated by
+//! `orbit::visibility` windows — a PS that misses its window waits or
+//! goes stale instead of teleporting parameters.
+//!
 //! The cluster stage runs on the parallel round engine
 //! ([`crate::sim::engine::Engine`]): local training fans out across worker
 //! threads and reduces deterministically, so `--workers N` changes only
@@ -29,7 +38,9 @@
 pub mod fedhc;
 pub mod ground;
 pub mod round;
+pub mod stages;
 pub mod trial;
 
-pub use fedhc::{run_clustered, RunResult, Strategy};
+pub use fedhc::{run_clustered, run_staged, RunResult, Strategy};
+pub use stages::Stages;
 pub use trial::Trial;

@@ -26,6 +26,25 @@ pub struct MemberWork {
     pub pos: Vec3,
 }
 
+/// One member's `(t_cmp, t_com, distance-to-PS)` split — the raw durations
+/// both timelines consume. The analytic fold sums `t_cmp + t_com` per
+/// member; the event timeline schedules a `ComputeDone` at `t_cmp` and a
+/// `TxDone` at `t_cmp + t_com`, which keeps the floating-point operation
+/// order (and thus the numbers) identical across timelines.
+pub fn member_times(
+    link: &LinkModel,
+    m: &MemberWork,
+    ps_pos: Vec3,
+    model_bits: f64,
+) -> (f64, f64, f64) {
+    let d = m.pos.dist(ps_pos).max(1.0);
+    (
+        link.compute_time(m.samples, m.cpu_hz),
+        link.comm_time(model_bits, d),
+        d,
+    )
+}
+
 /// One member's contribution to the cluster round: `(t_cmp + t_com,
 /// Eq. 8 upload + Eq. 9 compute + Eq. 8 PS broadcast back, distance to
 /// the PS)`. Pure per-member math — the scatter job of the engine-mapped
@@ -37,8 +56,8 @@ fn member_cost(
     ps_pos: Vec3,
     model_bits: f64,
 ) -> (f64, f64, f64) {
-    let d = m.pos.dist(ps_pos).max(1.0);
-    let t = link.compute_time(m.samples, m.cpu_hz) + link.comm_time(model_bits, d);
+    let (t_cmp, t_com, d) = member_times(link, m, ps_pos, model_bits);
+    let t = t_cmp + t_com;
     let e = energy.tx_energy(model_bits, d)
         + energy.compute_energy(m.samples, m.cpu_hz)
         + energy.tx_energy(model_bits, d);

@@ -1,0 +1,536 @@
+//! Stage decomposition of the round loop.
+//!
+//! The coordinator drives three stages that every clustered method (FedHC,
+//! H-BASE, FedCE) shares and that C-FedAvg reuses for its central step:
+//!
+//! 1. [`LocalTrainStage`] — scatter local training across the parallel
+//!    round engine and gather [`MemberOutcome`]s in job order.
+//! 2. [`ClusterAggregateStage`] — weight and merge member models at each
+//!    cluster PS (Eq. 12 quality weights or Eq. 5 data-size weights).
+//! 3. [`GroundExchangeStage`] — the PS↔GS pass. Two implementations give
+//!    the two timelines: [`AnalyticGroundExchange`] keeps the legacy
+//!    closed-form Eq. 7 sum over whichever PSes the plan finds visible,
+//!    while [`EventGroundExchange`] runs a discrete-event schedule in
+//!    which **every** cluster attempts the pass, gated by
+//!    `orbit::visibility` windows — a PS whose window has not opened
+//!    waits for it (the wait is real simulated time) and a PS with no
+//!    window inside the staleness bound skips the pass with a stale model.
+//!
+//! All event times are **offsets from the stage start** and are computed
+//! with the same floating-point operation order as the analytic folds, so
+//! when every window is open at the stage start the two timelines produce
+//! bit-identical ledgers (pinned by `tests/timeline_equivalence.rs`).
+
+use super::ground;
+use super::round::{ground_exchange, member_times, MemberWork};
+use crate::config::{ExperimentConfig, Timeline};
+use crate::coordinator::fedhc::{Strategy, WeightPolicy};
+use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights};
+use crate::fl::client::SatClient;
+use crate::fl::local::{train_params, TrainScratch};
+use crate::network::{EnergyModel, LinkModel};
+use crate::orbit::propagate::Constellation;
+use crate::orbit::visibility::next_window_open;
+use crate::orbit::GroundStation;
+use crate::runtime::ModelRuntime;
+use crate::sim::engine::Engine;
+use crate::sim::events::{Event, EventQueue};
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Gathered result of one member's scattered local-training job.
+pub struct MemberOutcome {
+    /// Client index.
+    pub member: usize,
+    /// Cluster the member trained for.
+    pub cluster: usize,
+    /// Updated parameters.
+    pub params: Vec<f32>,
+    /// Mean training loss over the round (drives Eq. 12 weights).
+    pub mean_loss: f32,
+    /// Samples processed (drives the Eq. 7/9 time & energy models).
+    pub samples: usize,
+}
+
+/// Local-training stage: run every `(member, cluster)` job from the
+/// matching cluster model and return outcomes in job order.
+pub trait LocalTrainStage {
+    #[allow(clippy::too_many_arguments)]
+    fn train(
+        &self,
+        engine: &Engine,
+        rt: &ModelRuntime,
+        cfg: &ExperimentConfig,
+        clients: &[SatClient],
+        models: &[Vec<f32>],
+        jobs: &[(usize, usize)],
+        round: u64,
+    ) -> Result<Vec<MemberOutcome>>;
+}
+
+/// Default local-training stage: the deterministic parallel round engine.
+/// Each job's RNG stream derives statelessly from `(seed, round, sat_id)`,
+/// so results are byte-identical for any worker count.
+pub struct EngineLocalTrain;
+
+impl LocalTrainStage for EngineLocalTrain {
+    #[allow(clippy::too_many_arguments)]
+    fn train(
+        &self,
+        engine: &Engine,
+        rt: &ModelRuntime,
+        cfg: &ExperimentConfig,
+        clients: &[SatClient],
+        models: &[Vec<f32>],
+        jobs: &[(usize, usize)],
+        round: u64,
+    ) -> Result<Vec<MemberOutcome>> {
+        let scattered: Vec<Result<MemberOutcome>> = engine.run_with(
+            jobs,
+            || TrainScratch::new(rt),
+            |scratch, _i, &(m, c)| {
+                let client = &clients[m];
+                let mut rng = Rng::new(stream_seed(cfg.seed, round, client.sat as u64));
+                let (params, out) = train_params(
+                    rt,
+                    &client.shard,
+                    models[c].clone(),
+                    cfg.local_epochs,
+                    cfg.lr,
+                    scratch,
+                    &mut rng,
+                )?;
+                Ok(MemberOutcome {
+                    member: m,
+                    cluster: c,
+                    params,
+                    mean_loss: out.mean_loss,
+                    samples: out.samples,
+                })
+            },
+        );
+        let mut results = Vec::with_capacity(scattered.len());
+        for r in scattered {
+            results.push(r?);
+        }
+        Ok(results)
+    }
+}
+
+/// Intra-cluster aggregation at the PS.
+pub trait ClusterAggregateStage {
+    /// Member weights for the PS merge (Eq. 12 or Eq. 5).
+    fn member_weights(&self, losses: &[f32], sizes: &[usize]) -> Vec<f32>;
+
+    /// Weighted model merge (kernel-backed when the cluster fits the AOT
+    /// slot count — see [`aggregate`]).
+    fn merge(
+        &self,
+        rt: &ModelRuntime,
+        rows: &[&[f32]],
+        weights: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        aggregate(rt, rows, weights, out)
+    }
+}
+
+/// The strategy-selected weighting: Eq. 12 inverse-loss quality weights
+/// (FedHC) or Eq. 5 data-size FedAvg weights (baselines).
+pub struct WeightedClusterAggregate {
+    pub policy: WeightPolicy,
+}
+
+impl ClusterAggregateStage for WeightedClusterAggregate {
+    fn member_weights(&self, losses: &[f32], sizes: &[usize]) -> Vec<f32> {
+        match self.policy {
+            WeightPolicy::Quality => quality_weights(losses),
+            WeightPolicy::FedAvg => fedavg_weights(sizes),
+        }
+    }
+}
+
+/// Borrowed context for a ground pass.
+pub struct GroundCtx<'a> {
+    pub link: &'a LinkModel,
+    pub energy: &'a EnergyModel,
+    pub stations: &'a [GroundStation],
+    /// Client satellites (cluster PS indices point into its elements).
+    pub constellation: &'a Constellation,
+}
+
+/// Outcome of one ground-station pass.
+pub struct GroundOutcome {
+    /// Station that led the pass.
+    pub station: usize,
+    /// Clusters whose PS exchanged with the station, in completion order.
+    pub exchanged: Vec<usize>,
+    /// Clusters whose PS missed the pass (no window within the staleness
+    /// bound, or the antenna stayed busy past their window).
+    pub stale: Vec<usize>,
+    /// Simulated duration of the pass (window waits + transfers), seconds.
+    pub duration_s: f64,
+    /// Satellite-side transmit energy of the pass, joules.
+    pub energy_j: f64,
+    /// Total time PSes spent waiting for their window to open, seconds.
+    pub wait_s: f64,
+}
+
+/// Ground-station exchange stage: PS models up, global model back down.
+pub trait GroundExchangeStage {
+    /// Run one pass for the clusters whose PS client indices are `ps`,
+    /// starting at absolute sim time `now`.
+    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, model_bits: f64) -> GroundOutcome;
+}
+
+/// Legacy Eq. 7 semantics: the plan's station serves exactly the PSes it
+/// currently sees (nearest pair as a fallback), the stage time is the sum
+/// over those links, and invisible clusters skip the pass for free.
+pub struct AnalyticGroundExchange;
+
+impl GroundExchangeStage for AnalyticGroundExchange {
+    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, model_bits: f64) -> GroundOutcome {
+        let ps_pos: Vec<_> = ps
+            .iter()
+            .map(|&p| ctx.constellation.elements[p].position_eci(now))
+            .collect();
+        let plan = ground::plan_with_fallback(ctx.stations, &ps_pos, now);
+        let gs_pos = ctx.stations[plan.station].eci(now);
+        let mut duration = 0.0f64;
+        let mut energy = 0.0f64;
+        for &c in &plan.clusters {
+            let (t_x, e_x) = ground_exchange(ctx.link, ctx.energy, ps_pos[c], gs_pos, model_bits);
+            duration += t_x;
+            energy += e_x;
+        }
+        GroundOutcome {
+            station: plan.station,
+            exchanged: plan.clusters,
+            stale: Vec::new(),
+            duration_s: duration,
+            energy_j: energy,
+            wait_s: 0.0,
+        }
+    }
+}
+
+/// Event-timeline pass: every cluster attempts the exchange with the
+/// plan's station. Each PS's next visibility window (searched up to
+/// `max_wait_s` ahead) enters the queue as a `WindowOpen` plus — for
+/// windows that genuinely close inside the horizon — a `WindowClose`
+/// marking the interval end on the timeline (the stale decision itself
+/// reads the close offset when the `WindowOpen` pops, since that is when
+/// the antenna commits). The single antenna serves transfers in
+/// window-open order, one at a time. A PS with no window inside the bound
+/// — or whose bounded window closes before the antenna frees up — goes
+/// stale and keeps its model. Zero-wait transfers use the link budget
+/// frozen at the pass start, which makes a fully-visible pass
+/// bit-identical to [`AnalyticGroundExchange`]; waited transfers are
+/// billed at their window-open geometry.
+pub struct EventGroundExchange {
+    pub max_wait_s: f64,
+    pub window_step_s: f64,
+}
+
+impl GroundExchangeStage for EventGroundExchange {
+    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, model_bits: f64) -> GroundOutcome {
+        let ps_pos: Vec<_> = ps
+            .iter()
+            .map(|&p| ctx.constellation.elements[p].position_eci(now))
+            .collect();
+        let station = ground::plan_with_fallback(ctx.stations, &ps_pos, now).station;
+        let gs = &ctx.stations[station];
+        let gs_pos = gs.eci(now);
+
+        // schedule each PS's next window as offsets from the pass start
+        let k = ps.len();
+        let mut queue = EventQueue::new();
+        let mut open_off = vec![0.0f64; k];
+        let mut close_off = vec![0.0f64; k];
+        let mut stale = Vec::new();
+        for (c, &sat) in ps.iter().enumerate() {
+            let elem = &ctx.constellation.elements[sat];
+            match next_window_open(gs, elem, now, self.max_wait_s, self.window_step_s) {
+                Some((open, close)) => {
+                    open_off[c] = open - now;
+                    // a close at the search cap means the window outlives
+                    // the horizon — treat it as unbounded so an
+                    // always-visible PS can never be busy-staled, however
+                    // long the antenna queue grows
+                    close_off[c] = if close >= open + self.max_wait_s {
+                        f64::INFINITY
+                    } else {
+                        close - now
+                    };
+                    queue.push(open_off[c], Event::WindowOpen { cluster: c });
+                    if close_off[c].is_finite() {
+                        queue.push(close_off[c], Event::WindowClose { cluster: c });
+                    }
+                }
+                None => stale.push(c),
+            }
+        }
+
+        // drain: the antenna serves one transfer at a time in window order
+        let mut exchanged = Vec::new();
+        let mut free_off = 0.0f64;
+        let mut end_off = 0.0f64;
+        let mut wait_s = 0.0f64;
+        let mut energy = 0.0f64;
+        while let Some(ev) = queue.pop() {
+            match ev.event {
+                Event::WindowOpen { cluster } => {
+                    let start = ev.at.max(free_off);
+                    if start > close_off[cluster] {
+                        // the antenna stayed busy past this window
+                        stale.push(cluster);
+                        continue;
+                    }
+                    // link budget: frozen at the pass start for zero-wait
+                    // transfers (bit-identity with the analytic stage), but
+                    // evaluated at the window-open instant for transfers
+                    // that waited — a waited PS is billed for its in-window
+                    // slant range, not the occluded geometry it had when
+                    // the pass began
+                    let (sat_pos, station_pos) = if open_off[cluster] > 0.0 {
+                        let t_open = now + open_off[cluster];
+                        (
+                            ctx.constellation.elements[ps[cluster]].position_eci(t_open),
+                            gs.eci(t_open),
+                        )
+                    } else {
+                        (ps_pos[cluster], gs_pos)
+                    };
+                    let (t_x, e_x) =
+                        ground_exchange(ctx.link, ctx.energy, sat_pos, station_pos, model_bits);
+                    wait_s += open_off[cluster];
+                    energy += e_x;
+                    free_off = start + t_x;
+                    queue.push(
+                        free_off,
+                        Event::TxDone {
+                            member: ps[cluster],
+                            cluster,
+                        },
+                    );
+                }
+                Event::TxDone { cluster, .. } => {
+                    exchanged.push(cluster);
+                    end_off = end_off.max(ev.at);
+                }
+                Event::WindowClose { .. } => {}
+                Event::ComputeDone { .. } | Event::EvalDue { .. } => {
+                    unreachable!("ground pass scheduled a non-ground event")
+                }
+            }
+        }
+
+        GroundOutcome {
+            station,
+            exchanged,
+            stale,
+            duration_s: end_off,
+            energy_j: energy,
+            wait_s,
+        }
+    }
+}
+
+/// Queue-driven replay of one cluster's intra-cluster round: every member
+/// gets a `ComputeDone` at `t_cmp` and a `TxDone` at `t_cmp + t_com`
+/// (offsets from the stage start); the PS broadcast to the farthest member
+/// closes the round. Bit-identical to [`super::round::cluster_round`] by
+/// construction — the same durations enter the same folds, the queue only
+/// orders them.
+pub fn cluster_round_events(
+    queue: &mut EventQueue,
+    link: &LinkModel,
+    energy: &EnergyModel,
+    members: &[MemberWork],
+    cluster: usize,
+    ps_pos: crate::orbit::Vec3,
+    model_bits: f64,
+) -> (f64, f64) {
+    debug_assert!(queue.is_empty(), "cluster round expects a drained queue");
+    let mut uplink = Vec::with_capacity(members.len());
+    let mut e_total = 0.0f64;
+    let mut far: Option<f64> = None;
+    for (i, m) in members.iter().enumerate() {
+        let (t_cmp, t_com, d) = member_times(link, m, ps_pos, model_bits);
+        queue.push(t_cmp, Event::ComputeDone { member: i, cluster });
+        uplink.push(t_com);
+        e_total += energy.tx_energy(model_bits, d)
+            + energy.compute_energy(m.samples, m.cpu_hz)
+            + energy.tx_energy(model_bits, d);
+        far = Some(far.map_or(d, |a: f64| a.max(d)));
+    }
+    let mut t_max = 0.0f64;
+    while let Some(ev) = queue.pop() {
+        match ev.event {
+            Event::ComputeDone { member, cluster: c } => {
+                queue.push(ev.at + uplink[member], Event::TxDone { member, cluster: c });
+            }
+            Event::TxDone { .. } => t_max = t_max.max(ev.at),
+            _ => unreachable!("cluster round scheduled a non-cluster event"),
+        }
+    }
+    if let Some(d) = far {
+        t_max += link.comm_time(model_bits, d);
+    }
+    (t_max, e_total)
+}
+
+/// The stage set one run drives, assembled from the configuration's
+/// timeline and the strategy's policies.
+pub struct Stages {
+    pub local: Box<dyn LocalTrainStage>,
+    pub cluster: Box<dyn ClusterAggregateStage>,
+    pub ground: Box<dyn GroundExchangeStage>,
+}
+
+impl Stages {
+    pub fn for_run(cfg: &ExperimentConfig, strategy: &Strategy) -> Stages {
+        let ground: Box<dyn GroundExchangeStage> = match cfg.timeline {
+            Timeline::Analytic => Box::new(AnalyticGroundExchange),
+            Timeline::Event => Box::new(EventGroundExchange {
+                max_wait_s: cfg.max_ground_wait_s,
+                window_step_s: cfg.window_step_s,
+            }),
+        };
+        Stages {
+            local: Box::new(EngineLocalTrain),
+            cluster: Box::new(WeightedClusterAggregate {
+                policy: strategy.weights,
+            }),
+            ground,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::round::cluster_round;
+    use crate::network::NetworkParams;
+    use crate::orbit::elements::OrbitalElements;
+    use crate::orbit::Vec3;
+
+    fn models() -> (LinkModel, EnergyModel) {
+        let l = LinkModel::new(NetworkParams::default().with_model_params(44_426));
+        (l, EnergyModel::new(l))
+    }
+
+    #[test]
+    fn event_cluster_round_matches_analytic_bitwise() {
+        let (l, e) = models();
+        let ps = Vec3::new(0.0, 0.0, 7.0e6);
+        let bits = 44_426.0 * 32.0;
+        let members: Vec<MemberWork> = (0..17)
+            .map(|i| MemberWork {
+                samples: 320 + 16 * i,
+                cpu_hz: 0.5e9 + 3.3e7 * i as f64,
+                pos: Vec3::new(1.0e5 + 4.0e4 * i as f64, -2.0e4 * i as f64, 7.0e6),
+            })
+            .collect();
+        let analytic = cluster_round(&l, &e, &members, ps, bits);
+        let mut queue = EventQueue::new();
+        let event = cluster_round_events(&mut queue, &l, &e, &members, 0, ps, bits);
+        assert_eq!(analytic, event, "timelines disagree on the cluster round");
+        assert!(queue.is_empty());
+        // and for the empty cluster
+        let mut queue = EventQueue::new();
+        assert_eq!(
+            cluster_round(&l, &e, &[], ps, bits),
+            cluster_round_events(&mut queue, &l, &e, &[], 0, ps, bits)
+        );
+    }
+
+    /// Two equatorial satellites (one overhead at t=0, one antipodal) and
+    /// the context both ground stages consume.
+    fn two_sat_setup() -> (LinkModel, EnergyModel, Constellation) {
+        let (l, e) = models();
+        let c = Constellation::new(vec![
+            OrbitalElements::circular(500_000.0, 0.0, 0.0, 0.0),
+            OrbitalElements::circular(500_000.0, 0.0, 0.0, std::f64::consts::PI),
+        ]);
+        (l, e, c)
+    }
+
+    #[test]
+    fn ground_stages_agree_when_always_visible() {
+        let (l, e, c) = two_sat_setup();
+        // -91° is below the geometric elevation minimum of -90°, so even a
+        // perfectly antipodal satellite counts as visible
+        let stations = vec![GroundStation::new(0, "everywhere", 0.0, 0.0, -91.0)];
+        let ctx = GroundCtx {
+            link: &l,
+            energy: &e,
+            stations: &stations,
+            constellation: &c,
+        };
+        let bits = 1e6;
+        let analytic = AnalyticGroundExchange.exchange(&ctx, &[0, 1], 0.0, bits);
+        let event = EventGroundExchange {
+            max_wait_s: 7000.0,
+            window_step_s: 30.0,
+        }
+        .exchange(&ctx, &[0, 1], 0.0, bits);
+        assert_eq!(analytic.exchanged, vec![0, 1]);
+        assert_eq!(event.exchanged, vec![0, 1]);
+        assert_eq!(analytic.duration_s, event.duration_s, "durations diverged");
+        assert_eq!(analytic.energy_j, event.energy_j, "energies diverged");
+        assert_eq!(event.wait_s, 0.0);
+        assert!(event.stale.is_empty() && analytic.stale.is_empty());
+    }
+
+    #[test]
+    fn event_ground_waits_for_the_window() {
+        let (l, e, c) = two_sat_setup();
+        // a 10° mask: sat 0 is overhead (visible now), sat 1 is antipodal
+        // and must wait roughly half a synodic period for its pass
+        let stations = vec![GroundStation::new(0, "eq", 0.0, 0.0, 10.0)];
+        let ctx = GroundCtx {
+            link: &l,
+            energy: &e,
+            stations: &stations,
+            constellation: &c,
+        };
+        let out = EventGroundExchange {
+            max_wait_s: 7000.0,
+            window_step_s: 30.0,
+        }
+        .exchange(&ctx, &[0, 1], 0.0, 1e6);
+        assert_eq!(out.exchanged, vec![0, 1], "both should eventually exchange");
+        assert!(out.wait_s > 1000.0, "antipodal PS should wait: {}", out.wait_s);
+        assert!(out.duration_s > out.wait_s * 0.5, "waits must be simulated time");
+        assert!(out.stale.is_empty());
+        // the analytic stage charges nothing for the invisible PS
+        let analytic = AnalyticGroundExchange.exchange(&ctx, &[0, 1], 0.0, 1e6);
+        assert_eq!(analytic.exchanged, vec![0]);
+        assert!(out.duration_s > analytic.duration_s);
+    }
+
+    #[test]
+    fn event_ground_marks_unreachable_ps_stale() {
+        let (l, e, c) = two_sat_setup();
+        // an equatorial orbit never rises above 10° for a polar station:
+        // with no window inside the bound every PS goes stale
+        let stations = vec![GroundStation::new(0, "polar", 85.0, 0.0, 10.0)];
+        let ctx = GroundCtx {
+            link: &l,
+            energy: &e,
+            stations: &stations,
+            constellation: &c,
+        };
+        let out = EventGroundExchange {
+            max_wait_s: 2000.0,
+            window_step_s: 30.0,
+        }
+        .exchange(&ctx, &[0, 1], 0.0, 1e6);
+        assert!(out.exchanged.is_empty());
+        assert_eq!(out.stale, vec![0, 1]);
+        assert_eq!(out.duration_s, 0.0);
+        assert_eq!(out.energy_j, 0.0);
+    }
+}

@@ -40,7 +40,7 @@ pub struct Trial<'rt> {
 impl<'rt> Trial<'rt> {
     /// Build a trial: constellation, data shards, initial models.
     pub fn new(cfg: ExperimentConfig, manifest: &Manifest, rt: &'rt ModelRuntime) -> Result<Trial<'rt>> {
-        cfg.validate();
+        cfg.validate()?;
         assert_eq!(
             rt.spec.name,
             cfg.variant(),

@@ -41,5 +41,5 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-pub use config::ExperimentConfig;
+pub use config::{ExperimentConfig, Timeline};
 pub use coordinator::{run_clustered, RunResult, Strategy, Trial};

@@ -12,7 +12,7 @@
 //!   fedhc table1 --preset tiny --rounds 30
 //!   fedhc inspect
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use fedhc::baselines::run_cfedavg;
 use fedhc::config::parse::merge_file_into_args;
 use fedhc::config::ExperimentConfig;
@@ -73,6 +73,14 @@ COMMON OPTIONS
   --k N --clients N --rounds N --epochs N --lr F --seed N
   --target F | --no-target       convergence target accuracy
   --ground-every N --z F --alpha F --beta F
+  --timeline analytic|event      clock semantics: closed-form Eq. 7 folds, or
+                                 the discrete-event timeline with PS↔GS
+                                 exchanges gated by visibility windows
+                                 (paper presets default to event; tiny pins
+                                 analytic)
+  --max-ground-wait S            event timeline: seconds a PS may wait for a
+                                 window before going stale (default 7000)
+  --window-step S                event timeline: window-search sampling step
   --workers N                    round-engine worker threads (0 = all cores;
                                  any value gives identical metrics)
   --config FILE                  key=value config file (CLI wins)
@@ -86,10 +94,10 @@ BACKENDS
     );
 }
 
-fn config_from(args: &Args) -> ExperimentConfig {
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
     let preset = args.get_or("preset", "mnist");
     ExperimentConfig::preset(preset)
-        .unwrap_or_else(|| panic!("unknown preset '{preset}'"))
+        .ok_or_else(|| anyhow!("unknown preset '{preset}' (expected tiny|mnist|cifar10)"))?
         .with_args(args)
 }
 
@@ -113,15 +121,16 @@ fn run_method(cfg: &ExperimentConfig, manifest: &Manifest, rt: &ModelRuntime, me
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = config_from(args);
+    let cfg = config_from(args)?;
     let method = args.get_or("method", "fedhc");
     let (manifest, rt) = load_runtime(&cfg)?;
     eprintln!(
-        "running {method} on {} (K={}, clients={}, rounds≤{}, platform={})",
+        "running {method} on {} (K={}, clients={}, rounds≤{}, timeline={}, platform={})",
         cfg.dataset.name(),
         cfg.clusters,
         cfg.clients,
         cfg.rounds,
+        cfg.timeline.name(),
         rt.platform()
     );
     let res = run_method(&cfg, &manifest, &rt, method)?;
@@ -140,6 +149,12 @@ fn print_result(res: &RunResult) {
     println!("  total energy  : {:.0} J (Eq. 10)", res.ledger.energy_j);
     println!("  reclusters    : {}", res.ledger.reclusters);
     println!("  maml adapts   : {}", res.ledger.maml_adaptations);
+    if res.ledger.ground_wait_s > 0.0 || res.ledger.stale_passes > 0 {
+        println!(
+            "  ground waits  : {:.0} s over visibility windows, {} stale pass(es)",
+            res.ledger.ground_wait_s, res.ledger.stale_passes
+        );
+    }
     match res.converged_at {
         Some((round, t, e)) => {
             println!("  converged     : round {round} (t={t:.0} s, e={e:.0} J)")
@@ -152,12 +167,15 @@ const TABLE1_METHODS: &[&str] = &["cfedavg", "hbase", "fedce", "fedhc"];
 const TABLE1_NAMES: &[&str] = &["C-FedAvg", "H-BASE", "FedCE", "FedHC"];
 
 fn cmd_table1(args: &Args) -> Result<()> {
-    let base = config_from(args);
-    let ks: Vec<usize> = args
-        .get_or("ks", "3,4,5")
-        .split(',')
-        .map(|s| s.parse().expect("--ks expects comma-separated integers"))
-        .collect();
+    let base = config_from(args)?;
+    let mut ks: Vec<usize> = Vec::new();
+    for s in args.get_or("ks", "3,4,5").split(',') {
+        ks.push(
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow!("--ks expects comma-separated integers, got '{s}'"))?,
+        );
+    }
     let target = base.target_accuracy.unwrap_or(0.8);
     let (manifest, rt) = load_runtime(&base)?;
 
@@ -189,7 +207,7 @@ fn cmd_table1(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {
-    let mut base = config_from(args);
+    let mut base = config_from(args)?;
     base.target_accuracy = None; // fig3 runs a fixed round budget
     let k = base.clusters;
     let (manifest, rt) = load_runtime(&base)?;
@@ -201,7 +219,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     }
     let series: Vec<(&str, &fedhc::metrics::Ledger)> =
         ledgers.iter().map(|(n, l)| (*n, l)).collect();
-    let every = args.get_usize("sample-every", (base.rounds / 10).max(1));
+    let every = args.get_usize("sample-every", (base.rounds / 10).max(1))?;
     println!("{}", format_fig3(base.dataset.name(), k, &series, every));
     let out = Path::new(args.get_or("out", "results"));
     for (name, ledger) in &ledgers {

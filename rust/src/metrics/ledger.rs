@@ -33,6 +33,13 @@ pub struct Ledger {
     pub reclusters: usize,
     /// Count of MAML warm-starts applied.
     pub maml_adaptations: usize,
+    /// Event timeline: ground passes a PS missed entirely — no visibility
+    /// window within the staleness bound, or the ground antenna stayed
+    /// busy past its window — so the cluster kept a stale model.
+    pub stale_passes: usize,
+    /// Event timeline: cumulative time PSes spent waiting for a ground
+    /// visibility window to open (already included in `time_s`).
+    pub ground_wait_s: f64,
 }
 
 impl Ledger {
@@ -44,6 +51,33 @@ impl Ledger {
     pub fn add_time(&mut self, dt: f64) {
         assert!(dt >= 0.0 && dt.is_finite(), "bad time increment {dt}");
         self.time_s += dt;
+    }
+
+    /// Advance the cumulative clock to an absolute event timestamp. The
+    /// event timeline feeds the ledger from event-queue timestamps rather
+    /// than per-round max/sum folds; time stays monotone by construction.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t.is_finite(), "non-finite ledger timestamp");
+        assert!(
+            t >= self.time_s,
+            "ledger time went backwards: {} -> {t}",
+            self.time_s
+        );
+        self.time_s = t;
+    }
+
+    /// Record ground passes PSes missed entirely (event timeline): no
+    /// visibility window within the staleness bound, or the ground antenna
+    /// stayed busy past the window they had.
+    pub fn add_stale_passes(&mut self, n: usize) {
+        self.stale_passes += n;
+    }
+
+    /// Record time spent waiting on a visibility window (diagnostic; the
+    /// wait itself reaches `time_s` via [`Ledger::advance_to`]).
+    pub fn add_ground_wait(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad wait increment {dt}");
+        self.ground_wait_s += dt;
     }
 
     /// Add consumed energy.
@@ -115,5 +149,26 @@ mod tests {
     #[should_panic(expected = "bad time")]
     fn rejects_negative_time() {
         Ledger::new().add_time(-1.0);
+    }
+
+    #[test]
+    fn advance_to_follows_event_timestamps() {
+        let mut l = Ledger::new();
+        l.advance_to(12.5);
+        l.advance_to(12.5); // same instant is fine
+        l.advance_to(80.0);
+        assert_eq!(l.time_s, 80.0);
+        l.add_ground_wait(30.0);
+        l.add_stale_passes(2);
+        assert_eq!(l.ground_wait_s, 30.0);
+        assert_eq!(l.stale_passes, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "ledger time went backwards")]
+    fn advance_to_rejects_past_timestamps() {
+        let mut l = Ledger::new();
+        l.advance_to(10.0);
+        l.advance_to(9.0);
     }
 }

@@ -24,6 +24,8 @@ pub fn to_json(ledger: &Ledger) -> Json {
         ("energy_j", Json::num(ledger.energy_j)),
         ("reclusters", Json::num(ledger.reclusters as f64)),
         ("maml_adaptations", Json::num(ledger.maml_adaptations as f64)),
+        ("stale_passes", Json::num(ledger.stale_passes as f64)),
+        ("ground_wait_s", Json::num(ledger.ground_wait_s)),
         (
             "records",
             Json::Arr(

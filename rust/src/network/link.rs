@@ -1,12 +1,20 @@
 //! Link model: achievable rate (paper Eq. 6) with a free-space path-loss
 //! channel gain, plus computation time `t_cmp = D·Q/f`.
+//!
+//! **Unit convention.** The paper's Eq. 6 uses a natural logarithm, so
+//! [`LinkModel::rate`] is nats/s, not bits/s; the whole reproduction
+//! (payloads in bits, `t_com = ζ/r`) is calibrated against that form and
+//! treats it as the paper's "rate". [`LinkModel::rate_bits`] provides the
+//! Shannon `B·log2(1+SNR)` bit rate (= `rate / ln 2`) for callers that
+//! need physical units.
 
 use super::params::NetworkParams;
 use crate::orbit::SPEED_OF_LIGHT;
 
 /// Achievable-rate link model. The paper writes
 /// `r_i = B_i ln(1 + P0 h_i / N0)` (nats/s with ln; we keep the paper's
-/// form). Channel gain `h_i` follows free-space path loss at the carrier:
+/// form — see the module docs and [`LinkModel::rate_bits`]). Channel gain
+/// `h_i` follows free-space path loss at the carrier:
 /// `h = G (c / (4π d f_c))²`.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkModel {
@@ -26,11 +34,23 @@ impl LinkModel {
         self.params.antenna_gain * fspl * fspl
     }
 
-    /// Eq. 6 achievable rate over distance `d`, bits/s equivalent.
+    /// Eq. 6 achievable rate over distance `d`, **as the paper writes it**:
+    /// `r = B·ln(1 + SNR)` with a natural logarithm, which is nats/s — not
+    /// bits/s (Shannon capacity uses `log2`). Every reproduced time/energy
+    /// number is calibrated against this form, so it stays the unit the
+    /// simulator folds with; use [`LinkModel::rate_bits`] when an actual
+    /// bit rate is required. The two differ by a fixed factor of
+    /// `ln 2 ≈ 0.693`.
     pub fn rate(&self, d: f64) -> f64 {
         let p = &self.params;
         let snr = p.tx_power_w * self.channel_gain(d) / p.noise_w;
         p.bandwidth_hz * (1.0 + snr).ln()
+    }
+
+    /// Shannon-form achievable rate in bits/s: `B·log2(1 + SNR)`. This is
+    /// [`LinkModel::rate`] (the paper's nats/s form) divided by `ln 2`.
+    pub fn rate_bits(&self, d: f64) -> f64 {
+        self.rate(d) / std::f64::consts::LN_2
     }
 
     /// Ground-link rate: same model scaled by the GS antenna advantage.
@@ -80,6 +100,26 @@ mod tests {
         // the kb/s–Gb/s envelope (the paper never states absolute rates)
         let r = link().rate(1300e3);
         assert!(r > 1e3 && r < 1e10, "rate {r}");
+    }
+
+    #[test]
+    fn rate_is_nats_and_rate_bits_is_shannon() {
+        // pin both conventions: `rate` is the paper's B·ln(1+SNR) nats/s,
+        // `rate_bits` is the Shannon B·log2(1+SNR) — exactly ln2 apart
+        let l = link();
+        for &d in &[500e3, 1300e3, 2500e3] {
+            let p = &l.params;
+            let snr = p.tx_power_w * l.channel_gain(d) / p.noise_w;
+            assert_eq!(l.rate(d), p.bandwidth_hz * (1.0 + snr).ln(), "d={d}");
+            assert_eq!(l.rate_bits(d), l.rate(d) / std::f64::consts::LN_2, "d={d}");
+            let log2_form = p.bandwidth_hz * (1.0 + snr).log2();
+            assert!(
+                (l.rate_bits(d) / log2_form - 1.0).abs() < 1e-12,
+                "rate_bits is not B·log2(1+SNR) at d={d}"
+            );
+            // bits/s is the larger number (1 nat ≈ 1.44 bits)
+            assert!(l.rate_bits(d) > l.rate(d));
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Visibility computation: which satellites a ground station can see, when,
 //! and which satellite pairs have line-of-sight (for intra-cluster links).
 
+use super::elements::OrbitalElements;
 use super::geo::{GroundStation, Vec3};
 use super::propagate::Constellation;
 use super::EARTH_RADIUS;
@@ -74,6 +75,57 @@ pub fn windows(
     }
     out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
     out
+}
+
+/// Earliest visibility window of satellite `e` from `gs` at or after `t`,
+/// searched up to `t + horizon` with sampling step `dt` and
+/// bisection-refined edges. Returns `(open, close)` with `open == t`
+/// exactly when the satellite is already visible; `close` is capped at
+/// `open + horizon` when the window outlives the search. `None` when the
+/// satellite stays invisible for the whole horizon. Windows shorter than
+/// `dt` can be missed by the sampling (and their `close` edge is only
+/// `dt`-accurate when caught) — pick `dt` below the shortest pass the
+/// geometry can produce, as [`windows`] does.
+///
+/// This is the event timeline's gate: a cluster PS whose next window opens
+/// after `t` *waits* until `open` before its ground exchange, and goes
+/// stale when this returns `None`.
+pub fn next_window_open(
+    gs: &GroundStation,
+    e: &OrbitalElements,
+    t: f64,
+    horizon: f64,
+    dt: f64,
+) -> Option<(f64, f64)> {
+    assert!(horizon > 0.0 && dt > 0.0);
+    let vis = |x: f64| gs.sees(e.position_eci(x), x);
+    let t_end = t + horizon;
+    let open = if vis(t) {
+        t
+    } else {
+        let mut x = t;
+        let mut open = None;
+        while x < t_end {
+            let xn = (x + dt).min(t_end);
+            if vis(xn) {
+                open = Some(bisect_edge(&vis, x, xn));
+                break;
+            }
+            x = xn;
+        }
+        open?
+    };
+    // closing edge: scan at most one horizon past the opening
+    let close_end = open + horizon;
+    let mut x = open;
+    while x < close_end {
+        let xn = (x + dt).min(close_end);
+        if !vis(xn) {
+            return Some((open, bisect_edge(&vis, x, xn)));
+        }
+        x = xn;
+    }
+    Some((open, close_end))
 }
 
 fn bisect_edge(vis: &dyn Fn(f64) -> bool, mut lo: f64, mut hi: f64) -> f64 {
@@ -161,6 +213,78 @@ mod tests {
             let mid = 0.5 * (w.start + w.end);
             assert!(gs.sees(c.elements[w.sat].position_eci(mid), mid));
         }
+    }
+
+    /// Equatorial satellite at 500 km that is directly over an equatorial
+    /// station at t = 0 — a geometry whose pass times are easy to reason
+    /// about (synodic period ≈ 6076 s, one pass per period).
+    fn overhead_pair() -> (GroundStation, Constellation) {
+        let gs = GroundStation::new(0, "eq", 0.0, 0.0, 10.0);
+        let sat = OrbitalElements::circular(500_000.0, 0.0, 0.0, 0.0);
+        (gs, Constellation::new(vec![sat]))
+    }
+
+    #[test]
+    fn window_open_at_t0_and_close_at_t1_are_exact() {
+        // visible at t0 and still visible at t1 (the 10° footprint spans
+        // roughly ±237 s around the overhead pass): the window must be
+        // clamped to the query interval, byte-exactly
+        let (gs, c) = overhead_pair();
+        let ws = windows(&gs, &c, 0.0, 100.0, 10.0);
+        assert_eq!(ws.len(), 1, "{ws:?}");
+        assert_eq!(ws[0].start, 0.0, "open edge must clamp to t0");
+        assert_eq!(ws[0].end, 100.0, "close edge must clamp to t1");
+    }
+
+    #[test]
+    fn never_visible_satellite_has_no_windows() {
+        // an equatorial orbit never rises above 10° for a polar station
+        let gs = GroundStation::new(0, "polar", 85.0, 0.0, 10.0);
+        let sat = OrbitalElements::circular(500_000.0, 0.0, 0.0, 0.0);
+        let c = Constellation::new(vec![sat]);
+        // a full synodic period: every geometry repeats after this
+        let ws = windows(&gs, &c, 0.0, 6100.0, 30.0);
+        assert!(ws.is_empty(), "{ws:?}");
+        assert_eq!(next_window_open(&gs, &c.elements[0], 0.0, 6100.0, 30.0), None);
+    }
+
+    #[test]
+    fn window_shorter_than_sampling_step() {
+        // with an 85° mask the overhead pass lasts ~12 s (footprint
+        // half-angle ≈ 0.37°): a 100 s sampling step can straddle and miss
+        // it entirely, while a 1 s step finds and bisects it
+        let (mut gs, c) = overhead_pair();
+        gs.min_elevation_deg = 85.0;
+        let coarse = windows(&gs, &c, -550.0, 550.0, 100.0);
+        assert!(coarse.is_empty(), "coarse sampling should miss: {coarse:?}");
+        let fine = windows(&gs, &c, -550.0, 550.0, 1.0);
+        assert_eq!(fine.len(), 1, "{fine:?}");
+        let w = fine[0];
+        assert!(w.duration() > 1.0 && w.duration() < 100.0, "{w:?}");
+        assert!(w.start < 0.0 && w.end > 0.0, "pass is centred on t=0: {w:?}");
+    }
+
+    #[test]
+    fn next_window_is_immediate_when_visible() {
+        let (gs, c) = overhead_pair();
+        let (open, close) = next_window_open(&gs, &c.elements[0], 3.0, 600.0, 30.0).unwrap();
+        assert_eq!(open, 3.0, "already-visible window must open exactly at t");
+        assert!(close > open, "open {open} close {close}");
+    }
+
+    #[test]
+    fn next_window_waits_for_the_following_pass() {
+        // at t=300 the overhead pass is over; the next one is a synodic
+        // period (~6076 s) after the first, so the PS must wait ~5.5 ks
+        let (gs, c) = overhead_pair();
+        let (open, close) = next_window_open(&gs, &c.elements[0], 300.0, 7000.0, 30.0).unwrap();
+        assert!(open > 300.0, "open {open}");
+        assert!((5000.0..6500.0).contains(&open), "open {open}");
+        assert!(close > open);
+        // the refined edge is genuinely an edge: visible just inside it
+        assert!(gs.sees(c.elements[0].position_eci(open + 1.0), open + 1.0));
+        // nothing within a too-short horizon
+        assert_eq!(next_window_open(&gs, &c.elements[0], 300.0, 1000.0, 30.0), None);
     }
 
     #[test]

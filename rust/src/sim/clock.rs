@@ -31,6 +31,14 @@ impl SimClock {
         assert!(dt.is_finite(), "non-finite time step");
         self.now += dt;
     }
+
+    /// Jump to an absolute event timestamp (event timeline: the clock
+    /// follows the event queue). Panics if `t` precedes the current time.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t.is_finite(), "non-finite time target");
+        assert!(t >= self.now, "time went backwards: {} -> {t}", self.now);
+        self.now = t;
+    }
 }
 
 #[cfg(test)]
@@ -55,5 +63,19 @@ mod tests {
     #[test]
     fn at_constructor() {
         assert_eq!(SimClock::at(100.0).now(), 100.0);
+    }
+
+    #[test]
+    fn advance_to_jumps_to_event_timestamps() {
+        let mut c = SimClock::at(10.0);
+        c.advance_to(10.0); // same instant is fine
+        c.advance_to(42.5);
+        assert_eq!(c.now(), 42.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "time went backwards")]
+    fn advance_to_rejects_past_timestamps() {
+        SimClock::at(100.0).advance_to(99.0);
     }
 }

@@ -1,0 +1,171 @@
+//! Discrete-event substrate: a time-ordered event queue.
+//!
+//! The event timeline (`--timeline event`) schedules the durations that the
+//! analytic timeline folds in closed form: local training occupies
+//! [`Event::ComputeDone`] intervals, uplinks and PS↔GS transfers occupy
+//! [`Event::TxDone`] intervals, and ground exchanges are gated by
+//! [`Event::WindowOpen`]/[`Event::WindowClose`] pairs derived from
+//! `orbit::visibility`. Events carry **offsets from the enclosing stage's
+//! start**, not absolute sim time: offsets keep the floating-point
+//! operation order identical to the analytic folds, which is what makes
+//! the two timelines bit-identical when every window is open (pinned by
+//! `tests/timeline_equivalence.rs`).
+//!
+//! Determinism: ties in time pop in insertion order (a strictly increasing
+//! sequence number), so a drain is a pure function of the push sequence —
+//! never of hash ordering or the worker schedule.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Payload of a scheduled simulation event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A cluster member finished local training; its uplink may start.
+    ComputeDone { member: usize, cluster: usize },
+    /// A transmission completed (member→PS uplink or PS↔GS exchange,
+    /// depending on the scheduling context).
+    TxDone { member: usize, cluster: usize },
+    /// A ground-station visibility window opened for a cluster's PS.
+    WindowOpen { cluster: usize },
+    /// The visibility window closed again. Marks the interval end on the
+    /// timeline; the serving decision itself reads the close offset when
+    /// the matching [`Event::WindowOpen`] pops (that is when the antenna
+    /// commits), so a transfer never starts after this.
+    WindowClose { cluster: usize },
+    /// An evaluation point is due. Reserved for time-driven evaluation
+    /// schedules; round-boundary evaluation does not need it.
+    EvalDue { round: usize },
+}
+
+/// A timestamped event: ordered by time, ties broken by insertion order.
+#[derive(Clone, Copy, Debug)]
+pub struct Scheduled {
+    /// Offset from the enclosing stage's start, seconds (≥ 0, finite).
+    pub at: f64,
+    /// Insertion sequence number (unique per queue).
+    pub seq: u64,
+    /// The payload.
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    /// Reversed so the `BinaryHeap` max-heap pops the *earliest* event;
+    /// equal times pop in insertion (`seq`) order.
+    fn cmp(&self, other: &Self) -> Ordering {
+        match other.at.partial_cmp(&self.at) {
+            Some(Ordering::Equal) | None => other.seq.cmp(&self.seq),
+            Some(ord) => ord,
+        }
+    }
+}
+
+/// Min-queue of [`Scheduled`] events with FIFO tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at offset `at` seconds (must be finite and ≥ 0).
+    pub fn push(&mut self, at: f64, event: Event) {
+        assert!(at.is_finite() && at >= 0.0, "bad event time {at}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, event });
+    }
+
+    /// Pop the earliest event (insertion order among ties).
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop()
+    }
+
+    /// Time of the earliest pending event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, Event::EvalDue { round: 1 });
+        q.push(1.0, Event::WindowOpen { cluster: 0 });
+        q.push(3.0, Event::TxDone { member: 2, cluster: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|s| s.at)).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for c in 0..5 {
+            q.push(2.0, Event::WindowOpen { cluster: c });
+        }
+        q.push(0.0, Event::EvalDue { round: 9 });
+        assert_eq!(q.peek_time(), Some(0.0));
+        assert_eq!(q.pop().unwrap().event, Event::EvalDue { round: 9 });
+        for c in 0..5 {
+            assert_eq!(q.pop().unwrap().event, Event::WindowOpen { cluster: c });
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_is_stable() {
+        // the ground stage pushes TxDone events while draining WindowOpens
+        let mut q = EventQueue::new();
+        q.push(0.0, Event::WindowOpen { cluster: 0 });
+        q.push(0.0, Event::WindowOpen { cluster: 1 });
+        let first = q.pop().unwrap();
+        assert_eq!(first.event, Event::WindowOpen { cluster: 0 });
+        q.push(4.0, Event::TxDone { member: 7, cluster: 0 });
+        assert_eq!(q.pop().unwrap().event, Event::WindowOpen { cluster: 1 });
+        assert_eq!(q.pop().unwrap().at, 4.0);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_negative_times() {
+        EventQueue::new().push(-1.0, Event::EvalDue { round: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_non_finite_times() {
+        EventQueue::new().push(f64::NAN, Event::EvalDue { round: 0 });
+    }
+}

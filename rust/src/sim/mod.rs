@@ -1,14 +1,17 @@
-//! Discrete-time simulation substrate: the simulated clock the FL rounds
-//! advance, the mobility process that turns orbital motion into
-//! cluster-membership churn (join/leave events that drive the paper's
+//! Discrete-event simulation substrate: the simulated clock the FL rounds
+//! advance, the time-ordered event queue behind the event timeline
+//! (`--timeline event`), the mobility process that turns orbital motion
+//! into cluster-membership churn (join/leave events that drive the paper's
 //! re-clustering trigger), and the deterministic parallel round engine
 //! that fans local training out across OS threads without perturbing the
 //! simulated numerics.
 
 pub mod clock;
 pub mod engine;
+pub mod events;
 pub mod mobility;
 
 pub use clock::SimClock;
 pub use engine::Engine;
+pub use events::{Event, EventQueue};
 pub use mobility::MobilityModel;

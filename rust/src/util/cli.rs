@@ -1,8 +1,11 @@
 //! Tiny CLI argument parser (the image has no `clap`).
 //!
 //! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
-//! Keys may also be given as `--key=value`.
+//! Keys may also be given as `--key=value`. Typed getters return
+//! `anyhow::Result` so a malformed flag surfaces as a usage error from the
+//! binary's top-level handler instead of a panic backtrace.
 
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -61,31 +64,34 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| {
-                v.parse::<usize>()
-                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
-            })
-            .unwrap_or(default)
+    /// `--name N` as usize, `default` when absent; error on a bad value.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
     }
 
-    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| {
-                v.parse::<u64>()
-                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
-            })
-            .unwrap_or(default)
+    /// `--name N` as u64, `default` when absent; error on a bad value.
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| {
-                v.parse::<f64>()
-                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
-            })
-            .unwrap_or(default)
+    /// `--name F` as f64, `default` when absent; error on a bad value.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
     }
 }
 
@@ -108,7 +114,7 @@ mod tests {
     #[test]
     fn parses_equals_form() {
         let a = Args::parse(argv("bench --rounds=100"), &[]);
-        assert_eq!(a.get_usize("rounds", 0), 100);
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 100);
     }
 
     #[test]
@@ -128,14 +134,24 @@ mod tests {
     fn flag_followed_by_option() {
         let a = Args::parse(argv("run --quiet --k 3"), &["quiet"]);
         assert!(a.flag("quiet"));
-        assert_eq!(a.get_usize("k", 0), 3);
+        assert_eq!(a.get_usize("k", 0).unwrap(), 3);
     }
 
     #[test]
     fn typed_getters_with_defaults() {
         let a = Args::parse(argv("x --lr 0.01"), &[]);
-        assert_eq!(a.get_f64("lr", 1.0), 0.01);
-        assert_eq!(a.get_f64("missing", 2.5), 2.5);
-        assert_eq!(a.get_u64("seed", 42), 42);
+        assert_eq!(a.get_f64("lr", 1.0).unwrap(), 0.01);
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn bad_values_are_errors_not_panics() {
+        let a = Args::parse(argv("x --k five --lr fast --seed -3"), &[]);
+        let e = a.get_usize("k", 0).unwrap_err();
+        assert!(e.to_string().contains("--k expects an integer"), "{e}");
+        let e = a.get_f64("lr", 0.1).unwrap_err();
+        assert!(e.to_string().contains("--lr expects a number"), "{e}");
+        assert!(a.get_u64("seed", 1).is_err(), "negative u64 must fail");
     }
 }
