@@ -1,19 +1,28 @@
 //! Aggregation bench: Pallas-kernel (PJRT) vs host weighted-sum across
 //! cluster sizes and parameter counts — the data behind the dispatcher
 //! threshold in `fl::aggregate` and the §Perf L3 aggregation numbers.
+//! The host path is the allocation-free `aggregate_host_into` the round
+//! loop now drives through `ModelRuntime::aggregate_into`.
 //!
-//!     cargo bench --bench bench_aggregation
+//! Emits machine-readable `BENCH_aggregation.json` at the workspace root
+//! alongside `BENCH_runtime.json`.
+//!
+//!     cargo bench --bench bench_aggregation [-- --fast]
 
 use fedhc::runtime::host::aggregate_host_into;
 use fedhc::runtime::{Manifest, ModelRuntime};
-use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::util::json::Json;
+use fedhc::util::stats::{bench_loop, bench_report, mean};
 use fedhc::util::Rng;
 
 fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iters = if fast { 10 } else { 50 };
     let mut rng = Rng::new(1);
 
     // host path scaling: N × P
     println!("== host aggregation (allocation-free weighted sum) ==");
+    let mut host_rows = Vec::new();
     for &(n, p) in &[(4usize, 44_426usize), (16, 44_426), (16, 62_006), (64, 44_426), (16, 2_410)] {
         let stack: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..p).map(|_| rng.uniform_f32()).collect())
@@ -21,41 +30,70 @@ fn main() {
         let rows: Vec<&[f32]> = stack.iter().map(|r| r.as_slice()).collect();
         let w = vec![1.0 / n as f32; n];
         let mut out = vec![0.0f32; p];
-        let t = bench_loop(3, 50, || {
+        let t = bench_loop(3, iters, || {
             aggregate_host_into(&rows, &w, &mut out);
         });
         let gb = (n * p * 4) as f64 / 1e9;
-        let mean = t.iter().sum::<f64>() / t.len() as f64;
+        let gbps = gb / mean(&t);
         println!(
-            "{}   ({:.2} GB/s)",
-            bench_report(&format!("host N={n} P={p}"), &t),
-            gb / mean
+            "{}   ({gbps:.2} GB/s)",
+            bench_report(&format!("host N={n} P={p}"), &t)
         );
+        host_rows.push(Json::obj(vec![
+            ("rows", Json::num(n as f64)),
+            ("param_count", Json::num(p as f64)),
+            ("mean_ms", Json::num(mean(&t) * 1e3)),
+            ("gb_per_sec", Json::num(gbps)),
+        ]));
     }
 
     // kernel path (PJRT) vs host at the AOT slot count
-    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+    let mut kernel_rows = Vec::new();
+    if let Ok(manifest) = Manifest::load(&Manifest::default_dir()) {
+        println!("\n== Pallas kernel (PJRT) vs host, per variant ==");
+        for name in ["tiny_mlp", "mnist_lenet", "cifar_lenet"] {
+            let Ok(rt) = ModelRuntime::load(&manifest, name) else { continue };
+            let p = rt.spec.param_count;
+            let n = rt.spec.agg_slots;
+            let stack: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..p).map(|_| rng.uniform_f32()).collect())
+                .collect();
+            let rows: Vec<&[f32]> = stack.iter().map(|r| r.as_slice()).collect();
+            let w = vec![1.0 / n as f32; n];
+            let mut out = Vec::new();
+            let t_kernel = bench_loop(2, iters.min(30), || {
+                rt.aggregate_into(&rows, &w, &mut out).unwrap();
+            });
+            println!(
+                "{}",
+                bench_report(&format!("kernel {name} N={n} P={p}"), &t_kernel)
+            );
+            let mut host_out = vec![0.0f32; p];
+            let t_host = bench_loop(2, iters.min(30), || {
+                aggregate_host_into(&rows, &w, &mut host_out);
+            });
+            println!(
+                "{}",
+                bench_report(&format!("host   {name} N={n} P={p}"), &t_host)
+            );
+            kernel_rows.push(Json::obj(vec![
+                ("variant", Json::str(name)),
+                ("rows", Json::num(n as f64)),
+                ("param_count", Json::num(p as f64)),
+                ("kernel_mean_ms", Json::num(mean(&t_kernel) * 1e3)),
+                ("host_mean_ms", Json::num(mean(&t_host) * 1e3)),
+            ]));
+        }
+    } else {
         eprintln!("no artifacts; skipping kernel comparison");
-        return;
-    };
-    println!("\n== Pallas kernel (PJRT) vs host, per variant ==");
-    for name in ["tiny_mlp", "mnist_lenet", "cifar_lenet"] {
-        let Ok(rt) = ModelRuntime::load(&manifest, name) else { continue };
-        let p = rt.spec.param_count;
-        let n = rt.spec.agg_slots;
-        let stack: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..p).map(|_| rng.uniform_f32()).collect())
-            .collect();
-        let rows: Vec<&[f32]> = stack.iter().map(|r| r.as_slice()).collect();
-        let w = vec![1.0 / n as f32; n];
-        let t = bench_loop(2, 30, || {
-            rt.aggregate(&rows, &w).unwrap();
-        });
-        println!("{}", bench_report(&format!("kernel {name} N={n} P={p}"), &t));
-        let mut out = vec![0.0f32; p];
-        let t = bench_loop(2, 30, || {
-            aggregate_host_into(&rows, &w, &mut out);
-        });
-        println!("{}", bench_report(&format!("host   {name} N={n} P={p}"), &t));
     }
+
+    let json = Json::obj(vec![
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("host", Json::Arr(host_rows)),
+        ("kernel_vs_host", Json::Arr(kernel_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregation.json");
+    std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_aggregation.json");
+    println!("\nwrote {path}");
 }

@@ -1,30 +1,121 @@
-//! Runtime bench: (1) the parallel round engine's threads-vs-wallclock
-//! sweep — first over a synthetic local-training-shaped load, then over
-//! the *actual* round loop on the host backend — and (2) the per-entry-
-//! point PJRT latency numbers when AOT artifacts are present (the §Perf
-//! L2/L3 numbers in EXPERIMENTS.md come from the latter).
+//! Runtime bench: (1) host MLP kernels — the seed's scalar reference vs
+//! the blocked in-place kernels (ns/step, with a bit-identity
+//! cross-check), (2) the parallel round engine's threads-vs-wallclock
+//! sweep over the *actual* round loop (rounds/sec per worker count),
+//! (3) a steady-state allocation audit through a counting global
+//! allocator — the round loop must perform **zero parameter-sized
+//! allocations per round** (asserted, not a soft threshold), and (4) the
+//! per-entry-point PJRT latency numbers when AOT artifacts are present.
+//!
+//! Emits machine-readable `BENCH_runtime.json` at the workspace root so
+//! this and future perf PRs have a committed trajectory.
 //!
 //!     cargo bench --bench bench_runtime [-- --fast]
 
 use fedhc::config::ExperimentConfig;
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
-use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::runtime::host_model::reference;
+use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
 use fedhc::sim::engine::Engine;
-use fedhc::util::stats::{bench_loop, bench_report, Timer};
+use fedhc::util::json::Json;
+use fedhc::util::stats::{bench_loop, bench_report, mean, Timer};
 use fedhc::util::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-const WORKER_SWEEP: &[usize] = &[1, 2, 4, 8];
+/// Counting allocator (bench builds only): tracks every allocation on any
+/// thread and, above the `PARAM_BYTES` threshold, the parameter-sized ones
+/// the steady-state round loop must never perform.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static PARAM_ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static PARAM_BYTES: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        if layout.size() >= PARAM_BYTES.load(Ordering::Relaxed) {
+            PARAM_ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Host MLP hot loop, before vs after: the seed's scalar `train_step`
+/// (allocating, stride-`h` `W1` walk) against the blocked in-place kernel
+/// on a recycled buffer. Cross-checks bit-identity before timing.
+fn kernel_before_after(fast: bool) -> Json {
+    println!("== host MLP kernels: scalar reference vs blocked in-place ==");
+    let manifest = Manifest::host();
+    let mut entries: Vec<(&str, Json)> = Vec::new();
+    let variants: [(&str, usize); 2] = [
+        ("tiny_mlp", if fast { 40 } else { 300 }),
+        ("mnist_lenet", if fast { 8 } else { 60 }),
+    ];
+    for (name, iters) in variants {
+        let rt = ModelRuntime::load(&manifest, name).unwrap();
+        let m = HostModel::from_spec(&rt.spec).unwrap();
+        let params = manifest.init_params(&rt.spec).unwrap();
+        let mut rng = Rng::new(1);
+        let b = rt.spec.batch;
+        let d = rt.spec.input_dim();
+        let x: Vec<f32> = (0..b * d).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<f32> = (0..b).map(|_| rng.below(10) as f32).collect();
+
+        // the blocked kernel must match the scalar reference bit for bit
+        let (p_ref, l_ref) = reference::train_step(&m, &params, &x, &y, 0.01).unwrap();
+        let mut p = params.clone();
+        let mut scratch = HostScratch::new();
+        let l_new = m.train_step_into(&mut p, &x, &y, 0.01, &mut scratch).unwrap();
+        assert_eq!(p_ref, p, "{name}: blocked kernel diverged from the scalar reference");
+        assert_eq!(l_ref.to_bits(), l_new.to_bits(), "{name}: loss diverged");
+
+        let t_ref = bench_loop(2, iters, || {
+            let (np, _) = reference::train_step(&m, &params, &x, &y, 0.01).unwrap();
+            std::hint::black_box(&np);
+        });
+        let t_new = bench_loop(2, iters, || {
+            p.copy_from_slice(&params);
+            let loss = m.train_step_into(&mut p, &x, &y, 0.01, &mut scratch).unwrap();
+            std::hint::black_box(loss);
+        });
+        let ns_ref = mean(&t_ref) * 1e9;
+        let ns_new = mean(&t_new) * 1e9;
+        let speedup = ns_ref / ns_new;
+        println!(
+            "  {name:<12} reference {ns_ref:>12.0} ns/step   blocked {ns_new:>12.0} ns/step   speedup x{speedup:.2}"
+        );
+        entries.push((
+            name,
+            Json::obj(vec![
+                ("ns_per_step_reference", Json::num(ns_ref)),
+                ("ns_per_step_blocked", Json::num(ns_new)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ));
+    }
+    Json::obj(entries)
+}
 
 /// Scatter-gather over a CPU-bound per-client job (parameter-vector math
 /// shaped like one local round), isolating the engine's scaling from the
 /// simulator.
-fn engine_sweep_synthetic() {
-    println!("== engine scatter-gather: workers vs wall-clock (synthetic per-client load) ==");
+fn engine_sweep_synthetic(fast: bool) {
+    println!("\n== engine scatter-gather: workers vs wall-clock (synthetic per-client load) ==");
     let p = 44_426usize; // LeNet-5-sized flat parameter vector
-    let tasks: Vec<u64> = (0..48).collect();
+    let tasks: Vec<u64> = (0..if fast { 16 } else { 48 }).collect();
     let base: Vec<f32> = (0..p).map(|i| (i as f32 * 0.37).sin()).collect();
     let mut baseline: Option<f64> = None;
-    for &w in WORKER_SWEEP {
+    let sweep: &[usize] = if fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    for &w in sweep {
         let engine = Engine::new(w);
         let timer = Timer::start();
         let sums = engine.run(&tasks, |_, &seed| {
@@ -51,18 +142,23 @@ fn engine_sweep_synthetic() {
 
 /// The real thing: `run_clustered` on the host backend, sweeping the
 /// engine worker count. Same seed → identical metrics at every width;
-/// only the wall-clock changes.
-fn engine_sweep_round_loop() {
-    println!("\n== full round loop: workers vs wall-clock (host backend, 48 clients, MNIST-geometry) ==");
+/// only the wall-clock (and rounds/sec) changes.
+fn engine_sweep_round_loop(fast: bool) -> Json {
+    let (clients, rounds) = if fast { (24usize, 2usize) } else { (48, 3) };
+    let sweep: &[usize] = if fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    println!(
+        "\n== full round loop: workers vs wall-clock (host backend, {clients} clients, MNIST geometry) =="
+    );
     let manifest = Manifest::host();
     let mut baseline: Option<f64> = None;
     let mut reference_time: Option<f64> = None;
-    for &w in WORKER_SWEEP {
+    let mut rows = Vec::new();
+    for &w in sweep {
         let mut cfg = ExperimentConfig::mnist();
-        cfg.clients = 48;
-        cfg.train_samples = 48 * 128;
+        cfg.clients = clients;
+        cfg.train_samples = clients * 128;
         cfg.test_samples = 256;
-        cfg.rounds = 3;
+        cfg.rounds = rounds;
         cfg.eval_batches = 2;
         cfg.target_accuracy = None;
         cfg.workers = w;
@@ -80,14 +176,79 @@ fn engine_sweep_round_loop() {
             ),
         }
         let base_secs = *baseline.get_or_insert(secs);
+        let rps = rounds as f64 / secs;
         println!(
-            "  workers {w:>2}: {:>9.1} ms wall   speedup x{:.2}   (sim time {:.0} s, acc {:.1}%)",
+            "  workers {w:>2}: {:>9.1} ms wall   {rps:>6.2} rounds/s   speedup x{:.2}   (sim time {:.0} s, acc {:.1}%)",
             secs * 1e3,
             base_secs / secs,
             res.ledger.time_s,
             res.final_accuracy * 100.0
         );
+        rows.push(Json::obj(vec![
+            ("workers", Json::num(w as f64)),
+            ("wall_ms", Json::num(secs * 1e3)),
+            ("rounds_per_sec", Json::num(rps)),
+        ]));
     }
+    Json::obj(vec![
+        ("clients", Json::num(clients as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("sweep", Json::Arr(rows)),
+    ])
+}
+
+/// Steady-state allocation audit: run the full FedHC round loop for R and
+/// 2R rounds under identical seeds; the per-round delta isolates the
+/// steady state from warm-up (pool fills, first-eval buffers, topology
+/// build). Parameter-sized allocations per steady-state round must be
+/// exactly zero — that is the invariant the recycled parameter pool and
+/// the in-place kernels exist to provide, so it is asserted, not reported
+/// as a soft threshold.
+fn alloc_accounting(fast: bool) -> Json {
+    println!("\n== steady-state allocation audit (counting allocator, tiny preset, 4 workers) ==");
+    let manifest = Manifest::host();
+    let (r1, r2) = if fast { (3usize, 6usize) } else { (4, 8) };
+    let param_bytes = manifest.variant("tiny_mlp").unwrap().param_count * 4;
+    let run = |rounds: usize| -> (u64, u64) {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = rounds;
+        cfg.workers = 4;
+        cfg.eval_every = 1;
+        // a dropout *rate* can never exceed 1.0: re-clustering (which
+        // legitimately rebuilds models) stays out of the steady state
+        cfg.recluster_threshold = 1.0;
+        cfg.target_accuracy = None;
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+        PARAM_BYTES.store(rt.spec.param_count * 4, Ordering::Relaxed);
+        let total0 = ALLOC_COUNT.load(Ordering::Relaxed);
+        let param0 = PARAM_ALLOC_COUNT.load(Ordering::Relaxed);
+        let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+        std::hint::black_box(res.final_accuracy);
+        let total = ALLOC_COUNT.load(Ordering::Relaxed) - total0;
+        let param = PARAM_ALLOC_COUNT.load(Ordering::Relaxed) - param0;
+        PARAM_BYTES.store(usize::MAX, Ordering::Relaxed);
+        (total, param)
+    };
+    let (t_a, p_a) = run(r1);
+    let (t_b, p_b) = run(r2);
+    let extra = (r2 - r1) as f64;
+    let param_per_round = (p_b as f64 - p_a as f64) / extra;
+    let total_per_round = (t_b as f64 - t_a as f64) / extra;
+    println!("  {r1} rounds: {t_a} allocs ({p_a} parameter-sized ≥ {param_bytes} B)");
+    println!("  {r2} rounds: {t_b} allocs ({p_b} parameter-sized ≥ {param_bytes} B)");
+    println!(
+        "  steady state: {total_per_round:.1} allocs/round, {param_per_round:.1} parameter-sized/round"
+    );
+    assert_eq!(
+        p_b, p_a,
+        "steady-state rounds must perform zero parameter-sized allocations"
+    );
+    Json::obj(vec![
+        ("param_bytes_threshold", Json::num(param_bytes as f64)),
+        ("param_sized_per_round", Json::num(param_per_round)),
+        ("total_per_round", Json::num(total_per_round)),
+    ])
 }
 
 fn bench_variant(manifest: &Manifest, name: &str, iters: usize) {
@@ -146,18 +307,31 @@ fn bench_variant(manifest: &Manifest, name: &str, iters: usize) {
 }
 
 fn main() {
-    engine_sweep_synthetic();
-    engine_sweep_round_loop();
+    let fast = std::env::args().any(|a| a == "--fast");
+
+    let kernels = kernel_before_after(fast);
+    engine_sweep_synthetic(fast);
+    let round_loop = engine_sweep_round_loop(fast);
+    let allocs = alloc_accounting(fast);
 
     let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("artifacts manifest");
+        println!();
+        bench_variant(&manifest, "tiny_mlp", if fast { 10 } else { 30 });
+        bench_variant(&manifest, "mnist_lenet", if fast { 5 } else { 15 });
+        bench_variant(&manifest, "cifar_lenet", if fast { 3 } else { 10 });
+    } else {
         eprintln!("\nno AOT artifacts under {dir:?}; skipping per-entry-point PJRT benches");
-        return;
     }
-    let manifest = Manifest::load(&dir).expect("artifacts manifest");
-    let fast = std::env::args().any(|a| a == "--fast");
-    println!();
-    bench_variant(&manifest, "tiny_mlp", if fast { 10 } else { 30 });
-    bench_variant(&manifest, "mnist_lenet", if fast { 5 } else { 15 });
-    bench_variant(&manifest, "cifar_lenet", if fast { 3 } else { 10 });
+
+    let json = Json::obj(vec![
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("host_kernels", kernels),
+        ("round_loop", round_loop),
+        ("allocs", allocs),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_runtime.json");
+    std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_runtime.json");
+    println!("\nwrote {path}");
 }

@@ -13,7 +13,7 @@
 
 use crate::coordinator::fedhc::RunResult;
 use crate::coordinator::round::data_upload_with;
-use crate::coordinator::stages::{EngineLocalTrain, LocalTrainStage};
+use crate::coordinator::stages::{EngineLocalTrain, LocalTrainStage, RoundPools};
 use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
 use crate::fl::client::SatClient;
@@ -48,6 +48,7 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
     let engine = Engine::new(cfg.workers);
+    let pools = RoundPools::new(rt);
     let central = pick_central(trial);
     let bits_per_sample = (trial.clients[0].shard.kind.sample_len() * 32 + 8) as f64;
 
@@ -93,7 +94,7 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
         trial.clock.advance(t_up);
 
         let samples = {
-            let models = [std::mem::take(&mut node.params)];
+            let mut models = [std::mem::take(&mut node.params)];
             let mut outs = train_stage.train(
                 &engine,
                 rt,
@@ -102,9 +103,13 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
                 &models,
                 &[(0, 0)],
                 round as u64,
+                &pools,
             )?;
             let out = outs.pop().expect("central training job lost");
+            // the trained pooled buffer becomes the node's model; the
+            // pre-round vector goes back to the pool for the next round
             node.params = out.params;
+            pools.params.put(std::mem::take(&mut models[0]));
             node.last_loss = out.mean_loss;
             node.rounds_trained += 1;
             out.samples

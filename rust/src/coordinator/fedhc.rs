@@ -15,7 +15,7 @@
 //! training) and lives in `baselines::cfedavg`.
 
 use super::round::{cluster_round_with, MemberWork};
-use super::stages::{cluster_round_events, GroundCtx, Stages};
+use super::stages::{cluster_round_events, GroundCtx, RoundPools, Stages};
 use super::trial::Trial;
 use crate::clustering::kmeans::KMeans;
 use crate::clustering::ps_select::select_parameter_servers;
@@ -23,8 +23,9 @@ use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
 use crate::config::Timeline;
 use crate::fl::aggregate::{aggregate, fedavg_weights};
-use crate::fl::evaluate::evaluate;
+use crate::fl::evaluate::evaluate_with;
 use crate::info;
+use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
 use crate::sim::events::EventQueue;
 use anyhow::Result;
@@ -320,7 +321,10 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let model_bits = rt.spec.param_count as f64 * 32.0;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold);
     let engine = Engine::new(cfg.workers);
+    let pools = RoundPools::new(rt);
     let mut queue = EventQueue::new(); // event-timeline scratch
+    let mut agg_buf: Vec<f32> = Vec::new(); // recycled cluster-merge output
+    let mut eval_scratch = HostScratch::new();
 
     // Algorithm 1 line 1: satellite-clustered PS selection
     let global0 = trial.clients[0].params.clone();
@@ -363,6 +367,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             &topo.models,
             &jobs,
             round as u64,
+            &pools,
         )?;
 
         // ---- cluster aggregation stage (lines 11–13) ----
@@ -383,7 +388,10 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             for r in batch.iter_mut() {
                 let m = r.member;
                 debug_assert_eq!(r.cluster, c, "gather out of cluster order");
-                trial.clients[m].params = std::mem::take(&mut r.params);
+                // swap the trained pooled buffer in and recycle the
+                // client's previous parameter vector
+                std::mem::swap(&mut trial.clients[m].params, &mut r.params);
+                pools.params.put(std::mem::take(&mut r.params));
                 trial.clients[m].last_loss = r.mean_loss;
                 trial.clients[m].rounds_trained += 1;
                 work.push(MemberWork {
@@ -400,9 +408,10 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 .iter()
                 .map(|r| trial.clients[r.member].params.as_slice())
                 .collect();
-            let mut new_model = Vec::new();
-            stages.cluster.merge(rt, &rows, &weights, &mut new_model)?;
-            topo.models[c] = new_model;
+            // merge into the recycled buffer, then swap it in: the
+            // displaced model vector becomes the next merge's output
+            stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
+            std::mem::swap(&mut topo.models[c], &mut agg_buf);
 
             // Eq. 7 inner max + Eq. 8/9 energy for this cluster: the
             // closed-form fold and the event replay are bit-identical —
@@ -455,17 +464,20 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 let dest = new_topo.assignment[m];
                 if strategy.maml_warmstart {
                     // §III-C: inherit the new cluster head's model, adapt
-                    // with one MAML step (support = head's data, query = own)
+                    // with one MAML step (support = head's data, query =
+                    // own) — in place on the member's own buffer seeded
+                    // from the destination cluster model
                     let head = new_topo.ps[dest];
                     batch_buf.fill_support(&trial.clients[head].shard, &mut trial.rng);
                     batch_buf.fill_query(&trial.clients[m].shard, &mut trial.rng);
-                    let (p, _qloss) = rt.maml_step(
-                        &new_topo.models[dest],
+                    trial.clients[m].params.clone_from(&new_topo.models[dest]);
+                    let _qloss = rt.maml_step_into(
+                        &mut trial.clients[m].params,
                         &batch_buf.x1, &batch_buf.y1, &batch_buf.x2, &batch_buf.y2,
                         cfg.maml_alpha,
                         cfg.maml_beta,
+                        &mut batch_buf.scratch,
                     )?;
-                    trial.clients[m].params = p;
                     trial.ledger.maml_adaptations += 1;
                     // adaptation cost: one support-batch transfer + one
                     // batch of compute at the member
@@ -516,9 +528,8 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     .iter()
                     .map(|&c| topo.models[c].as_slice())
                     .collect();
-                let mut new_global = Vec::new();
-                aggregate(rt, &rows, &weights, &mut new_global)?;
-                global = new_global;
+                // aggregate straight into the persistent global buffer
+                aggregate(rt, &rows, &weights, &mut global)?;
                 // broadcast back to participating clusters; stale clusters
                 // keep training on their own model until a later pass
                 for &c in &out.exchanged {
@@ -547,10 +558,9 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 .collect();
             let weights = fedavg_weights(&sizes);
             let rows: Vec<&[f32]> = topo.models.iter().map(|m| m.as_slice()).collect();
-            let mut global_view = Vec::new();
-            aggregate(rt, &rows, &weights, &mut global_view)?;
-            global = global_view;
-            let eval = evaluate(rt, &global, &trial.test, cfg.eval_batches)?;
+            aggregate(rt, &rows, &weights, &mut global)?;
+            let eval =
+                evaluate_with(rt, &global, &trial.test, cfg.eval_batches, &mut eval_scratch)?;
             trial
                 .ledger
                 .record(round, eval.accuracy, eval.loss, reclustered);
@@ -573,13 +583,15 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     })
 }
 
-/// Reusable batch sampling buffers for MAML warm starts.
+/// Reusable batch sampling buffers (and kernel scratch) for MAML warm
+/// starts.
 struct BatchBuf {
     x1: Vec<f32>,
     y1: Vec<f32>,
     x2: Vec<f32>,
     y2: Vec<f32>,
     batch: usize,
+    scratch: HostScratch,
 }
 
 impl BatchBuf {
@@ -592,6 +604,7 @@ impl BatchBuf {
             x2: vec![0.0; b * d],
             y2: vec![0.0; b],
             batch: b,
+            scratch: HostScratch::new(),
         }
     }
 

@@ -35,6 +35,7 @@ use crate::orbit::GroundStation;
 use crate::runtime::ModelRuntime;
 use crate::sim::engine::Engine;
 use crate::sim::events::{Event, EventQueue};
+use crate::sim::param_pool::{ParamPool, ScratchPool};
 use crate::util::rng::stream_seed;
 use crate::util::Rng;
 use anyhow::Result;
@@ -45,16 +46,41 @@ pub struct MemberOutcome {
     pub member: usize,
     /// Cluster the member trained for.
     pub cluster: usize,
-    /// Updated parameters.
+    /// Updated parameters — a pooled buffer the coordinator checks back
+    /// into the run's [`RoundPools`] after the gather.
     pub params: Vec<f32>,
     /// Mean training loss over the round (drives Eq. 12 weights).
     pub mean_loss: f32,
-    /// Samples processed (drives the Eq. 7/9 time & energy models).
+    /// Distinct samples processed (drives the Eq. 7/9 time & energy
+    /// models).
     pub samples: usize,
 }
 
+/// Per-run recycled buffers threaded through the local-training stage:
+/// parameter vectors for member models (taken in the scatter, checked back
+/// in after the gather) and per-worker training scratch (which must
+/// outlive the engine's short-lived workers to keep steady-state rounds
+/// free of parameter-sized allocations).
+pub struct RoundPools {
+    /// Recycled `param_count`-sized member/model buffers.
+    pub params: ParamPool,
+    /// Recycled per-worker training scratch.
+    pub scratch: ScratchPool<TrainScratch>,
+}
+
+impl RoundPools {
+    pub fn new(rt: &ModelRuntime) -> RoundPools {
+        RoundPools {
+            params: ParamPool::new(rt.spec.param_count),
+            scratch: ScratchPool::new(),
+        }
+    }
+}
+
 /// Local-training stage: run every `(member, cluster)` job from the
-/// matching cluster model and return outcomes in job order.
+/// matching cluster model and return outcomes in job order. Member
+/// parameter buffers come from `pools` and must be returned to it by the
+/// caller once gathered.
 pub trait LocalTrainStage {
     #[allow(clippy::too_many_arguments)]
     fn train(
@@ -66,12 +92,16 @@ pub trait LocalTrainStage {
         models: &[Vec<f32>],
         jobs: &[(usize, usize)],
         round: u64,
+        pools: &RoundPools,
     ) -> Result<Vec<MemberOutcome>>;
 }
 
 /// Default local-training stage: the deterministic parallel round engine.
 /// Each job's RNG stream derives statelessly from `(seed, round, sat_id)`,
-/// so results are byte-identical for any worker count.
+/// so results are byte-identical for any worker count; each job trains a
+/// pooled buffer overwritten from the cluster model (never a fresh clone),
+/// which cannot perturb the numerics because the buffer is fully
+/// overwritten before use.
 pub struct EngineLocalTrain;
 
 impl LocalTrainStage for EngineLocalTrain {
@@ -85,20 +115,21 @@ impl LocalTrainStage for EngineLocalTrain {
         models: &[Vec<f32>],
         jobs: &[(usize, usize)],
         round: u64,
+        pools: &RoundPools,
     ) -> Result<Vec<MemberOutcome>> {
         let scattered: Vec<Result<MemberOutcome>> = engine.run_with(
             jobs,
-            || TrainScratch::new(rt),
+            || pools.scratch.take_or(|| TrainScratch::new(rt)),
             |scratch, _i, &(m, c)| {
                 let client = &clients[m];
                 let mut rng = Rng::new(stream_seed(cfg.seed, round, client.sat as u64));
                 let (params, out) = train_params(
                     rt,
                     &client.shard,
-                    models[c].clone(),
+                    pools.params.take_copy(&models[c]),
                     cfg.local_epochs,
                     cfg.lr,
-                    scratch,
+                    &mut **scratch,
                     &mut rng,
                 )?;
                 Ok(MemberOutcome {

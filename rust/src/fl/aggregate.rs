@@ -37,7 +37,12 @@ pub fn quality_weights(losses: &[f32]) -> Vec<f32> {
 
 /// Aggregate client parameter rows with the given weights. Uses the Pallas
 /// kernel through PJRT when the cluster fits the AOT slot count, otherwise
-/// the host fallback (identical numerics — see runtime tests).
+/// the host fallback (identical numerics — see runtime tests). Both
+/// branches write into the caller's `out` buffer instead of replacing the
+/// vector per call; the host branch is fully allocation-free, while the
+/// PJRT branch still stages its zero-padded `slots × P` kernel input
+/// internally (see [`ModelRuntime::aggregate_into`]) — dispatch overhead
+/// dominates that path anyway.
 pub fn aggregate(
     rt: &ModelRuntime,
     rows: &[&[f32]],
@@ -46,7 +51,7 @@ pub fn aggregate(
 ) -> Result<()> {
     assert_eq!(rows.len(), weights.len());
     if rows.len() <= rt.spec.agg_slots {
-        *out = rt.aggregate(rows, weights)?;
+        rt.aggregate_into(rows, weights, out)?;
     } else {
         out.resize(rt.spec.param_count, 0.0);
         aggregate_host_into(rows, weights, out);

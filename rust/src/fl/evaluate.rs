@@ -1,6 +1,7 @@
 //! Test-set evaluation through the AOT eval graph.
 
 use crate::data::Dataset;
+use crate::runtime::host_model::HostScratch;
 use crate::runtime::ModelRuntime;
 use anyhow::Result;
 
@@ -21,6 +22,21 @@ pub fn evaluate(
     test: &Dataset,
     max_batches: usize,
 ) -> Result<EvalResult> {
+    let mut scratch = HostScratch::new();
+    evaluate_with(rt, params, test, max_batches, &mut scratch)
+}
+
+/// [`evaluate`] against a caller-owned kernel scratch, for round loops
+/// that evaluate repeatedly. Evaluation only touches the activation
+/// buffers, so the scratch stays small and the per-call allocations are
+/// limited to the batch-staging buffers.
+pub fn evaluate_with(
+    rt: &ModelRuntime,
+    params: &[f32],
+    test: &Dataset,
+    max_batches: usize,
+    scratch: &mut HostScratch,
+) -> Result<EvalResult> {
     let b = rt.spec.batch;
     let d = rt.spec.input_dim();
     let n_batches = test.len() / b;
@@ -36,7 +52,7 @@ pub fn evaluate(
     let mut correct = 0.0f64;
     for bi in 0..use_batches {
         test.fill_batch(bi, b, &mut xs, &mut ys);
-        let (loss, corr) = rt.eval_step(params, &xs, &ys)?;
+        let (loss, corr) = rt.eval_step_with(params, &xs, &ys, scratch)?;
         loss_sum += loss as f64;
         correct += corr as f64;
     }

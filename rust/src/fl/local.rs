@@ -1,16 +1,21 @@
 //! Local training loop (Algorithm 1 lines 7–10): λ epochs of minibatch SGD
 //! on the client's shard, executed through the AOT train graphs.
 //!
-//! Batches can be packed into `train_chunk` calls (S SGD steps per PJRT
-//! execution, numerically identical — see runtime tests). §Perf note: on
-//! the vendored XLA 0.5.1 CPU backend the scan-based chunk compiles to a
-//! while loop that blocks fusion and runs ~2.5× slower per step than
-//! unrolled `train_step` calls (bench_runtime), so per-step dispatch is
-//! the default; set `TrainScratch::use_chunk` (env `FEDHC_CHUNK=1`) on
-//! backends where the scan wins (e.g. real accelerators, where the call
-//! overhead dominates).
+//! §Perf: the hot path is allocation-free. Batches are staged into
+//! [`TrainScratch`]'s reused buffers and the in-place kernels
+//! (`train_step_into` / `train_chunk_into`) update the parameter vector
+//! directly against the scratch-owned gradient, so a steady-state round
+//! performs **zero parameter-sized allocations** (asserted by the
+//! counting allocator in `bench_runtime`; before/after ns/step numbers
+//! live in `BENCH_runtime.json`). Batches can still be packed into
+//! `train_chunk` calls (S SGD steps per dispatch, numerically identical —
+//! see runtime tests); on the host backend both paths run the same
+//! blocked kernels, so packing only matters for PJRT-backed runs where
+//! per-call dispatch overhead dominates — set `TrainScratch::use_chunk`
+//! (env `FEDHC_CHUNK=1`) there.
 
 use super::client::SatClient;
+use crate::runtime::host_model::HostScratch;
 use crate::runtime::ModelRuntime;
 use crate::util::Rng;
 use anyhow::Result;
@@ -20,18 +25,23 @@ use anyhow::Result;
 pub struct LocalOutcome {
     /// Mean training loss over the round (drives Eq. 12 weights).
     pub mean_loss: f32,
-    /// Samples processed (drives the Eq. 7/9 time & energy models).
+    /// Distinct samples processed (drives the Eq. 7/9 time & energy
+    /// models). Wrap-filled batch tails re-serve existing rows and are
+    /// not billed.
     pub samples: usize,
     /// SGD steps taken.
     pub steps: usize,
 }
 
-/// Scratch buffers reused across clients (allocation-free hot path).
+/// Scratch buffers reused across clients (allocation-free hot path):
+/// batch staging plus the kernel scratch (gradient + activations) the
+/// in-place train path updates against.
 pub struct TrainScratch {
     xs: Vec<f32>,
     ys: Vec<f32>,
     /// Pack batches into scan-based `train_chunk` calls (see module docs).
     pub use_chunk: bool,
+    host: HostScratch,
 }
 
 impl TrainScratch {
@@ -43,6 +53,7 @@ impl TrainScratch {
             xs: vec![0.0; s * b * d],
             ys: vec![0.0; s * b],
             use_chunk: std::env::var("FEDHC_CHUNK").map(|v| v == "1").unwrap_or(false),
+            host: HostScratch::new(),
         }
     }
 }
@@ -90,18 +101,26 @@ pub fn train_params(
                     );
                     shard.fill_batch(bi, b, xs_part, ys_part);
                 }
-                let (p, loss) = rt.train_chunk(&params, &scratch.xs, &scratch.ys, lr)?;
-                params = p;
+                let loss = rt.train_chunk_into(
+                    &mut params,
+                    &scratch.xs,
+                    &scratch.ys,
+                    lr,
+                    &mut scratch.host,
+                )?;
                 loss_sum += loss as f64;
                 loss_n += 1;
                 steps += s;
                 i += s;
             } else {
-                let (xs_part, ys_part) =
-                    (&mut scratch.xs[..b * d], &mut scratch.ys[..b]);
-                shard.fill_batch(batch_ids[i], b, xs_part, ys_part);
-                let (p, loss) = rt.train_step(&params, xs_part, ys_part, lr)?;
-                params = p;
+                shard.fill_batch(batch_ids[i], b, &mut scratch.xs[..b * d], &mut scratch.ys[..b]);
+                let loss = rt.train_step_into(
+                    &mut params,
+                    &scratch.xs[..b * d],
+                    &scratch.ys[..b],
+                    lr,
+                    &mut scratch.host,
+                )?;
                 loss_sum += loss as f64;
                 loss_n += 1;
                 steps += 1;
@@ -119,7 +138,10 @@ pub fn train_params(
         params,
         LocalOutcome {
             mean_loss,
-            samples: epochs * n_batches * b,
+            // bill distinct samples: n_batches·b ≥ |shard| whenever the
+            // shard is not a batch multiple, and the wrapped tail rows are
+            // duplicates the Eq. 7/9 ledger must not charge for
+            samples: epochs * shard.len(),
             steps,
         },
     ))
@@ -193,7 +215,9 @@ mod tests {
         let mut client = SatClient::new(0, shard, init, 1e9);
         let mut scratch = TrainScratch::new(&rt);
         let out = local_train(&rt, &mut client, 2, 0.05, &mut scratch, &mut Rng::new(4)).unwrap();
-        assert_eq!(out.samples, 2 * 3 * 16);
+        // 3 batches of 16 process 48 rows/epoch, but 8 of them are
+        // wrap-filled duplicates: the ledger bills the 40 distinct samples
+        assert_eq!(out.samples, 2 * 40);
         assert_eq!(out.steps, 2 * 3);
         assert!(out.mean_loss.is_finite());
     }

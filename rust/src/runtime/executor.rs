@@ -18,7 +18,7 @@
 //! worker threads.
 
 use super::artifacts::{EntrySpec, Manifest, VariantSpec};
-use super::host_model::HostModel;
+use super::host_model::{HostModel, HostScratch};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -131,52 +131,77 @@ impl ModelRuntime {
         self.calls.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One SGD step (Eq. 3–4): returns (new_params, loss).
-    pub fn train_step(
+    /// Copy a PJRT output back into the caller's buffer (the in-place
+    /// entry points never hand ownership of a fresh vector to the caller).
+    fn write_back(name: &str, params: &mut [f32], new: &[f32]) -> Result<()> {
+        if new.len() != params.len() {
+            bail!(
+                "{name}: runtime returned {} params, caller holds {}",
+                new.len(),
+                params.len()
+            );
+        }
+        params.copy_from_slice(new);
+        Ok(())
+    }
+
+    /// One SGD step (Eq. 3–4) updating `params` in place against the
+    /// caller-owned `scratch`; returns the pre-update loss. The host
+    /// backend performs zero allocations once the scratch is warm.
+    pub fn train_step_into(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        scratch: &mut HostScratch,
+    ) -> Result<f32> {
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.train_step_into(params, x, y, lr, scratch),
+            Backend::Pjrt { .. } => {
+                let out = self.run("train_step", &[&*params, x, y, &[lr]])?;
+                let loss = out[1][0];
+                Self::write_back("train_step", params, &out[0])?;
+                Ok(loss)
+            }
+        }
+    }
+
+    /// `chunk_steps` consecutive SGD steps in one call (xs is `[S*B*D]`,
+    /// ys `[S*B]`), updating `params` in place; returns the mean loss.
+    pub fn train_chunk_into(
+        &self,
+        params: &mut [f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        scratch: &mut HostScratch,
+    ) -> Result<f32> {
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.train_chunk_into(params, xs, ys, lr, scratch),
+            Backend::Pjrt { .. } => {
+                let out = self.run("train_chunk", &[&*params, xs, ys, &[lr]])?;
+                let loss = out[1][0];
+                Self::write_back("train_chunk", params, &out[0])?;
+                Ok(loss)
+            }
+        }
+    }
+
+    /// Evaluate one batch against caller-owned scratch: returns
+    /// (mean_loss, correct_count).
+    pub fn eval_step_with(
         &self,
         params: &[f32],
         x: &[f32],
         y: &[f32],
-        lr: f32,
-    ) -> Result<(Vec<f32>, f32)> {
+        scratch: &mut HostScratch,
+    ) -> Result<(f32, f32)> {
         self.count();
         match &self.backend {
-            Backend::Host(m) => m.train_step(params, x, y, lr),
-            Backend::Pjrt { .. } => {
-                let out = self.run("train_step", &[params, x, y, &[lr]])?;
-                let loss = out[1][0];
-                let mut it = out.into_iter();
-                Ok((it.next().unwrap(), loss))
-            }
-        }
-    }
-
-    /// `chunk_steps` consecutive SGD steps in one call:
-    /// xs is `[S*B*D]`, ys `[S*B]`. Returns (new_params, mean_loss).
-    pub fn train_chunk(
-        &self,
-        params: &[f32],
-        xs: &[f32],
-        ys: &[f32],
-        lr: f32,
-    ) -> Result<(Vec<f32>, f32)> {
-        self.count();
-        match &self.backend {
-            Backend::Host(m) => m.train_chunk(params, xs, ys, lr),
-            Backend::Pjrt { .. } => {
-                let out = self.run("train_chunk", &[params, xs, ys, &[lr]])?;
-                let loss = out[1][0];
-                let mut it = out.into_iter();
-                Ok((it.next().unwrap(), loss))
-            }
-        }
-    }
-
-    /// Evaluate one batch: returns (mean_loss, correct_count).
-    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
-        self.count();
-        match &self.backend {
-            Backend::Host(m) => m.eval_step(params, x, y),
+            Backend::Host(m) => m.eval_step_into(params, x, y, scratch),
             Backend::Pjrt { .. } => {
                 let out = self.run("eval_step", &[params, x, y])?;
                 Ok((out[0][0], out[1][0]))
@@ -184,7 +209,73 @@ impl ModelRuntime {
         }
     }
 
+    /// FOMAML warm-start (Eq. 16–17) updating `params` in place; returns
+    /// the query loss at the adapted parameters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maml_step_into(
+        &self,
+        params: &mut [f32],
+        sx: &[f32],
+        sy: &[f32],
+        qx: &[f32],
+        qy: &[f32],
+        alpha: f32,
+        beta: f32,
+        scratch: &mut HostScratch,
+    ) -> Result<f32> {
+        self.count();
+        match &self.backend {
+            Backend::Host(m) => m.maml_step_into(params, sx, sy, qx, qy, alpha, beta, scratch),
+            Backend::Pjrt { .. } => {
+                let out =
+                    self.run("maml_step", &[&*params, sx, sy, qx, qy, &[alpha], &[beta]])?;
+                let loss = out[1][0];
+                Self::write_back("maml_step", params, &out[0])?;
+                Ok(loss)
+            }
+        }
+    }
+
+    /// One SGD step (Eq. 3–4): returns (new_params, loss). Allocating
+    /// wrapper over [`ModelRuntime::train_step_into`].
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let mut scratch = HostScratch::new();
+        let loss = self.train_step_into(&mut p, x, y, lr, &mut scratch)?;
+        Ok((p, loss))
+    }
+
+    /// `chunk_steps` consecutive SGD steps in one call:
+    /// xs is `[S*B*D]`, ys `[S*B]`. Returns (new_params, mean_loss).
+    /// Allocating wrapper over [`ModelRuntime::train_chunk_into`].
+    pub fn train_chunk(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let mut scratch = HostScratch::new();
+        let loss = self.train_chunk_into(&mut p, xs, ys, lr, &mut scratch)?;
+        Ok((p, loss))
+    }
+
+    /// Evaluate one batch: returns (mean_loss, correct_count). Allocating
+    /// wrapper over [`ModelRuntime::eval_step_with`].
+    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        let mut scratch = HostScratch::new();
+        self.eval_step_with(params, x, y, &mut scratch)
+    }
+
     /// FOMAML warm-start (Eq. 16–17): returns (new_params, query_loss).
+    /// Allocating wrapper over [`ModelRuntime::maml_step_into`].
     #[allow(clippy::too_many_arguments)]
     pub fn maml_step(
         &self,
@@ -196,24 +287,26 @@ impl ModelRuntime {
         alpha: f32,
         beta: f32,
     ) -> Result<(Vec<f32>, f32)> {
-        self.count();
-        match &self.backend {
-            Backend::Host(m) => m.maml_step(params, sx, sy, qx, qy, alpha, beta),
-            Backend::Pjrt { .. } => {
-                let out =
-                    self.run("maml_step", &[params, sx, sy, qx, qy, &[alpha], &[beta]])?;
-                let loss = out[1][0];
-                let mut it = out.into_iter();
-                Ok((it.next().unwrap(), loss))
-            }
-        }
+        let mut p = params.to_vec();
+        let mut scratch = HostScratch::new();
+        let qloss = self.maml_step_into(&mut p, sx, sy, qx, qy, alpha, beta, &mut scratch)?;
+        Ok((p, qloss))
     }
 
-    /// Weighted aggregation (Eq. 5 / Eq. 12). On the PJRT backend this is
-    /// the Pallas kernel with a fixed slot count (`stack` rows are
-    /// zero-padded up to it — exact, see kernel docs); on the host backend
-    /// it is the same weighted sum computed directly.
-    pub fn aggregate(&self, stack: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+    /// Weighted aggregation (Eq. 5 / Eq. 12) into the caller's `out`
+    /// buffer, reusing its allocation. On the host backend this is the
+    /// weighted sum computed directly into `out`, allocation-free. On the
+    /// PJRT backend it is the Pallas kernel with a fixed slot count
+    /// (`stack` rows are zero-padded up to it — exact, see kernel docs);
+    /// that branch still allocates its `slots × P` staging copy per call,
+    /// an inherent cost of the padded kernel ABI that PJRT dispatch
+    /// overhead dwarfs.
+    pub fn aggregate_into(
+        &self,
+        stack: &[&[f32]],
+        weights: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let slots = self.spec.agg_slots;
         let p = self.spec.param_count;
         let n = stack.len();
@@ -230,7 +323,10 @@ impl ModelRuntime {
         }
         self.count();
         match &self.backend {
-            Backend::Host(_) => Ok(super::host::aggregate_host(stack, weights)),
+            Backend::Host(_) => {
+                out.resize(p, 0.0);
+                super::host::aggregate_host_into(stack, weights, out);
+            }
             Backend::Pjrt { .. } => {
                 let mut flat = vec![0.0f32; slots * p];
                 for (i, row) in stack.iter().enumerate() {
@@ -238,10 +334,20 @@ impl ModelRuntime {
                 }
                 let mut w = vec![0.0f32; slots];
                 w[..n].copy_from_slice(weights);
-                let out = self.run("aggregate", &[&flat, &w])?;
-                Ok(out.into_iter().next().unwrap())
+                let res = self.run("aggregate", &[&flat, &w])?;
+                out.clear();
+                out.extend_from_slice(&res[0]);
             }
         }
+        Ok(())
+    }
+
+    /// Weighted aggregation returning a fresh vector. Allocating wrapper
+    /// over [`ModelRuntime::aggregate_into`].
+    pub fn aggregate(&self, stack: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.aggregate_into(stack, weights, &mut out)?;
+        Ok(out)
     }
 
     /// Number of entry-point executions so far (perf counter).

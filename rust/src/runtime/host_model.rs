@@ -10,10 +10,30 @@
 //! selected automatically for manifest variants with no lowered entries
 //! (see [`super::artifacts::Manifest::host`]).
 //!
-//! Every op is a sequential scalar loop over fixed index order, so a
-//! given `(params, batch)` pair produces bit-identical results on any
-//! worker thread — the property the engine's determinism guarantee
-//! rests on.
+//! # The compute plane
+//!
+//! The hot path is the in-place kernel family ([`train_step_into`],
+//! [`train_chunk_into`], [`maml_step_into`], [`eval_step_into`]): they
+//! update `params: &mut [f32]` directly against a caller-owned
+//! [`HostScratch`], so a steady-state SGD step performs **zero heap
+//! allocations**, and the `W1` forward/backward loops are interchanged to
+//! k-outer/j-inner so every weight access streams a contiguous row (the
+//! seed's j-outer order walked `W1` with stride `h`, defeating both the
+//! cache and the autovectoriser).
+//!
+//! The loop interchange is **bit-exact**: every accumulator (`a1[j]`,
+//! `logits[o]`, `da1[j]`, each `gw1[k*h+j]`) still receives its partial
+//! sums in the seed's order, only the interleaving *across independent
+//! accumulators* changes — which floating-point addition cannot observe.
+//! The seed's scalar kernels are retained verbatim in [`reference`] and
+//! the property tests in this module pin bit-identical `(params, loss)`
+//! across random geometries. Results therefore remain deterministic on
+//! any worker thread — the property the engine's guarantee rests on.
+//!
+//! [`train_step_into`]: HostModel::train_step_into
+//! [`train_chunk_into`]: HostModel::train_chunk_into
+//! [`maml_step_into`]: HostModel::maml_step_into
+//! [`eval_step_into`]: HostModel::eval_step_into
 
 use super::artifacts::VariantSpec;
 use anyhow::{bail, Result};
@@ -31,6 +51,45 @@ pub struct HostModel {
     pub batch: usize,
     /// SGD steps per `train_chunk` call.
     pub chunk_steps: usize,
+}
+
+/// Per-sample activation workspace (hidden/class sized).
+#[derive(Default)]
+struct ActBufs {
+    a1: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    da1: Vec<f32>,
+    dl: Vec<f32>,
+}
+
+impl ActBufs {
+    fn ensure(&mut self, h: usize, c: usize) {
+        self.a1.resize(h, 0.0);
+        self.logits.resize(c, 0.0);
+        self.probs.resize(c, 0.0);
+        self.da1.resize(h, 0.0);
+        self.dl.resize(c, 0.0);
+    }
+}
+
+/// Caller-owned scratch for the in-place kernels: the per-sample
+/// activation workspace plus the gradient and adapted-parameter vectors
+/// (the two parameter-sized buffers the seed kernels allocated per step).
+/// Buffers grow lazily to the geometry in use — and only to what the call
+/// needs (evaluation never materialises the gradient) — so one scratch can
+/// be recycled across kernels, rounds, and even model variants.
+#[derive(Default)]
+pub struct HostScratch {
+    act: ActBufs,
+    grad: Vec<f32>,
+    adapted: Vec<f32>,
+}
+
+impl HostScratch {
+    pub fn new() -> HostScratch {
+        HostScratch::default()
+    }
 }
 
 impl HostModel {
@@ -102,13 +161,314 @@ impl HostModel {
         Ok(())
     }
 
-    /// Forward pass over the batch; returns `(mean_loss, correct_count)`.
-    /// When `grad` is provided (zeroed, `param_count` long), accumulates
-    /// d(mean_loss)/d(params) into it.
-    fn batch_pass(&self, params: &[f32], x: &[f32], y: &[f32], mut grad: Option<&mut [f32]>) -> (f32, f32) {
+    /// Cache-blocked forward (+ optional backward) pass over the batch;
+    /// returns `(mean_loss, correct_count)`. When `grad` is provided
+    /// (zeroed, `param_count` long), accumulates d(mean_loss)/d(params)
+    /// into it. Bit-identical to [`reference::batch_pass`]: the loop
+    /// interchange only reorders *independent* accumulators, never the
+    /// partial-sum order within one.
+    fn pass(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        mut grad: Option<&mut [f32]>,
+        act: &mut ActBufs,
+    ) -> (f32, f32) {
         let d = self.input;
         let h = self.hidden;
         let c = self.classes;
+        let bsz = y.len();
+        let (w1, rest) = params.split_at(d * h);
+        let (b1, rest) = rest.split_at(h);
+        let (w2, b2) = rest.split_at(h * c);
+        let ActBufs {
+            a1,
+            logits,
+            probs,
+            da1,
+            dl,
+        } = act;
+        let inv_b = 1.0f32 / bsz as f32;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+
+        for i in 0..bsz {
+            let xi = &x[i * d..(i + 1) * d];
+            let label = y[i] as usize;
+
+            // forward: a1 = tanh(W1ᵀx + b1), k-outer/j-inner so each W1
+            // row w1[k*h..] streams contiguously; a1[j] still sums its
+            // terms in k-ascending order
+            a1.copy_from_slice(b1);
+            for k in 0..d {
+                let xk = xi[k];
+                for (aj, &w) in a1.iter_mut().zip(&w1[k * h..(k + 1) * h]) {
+                    *aj += xk * w;
+                }
+            }
+            for aj in a1.iter_mut() {
+                *aj = aj.tanh();
+            }
+            // logits = W2ᵀa1 + b2, j-outer so W2 rows stream contiguously
+            logits.copy_from_slice(b2);
+            for j in 0..h {
+                let aj = a1[j];
+                for (lo, &w) in logits.iter_mut().zip(&w2[j * c..(j + 1) * c]) {
+                    *lo += aj * w;
+                }
+            }
+
+            // softmax cross-entropy (max-shifted for stability)
+            let mut maxl = logits[0];
+            for &l in &logits[1..] {
+                if l > maxl {
+                    maxl = l;
+                }
+            }
+            let mut sum = 0.0f32;
+            for (p, &l) in probs.iter_mut().zip(logits.iter()) {
+                *p = (l - maxl).exp();
+                sum += *p;
+            }
+            for p in probs.iter_mut() {
+                *p /= sum;
+            }
+            loss_sum += -(probs[label].max(1e-12) as f64).ln();
+            let mut best = 0;
+            for o in 1..c {
+                if logits[o] > logits[best] {
+                    best = o;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+
+            if let Some(g) = grad.as_deref_mut() {
+                let (gw1, grest) = g.split_at_mut(d * h);
+                let (gb1, grest) = grest.split_at_mut(h);
+                let (gw2, gb2) = grest.split_at_mut(h * c);
+                // d(mean loss)/d(logit_o) = (p_o − 1{o=y}) / B
+                for o in 0..c {
+                    let dlo = (probs[o] - if o == label { 1.0 } else { 0.0 }) * inv_b;
+                    dl[o] = dlo;
+                    gb2[o] += dlo;
+                }
+                // W2 backward, j-outer: gw2 rows stream contiguously and
+                // each da1[j] keeps the o-ascending summation order
+                for j in 0..h {
+                    let aj = a1[j];
+                    let w2row = &w2[j * c..(j + 1) * c];
+                    let gw2row = &mut gw2[j * c..(j + 1) * c];
+                    let mut acc = 0.0f32;
+                    for o in 0..c {
+                        gw2row[o] += aj * dl[o];
+                        acc += w2row[o] * dl[o];
+                    }
+                    da1[j] = acc;
+                }
+                // tanh' = 1 − a1²; then W1 backward k-outer over
+                // contiguous gw1 rows
+                for j in 0..h {
+                    da1[j] *= 1.0 - a1[j] * a1[j];
+                    gb1[j] += da1[j];
+                }
+                for k in 0..d {
+                    let xk = xi[k];
+                    for (gw, &dz) in gw1[k * h..(k + 1) * h].iter_mut().zip(da1.iter()) {
+                        *gw += xk * dz;
+                    }
+                }
+            }
+        }
+        ((loss_sum / bsz as f64) as f32, correct as f32)
+    }
+
+    /// One SGD step updating `params` in place; returns the pre-update
+    /// mean loss. Allocation-free given a warmed-up `scratch`.
+    pub fn train_step_into(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        scratch: &mut HostScratch,
+    ) -> Result<f32> {
+        self.check(params, x, y)?;
+        scratch.act.ensure(self.hidden, self.classes);
+        scratch.grad.resize(self.param_count(), 0.0);
+        let HostScratch { act, grad, .. } = scratch;
+        grad.fill(0.0);
+        let (loss, _) = self.pass(params, x, y, Some(grad.as_mut_slice()), act);
+        for (p, &g) in params.iter_mut().zip(grad.iter()) {
+            *p -= lr * g;
+        }
+        Ok(loss)
+    }
+
+    /// `chunk_steps` consecutive in-place SGD steps; returns the mean loss.
+    pub fn train_chunk_into(
+        &self,
+        params: &mut [f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        scratch: &mut HostScratch,
+    ) -> Result<f32> {
+        let s = self.chunk_steps;
+        let bd = self.batch * self.input;
+        if xs.len() != s * bd || ys.len() != s * self.batch {
+            bail!(
+                "chunk shape mismatch: {}×{} inputs / {} labels for S={s} B={}",
+                xs.len(),
+                self.input,
+                ys.len(),
+                self.batch
+            );
+        }
+        let mut loss_sum = 0.0f64;
+        for step in 0..s {
+            let x = &xs[step * bd..(step + 1) * bd];
+            let y = &ys[step * self.batch..(step + 1) * self.batch];
+            let loss = self.train_step_into(params, x, y, lr, scratch)?;
+            loss_sum += loss as f64;
+        }
+        Ok((loss_sum / s as f64) as f32)
+    }
+
+    /// Evaluate one batch against caller-owned scratch; returns
+    /// `(mean_loss, correct_count)`. Never touches the gradient buffer, so
+    /// an evaluation-only scratch stays activation-sized.
+    pub fn eval_step_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        scratch: &mut HostScratch,
+    ) -> Result<(f32, f32)> {
+        self.check(params, x, y)?;
+        scratch.act.ensure(self.hidden, self.classes);
+        Ok(self.pass(params, x, y, None, &mut scratch.act))
+    }
+
+    /// First-order MAML step (Eq. 16–17) updating `params` in place: inner
+    /// step on the support batch, outer step from the query gradient at
+    /// the adapted parameters. Returns the query loss at the adapted
+    /// parameters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maml_step_into(
+        &self,
+        params: &mut [f32],
+        sx: &[f32],
+        sy: &[f32],
+        qx: &[f32],
+        qy: &[f32],
+        alpha: f32,
+        beta: f32,
+        scratch: &mut HostScratch,
+    ) -> Result<f32> {
+        self.check(params, sx, sy)?;
+        self.check(params, qx, qy)?;
+        scratch.act.ensure(self.hidden, self.classes);
+        scratch.grad.resize(self.param_count(), 0.0);
+        scratch.adapted.resize(self.param_count(), 0.0);
+        let HostScratch { act, grad, adapted } = scratch;
+        grad.fill(0.0);
+        let _ = self.pass(params, sx, sy, Some(grad.as_mut_slice()), act);
+        for ((a, &p), &g) in adapted.iter_mut().zip(params.iter()).zip(grad.iter()) {
+            *a = p - alpha * g;
+        }
+        grad.fill(0.0);
+        let (qloss, _) = self.pass(adapted.as_slice(), qx, qy, Some(grad.as_mut_slice()), act);
+        for (p, &g) in params.iter_mut().zip(grad.iter()) {
+            *p -= beta * g;
+        }
+        Ok(qloss)
+    }
+
+    /// One SGD step; returns `(new_params, pre-update mean loss)`.
+    /// Allocating convenience wrapper over [`HostModel::train_step_into`]
+    /// — hot paths thread a caller-owned [`HostScratch`] instead.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let mut scratch = HostScratch::new();
+        let loss = self.train_step_into(&mut p, x, y, lr, &mut scratch)?;
+        Ok((p, loss))
+    }
+
+    /// `chunk_steps` consecutive SGD steps; returns `(params, mean loss)`.
+    /// Allocating wrapper over [`HostModel::train_chunk_into`].
+    pub fn train_chunk(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let mut scratch = HostScratch::new();
+        let loss = self.train_chunk_into(&mut p, xs, ys, lr, &mut scratch)?;
+        Ok((p, loss))
+    }
+
+    /// Evaluate one batch; returns `(mean_loss, correct_count)`.
+    /// Allocating wrapper over [`HostModel::eval_step_into`].
+    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        let mut scratch = HostScratch::new();
+        self.eval_step_into(params, x, y, &mut scratch)
+    }
+
+    /// First-order MAML step (Eq. 16–17); returns `(new_params, query
+    /// loss)`. Allocating wrapper over [`HostModel::maml_step_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn maml_step(
+        &self,
+        params: &[f32],
+        sx: &[f32],
+        sy: &[f32],
+        qx: &[f32],
+        qy: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let mut scratch = HostScratch::new();
+        let qloss = self.maml_step_into(&mut p, sx, sy, qx, qy, alpha, beta, &mut scratch)?;
+        Ok((p, qloss))
+    }
+}
+
+/// The seed's scalar kernels, retained verbatim as the bit-exactness
+/// oracle for the blocked in-place kernels: the property tests in this
+/// module pin bit-identical `(params, loss)` across random geometries,
+/// and `bench_runtime` measures the before/after ns/step gap against
+/// these to track the perf trajectory (`BENCH_runtime.json`).
+pub mod reference {
+    use super::HostModel;
+    use anyhow::Result;
+
+    /// Scalar forward/backward pass over the batch (the seed's
+    /// `batch_pass`): j-outer loops, stride-`h` `W1` access, one serial
+    /// accumulator per output. Returns `(mean_loss, correct_count)` and,
+    /// when `grad` is provided (zeroed, `param_count` long), accumulates
+    /// d(mean_loss)/d(params) into it.
+    pub fn batch_pass(
+        m: &HostModel,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        mut grad: Option<&mut [f32]>,
+    ) -> (f32, f32) {
+        let d = m.input;
+        let h = m.hidden;
+        let c = m.classes;
         let bsz = y.len();
         let (w1, rest) = params.split_at(d * h);
         let (b1, rest) = rest.split_at(h);
@@ -197,52 +557,66 @@ impl HostModel {
         ((loss_sum / bsz as f64) as f32, correct as f32)
     }
 
-    /// One SGD step; returns `(new_params, pre-update mean loss)`.
-    pub fn train_step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
-        self.check(params, x, y)?;
+    /// Scalar one-step SGD (the seed's `train_step`); returns
+    /// `(new_params, pre-update mean loss)`.
+    pub fn train_step(
+        m: &HostModel,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        m.check(params, x, y)?;
         let mut grad = vec![0.0f32; params.len()];
-        let (loss, _) = self.batch_pass(params, x, y, Some(&mut grad));
+        let (loss, _) = batch_pass(m, params, x, y, Some(&mut grad));
         let new = params.iter().zip(&grad).map(|(p, g)| p - lr * g).collect();
         Ok((new, loss))
     }
 
-    /// `chunk_steps` consecutive SGD steps; returns `(params, mean loss)`.
-    pub fn train_chunk(&self, params: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
-        let s = self.chunk_steps;
-        let bd = self.batch * self.input;
-        if xs.len() != s * bd || ys.len() != s * self.batch {
-            bail!(
+    /// Scalar `chunk_steps`-step SGD (the seed's `train_chunk`); returns
+    /// `(params, mean loss)`.
+    pub fn train_chunk(
+        m: &HostModel,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let s = m.chunk_steps;
+        let bd = m.batch * m.input;
+        if xs.len() != s * bd || ys.len() != s * m.batch {
+            anyhow::bail!(
                 "chunk shape mismatch: {}×{} inputs / {} labels for S={s} B={}",
                 xs.len(),
-                self.input,
+                m.input,
                 ys.len(),
-                self.batch
+                m.batch
             );
         }
         let mut p = params.to_vec();
         let mut loss_sum = 0.0f64;
         for step in 0..s {
             let x = &xs[step * bd..(step + 1) * bd];
-            let y = &ys[step * self.batch..(step + 1) * self.batch];
-            let (np, loss) = self.train_step(&p, x, y, lr)?;
+            let y = &ys[step * m.batch..(step + 1) * m.batch];
+            let (np, loss) = train_step(m, &p, x, y, lr)?;
             p = np;
             loss_sum += loss as f64;
         }
         Ok((p, (loss_sum / s as f64) as f32))
     }
 
-    /// Evaluate one batch; returns `(mean_loss, correct_count)`.
-    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
-        self.check(params, x, y)?;
-        Ok(self.batch_pass(params, x, y, None))
+    /// Scalar evaluation (the seed's `eval_step`); returns
+    /// `(mean_loss, correct_count)`.
+    pub fn eval_step(m: &HostModel, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        m.check(params, x, y)?;
+        Ok(batch_pass(m, params, x, y, None))
     }
 
-    /// First-order MAML step (Eq. 16–17): inner step on the support batch,
-    /// outer step from the query gradient at the adapted parameters.
-    /// Returns `(new_params, query loss at the adapted parameters)`.
+    /// Scalar first-order MAML step (the seed's `maml_step`); returns
+    /// `(new_params, query loss at the adapted parameters)`.
     #[allow(clippy::too_many_arguments)]
     pub fn maml_step(
-        &self,
+        m: &HostModel,
         params: &[f32],
         sx: &[f32],
         sy: &[f32],
@@ -251,13 +625,13 @@ impl HostModel {
         alpha: f32,
         beta: f32,
     ) -> Result<(Vec<f32>, f32)> {
-        self.check(params, sx, sy)?;
-        self.check(params, qx, qy)?;
+        m.check(params, sx, sy)?;
+        m.check(params, qx, qy)?;
         let mut gs = vec![0.0f32; params.len()];
-        let _ = self.batch_pass(params, sx, sy, Some(&mut gs));
+        let _ = batch_pass(m, params, sx, sy, Some(&mut gs));
         let adapted: Vec<f32> = params.iter().zip(&gs).map(|(p, g)| p - alpha * g).collect();
         let mut gq = vec![0.0f32; params.len()];
-        let (qloss, _) = self.batch_pass(&adapted, qx, qy, Some(&mut gq));
+        let (qloss, _) = batch_pass(m, &adapted, qx, qy, Some(&mut gq));
         let new = params.iter().zip(&gq).map(|(p, g)| p - beta * g).collect();
         Ok((new, qloss))
     }
@@ -266,6 +640,7 @@ impl HostModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::quickprop::{property, Gen};
     use crate::util::Rng;
 
     fn toy_model() -> HostModel {
@@ -312,15 +687,17 @@ mod tests {
             .collect();
         let (x, y) = toy_batch(&m, 3, 10);
         let mut grad = vec![0.0f32; params.len()];
-        let (_, _) = m.batch_pass(&params, &x, &y, Some(&mut grad));
+        let mut act = ActBufs::default();
+        act.ensure(m.hidden, m.classes);
+        let (_, _) = m.pass(&params, &x, &y, Some(&mut grad), &mut act);
         let eps = 1e-3f32;
         for i in 0..params.len() {
             let mut plus = params.clone();
             plus[i] += eps;
             let mut minus = params.clone();
             minus[i] -= eps;
-            let lp = m.batch_pass(&plus, &x, &y, None).0;
-            let lm = m.batch_pass(&minus, &x, &y, None).0;
+            let lp = m.pass(&plus, &x, &y, None, &mut act).0;
+            let lm = m.pass(&minus, &x, &y, None, &mut act).0;
             let fd = (lp - lm) / (2.0 * eps);
             let diff = (fd - grad[i]).abs();
             assert!(
@@ -337,9 +714,9 @@ mod tests {
         let mut params = m.init_params(1);
         let (x, y) = toy_batch(&m, 4, 2);
         let first = m.eval_step(&params, &x, &y).unwrap().0;
+        let mut scratch = HostScratch::new();
         for _ in 0..150 {
-            let (p, _) = m.train_step(&params, &x, &y, 0.5).unwrap();
-            params = p;
+            m.train_step_into(&mut params, &x, &y, 0.5, &mut scratch).unwrap();
         }
         let last = m.eval_step(&params, &x, &y).unwrap().0;
         assert!(last < 0.6 * first, "loss {first} -> {last}");
@@ -402,5 +779,101 @@ mod tests {
         let (loss, correct) = m.eval_step(&params, &x, &y).unwrap();
         assert!(loss > 0.0 && loss.is_finite());
         assert!((0.0..=8.0).contains(&correct));
+    }
+
+    /// A random small geometry plus matching random parameters.
+    fn random_geometry(g: &mut Gen) -> (HostModel, Vec<f32>) {
+        let m = HostModel {
+            input: g.usize_in(1, 24),
+            hidden: g.usize_in(1, 16),
+            classes: g.usize_in(2, 8),
+            batch: g.usize_in(1, 5),
+            chunk_steps: g.usize_in(1, 3),
+        };
+        let mut rng = Rng::new(g.u64());
+        let params = (0..m.param_count()).map(|_| 0.5 * rng.normal() as f32).collect();
+        (m, params)
+    }
+
+    #[test]
+    fn train_and_eval_bit_identical_to_reference() {
+        property("blocked train/eval == scalar reference", 48, |g: &mut Gen| {
+            let (m, params) = random_geometry(g);
+            let (x, y) = toy_batch(&m, m.batch, g.u64());
+            let lr = 0.1f32;
+            let mut scratch = HostScratch::new();
+
+            let (p_ref, l_ref) = reference::train_step(&m, &params, &x, &y, lr).unwrap();
+            let mut p_new = params.clone();
+            let l_new = m.train_step_into(&mut p_new, &x, &y, lr, &mut scratch).unwrap();
+            assert_eq!(p_ref, p_new, "train_step params diverged (d={} h={})", m.input, m.hidden);
+            assert_eq!(l_ref.to_bits(), l_new.to_bits(), "train_step loss diverged");
+
+            let (el_ref, ec_ref) = reference::eval_step(&m, &params, &x, &y).unwrap();
+            let (el_new, ec_new) = m.eval_step_into(&params, &x, &y, &mut scratch).unwrap();
+            assert_eq!(el_ref.to_bits(), el_new.to_bits(), "eval loss diverged");
+            assert_eq!(ec_ref, ec_new, "eval correct-count diverged");
+        });
+    }
+
+    #[test]
+    fn chunk_and_maml_bit_identical_to_reference() {
+        property("blocked chunk/maml == scalar reference", 32, |g: &mut Gen| {
+            let (m, params) = random_geometry(g);
+            let bd = m.batch * m.input;
+            let mut xs = vec![0.0f32; m.chunk_steps * bd];
+            let mut ys = vec![0.0f32; m.chunk_steps * m.batch];
+            for step in 0..m.chunk_steps {
+                let (x, y) = toy_batch(&m, m.batch, g.u64());
+                xs[step * bd..(step + 1) * bd].copy_from_slice(&x);
+                ys[step * m.batch..(step + 1) * m.batch].copy_from_slice(&y);
+            }
+            let mut scratch = HostScratch::new();
+
+            let (p_ref, l_ref) = reference::train_chunk(&m, &params, &xs, &ys, 0.05).unwrap();
+            let mut p_new = params.clone();
+            let l_new = m.train_chunk_into(&mut p_new, &xs, &ys, 0.05, &mut scratch).unwrap();
+            assert_eq!(p_ref, p_new, "train_chunk params diverged");
+            assert_eq!(l_ref.to_bits(), l_new.to_bits(), "train_chunk loss diverged");
+
+            let (sx, sy) = toy_batch(&m, m.batch, g.u64());
+            let (qx, qy) = toy_batch(&m, m.batch, g.u64());
+            let (a, b) = (0.03f32, 0.07f32);
+            let (p_ref, q_ref) =
+                reference::maml_step(&m, &params, &sx, &sy, &qx, &qy, a, b).unwrap();
+            let mut p_new = params.clone();
+            let q_new = m
+                .maml_step_into(&mut p_new, &sx, &sy, &qx, &qy, a, b, &mut scratch)
+                .unwrap();
+            assert_eq!(p_ref, p_new, "maml_step params diverged");
+            assert_eq!(q_ref.to_bits(), q_new.to_bits(), "maml query loss diverged");
+        });
+    }
+
+    #[test]
+    fn scratch_recycles_across_geometries() {
+        // one scratch serving two different geometries back to back must
+        // match fresh-scratch results bitwise (the lazy resize path)
+        let big = HostModel {
+            input: 12,
+            hidden: 9,
+            classes: 6,
+            batch: 3,
+            chunk_steps: 1,
+        };
+        let small = toy_model();
+        let mut shared = HostScratch::new();
+        for m in [&big, &small, &big] {
+            let params = m.init_params(21);
+            let (x, y) = toy_batch(m, m.batch, 22);
+            let mut p_shared = params.clone();
+            let l_shared = m.train_step_into(&mut p_shared, &x, &y, 0.2, &mut shared).unwrap();
+            let mut p_fresh = params.clone();
+            let l_fresh = m
+                .train_step_into(&mut p_fresh, &x, &y, 0.2, &mut HostScratch::new())
+                .unwrap();
+            assert_eq!(p_shared, p_fresh, "recycled scratch perturbed results");
+            assert_eq!(l_shared.to_bits(), l_fresh.to_bits());
+        }
     }
 }

@@ -7,10 +7,15 @@
 //!
 //! * [`artifacts`] — manifest parsing + initial-parameter loading, plus
 //!   the built-in host manifest ([`Manifest::host`]).
-//! * [`executor`] — one runtime per variant with typed wrappers
-//!   (`train_step`, `train_chunk`, `eval_step`, `maml_step`,
-//!   `aggregate`), dispatching to PJRT or the host model.
-//! * [`host_model`] — the pure-Rust MLP backend.
+//! * [`executor`] — one runtime per variant with typed entry points,
+//!   dispatching to PJRT or the host model. The hot path is the in-place
+//!   family (`train_step_into`, `train_chunk_into`, `maml_step_into`,
+//!   `eval_step_with`, `aggregate_into`) operating against a caller-owned
+//!   [`HostScratch`]; the allocating wrappers (`train_step`, …) remain for
+//!   convenience and tests.
+//! * [`host_model`] — the pure-Rust MLP backend: cache-blocked in-place
+//!   kernels plus the seed's scalar kernels retained in
+//!   [`host_model::reference`] as the bit-exactness oracle.
 //! * [`host`] — shared pure-Rust vector ops (weighted aggregation, norms)
 //!   used by the dispatcher, the baselines, and tests.
 
@@ -21,4 +26,4 @@ pub mod host_model;
 
 pub use artifacts::{Manifest, VariantSpec};
 pub use executor::ModelRuntime;
-pub use host_model::HostModel;
+pub use host_model::{HostModel, HostScratch};

@@ -2,16 +2,19 @@
 //! advance, the time-ordered event queue behind the event timeline
 //! (`--timeline event`), the mobility process that turns orbital motion
 //! into cluster-membership churn (join/leave events that drive the paper's
-//! re-clustering trigger), and the deterministic parallel round engine
-//! that fans local training out across OS threads without perturbing the
-//! simulated numerics.
+//! re-clustering trigger), the deterministic parallel round engine that
+//! fans local training out across OS threads without perturbing the
+//! simulated numerics, and the recycled buffer pools that keep the
+//! steady-state round loop free of parameter-sized allocations.
 
 pub mod clock;
 pub mod engine;
 pub mod events;
 pub mod mobility;
+pub mod param_pool;
 
 pub use clock::SimClock;
 pub use engine::Engine;
 pub use events::{Event, EventQueue};
 pub use mobility::MobilityModel;
+pub use param_pool::{ParamPool, Recycled, ScratchPool};

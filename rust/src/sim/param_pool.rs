@@ -1,0 +1,229 @@
+//! Recycled parameter-vector pool and a generic scratch recycler.
+//!
+//! Steady-state rounds hand every member a parameter buffer overwritten
+//! from its cluster model; cloning the model per member per round
+//! (`models[c].clone()`) was the single largest allocation source in the
+//! round loop. [`ParamPool`] keeps returned buffers on a thread-safe free
+//! list so the engine's scatter jobs can take them concurrently, and
+//! [`ScratchPool`] does the same for arbitrary worker scratch (training
+//! buffers survive across rounds even though [`crate::sim::engine::Engine`]
+//! re-creates its workers on every `run_with` call).
+//!
+//! Pooling never touches the numerics: a taken buffer is always fully
+//! overwritten before use, so results are bit-identical to the cloning
+//! path regardless of which recycled allocation a member happens to get,
+//! and regardless of the worker schedule that returned it (pinned by
+//! `tests/engine_determinism.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe free list of `param_count`-sized `Vec<f32>` buffers.
+pub struct ParamPool {
+    param_count: usize,
+    free: Mutex<Vec<Vec<f32>>>,
+    allocated: AtomicUsize,
+    recycled: AtomicUsize,
+}
+
+impl ParamPool {
+    pub fn new(param_count: usize) -> ParamPool {
+        ParamPool {
+            param_count,
+            free: Mutex::new(Vec::new()),
+            allocated: AtomicUsize::new(0),
+            recycled: AtomicUsize::new(0),
+        }
+    }
+
+    /// Buffer length this pool recycles.
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// Take a buffer holding a copy of `src` (which must be `param_count`
+    /// long): recycled off the free list when possible, freshly allocated
+    /// otherwise. Either way the contents are exactly `src`.
+    pub fn take_copy(&self, src: &[f32]) -> Vec<f32> {
+        assert_eq!(src.len(), self.param_count, "pool geometry mismatch");
+        let recycled = self.free.lock().expect("param pool poisoned").pop();
+        match recycled {
+            Some(mut buf) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                buf.copy_from_slice(src);
+                buf
+            }
+            None => {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                src.to_vec()
+            }
+        }
+    }
+
+    /// Check a buffer back in for reuse. Buffers of the wrong length
+    /// (e.g. an empty vector left by `std::mem::take`) are dropped rather
+    /// than poisoning the free list.
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.len() == self.param_count {
+            self.free.lock().expect("param pool poisoned").push(buf);
+        }
+    }
+
+    /// `(fresh_allocations, recycled_takes)` so far. A steady-state round
+    /// loop only grows the first during its warm-up round.
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.allocated.load(Ordering::Relaxed),
+            self.recycled.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Generic free list for worker scratch state that must outlive one
+/// `Engine::run_with` call. [`ScratchPool::take_or`] hands back a
+/// [`Recycled`] guard that returns the item to the pool on drop, so the
+/// engine's per-worker `init` closures recycle scratch across rounds
+/// without any explicit check-in.
+pub struct ScratchPool<T> {
+    free: Mutex<Vec<T>>,
+}
+
+impl<T> ScratchPool<T> {
+    pub fn new() -> ScratchPool<T> {
+        ScratchPool {
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Pop a pooled item, or build one with `make` when the pool is dry.
+    pub fn take_or(&self, make: impl FnOnce() -> T) -> Recycled<'_, T> {
+        let item = self
+            .free
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_else(make);
+        Recycled {
+            pool: self,
+            item: Some(item),
+        }
+    }
+
+    /// Pooled items currently on the free list.
+    pub fn idle(&self) -> usize {
+        self.free.lock().expect("scratch pool poisoned").len()
+    }
+
+    fn put(&self, item: T) {
+        self.free.lock().expect("scratch pool poisoned").push(item);
+    }
+}
+
+impl<T> Default for ScratchPool<T> {
+    fn default() -> Self {
+        ScratchPool::new()
+    }
+}
+
+/// Guard around a pooled scratch item: derefs to `T` and returns the item
+/// to its [`ScratchPool`] when dropped.
+pub struct Recycled<'p, T> {
+    pool: &'p ScratchPool<T>,
+    item: Option<T>,
+}
+
+impl<T> std::ops::Deref for Recycled<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("recycled item already returned")
+    }
+}
+
+impl<T> std::ops::DerefMut for Recycled<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("recycled item already returned")
+    }
+}
+
+impl<T> Drop for Recycled<'_, T> {
+    fn drop(&mut self) {
+        if let Some(item) = self.item.take() {
+            self.pool.put(item);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_copy_matches_source_and_recycles() {
+        let pool = ParamPool::new(8);
+        let src: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let a = pool.take_copy(&src);
+        assert_eq!(a, src);
+        assert_eq!(pool.stats(), (1, 0));
+        pool.put(a);
+        let other: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        let b = pool.take_copy(&other);
+        assert_eq!(b, other, "recycled buffer must be fully overwritten");
+        assert_eq!(pool.stats(), (1, 1), "second take must reuse the buffer");
+    }
+
+    #[test]
+    fn wrong_length_buffers_are_dropped_not_pooled() {
+        let pool = ParamPool::new(4);
+        pool.put(Vec::new());
+        pool.put(vec![0.0; 3]);
+        let src = [1.0f32, 2.0, 3.0, 4.0];
+        let buf = pool.take_copy(&src);
+        assert_eq!(buf, src);
+        assert_eq!(pool.stats(), (1, 0), "bad buffers must not be recycled");
+    }
+
+    #[test]
+    #[should_panic(expected = "pool geometry mismatch")]
+    fn take_copy_rejects_wrong_source_length() {
+        ParamPool::new(4).take_copy(&[0.0; 3]);
+    }
+
+    #[test]
+    fn scratch_guard_returns_on_drop() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        {
+            let mut guard = pool.take_or(|| vec![0u8; 16]);
+            guard[0] = 7;
+            assert_eq!(pool.idle(), 0);
+        }
+        assert_eq!(pool.idle(), 1, "guard drop must return the item");
+        let guard = pool.take_or(|| panic!("pool should have an item"));
+        assert_eq!(guard[0], 7);
+    }
+
+    #[test]
+    fn pools_are_shareable_across_threads() {
+        let pool = ParamPool::new(32);
+        let src: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        for _ in 0..50 {
+                            let buf = pool.take_copy(&src);
+                            assert_eq!(buf, src);
+                            pool.put(buf);
+                        }
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().expect("pool worker panicked");
+            }
+        });
+        let (fresh, recycled) = pool.stats();
+        assert_eq!(fresh + recycled, 200);
+        assert!(fresh <= 4, "at most one fresh buffer per concurrent taker");
+    }
+}

@@ -7,6 +7,10 @@ use fedhc::baselines::run_cfedavg;
 use fedhc::config::ExperimentConfig;
 use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
 use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::sim::engine::Engine;
+use fedhc::sim::param_pool::ParamPool;
+use fedhc::util::rng::stream_seed;
+use fedhc::util::Rng;
 
 fn run_with_workers(workers: usize, strategy: Strategy, rounds: usize) -> RunResult {
     let manifest = Manifest::host();
@@ -94,6 +98,40 @@ fn cfedavg_runs_and_is_deterministic_on_host_backend() {
     for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
         assert!(x.time_s == y.time_s && x.accuracy == y.accuracy);
     }
+}
+
+#[test]
+fn pooled_buffers_do_not_perturb_determinism() {
+    // jobs overwrite pooled parameter buffers (exactly as the local-train
+    // scatter does): results must be identical at any worker count and on
+    // a warm pool, because every take is fully overwritten before use —
+    // which recycled allocation a task receives is schedule-dependent,
+    // the numbers it computes are not
+    let pool = ParamPool::new(512);
+    let model: Vec<f32> = (0..512).map(|i| (i as f32 * 0.01).sin()).collect();
+    let tasks: Vec<u64> = (0..40).collect();
+    let run = |w: usize| {
+        Engine::new(w).run(&tasks, |_, &t| {
+            let mut buf = pool.take_copy(&model);
+            let mut rng = Rng::new(stream_seed(7, 3, t));
+            for v in buf.iter_mut() {
+                *v += rng.uniform_f32();
+            }
+            let sum: f64 = buf.iter().map(|&x| x as f64).sum();
+            pool.put(buf);
+            sum
+        })
+    };
+    let base = run(1);
+    for w in [2usize, 4, 8] {
+        assert_eq!(base, run(w), "pooled buffers perturbed results at w={w}");
+    }
+    let (fresh, recycled) = pool.stats();
+    assert!(recycled > 0, "warm runs must recycle buffers");
+    assert!(
+        fresh <= 8,
+        "fresh allocations bounded by peak concurrency, got {fresh}"
+    );
 }
 
 #[test]

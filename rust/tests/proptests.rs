@@ -8,6 +8,8 @@ use fedhc::data::{partition_dirichlet, partition_iid};
 use fedhc::fl::aggregate::{fedavg_weights, quality_weights};
 use fedhc::orbit::propagate::Constellation;
 use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::runtime::host_model::reference;
+use fedhc::runtime::{HostModel, HostScratch};
 use fedhc::util::quickprop::{property, Gen};
 use fedhc::util::Rng;
 
@@ -187,6 +189,50 @@ fn prop_quality_weights_match_eq12_closed_form() {
                 w[i]
             );
         }
+    });
+}
+
+#[test]
+fn prop_blocked_kernels_bit_identical_to_scalar_reference() {
+    // the compute plane's contract: the cache-blocked in-place kernels
+    // must reproduce the seed's scalar kernels bit for bit on every
+    // geometry — same params, same loss, no tolerance
+    property("in-place kernels == seed kernels", 30, |g: &mut Gen| {
+        let m = HostModel {
+            input: g.usize_in(1, 20),
+            hidden: g.usize_in(1, 12),
+            classes: g.usize_in(2, 6),
+            batch: g.usize_in(1, 4),
+            chunk_steps: g.usize_in(1, 2),
+        };
+        let params = m.init_params(g.u64());
+        let mut rng = Rng::new(g.u64());
+        let n = m.batch;
+        let mut x = vec![0.0f32; n * m.input];
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let c = rng.below_usize(m.classes);
+            y[i] = c as f32;
+            for k in 0..m.input {
+                x[i * m.input + k] = 0.4 * rng.normal() as f32;
+            }
+        }
+        let mut scratch = HostScratch::new();
+
+        let (p_ref, l_ref) = reference::train_step(&m, &params, &x, &y, 0.2).unwrap();
+        let mut p_new = params.clone();
+        let l_new = m.train_step_into(&mut p_new, &x, &y, 0.2, &mut scratch).unwrap();
+        assert_eq!(p_ref, p_new, "train_step params diverged");
+        assert_eq!(l_ref.to_bits(), l_new.to_bits(), "train_step loss diverged");
+
+        let (q_ref, ql_ref) =
+            reference::maml_step(&m, &params, &x, &y, &x, &y, 0.05, 0.02).unwrap();
+        let mut q_new = params.clone();
+        let ql_new = m
+            .maml_step_into(&mut q_new, &x, &y, &x, &y, 0.05, 0.02, &mut scratch)
+            .unwrap();
+        assert_eq!(q_ref, q_new, "maml_step params diverged");
+        assert_eq!(ql_ref.to_bits(), ql_new.to_bits(), "maml query loss diverged");
     });
 }
 
