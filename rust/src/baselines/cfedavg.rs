@@ -12,7 +12,7 @@
 //! replicated across K.
 
 use crate::coordinator::fedhc::RunResult;
-use crate::coordinator::round::data_upload_with;
+use crate::coordinator::round::{data_upload_with, throttle_cpu};
 use crate::coordinator::stages::{EngineLocalTrain, LocalTrainStage, RoundPools};
 use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
@@ -71,55 +71,74 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     // ---- per-round: raw-data collection upload, then centralised epochs
     let mut converged_at = None;
     for round in 1..=cfg.rounds {
-        // every client ships the data it collected this round (its shard)
         let positions = trial.positions();
-        let uploads: Vec<(usize, crate::orbit::Vec3)> = trial
-            .clients
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| *i != central)
-            .map(|(i, c)| (c.data_size(), positions[i]))
-            .collect();
-        // per-uploader link costs fanned out on the engine (order-stable)
-        let (t_up, e_up) = data_upload_with(
-            &engine,
-            &trial.link,
-            &trial.energy,
-            &uploads,
-            bits_per_sample,
-            positions[central],
-        );
-        trial.ledger.add_time(t_up);
-        trial.ledger.add_energy(e_up);
-        trial.clock.advance(t_up);
-
-        let samples = {
-            let mut models = [std::mem::take(&mut node.params)];
-            let mut outs = train_stage.train(
+        // scenario plane: the centralised baseline observes the same fault
+        // trajectory as the clustered methods — unreachable clients skip
+        // their upload, degraded ISLs stretch it, and a round in which the
+        // central satellite itself is down does no collection or training
+        // (the evaluation cadence below still runs on the stale model, so
+        // record counts and convergence checks stay comparable)
+        let avail = trial.scenario.advance_round(round as u64, &positions);
+        trial.ledger.add_faults(avail.faults_injected);
+        if !avail.unreachable[central] {
+            // every reachable client ships the data it collected this round
+            let uploads: Vec<(usize, crate::orbit::Vec3, f64)> = trial
+                .clients
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != central && !avail.unreachable[*i])
+                .map(|(i, c)| (c.data_size(), positions[i], avail.link_factor[i]))
+                .collect();
+            // per-uploader link costs fanned out on the engine (order-stable)
+            let (t_up, e_up) = data_upload_with(
                 &engine,
-                rt,
-                &cfg,
-                std::slice::from_ref(&node),
-                &models,
-                &[(0, 0)],
-                round as u64,
-                &pools,
-            )?;
-            let out = outs.pop().expect("central training job lost");
-            // the trained pooled buffer becomes the node's model; the
-            // pre-round vector goes back to the pool for the next round
-            node.params = out.params;
-            pools.params.put(std::mem::take(&mut models[0]));
-            node.last_loss = out.mean_loss;
-            node.rounds_trained += 1;
-            out.samples
-        };
-        // Eq. 9 compute at the central node; one epoch is sequential over
-        // the union data — no parallelism to exploit (the paper's point)
-        let t_cmp = trial.link.compute_time(samples, cpu_hz);
-        trial.ledger.add_time(t_cmp);
-        trial.ledger.add_energy(trial.energy.compute_energy(samples, cpu_hz));
-        trial.clock.advance(t_cmp);
+                &trial.link,
+                &trial.energy,
+                &uploads,
+                bits_per_sample,
+                positions[central],
+            );
+            trial.ledger.add_time(t_up);
+            trial.ledger.add_energy(e_up);
+            trial.clock.advance(t_up);
+
+            let samples = {
+                let mut models = [std::mem::take(&mut node.params)];
+                let mut outs = train_stage.train(
+                    &engine,
+                    rt,
+                    &cfg,
+                    std::slice::from_ref(&node),
+                    &models,
+                    &[(0, 0)],
+                    round as u64,
+                    &pools,
+                )?;
+                let out = outs.pop().expect("central training job lost");
+                // the trained pooled buffer becomes the node's model; the
+                // pre-round vector goes back to the pool for the next round
+                node.params = out.params;
+                pools.params.put(std::mem::take(&mut models[0]));
+                node.last_loss = out.mean_loss;
+                node.rounds_trained += 1;
+                out.samples
+            };
+            // Eq. 9 compute at the central node; one epoch is sequential
+            // over the union data — no parallelism to exploit (the paper's
+            // point). A scenario-plane slowdown throttles the effective
+            // CPU rate via the shared helper (exact identity at 1.0)
+            let cpu_eff = throttle_cpu(
+                &trial.link,
+                &mut trial.ledger,
+                samples,
+                cpu_hz,
+                avail.compute_slowdown[central],
+            );
+            let t_cmp = trial.link.compute_time(samples, cpu_eff);
+            trial.ledger.add_time(t_cmp);
+            trial.ledger.add_energy(trial.energy.compute_energy(samples, cpu_eff));
+            trial.clock.advance(t_cmp);
+        }
 
         if round % cfg.eval_every == 0 || round == cfg.rounds {
             let eval = evaluate(rt, &node.params, &trial.test, cfg.eval_batches)?;

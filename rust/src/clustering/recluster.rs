@@ -3,6 +3,8 @@
 //! constellation is re-clustered and newly-assigned satellites are
 //! warm-started via MAML (handled by the coordinator).
 
+use anyhow::{bail, Result};
+
 /// Dropout-threshold policy.
 #[derive(Clone, Copy, Debug)]
 pub struct ReclusterPolicy {
@@ -40,9 +42,13 @@ impl DropoutStats {
 }
 
 impl ReclusterPolicy {
-    pub fn new(threshold: f64) -> Self {
-        assert!((0.0..=1.0).contains(&threshold));
-        ReclusterPolicy { threshold }
+    /// Build a policy, rejecting out-of-range thresholds as usage errors
+    /// (the CLI/config error-handling style — no panics on bad input).
+    pub fn new(threshold: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&threshold) {
+            bail!("recluster threshold Z must be in [0, 1], got {threshold}");
+        }
+        Ok(ReclusterPolicy { threshold })
     }
 
     /// Whether any cluster's dropout rate exceeds Z.
@@ -170,8 +176,17 @@ mod tests {
     }
 
     #[test]
+    fn rejects_out_of_range_thresholds() {
+        assert!(ReclusterPolicy::new(-0.01).is_err());
+        assert!(ReclusterPolicy::new(1.01).is_err());
+        assert!(ReclusterPolicy::new(f64::NAN).is_err());
+        assert!(ReclusterPolicy::new(0.0).is_ok());
+        assert!(ReclusterPolicy::new(1.0).is_ok());
+    }
+
+    #[test]
     fn trigger_fires_above_threshold_only() {
-        let p = ReclusterPolicy::new(0.25);
+        let p = ReclusterPolicy::new(0.25).unwrap();
         let below = [DropoutStats {
             members: 20,
             dropped: 5,

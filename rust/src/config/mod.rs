@@ -5,6 +5,7 @@
 pub mod parse;
 
 use crate::data::DatasetKind;
+use crate::sim::scenario::{ScenarioConfig, ScenarioKind};
 use crate::util::cli::Args;
 use anyhow::{anyhow, bail, Result};
 
@@ -75,8 +76,13 @@ pub struct ExperimentConfig {
     /// Walker constellation geometry.
     pub planes: usize,
     pub sats_per_plane: usize,
-    /// Per-round client outage probability.
+    /// Per-round client outage probability (the scenario plane's
+    /// transient-outage process; runs under every scenario preset).
     pub outage_prob: f64,
+    /// Fault-injection scenario (`--scenario` preset + per-knob
+    /// overrides): hard failures, ground outages, link degradation,
+    /// stragglers, eclipse power-save. See [`crate::sim::scenario`].
+    pub scenario: ScenarioConfig,
     /// Client CPU heterogeneity: f_i uniform in [cpu_hz*lo, cpu_hz*hi].
     pub cpu_het: (f64, f64),
     /// Eval batches per evaluation (0 = full test set).
@@ -131,6 +137,7 @@ impl ExperimentConfig {
             planes: 4,
             sats_per_plane: 6,
             outage_prob: 0.02,
+            scenario: ScenarioConfig::default(),
             cpu_het: (0.5, 2.0),
             eval_batches: 0,
             eval_every: 1,
@@ -165,6 +172,7 @@ impl ExperimentConfig {
             planes: 8,
             sats_per_plane: 12,
             outage_prob: 0.02,
+            scenario: ScenarioConfig::default(),
             cpu_het: (0.5, 2.0),
             eval_batches: 8,
             eval_every: 1,
@@ -240,6 +248,30 @@ impl ExperimentConfig {
         self.planes = args.get_usize("planes", self.planes)?;
         self.sats_per_plane = args.get_usize("sats-per-plane", self.sats_per_plane)?;
         self.outage_prob = args.get_f64("outage", self.outage_prob)?;
+        if let Some(s) = args.get("scenario") {
+            let kind = ScenarioKind::parse(s).ok_or_else(|| {
+                anyhow!(
+                    "unknown scenario '{s}' \
+                     (expected nominal|churn|flaky-ground|stragglers|eclipse)"
+                )
+            })?;
+            self.scenario = ScenarioConfig::preset(kind);
+        }
+        let sc = &mut self.scenario;
+        sc.sat_fail_prob = args.get_f64("scenario-sat-fail", sc.sat_fail_prob)?;
+        sc.sat_fail_rounds = args.get_u64("scenario-fail-rounds", sc.sat_fail_rounds)?;
+        sc.ground_outage_prob = args.get_f64("scenario-ground-outage", sc.ground_outage_prob)?;
+        sc.ground_outage_rounds = args.get_u64("scenario-ground-rounds", sc.ground_outage_rounds)?;
+        sc.link_degrade_prob = args.get_f64("scenario-link-degrade", sc.link_degrade_prob)?;
+        let link_factor =
+            args.get_f64("scenario-link-factor", sc.link_degrade_milli as f64 / 1000.0)?;
+        sc.link_degrade_milli = (link_factor * 1000.0).round() as u32;
+        sc.link_degrade_rounds = args.get_u64("scenario-link-rounds", sc.link_degrade_rounds)?;
+        sc.straggler_prob = args.get_f64("scenario-straggler", sc.straggler_prob)?;
+        let slowdown = args.get_f64("scenario-slowdown", sc.straggler_milli as f64 / 1000.0)?;
+        sc.straggler_milli = (slowdown * 1000.0).round() as u32;
+        sc.straggler_rounds = args.get_u64("scenario-straggler-rounds", sc.straggler_rounds)?;
+        sc.eclipse = args.get_usize("scenario-eclipse", sc.eclipse as usize)? != 0;
         self.eval_batches = args.get_usize("eval-batches", self.eval_batches)?;
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.workers = args.get_usize("workers", self.workers)?;
@@ -274,6 +306,7 @@ impl ExperimentConfig {
         if !(0.0..1.0).contains(&self.outage_prob) {
             bail!("outage probability must be in [0, 1)");
         }
+        self.scenario.validate()?;
         if self.cpu_het.0 <= 0.0 || self.cpu_het.1 < self.cpu_het.0 {
             bail!("cpu heterogeneity band must be positive and ordered");
         }
@@ -377,6 +410,54 @@ mod tests {
         let args = Args::parse(["--dataset", "imagenet"].iter().map(|s| s.to_string()), &[]);
         let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
         assert!(e.to_string().contains("unknown dataset"), "{e}");
+    }
+
+    #[test]
+    fn scenario_preset_and_knob_overrides_apply() {
+        let args = Args::parse(
+            ["--scenario", "churn", "--scenario-sat-fail", "0.2"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.scenario.kind, ScenarioKind::Churn);
+        assert_eq!(c.scenario.sat_fail_prob, 0.2);
+        // knobs compose onto a preset the flag did not change
+        let args = Args::parse(
+            ["--scenario-eclipse", "1", "--scenario-slowdown", "2.5"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.scenario.kind, ScenarioKind::Nominal);
+        assert!(c.scenario.eclipse);
+        assert_eq!(c.scenario.straggler_milli, 2500);
+    }
+
+    #[test]
+    fn bad_scenario_values_are_usage_errors() {
+        let args = Args::parse(
+            ["--scenario", "meteor-storm"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("unknown scenario"), "{e}");
+        let args = Args::parse(
+            ["--scenario-sat-fail", "1.5"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("scenario-sat-fail"), "{e}");
+        let args = Args::parse(
+            ["--scenario", "stragglers", "--scenario-slowdown", "0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("scenario-slowdown"), "{e}");
     }
 
     #[test]

@@ -135,6 +135,30 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_model_values_from_files_are_rejected() {
+        // the assert-style panics in ReclusterPolicy/MobilityModel are
+        // gone: a bad Z or outage rate in a config file surfaces as a
+        // usage error through the same validation path as the CLI
+        let reject = |text: &str, needle: &str| {
+            let mut args = Args::parse(std::iter::empty::<String>(), &[]);
+            merge_file_into_args(&mut args, text).unwrap();
+            let e = crate::config::ExperimentConfig::tiny()
+                .with_args(&args)
+                .unwrap_err();
+            assert!(e.to_string().contains(needle), "'{needle}' not in '{e}'");
+        };
+        reject("z = 1.5", "recluster threshold");
+        reject("z = -0.1", "recluster threshold");
+        reject("outage = 1.0", "outage probability");
+        reject("outage = -0.5", "outage probability");
+        reject("scenario = solar-flare", "unknown scenario");
+        reject("scenario-sat-fail = 2.0", "scenario-sat-fail");
+        // and the model constructors themselves reject the same values
+        assert!(crate::clustering::recluster::ReclusterPolicy::new(1.5).is_err());
+        assert!(crate::sim::MobilityModel::new(1.0).is_err());
+    }
+
+    #[test]
     fn cli_wins_over_file() {
         let mut args = Args::parse(
             ["--k", "9"].iter().map(|s| s.to_string()),

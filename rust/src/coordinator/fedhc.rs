@@ -14,7 +14,7 @@
 //! C-FedAvg is structurally different (raw-data upload + centralised
 //! training) and lives in `baselines::cfedavg`.
 
-use super::round::{cluster_round_with, MemberWork};
+use super::round::{cluster_round_with, throttle_cpu, MemberWork};
 use super::stages::{cluster_round_events, GroundCtx, RoundPools, Stages};
 use super::trial::Trial;
 use crate::clustering::kmeans::KMeans;
@@ -25,6 +25,7 @@ use crate::config::Timeline;
 use crate::fl::aggregate::{aggregate, fedavg_weights};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
+use crate::orbit::GroundStation;
 use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
 use crate::sim::events::EventQueue;
@@ -319,7 +320,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let rt = trial.rt;
     let k = cfg.clusters;
     let model_bits = rt.spec.param_count as f64 * 32.0;
-    let policy = ReclusterPolicy::new(cfg.recluster_threshold);
+    let policy = ReclusterPolicy::new(cfg.recluster_threshold)?;
     let engine = Engine::new(cfg.workers);
     let pools = RoundPools::new(rt);
     let mut queue = EventQueue::new(); // event-timeline scratch
@@ -335,13 +336,19 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
 
     for round in 1..=cfg.rounds {
         let positions = trial.positions();
-        // membership churn at the current epoch (drives line 15's d_r)
+        // scenario plane: fold this round's fault events into availability
+        // (hard failures, eclipse power-save, transient outages, link and
+        // compute degradations, dark ground stations)
+        let avail = trial.scenario.advance_round(round as u64, &positions);
+        trial.ledger.add_faults(avail.faults_injected);
+        // membership churn at the current epoch (drives line 15's d_r);
+        // unreachable satellites count as dropouts alongside orbital drift
         let churn = trial.mobility.churn(
             &trial.constellation,
             &topo.assignment,
             &topo.centroids_km,
             trial.clock.now(),
-            &mut trial.rng,
+            &avail.unreachable,
         );
         let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
 
@@ -394,10 +401,23 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 pools.params.put(std::mem::take(&mut r.params));
                 trial.clients[m].last_loss = r.mean_loss;
                 trial.clients[m].rounds_trained += 1;
+                // scenario degradations: a straggler's effective CPU rate
+                // shrinks (stretching t_cmp through the ordinary Eq. 7
+                // fold) and a degraded ISL scales the uplink rate; at the
+                // nominal factors both divisions/multiplications are IEEE
+                // identities, so undisturbed rounds stay bit-identical
+                let cpu_hz = throttle_cpu(
+                    &trial.link,
+                    &mut trial.ledger,
+                    r.samples,
+                    trial.clients[m].cpu_hz,
+                    avail.compute_slowdown[m],
+                );
                 work.push(MemberWork {
                     samples: r.samples,
-                    cpu_hz: trial.clients[m].cpu_hz,
+                    cpu_hz,
                     pos: positions[m],
+                    link_factor: avail.link_factor[m],
                 });
                 losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
@@ -501,49 +521,80 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
 
         // ---- ground station aggregation stage (lines 21–24) ----
         if round % cfg.ground_every == 0 {
-            let t = trial.clock.now();
-            let ctx = GroundCtx {
-                link: &trial.link,
-                energy: &trial.energy,
-                stations: &trial.ground,
-                constellation: &trial.constellation,
-            };
-            let out = stages.ground.exchange(&ctx, &topo.ps, t, model_bits);
-            if !out.exchanged.is_empty() {
-                // Eq. 5 over the participating clusters, weighted by data
-                let members_of = topo.clusters(k);
-                let sizes: Vec<usize> = out
-                    .exchanged
-                    .iter()
-                    .map(|&c| {
-                        members_of[c]
-                            .iter()
-                            .map(|&m| trial.clients[m].data_size())
-                            .sum()
-                    })
-                    .collect();
-                let weights = fedavg_weights(&sizes);
-                let rows: Vec<&[f32]> = out
-                    .exchanged
-                    .iter()
-                    .map(|&c| topo.models[c].as_slice())
-                    .collect();
-                // aggregate straight into the persistent global buffer
-                aggregate(rt, &rows, &weights, &mut global)?;
-                // broadcast back to participating clusters; stale clusters
-                // keep training on their own model until a later pass
-                for &c in &out.exchanged {
-                    topo.models[c].clone_from(&global);
+            // scenario plane: dark stations drop out of the pass plan and a
+            // hard-failed/eclipsed PS cannot serve as its cluster's hub —
+            // both make the affected cluster(s) keep a stale model until a
+            // later pass; a round with no live station (or no live PS)
+            // skips the pass entirely
+            let live: Vec<usize> = (0..topo.ps.len())
+                .filter(|&c| !avail.unreachable[topo.ps[c]])
+                .collect();
+            trial.ledger.add_stale_passes(topo.ps.len() - live.len());
+            let any_station_down = avail.ground_down.iter().any(|&d| d);
+            let all_stations_down = any_station_down && avail.ground_down.iter().all(|&d| d);
+            if all_stations_down || live.is_empty() {
+                trial.ledger.add_stale_passes(live.len());
+            } else {
+                let live_stations: Vec<GroundStation>;
+                let stations: &[GroundStation] = if any_station_down {
+                    live_stations = trial
+                        .ground
+                        .iter()
+                        .zip(&avail.ground_down)
+                        .filter(|(_, &down)| !down)
+                        .map(|(g, _)| g.clone())
+                        .collect();
+                    &live_stations
+                } else {
+                    &trial.ground
+                };
+                let t = trial.clock.now();
+                let ctx = GroundCtx {
+                    link: &trial.link,
+                    energy: &trial.energy,
+                    stations,
+                    constellation: &trial.constellation,
+                };
+                // the stage sees only the live PSes; its cluster indices
+                // are positions in `live_ps`, mapped back through `live`
+                let live_ps: Vec<usize> = live.iter().map(|&c| topo.ps[c]).collect();
+                let out = stages.ground.exchange(&ctx, &live_ps, t, model_bits);
+                let exchanged: Vec<usize> = out.exchanged.iter().map(|&i| live[i]).collect();
+                if !exchanged.is_empty() {
+                    // Eq. 5 over the participating clusters, by data size
+                    let members_of = topo.clusters(k);
+                    let sizes: Vec<usize> = exchanged
+                        .iter()
+                        .map(|&c| {
+                            members_of[c]
+                                .iter()
+                                .map(|&m| trial.clients[m].data_size())
+                                .sum()
+                        })
+                        .collect();
+                    let weights = fedavg_weights(&sizes);
+                    let rows: Vec<&[f32]> = exchanged
+                        .iter()
+                        .map(|&c| topo.models[c].as_slice())
+                        .collect();
+                    // aggregate straight into the persistent global buffer
+                    aggregate(rt, &rows, &weights, &mut global)?;
+                    // broadcast back to participating clusters; stale
+                    // clusters keep training on their own model until a
+                    // later pass
+                    for &c in &exchanged {
+                        topo.models[c].clone_from(&global);
+                    }
                 }
+                // Eq. 7 outer sum over the served PS↔GS links, plus (event
+                // timeline) the window waits the pass spent blocked
+                trial.ledger.add_energy(out.energy_j);
+                trial.ledger.add_stale_passes(out.stale.len());
+                trial.ledger.add_ground_wait(out.wait_s);
+                let pass_end = t + out.duration_s;
+                trial.clock.advance_to(pass_end);
+                trial.ledger.advance_to(pass_end);
             }
-            // Eq. 7 outer sum over the served PS↔GS links, plus (event
-            // timeline) the window waits the pass spent blocked
-            trial.ledger.add_energy(out.energy_j);
-            trial.ledger.add_stale_passes(out.stale.len());
-            trial.ledger.add_ground_wait(out.wait_s);
-            let pass_end = t + out.duration_s;
-            trial.clock.advance_to(pass_end);
-            trial.ledger.advance_to(pass_end);
         }
 
         // ---- evaluation / convergence check ----

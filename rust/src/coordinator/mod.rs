@@ -43,4 +43,4 @@ pub mod trial;
 
 pub use fedhc::{run_clustered, run_staged, RunResult, Strategy};
 pub use stages::Stages;
-pub use trial::Trial;
+pub use trial::{run_scenario_matrix, MatrixCell, Trial};

@@ -11,6 +11,7 @@
 //! * Energy (Eq. 8–10): transmission energy of every upload/broadcast plus
 //!   ε0·f²·cycles computation energy of every trained sample.
 
+use crate::metrics::Ledger;
 use crate::network::{EnergyModel, LinkModel};
 use crate::orbit::Vec3;
 use crate::sim::engine::Engine;
@@ -20,10 +21,49 @@ use crate::sim::engine::Engine;
 pub struct MemberWork {
     /// Samples trained this round (λ epochs × batches × B).
     pub samples: usize,
-    /// CPU frequency f_i.
+    /// CPU frequency f_i — already divided by any scenario-plane compute
+    /// slowdown, so a straggler's `t_cmp` stretches through the ordinary
+    /// Eq. 7 fold.
     pub cpu_hz: f64,
     /// Member position.
     pub pos: Vec3,
+    /// Scenario-plane ISL rate multiplier (1.0 = nominal; a degraded
+    /// member's uplink slows by `1 / link_factor`). Exactly 1.0 leaves the
+    /// comm-time float ops bit-identical to the undegraded path.
+    pub link_factor: f64,
+}
+
+impl MemberWork {
+    /// A member with nominal (undegraded) link and compute.
+    pub fn nominal(samples: usize, cpu_hz: f64, pos: Vec3) -> MemberWork {
+        MemberWork {
+            samples,
+            cpu_hz,
+            pos,
+            link_factor: 1.0,
+        }
+    }
+}
+
+/// Apply a scenario-plane compute slowdown to one node's CPU rate:
+/// returns the throttled rate and bills the extra compute time to the
+/// ledger's straggler-wait counter. Shared by the clustered gather loop
+/// and the C-FedAvg central step so the two methods' counters stay
+/// arithmetically comparable. Dividing by a slowdown of exactly 1.0 is an
+/// IEEE identity and bills nothing.
+pub fn throttle_cpu(
+    link: &LinkModel,
+    ledger: &mut Ledger,
+    samples: usize,
+    cpu_hz: f64,
+    slowdown: f64,
+) -> f64 {
+    let cpu_eff = cpu_hz / slowdown;
+    if slowdown > 1.0 {
+        let extra = link.compute_time(samples, cpu_eff) - link.compute_time(samples, cpu_hz);
+        ledger.add_straggler_wait(extra);
+    }
+    cpu_eff
 }
 
 /// One member's `(t_cmp, t_com, distance-to-PS)` split — the raw durations
@@ -40,7 +80,7 @@ pub fn member_times(
     let d = m.pos.dist(ps_pos).max(1.0);
     (
         link.compute_time(m.samples, m.cpu_hz),
-        link.comm_time(model_bits, d),
+        link.comm_time_scaled(model_bits, d, m.link_factor),
         d,
     )
 }
@@ -144,18 +184,25 @@ pub fn ground_exchange(
     (t, e)
 }
 
-/// One uploader's contribution to the C-FedAvg collection stage.
+/// One uploader's contribution to the C-FedAvg collection stage:
+/// `(samples, position, link_factor)`. The scenario-plane rate factor
+/// stretches the upload time; transmit energy stays the Eq. 8 function of
+/// payload and distance.
 fn upload_cost(
     link: &LinkModel,
     energy: &EnergyModel,
     samples: usize,
     pos: Vec3,
+    link_factor: f64,
     bits_per_sample: f64,
     central_pos: Vec3,
 ) -> (f64, f64) {
     let d = pos.dist(central_pos).max(1.0);
     let bits = samples as f64 * bits_per_sample;
-    (link.comm_time(bits, d), energy.tx_energy(bits, d))
+    (
+        link.comm_time_scaled(bits, d, link_factor),
+        energy.tx_energy(bits, d),
+    )
 }
 
 /// Fold per-uploader costs: stage time is the slowest upload, energy is
@@ -171,17 +218,20 @@ fn reduce_upload_costs(costs: &[(f64, f64)]) -> (f64, f64) {
 }
 
 /// Raw-data upload for the C-FedAvg baseline: every client ships its shard
-/// to the central node once (bits = samples × bits_per_sample).
+/// to the central node once (bits = samples × bits_per_sample); each entry
+/// is `(samples, position, link_factor)`.
 pub fn data_upload(
     link: &LinkModel,
     energy: &EnergyModel,
-    members: &[(usize, Vec3)],
+    members: &[(usize, Vec3, f64)],
     bits_per_sample: f64,
     central_pos: Vec3,
 ) -> (f64, f64) {
     let costs: Vec<(f64, f64)> = members
         .iter()
-        .map(|&(samples, pos)| upload_cost(link, energy, samples, pos, bits_per_sample, central_pos))
+        .map(|&(samples, pos, factor)| {
+            upload_cost(link, energy, samples, pos, factor, bits_per_sample, central_pos)
+        })
         .collect();
     reduce_upload_costs(&costs)
 }
@@ -193,15 +243,15 @@ pub fn data_upload_with(
     engine: &Engine,
     link: &LinkModel,
     energy: &EnergyModel,
-    members: &[(usize, Vec3)],
+    members: &[(usize, Vec3, f64)],
     bits_per_sample: f64,
     central_pos: Vec3,
 ) -> (f64, f64) {
     if members.len() < ENGINE_MAP_MIN_MEMBERS {
         return data_upload(link, energy, members, bits_per_sample, central_pos);
     }
-    let costs = engine.run(members, |_, &(samples, pos)| {
-        upload_cost(link, energy, samples, pos, bits_per_sample, central_pos)
+    let costs = engine.run(members, |_, &(samples, pos, factor)| {
+        upload_cost(link, energy, samples, pos, factor, bits_per_sample, central_pos)
     });
     reduce_upload_costs(&costs)
 }
@@ -217,11 +267,7 @@ mod tests {
     }
 
     fn member(samples: usize, cpu: f64, x: f64) -> MemberWork {
-        MemberWork {
-            samples,
-            cpu_hz: cpu,
-            pos: Vec3::new(x, 0.0, 7.0e6),
-        }
+        MemberWork::nominal(samples, cpu, Vec3::new(x, 0.0, 7.0e6))
     }
 
     #[test]
@@ -295,8 +341,8 @@ mod tests {
             cluster_round(&l, &e, small, ps, bits),
             cluster_round_with(&eng, &l, &e, small, ps, bits)
         );
-        let uploads: Vec<(usize, Vec3)> = (0..n)
-            .map(|i| (100 + i, Vec3::new(1.0e5 + 1.0e4 * i as f64, 0.0, 7.0e6)))
+        let uploads: Vec<(usize, Vec3, f64)> = (0..n)
+            .map(|i| (100 + i, Vec3::new(1.0e5 + 1.0e4 * i as f64, 0.0, 7.0e6), 1.0))
             .collect();
         let seq_up = data_upload(&l, &e, &uploads, 6e3, ps);
         for workers in [1usize, 3, 8] {
@@ -306,14 +352,50 @@ mod tests {
     }
 
     #[test]
+    fn throttle_cpu_bills_only_real_slowdowns() {
+        let (l, _) = models();
+        let mut ledger = Ledger::new();
+        let hz = throttle_cpu(&l, &mut ledger, 640, 1e9, 1.0);
+        assert_eq!(hz, 1e9, "nominal slowdown must be an exact identity");
+        assert_eq!(ledger.straggler_wait_s, 0.0);
+        let hz = throttle_cpu(&l, &mut ledger, 640, 1e9, 4.0);
+        assert_eq!(hz, 0.25e9);
+        let expect = l.compute_time(640, 0.25e9) - l.compute_time(640, 1e9);
+        assert!((ledger.straggler_wait_s - expect).abs() < 1e-12);
+        assert!(ledger.straggler_wait_s > 0.0);
+    }
+
+    #[test]
     fn data_upload_dominated_by_biggest_shard() {
         let (l, e) = models();
         let central = Vec3::new(0.0, 0.0, 7.0e6);
-        let near_small = (100usize, Vec3::new(1.0e5, 0.0, 7.0e6));
-        let near_big = (10_000usize, Vec3::new(1.0e5, 0.0, 7.0e6));
+        let near_small = (100usize, Vec3::new(1.0e5, 0.0, 7.0e6), 1.0);
+        let near_big = (10_000usize, Vec3::new(1.0e5, 0.0, 7.0e6), 1.0);
         let (t_small, e_small) = data_upload(&l, &e, &[near_small], 6e3, central);
         let (t_big, e_big) = data_upload(&l, &e, &[near_small, near_big], 6e3, central);
         assert!(t_big > 10.0 * t_small);
         assert!(e_big > e_small);
+    }
+
+    #[test]
+    fn degraded_member_slows_the_round_but_not_its_energy() {
+        let (l, e) = models();
+        let ps = Vec3::new(0.0, 0.0, 7.0e6);
+        let bits = 44_426.0 * 32.0;
+        let nominal = member(320, 1e9, 2.0e5);
+        let degraded = MemberWork {
+            link_factor: 0.25,
+            ..nominal
+        };
+        let (t_nom, e_nom) = cluster_round(&l, &e, &[nominal], ps, bits);
+        let (t_deg, e_deg) = cluster_round(&l, &e, &[degraded], ps, bits);
+        assert!(t_deg > t_nom, "a degraded uplink must stretch the round");
+        assert_eq!(e_nom, e_deg, "Eq. 8 energy depends on payload, not rate");
+        // an explicit 1.0 factor is the nominal path, bit for bit
+        let unit = MemberWork {
+            link_factor: 1.0,
+            ..nominal
+        };
+        assert_eq!(cluster_round(&l, &e, &[unit], ps, bits), (t_nom, e_nom));
     }
 }

@@ -351,7 +351,7 @@ impl GroundExchangeStage for EventGroundExchange {
                     end_off = end_off.max(ev.at);
                 }
                 Event::WindowClose { .. } => {}
-                Event::ComputeDone { .. } | Event::EvalDue { .. } => {
+                Event::ComputeDone { .. } | Event::EvalDue { .. } | Event::Fault { .. } => {
                     unreachable!("ground pass scheduled a non-ground event")
                 }
             }
@@ -458,10 +458,12 @@ mod tests {
         let ps = Vec3::new(0.0, 0.0, 7.0e6);
         let bits = 44_426.0 * 32.0;
         let members: Vec<MemberWork> = (0..17)
-            .map(|i| MemberWork {
-                samples: 320 + 16 * i,
-                cpu_hz: 0.5e9 + 3.3e7 * i as f64,
-                pos: Vec3::new(1.0e5 + 4.0e4 * i as f64, -2.0e4 * i as f64, 7.0e6),
+            .map(|i| {
+                MemberWork::nominal(
+                    320 + 16 * i,
+                    0.5e9 + 3.3e7 * i as f64,
+                    Vec3::new(1.0e5 + 4.0e4 * i as f64, -2.0e4 * i as f64, 7.0e6),
+                )
             })
             .collect();
         let analytic = cluster_round(&l, &e, &members, ps, bits);

@@ -1,6 +1,10 @@
 //! Shared run context: constellation, ground segment, clients with data
-//! shards, link/energy models, simulated clock and ledger.
+//! shards, link/energy models, scenario fault engine, simulated clock and
+//! ledger — plus the scenario-matrix sweep that runs every method across
+//! the fault presets.
 
+use super::fedhc::{run_clustered, RunResult, Strategy};
+use crate::baselines::run_cfedavg;
 use crate::config::ExperimentConfig;
 use crate::data::idx::load_or_synth;
 use crate::data::{partition_dirichlet, partition_iid, Dataset};
@@ -12,9 +16,10 @@ use crate::orbit::propagate::Constellation;
 use crate::orbit::walker::WalkerConstellation;
 use crate::orbit::{GroundStation, Vec3};
 use crate::runtime::{Manifest, ModelRuntime};
+use crate::sim::scenario::{ScenarioConfig, ScenarioEngine, ScenarioKind};
 use crate::sim::{MobilityModel, SimClock};
 use crate::util::Rng;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::Path;
 
 /// Everything one FL run needs, independent of the method.
@@ -28,6 +33,9 @@ pub struct Trial<'rt> {
     pub link: LinkModel,
     pub energy: EnergyModel,
     pub mobility: MobilityModel,
+    /// Per-run fault-injection engine (scenario plane): folds typed fault
+    /// events into the per-round availability the coordinator consumes.
+    pub scenario: ScenarioEngine,
     pub clients: Vec<SatClient>,
     pub test: Dataset,
     pub clock: SimClock,
@@ -88,14 +96,27 @@ impl<'rt> Trial<'rt> {
             .collect();
 
         let link = LinkModel::new(params);
+        let ground = default_ground_segment();
+        // the mobility model owns the transient-outage rate; the scenario
+        // engine samples it (event-stream seeded) alongside the preset's
+        // fault processes
+        let mobility = MobilityModel::new(cfg.outage_prob)?;
+        let scenario = ScenarioEngine::new(
+            cfg.scenario,
+            mobility.outage_prob,
+            cfg.seed,
+            cfg.clients,
+            ground.len(),
+        )?;
         Ok(Trial {
             cfg,
             rt,
             constellation,
-            ground: default_ground_segment(),
+            ground,
             link,
             energy: EnergyModel::new(link),
-            mobility: MobilityModel::default(),
+            mobility,
+            scenario,
             clients,
             test,
             clock: SimClock::new(),
@@ -119,6 +140,49 @@ impl<'rt> Trial<'rt> {
     pub fn total_data(&self) -> usize {
         self.clients.iter().map(|c| c.data_size()).sum()
     }
+}
+
+/// One cell of the scenario × method matrix sweep.
+pub struct MatrixCell {
+    pub scenario: ScenarioKind,
+    pub method: &'static str,
+    pub result: RunResult,
+}
+
+/// Run every `method` under every scenario preset in `scenarios`, each on
+/// a fresh [`Trial`] built from `base` (same seed, same data, same
+/// constellation — only the fault processes differ). Methods are the CLI
+/// names: `fedhc`, `fedhc-nomaml`, `hbase`, `fedce`, `cfedavg`. This is
+/// the sweep behind `bench_scenarios` and its `BENCH_scenarios.json`.
+pub fn run_scenario_matrix(
+    base: &ExperimentConfig,
+    manifest: &Manifest,
+    rt: &ModelRuntime,
+    scenarios: &[ScenarioKind],
+    methods: &[&'static str],
+) -> Result<Vec<MatrixCell>> {
+    let mut out = Vec::with_capacity(scenarios.len() * methods.len());
+    for &scenario in scenarios {
+        for &method in methods {
+            let mut cfg = base.clone();
+            cfg.scenario = ScenarioConfig::preset(scenario);
+            let mut trial = Trial::new(cfg, manifest, rt)?;
+            let result = match method {
+                "fedhc" => run_clustered(&mut trial, Strategy::fedhc())?,
+                "fedhc-nomaml" => run_clustered(&mut trial, Strategy::fedhc_no_maml())?,
+                "hbase" => run_clustered(&mut trial, Strategy::hbase())?,
+                "fedce" => run_clustered(&mut trial, Strategy::fedce())?,
+                "cfedavg" => run_cfedavg(&mut trial)?,
+                other => bail!("unknown matrix method '{other}'"),
+            };
+            out.push(MatrixCell {
+                scenario,
+                method,
+                result,
+            });
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -78,6 +78,17 @@ COMMON OPTIONS
                                  exchanges gated by visibility windows
                                  (paper presets default to event; tiny pins
                                  analytic)
+  --scenario nominal|churn|flaky-ground|stragglers|eclipse
+                                 fault-injection preset (deterministic,
+                                 event-sourced; see sim::scenario). Knobs:
+                                 --scenario-sat-fail P --scenario-fail-rounds N
+                                 --scenario-ground-outage P --scenario-ground-rounds N
+                                 --scenario-link-degrade P --scenario-link-factor F
+                                 --scenario-link-rounds N --scenario-straggler P
+                                 --scenario-slowdown F --scenario-straggler-rounds N
+                                 --scenario-eclipse 0|1
+  --outage P                     transient per-round outage probability
+                                 (runs under every scenario preset)
   --max-ground-wait S            event timeline: seconds a PS may wait for a
                                  window before going stale (default 7000)
   --window-step S                event timeline: window-search sampling step
@@ -125,12 +136,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let method = args.get_or("method", "fedhc");
     let (manifest, rt) = load_runtime(&cfg)?;
     eprintln!(
-        "running {method} on {} (K={}, clients={}, rounds≤{}, timeline={}, platform={})",
+        "running {method} on {} (K={}, clients={}, rounds≤{}, timeline={}, scenario={}, \
+         platform={})",
         cfg.dataset.name(),
         cfg.clusters,
         cfg.clients,
         cfg.rounds,
         cfg.timeline.name(),
+        cfg.scenario.kind.name(),
         rt.platform()
     );
     let res = run_method(&cfg, &manifest, &rt, method)?;
@@ -154,6 +167,12 @@ fn print_result(res: &RunResult) {
             "  ground waits  : {:.0} s over visibility windows, {} stale pass(es)",
             res.ledger.ground_wait_s, res.ledger.stale_passes
         );
+    }
+    if res.ledger.faults_injected > 0 {
+        println!("  faults        : {} injected (scenario plane)", res.ledger.faults_injected);
+    }
+    if res.ledger.straggler_wait_s > 0.0 {
+        println!("  straggler wait: {:.0} s of slowed compute", res.ledger.straggler_wait_s);
     }
     match res.converged_at {
         Some((round, t, e)) => {

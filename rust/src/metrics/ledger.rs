@@ -40,6 +40,14 @@ pub struct Ledger {
     /// Event timeline: cumulative time PSes spent waiting for a ground
     /// visibility window to open (already included in `time_s`).
     pub ground_wait_s: f64,
+    /// Scenario plane: fault onsets injected over the run (hard failures,
+    /// ground outages, link degradations, straggler slowdowns, eclipse
+    /// entries, transient outages).
+    pub faults_injected: usize,
+    /// Scenario plane: extra simulated compute time attributable to
+    /// straggler slowdowns (already included in `time_s` when the slowed
+    /// member was on its cluster's critical path).
+    pub straggler_wait_s: f64,
 }
 
 impl Ledger {
@@ -78,6 +86,18 @@ impl Ledger {
     pub fn add_ground_wait(&mut self, dt: f64) {
         assert!(dt >= 0.0 && dt.is_finite(), "bad wait increment {dt}");
         self.ground_wait_s += dt;
+    }
+
+    /// Record fault onsets the scenario plane injected this round.
+    pub fn add_faults(&mut self, n: usize) {
+        self.faults_injected += n;
+    }
+
+    /// Record extra compute time a straggler slowdown cost (diagnostic;
+    /// the slowdown itself reaches `time_s` through the Eq. 7 fold).
+    pub fn add_straggler_wait(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad straggler wait {dt}");
+        self.straggler_wait_s += dt;
     }
 
     /// Add consumed energy.
@@ -162,6 +182,23 @@ mod tests {
         l.add_stale_passes(2);
         assert_eq!(l.ground_wait_s, 30.0);
         assert_eq!(l.stale_passes, 2);
+    }
+
+    #[test]
+    fn scenario_counters_accumulate() {
+        let mut l = Ledger::new();
+        l.add_faults(3);
+        l.add_faults(2);
+        l.add_straggler_wait(1.5);
+        l.add_straggler_wait(0.5);
+        assert_eq!(l.faults_injected, 5);
+        assert_eq!(l.straggler_wait_s, 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad straggler wait")]
+    fn rejects_negative_straggler_wait() {
+        Ledger::new().add_straggler_wait(-1.0);
     }
 
     #[test]

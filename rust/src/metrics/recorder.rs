@@ -26,6 +26,8 @@ pub fn to_json(ledger: &Ledger) -> Json {
         ("maml_adaptations", Json::num(ledger.maml_adaptations as f64)),
         ("stale_passes", Json::num(ledger.stale_passes as f64)),
         ("ground_wait_s", Json::num(ledger.ground_wait_s)),
+        ("faults_injected", Json::num(ledger.faults_injected as f64)),
+        ("straggler_wait_s", Json::num(ledger.straggler_wait_s)),
         (
             "records",
             Json::Arr(
@@ -86,6 +88,9 @@ mod tests {
         let parsed = Json::parse(&j.to_pretty()).unwrap();
         assert_eq!(parsed.get("reclusters").as_usize(), Some(1));
         assert_eq!(parsed.get("records").as_arr().unwrap().len(), 1);
+        // scenario counters ride along for golden-trajectory diffs
+        assert_eq!(parsed.get("faults_injected").as_usize(), Some(0));
+        assert_eq!(parsed.get("straggler_wait_s").as_f64(), Some(0.0));
     }
 
     #[test]

@@ -86,6 +86,34 @@ pub fn format_fig3(
     s
 }
 
+/// Render the scenario-matrix counter table: one row per
+/// `(scenario, method)` cell with the per-scenario ledger counters —
+/// faults injected, reclusters fired, stale passes, straggler wait — next
+/// to the headline accuracy/time/energy numbers.
+pub fn format_scenario_matrix(rows: &[(&str, &str, &Ledger)]) -> String {
+    let mut s = String::new();
+    s.push_str("Scenario matrix (per-run ledger counters)\n");
+    s.push_str(&format!(
+        "{:<14}{:<12}{:>8}{:>8}{:>7}{:>7}{:>11}{:>12}{:>12}\n",
+        "scenario", "method", "faults", "reclst", "maml", "stale", "stragl_s", "time_s", "acc"
+    ));
+    for (scenario, method, ledger) in rows {
+        s.push_str(&format!(
+            "{:<14}{:<12}{:>8}{:>8}{:>7}{:>7}{:>11.1}{:>12.0}{:>12.4}\n",
+            scenario,
+            method,
+            ledger.faults_injected,
+            ledger.reclusters,
+            ledger.maml_adaptations,
+            ledger.stale_passes,
+            ledger.straggler_wait_s,
+            ledger.time_s,
+            ledger.best_accuracy(),
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +128,24 @@ mod tests {
         assert!(out.contains("K=3 Time"));
         assert!(out.contains("8184"));
         assert!(out.contains("8184*"), "DNF marker missing:\n{out}");
+    }
+
+    #[test]
+    fn scenario_matrix_formatting() {
+        let mut l = Ledger::new();
+        l.add_faults(7);
+        l.reclusters = 2;
+        l.add_stale_passes(1);
+        l.add_straggler_wait(12.5);
+        l.add_time(100.0);
+        l.record(1, 0.55, 1.0, true);
+        let out = format_scenario_matrix(&[("churn", "FedHC", &l)]);
+        assert!(out.contains("churn"));
+        assert!(out.contains("FedHC"));
+        let row = out.trim().lines().last().unwrap();
+        assert!(row.contains('7') && row.contains('2'), "counters missing:\n{out}");
+        assert!(row.contains("12.5"), "straggler wait missing:\n{out}");
+        assert!(row.contains("0.5500"), "accuracy missing:\n{out}");
     }
 
     #[test]

@@ -64,6 +64,17 @@ impl LinkModel {
         bits / self.rate(d) + d / SPEED_OF_LIGHT
     }
 
+    /// [`LinkModel::comm_time`] under a scenario-plane rate degradation:
+    /// the achievable rate is multiplied by `factor` (1.0 = nominal);
+    /// propagation delay is unaffected. Multiplying by exactly 1.0 is an
+    /// IEEE identity, so an undegraded link is bit-identical to
+    /// [`LinkModel::comm_time`] — the property the nominal-scenario golden
+    /// trajectories pin.
+    pub fn comm_time_scaled(&self, bits: f64, d: f64, factor: f64) -> f64 {
+        debug_assert!(factor > 0.0 && factor <= 1.0, "bad rate factor {factor}");
+        bits / (self.rate(d) * factor) + d / SPEED_OF_LIGHT
+    }
+
     /// Communication time on a ground link.
     pub fn ground_comm_time(&self, bits: f64, d: f64) -> f64 {
         bits / self.ground_rate(d) + d / SPEED_OF_LIGHT
@@ -128,6 +139,20 @@ mod tests {
         let g1 = l.channel_gain(1e6);
         let g2 = l.channel_gain(2e6);
         assert!((g1 / g2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_comm_time_at_unit_factor_is_bit_identical() {
+        let l = link();
+        for &d in &[500e3, 1300e3, 2500e3] {
+            assert_eq!(l.comm_time_scaled(1e6, d, 1.0), l.comm_time(1e6, d));
+        }
+        // a degraded link is strictly slower, and only in the payload term
+        let t = l.comm_time(1e6, 1300e3);
+        let t_deg = l.comm_time_scaled(1e6, 1300e3, 0.5);
+        let prop = 1300e3 / SPEED_OF_LIGHT;
+        assert!(t_deg > t);
+        assert!(((t_deg - prop) / (t - prop) - 2.0).abs() < 1e-9);
     }
 
     #[test]

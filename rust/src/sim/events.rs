@@ -15,6 +15,7 @@
 //! sequence number), so a drain is a pure function of the push sequence —
 //! never of hash ordering or the worker schedule.
 
+use super::faults::Fault;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -36,6 +37,11 @@ pub enum Event {
     /// An evaluation point is due. Reserved for time-driven evaluation
     /// schedules; round-boundary evaluation does not need it.
     EvalDue { round: usize },
+    /// A typed fault onset or recovery ([`crate::sim::faults::Fault`]).
+    /// Scheduled by the scenario engine at **round-indexed** timestamps
+    /// (the fault plane advances per round, not per second) on its own
+    /// queue — never interleaved with the stage-offset events above.
+    Fault { fault: Fault },
 }
 
 /// A timestamped event: ordered by time, ties broken by insertion order.

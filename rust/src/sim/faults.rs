@@ -1,0 +1,184 @@
+//! Typed fault events and the event-sourced availability state they drive.
+//!
+//! A fault is a *delta* applied to the constellation's availability state:
+//! a satellite hard-failure (and its recovery), a ground-station outage
+//! window, a link-rate degradation, or a compute-straggler slowdown. The
+//! scenario engine ([`crate::sim::scenario`]) schedules these through the
+//! shared [`crate::sim::events::EventQueue`] at round-indexed timestamps
+//! and replays them into a [`FaultState`]; the coordinator only ever sees
+//! the folded per-round availability, never the raw event stream.
+//!
+//! Multiplicative factors are carried as integer **milli-units** (a factor
+//! of 0.4 is `milli: 400`) so fault events stay `Copy + Eq` like every
+//! other [`crate::sim::events::Event`] payload, and so the matching
+//! restore event can undo exactly the delta its onset applied (the state
+//! divides by the same factor the onset multiplied by).
+
+use anyhow::{bail, Result};
+
+/// One typed fault delta. Onset events (`SatFail`, `GroundOutage`,
+/// `LinkDegrade`, `SlowdownStart`) are always scheduled together with the
+/// matching restore event, so availability is a pure fold of the stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Satellite hard-failure (radiation upset, subsystem loss): the
+    /// satellite is unreachable until the matching [`Fault::SatRecover`].
+    SatFail { sat: usize },
+    /// Recovery from a hard failure.
+    SatRecover { sat: usize },
+    /// A ground station goes dark (weather, maintenance): PS↔GS passes
+    /// cannot use it until the matching [`Fault::GroundRestore`].
+    GroundOutage { station: usize },
+    /// The station comes back.
+    GroundRestore { station: usize },
+    /// ISL rate degradation: the satellite's achievable link rate is
+    /// multiplied by `milli / 1000` (< 1) until the matching restore.
+    LinkDegrade { sat: usize, milli: u32 },
+    /// Undo of the matching [`Fault::LinkDegrade`] (same `milli`).
+    LinkRestore { sat: usize, milli: u32 },
+    /// Compute straggler: local-training time is multiplied by
+    /// `milli / 1000` (> 1) until the matching end event.
+    SlowdownStart { sat: usize, milli: u32 },
+    /// Undo of the matching [`Fault::SlowdownStart`] (same `milli`).
+    SlowdownEnd { sat: usize, milli: u32 },
+}
+
+impl Fault {
+    /// Whether this event *injects* a fault (vs restoring from one) — the
+    /// ledger's `faults_injected` counter counts onsets only.
+    pub fn is_onset(&self) -> bool {
+        matches!(
+            self,
+            Fault::SatFail { .. }
+                | Fault::GroundOutage { .. }
+                | Fault::LinkDegrade { .. }
+                | Fault::SlowdownStart { .. }
+        )
+    }
+}
+
+/// Convert a milli-unit factor to the f64 multiplier it encodes.
+pub fn milli_factor(milli: u32) -> f64 {
+    milli as f64 / 1000.0
+}
+
+/// Event-sourced availability state: the fold of every applied [`Fault`].
+///
+/// Outage depths are counters, not booleans, so overlapping failure
+/// windows compose correctly; rate/slowdown factors compose
+/// multiplicatively, and a restore divides by exactly the factor its onset
+/// multiplied by.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    /// Per-satellite hard-failure depth (> 0 means down).
+    pub sat_down: Vec<u32>,
+    /// Per-station outage depth (> 0 means dark).
+    pub ground_down: Vec<u32>,
+    /// Per-satellite ISL rate multiplier (1.0 = nominal, < 1 degraded).
+    pub link_factor: Vec<f64>,
+    /// Per-satellite compute-time multiplier (1.0 = nominal, > 1 slower).
+    pub compute_slowdown: Vec<f64>,
+}
+
+impl FaultState {
+    pub fn new(n_sats: usize, n_stations: usize) -> FaultState {
+        FaultState {
+            sat_down: vec![0; n_sats],
+            ground_down: vec![0; n_stations],
+            link_factor: vec![1.0; n_sats],
+            compute_slowdown: vec![1.0; n_sats],
+        }
+    }
+
+    /// Apply one fault delta. Restores of faults that were never applied
+    /// are rejected — the scenario engine always schedules onset/restore
+    /// in pairs, so an unmatched restore is a scheduling bug.
+    pub fn apply(&mut self, fault: Fault) -> Result<()> {
+        match fault {
+            Fault::SatFail { sat } => self.sat_down[sat] += 1,
+            Fault::SatRecover { sat } => {
+                if self.sat_down[sat] == 0 {
+                    bail!("recovery for satellite {sat} that never failed");
+                }
+                self.sat_down[sat] -= 1;
+            }
+            Fault::GroundOutage { station } => self.ground_down[station] += 1,
+            Fault::GroundRestore { station } => {
+                if self.ground_down[station] == 0 {
+                    bail!("restore for station {station} that never went dark");
+                }
+                self.ground_down[station] -= 1;
+            }
+            Fault::LinkDegrade { sat, milli } => {
+                if milli == 0 || milli >= 1000 {
+                    bail!("link degradation factor must be in (0, 1), got {milli} milli");
+                }
+                self.link_factor[sat] *= milli_factor(milli);
+            }
+            Fault::LinkRestore { sat, milli } => {
+                self.link_factor[sat] /= milli_factor(milli);
+            }
+            Fault::SlowdownStart { sat, milli } => {
+                if milli <= 1000 {
+                    bail!("straggler slowdown must exceed 1.0, got {milli} milli");
+                }
+                self.compute_slowdown[sat] *= milli_factor(milli);
+            }
+            Fault::SlowdownEnd { sat, milli } => {
+                self.compute_slowdown[sat] /= milli_factor(milli);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn onset_classification() {
+        assert!(Fault::SatFail { sat: 0 }.is_onset());
+        assert!(Fault::GroundOutage { station: 1 }.is_onset());
+        assert!(Fault::LinkDegrade { sat: 0, milli: 500 }.is_onset());
+        assert!(Fault::SlowdownStart { sat: 0, milli: 2000 }.is_onset());
+        assert!(!Fault::SatRecover { sat: 0 }.is_onset());
+        assert!(!Fault::GroundRestore { station: 1 }.is_onset());
+        assert!(!Fault::LinkRestore { sat: 0, milli: 500 }.is_onset());
+        assert!(!Fault::SlowdownEnd { sat: 0, milli: 2000 }.is_onset());
+    }
+
+    #[test]
+    fn overlapping_failures_compose_by_depth() {
+        let mut s = FaultState::new(2, 1);
+        s.apply(Fault::SatFail { sat: 0 }).unwrap();
+        s.apply(Fault::SatFail { sat: 0 }).unwrap();
+        s.apply(Fault::SatRecover { sat: 0 }).unwrap();
+        assert_eq!(s.sat_down[0], 1, "still down until the second recovery");
+        s.apply(Fault::SatRecover { sat: 0 }).unwrap();
+        assert_eq!(s.sat_down[0], 0);
+        assert!(s.apply(Fault::SatRecover { sat: 0 }).is_err());
+        assert!(s.apply(Fault::GroundRestore { station: 0 }).is_err());
+    }
+
+    #[test]
+    fn factor_restore_undoes_onset_exactly() {
+        let mut s = FaultState::new(1, 0);
+        s.apply(Fault::LinkDegrade { sat: 0, milli: 400 }).unwrap();
+        assert!(s.link_factor[0] < 1.0);
+        s.apply(Fault::LinkRestore { sat: 0, milli: 400 }).unwrap();
+        assert_eq!(s.link_factor[0], 1.0, "restore must undo the onset bit-exactly");
+        s.apply(Fault::SlowdownStart { sat: 0, milli: 3000 }).unwrap();
+        assert_eq!(s.compute_slowdown[0], 3.0);
+        s.apply(Fault::SlowdownEnd { sat: 0, milli: 3000 }).unwrap();
+        assert_eq!(s.compute_slowdown[0], 1.0);
+    }
+
+    #[test]
+    fn bad_factors_rejected() {
+        let mut s = FaultState::new(1, 0);
+        assert!(s.apply(Fault::LinkDegrade { sat: 0, milli: 0 }).is_err());
+        assert!(s.apply(Fault::LinkDegrade { sat: 0, milli: 1000 }).is_err());
+        assert!(s.apply(Fault::SlowdownStart { sat: 0, milli: 1000 }).is_err());
+    }
+}

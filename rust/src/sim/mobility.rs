@@ -4,20 +4,25 @@
 //! centroid positions their clusters were built around. A satellite whose
 //! nearest centroid changed is a *dropout* from its original cluster
 //! (paper: "satellites may dynamically join or leave a cluster"). The
-//! coordinator samples this model once per round to compute `C^d` and the
-//! dropout rate that feeds the re-clustering trigger. On top of the
-//! deterministic orbital drift, a small random outage probability models
-//! link loss / eclipse power constraints.
+//! coordinator evaluates this model once per round to compute `C^d` and
+//! the dropout rate that feeds the re-clustering trigger. On top of the
+//! deterministic orbital drift, satellites the scenario plane reports as
+//! unreachable (hard failure, eclipse power-save, transient outage — see
+//! [`crate::sim::scenario`]) also count as dropouts: availability is
+//! **event-sourced**, not sampled here, so the churn report is a pure
+//! function of the orbital state and the fault trajectory.
 
 use crate::clustering::recluster::DropoutStats;
 use crate::orbit::propagate::Constellation;
-use crate::util::Rng;
+use anyhow::{bail, Result};
 
 /// Churn model parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct MobilityModel {
-    /// Probability an otherwise-healthy member is unreachable this round
-    /// (radiation upset, power save, link outage).
+    /// Probability an otherwise-healthy member is unreachable in a given
+    /// round (radiation upset, power save, link outage). The scenario
+    /// engine samples this as its transient-outage process; the churn fold
+    /// itself only consumes the resulting availability.
     pub outage_prob: f64,
 }
 
@@ -34,27 +39,38 @@ pub struct ChurnReport {
     pub stats: Vec<DropoutStats>,
     /// The "natural" assignment at time `t` (nearest current centroid).
     pub natural_assignment: Vec<usize>,
-    /// Satellites unreachable this round (outage, excluded from training).
+    /// Satellites unreachable this round (excluded from training).
     pub outages: Vec<usize>,
 }
 
 impl MobilityModel {
-    pub fn new(outage_prob: f64) -> Self {
-        assert!((0.0..1.0).contains(&outage_prob));
-        MobilityModel { outage_prob }
+    /// Build a model, rejecting out-of-range rates as usage errors (the
+    /// CLI/config error-handling style — no panics on bad input).
+    pub fn new(outage_prob: f64) -> Result<Self> {
+        if !(0.0..1.0).contains(&outage_prob) {
+            bail!("outage probability must be in [0, 1), got {outage_prob}");
+        }
+        Ok(MobilityModel { outage_prob })
     }
 
     /// Evaluate churn at simulated time `t` against the clustering that was
     /// computed at `centroids_km` (the centroids frozen at cluster-build
-    /// time) with member assignment `assignment`.
+    /// time) with member assignment `assignment`. `unavailable[i]` marks
+    /// satellites the scenario plane has taken out this round; they count
+    /// toward `C^d` exactly like drift dropouts.
     pub fn churn(
         &self,
         constellation: &Constellation,
         assignment: &[usize],
         centroids_km: &[[f64; 3]],
         t: f64,
-        rng: &mut Rng,
+        unavailable: &[bool],
     ) -> ChurnReport {
+        assert_eq!(
+            assignment.len(),
+            unavailable.len(),
+            "availability mask does not cover the constellation"
+        );
         let k = centroids_km.len();
         let snap = constellation.snapshot(t);
         let feats = snap.features_km();
@@ -79,11 +95,10 @@ impl MobilityModel {
         for (i, &home) in assignment.iter().enumerate() {
             stats[home].members += 1;
             let moved = natural[i] != home;
-            let outage = rng.uniform() < self.outage_prob;
-            if outage {
+            if unavailable[i] {
                 outages.push(i);
             }
-            if moved || outage {
+            if moved || unavailable[i] {
                 stats[home].dropped += 1;
             }
         }
@@ -99,7 +114,9 @@ impl MobilityModel {
 mod tests {
     use super::*;
     use crate::clustering::kmeans::KMeans;
+    use crate::orbit::elements::OrbitalElements;
     use crate::orbit::walker::WalkerConstellation;
+    use crate::util::Rng;
 
     fn setup() -> (Constellation, Vec<usize>, Vec<[f64; 3]>) {
         let c = Constellation::from_walker(&WalkerConstellation::paper_shell(4, 8));
@@ -110,30 +127,39 @@ mod tests {
     }
 
     #[test]
-    fn no_drift_at_build_time_without_outage() {
+    fn rejects_out_of_range_rates() {
+        assert!(MobilityModel::new(-0.1).is_err());
+        assert!(MobilityModel::new(1.0).is_err());
+        assert!(MobilityModel::new(f64::NAN).is_err());
+        assert!(MobilityModel::new(0.0).is_ok());
+        assert!(MobilityModel::new(0.999).is_ok());
+    }
+
+    #[test]
+    fn no_drift_at_build_time_when_all_available() {
         let (c, asg, cents) = setup();
-        let m = MobilityModel::new(1e-12);
-        let mut rng = Rng::new(2);
-        let rep = m.churn(&c, &asg, &cents, 0.0, &mut rng);
+        let m = MobilityModel::new(0.0).unwrap();
+        let rep = m.churn(&c, &asg, &cents, 0.0, &vec![false; asg.len()]);
         let dropped: usize = rep.stats.iter().map(|s| s.dropped).sum();
         assert_eq!(dropped, 0, "churn at t=0 should be zero");
         assert_eq!(rep.natural_assignment, asg);
+        assert!(rep.outages.is_empty());
     }
 
     #[test]
     fn drift_grows_with_time() {
         let (c, asg, cents) = setup();
-        let m = MobilityModel::new(1e-12);
-        let mut rng = Rng::new(3);
+        let m = MobilityModel::default();
+        let none = vec![false; asg.len()];
         let period = c.min_period();
         let d_small: usize = m
-            .churn(&c, &asg, &cents, 0.01 * period, &mut rng)
+            .churn(&c, &asg, &cents, 0.01 * period, &none)
             .stats
             .iter()
             .map(|s| s.dropped)
             .sum();
         let d_large: usize = m
-            .churn(&c, &asg, &cents, 0.25 * period, &mut rng)
+            .churn(&c, &asg, &cents, 0.25 * period, &none)
             .stats
             .iter()
             .map(|s| s.dropped)
@@ -149,8 +175,7 @@ mod tests {
     fn members_partition_is_preserved() {
         let (c, asg, cents) = setup();
         let m = MobilityModel::default();
-        let mut rng = Rng::new(4);
-        let rep = m.churn(&c, &asg, &cents, 500.0, &mut rng);
+        let rep = m.churn(&c, &asg, &cents, 500.0, &vec![false; asg.len()]);
         let members: usize = rep.stats.iter().map(|s| s.members).sum();
         assert_eq!(members, asg.len());
         for s in &rep.stats {
@@ -159,13 +184,67 @@ mod tests {
     }
 
     #[test]
-    fn outage_prob_one_drops_everyone() {
+    fn all_unavailable_drops_everyone() {
         let (c, asg, cents) = setup();
-        let m = MobilityModel::new(0.999999);
-        let mut rng = Rng::new(5);
-        let rep = m.churn(&c, &asg, &cents, 0.0, &mut rng);
+        let m = MobilityModel::default();
+        let rep = m.churn(&c, &asg, &cents, 0.0, &vec![true; asg.len()]);
         let dropped: usize = rep.stats.iter().map(|s| s.dropped).sum();
         assert_eq!(dropped, asg.len());
         assert_eq!(rep.outages.len(), asg.len());
+    }
+
+    /// Hand-built two-cluster constellation: three satellites leading at
+    /// orbital phases 0°/10°/20° (cluster 0) and three trailing at
+    /// 189°/190°/191° (cluster 1), same circular equatorial orbit. With
+    /// centroids frozen at t=0, the equal-distance boundaries sit near
+    /// phases 100° and 280° (shifted ~0.3° by the chord-mean centroid
+    /// radii). Advancing the constellation 86° of phase puts exactly one
+    /// satellite — the cluster-0 leader, 20°→106° — across a boundary;
+    /// every other satellite stays inside its home region (cluster 1's
+    /// leader reaches 277°, short of 280°).
+    #[test]
+    fn drift_across_boundary_reports_single_dropout() {
+        let deg = std::f64::consts::PI / 180.0;
+        let phases: [f64; 6] = [0.0, 10.0, 20.0, 189.0, 190.0, 191.0];
+        let elements = phases
+            .iter()
+            .map(|&p| OrbitalElements::circular(1_300_000.0, 0.0, 0.0, p * deg))
+            .collect();
+        let c = Constellation::new(elements);
+        let assignment = vec![0, 0, 0, 1, 1, 1];
+
+        // frozen centroids: per-cluster mean of the t=0 feature positions
+        let feats0 = c.snapshot(0.0).features_km();
+        let mut centroids = vec![[0.0f64; 3]; 2];
+        for (f, &a) in feats0.iter().zip(&assignment) {
+            for d in 0..3 {
+                centroids[a][d] += f[d] / 3.0;
+            }
+        }
+
+        let t = c.min_period() * (86.0 / 360.0);
+        let m = MobilityModel::new(0.0).unwrap();
+        let rep = m.churn(&c, &assignment, &centroids, t, &[false; 6]);
+
+        assert_eq!(rep.natural_assignment, vec![0, 0, 1, 1, 1, 1]);
+        assert_eq!(rep.stats[0].members, 3);
+        assert_eq!(rep.stats[0].dropped, 1, "exactly the boundary satellite");
+        assert_eq!(rep.stats[1].members, 3);
+        assert_eq!(rep.stats[1].dropped, 0, "trailing cluster stays intact");
+        assert!(rep.outages.is_empty());
+
+        // natural_assignment consistency: it is the nearest frozen
+        // centroid for every satellite, recomputed independently here
+        let feats_t = c.snapshot(t).features_km();
+        for (i, f) in feats_t.iter().enumerate() {
+            let nearest = (0..2)
+                .min_by(|&a, &b| {
+                    let da: f64 = (0..3).map(|d| (f[d] - centroids[a][d]).powi(2)).sum();
+                    let db: f64 = (0..3).map(|d| (f[d] - centroids[b][d]).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            assert_eq!(rep.natural_assignment[i], nearest, "satellite {i}");
+        }
     }
 }

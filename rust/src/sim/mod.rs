@@ -2,19 +2,26 @@
 //! advance, the time-ordered event queue behind the event timeline
 //! (`--timeline event`), the mobility process that turns orbital motion
 //! into cluster-membership churn (join/leave events that drive the paper's
-//! re-clustering trigger), the deterministic parallel round engine that
-//! fans local training out across OS threads without perturbing the
-//! simulated numerics, and the recycled buffer pools that keep the
-//! steady-state round loop free of parameter-sized allocations.
+//! re-clustering trigger), the scenario plane (typed fault events folded
+//! into per-round availability — hard failures, ground outages, link
+//! degradation, stragglers, eclipse power-save), the deterministic
+//! parallel round engine that fans local training out across OS threads
+//! without perturbing the simulated numerics, and the recycled buffer
+//! pools that keep the steady-state round loop free of parameter-sized
+//! allocations.
 
 pub mod clock;
 pub mod engine;
 pub mod events;
+pub mod faults;
 pub mod mobility;
 pub mod param_pool;
+pub mod scenario;
 
 pub use clock::SimClock;
 pub use engine::Engine;
 pub use events::{Event, EventQueue};
+pub use faults::{Fault, FaultState};
 pub use mobility::MobilityModel;
 pub use param_pool::{ParamPool, Recycled, ScratchPool};
+pub use scenario::{Availability, ScenarioConfig, ScenarioEngine, ScenarioKind};

@@ -1,0 +1,103 @@
+//! Golden-trajectory regression tests (host backend — these always run).
+//!
+//! Each golden file under `tests/golden/` is the full metrics JSON
+//! (accuracy/time/energy series plus every ledger counter) of one method on
+//! the tiny preset under one `--timeline` mode, exactly as
+//! `metrics::recorder::to_json` serialises it. The test re-runs each
+//! configuration and diffs the serialisation **byte for byte** — any change
+//! to the training numerics, the time/energy accounting, the scenario
+//! plane's nominal behaviour, or the JSON encoding shows up as a diff.
+//!
+//! Regenerating after an intentional change:
+//!
+//! ```sh
+//! UPDATE_GOLDEN=1 cargo test --test golden_trajectories
+//! git diff rust/tests/golden/   # review what actually moved
+//! ```
+//!
+//! A missing golden file is written on first run (self-seeding snapshot,
+//! reported via stderr) so fresh checkouts and new configurations
+//! bootstrap without a separate tool; committed files then pin every
+//! subsequent run.
+
+use fedhc::baselines::run_cfedavg;
+use fedhc::config::{ExperimentConfig, Timeline};
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::metrics::recorder;
+use fedhc::runtime::{Manifest, ModelRuntime};
+use std::path::PathBuf;
+
+const METHODS: [&str; 4] = ["fedhc", "hbase", "fedce", "cfedavg"];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The pinned configuration: the tiny preset, 5 rounds, no early stop.
+/// Everything else (seed, scenario, outage rate) stays at preset defaults
+/// so the snapshot also pins the nominal scenario plane.
+fn golden_cfg(timeline: Timeline) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 5;
+    cfg.target_accuracy = None;
+    cfg.timeline = timeline;
+    cfg
+}
+
+fn run_one(method: &str, timeline: Timeline) -> String {
+    let manifest = Manifest::host();
+    let cfg = golden_cfg(timeline);
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = match method {
+        "fedhc" => run_clustered(&mut trial, Strategy::fedhc()).unwrap(),
+        "hbase" => run_clustered(&mut trial, Strategy::hbase()).unwrap(),
+        "fedce" => run_clustered(&mut trial, Strategy::fedce()).unwrap(),
+        "cfedavg" => run_cfedavg(&mut trial).unwrap(),
+        other => unreachable!("unknown golden method {other}"),
+    };
+    recorder::to_json(&res.ledger).to_pretty() + "\n"
+}
+
+#[test]
+fn golden_trajectories_match_exactly() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    let mut seeded = Vec::new();
+    for method in METHODS {
+        for timeline in [Timeline::Analytic, Timeline::Event] {
+            let name = format!("{method}_{}.json", timeline.name());
+            let path = dir.join(&name);
+            let got = run_one(method, timeline);
+            if update || !path.exists() {
+                std::fs::write(&path, &got).unwrap();
+                if !update {
+                    seeded.push(name);
+                }
+                continue;
+            }
+            let want = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                got, want,
+                "golden trajectory drifted for {method}/{} — if the change is \
+                 intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
+                 --test golden_trajectories` and review the diff",
+                timeline.name()
+            );
+        }
+    }
+    if !seeded.is_empty() {
+        eprintln!("seeded {} golden file(s): {seeded:?} — commit them to pin", seeded.len());
+    }
+}
+
+/// The snapshots themselves must be reproducible: serialising the same run
+/// twice yields identical bytes (guards against nondeterministic encoding
+/// sneaking into the golden diffs).
+#[test]
+fn golden_serialisation_is_deterministic() {
+    let a = run_one("fedhc", Timeline::Analytic);
+    let b = run_one("fedhc", Timeline::Analytic);
+    assert_eq!(a, b, "same run serialised differently");
+}

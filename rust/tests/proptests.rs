@@ -2,14 +2,20 @@
 //! the offline image ships no proptest crate; see util::quickprop).
 
 use fedhc::clustering::kmeans::KMeans;
+use fedhc::clustering::ps_select::select_parameter_servers;
 use fedhc::clustering::recluster::{align_labels, changed_members, DropoutStats, ReclusterPolicy};
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::fedhc::{build_topology, Strategy};
+use fedhc::coordinator::Trial;
 use fedhc::data::synth::synth_tiny;
 use fedhc::data::{partition_dirichlet, partition_iid};
 use fedhc::fl::aggregate::{fedavg_weights, quality_weights};
+use fedhc::network::{LinkModel, NetworkParams};
 use fedhc::orbit::propagate::Constellation;
 use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::orbit::Vec3;
 use fedhc::runtime::host_model::reference;
-use fedhc::runtime::{HostModel, HostScratch};
+use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
 use fedhc::util::quickprop::{property, Gen};
 use fedhc::util::Rng;
 
@@ -30,6 +36,7 @@ fn prop_kmeans_partitions_all_points() {
         let res = KMeans::new(k).run(&pts, g.rng());
         assert_eq!(res.assignment.len(), n);
         assert!(res.assignment.iter().all(|&a| a < k));
+        assert_eq!(res.centroids.len(), k, "centroid count must equal k");
         assert_eq!(res.sizes().iter().sum::<usize>(), n);
         assert!(res.inertia >= 0.0);
     });
@@ -71,7 +78,7 @@ fn prop_recluster_trigger_monotone_in_dropouts() {
         let members = g.usize_in(1, 50);
         let dropped = g.rng().below_usize(members + 1);
         let z = g.f64_in(0.0, 1.0);
-        let policy = ReclusterPolicy::new(z);
+        let policy = ReclusterPolicy::new(z).unwrap();
         let s = DropoutStats { members, dropped };
         if policy.should_recluster(&[s]) {
             // adding more dropouts keeps it triggered
@@ -80,6 +87,127 @@ fn prop_recluster_trigger_monotone_in_dropouts() {
                 dropped: members.min(dropped + 1),
             };
             assert!(policy.should_recluster(&[worse]));
+        }
+    });
+}
+
+#[test]
+fn prop_recluster_boundary_is_strict() {
+    // Algorithm 1's trigger is d_r > Z: a dropout rate exactly equal to Z
+    // must NOT fire, one more dropout must, and empty clusters never do
+    property("d_r == Z never triggers, d_r > Z always does", 60, |g: &mut Gen| {
+        let members = g.usize_in(1, 60);
+        let dropped = g.rng().below_usize(members + 1);
+        // Z set to the exact observed rate: same division, same bits
+        let z = dropped as f64 / members as f64;
+        let policy = ReclusterPolicy::new(z).unwrap();
+        let s = DropoutStats { members, dropped };
+        assert!(
+            !policy.should_recluster(&[s]),
+            "d_r == Z fired (members={members}, dropped={dropped})"
+        );
+        assert!(policy.breached(&[s]).is_empty());
+        if dropped < members {
+            let worse = DropoutStats {
+                members,
+                dropped: dropped + 1,
+            };
+            assert!(
+                policy.should_recluster(&[worse]),
+                "d_r > Z did not fire (members={members}, dropped={})",
+                dropped + 1
+            );
+        }
+        // an empty cluster has d_r = 0 by definition: no trigger even at
+        // the lowest threshold, alone or alongside the observed cluster
+        let empty = DropoutStats::default();
+        assert!(!ReclusterPolicy::new(0.0).unwrap().should_recluster(&[empty]));
+        assert!(!policy.should_recluster(&[empty]));
+    });
+}
+
+#[test]
+fn prop_ps_select_returns_a_member_of_its_own_cluster() {
+    property("ps belongs to its cluster", 20, |g: &mut Gen| {
+        // random blob geometry: k well-separated centers, a few satellites
+        // around each, so every cluster is non-empty after k-means
+        let k = g.usize_in(2, 4);
+        let mut pts_km: Vec<[f64; 3]> = Vec::new();
+        for c in 0..k {
+            let theta = c as f64 / k as f64 * std::f64::consts::TAU;
+            let center = [7000.0 * theta.cos(), 7000.0 * theta.sin(), 0.0];
+            for _ in 0..g.usize_in(2, 8) {
+                pts_km.push([
+                    center[0] + 80.0 * g.rng().normal(),
+                    center[1] + 80.0 * g.rng().normal(),
+                    center[2] + 80.0 * g.rng().normal(),
+                ]);
+            }
+        }
+        let res = KMeans::new(k).run(&pts_km, g.rng());
+        if res.sizes().iter().any(|&s| s == 0) {
+            return; // degenerate local optimum: ps_select's precondition fails
+        }
+        let positions: Vec<Vec3> = pts_km
+            .iter()
+            .map(|p| Vec3::new(p[0] * 1e3, p[1] * 1e3, p[2] * 1e3))
+            .collect();
+        let link = LinkModel::new(NetworkParams::default());
+        let choices = select_parameter_servers(&res, &positions, &link);
+        assert_eq!(choices.len(), k);
+        for choice in &choices {
+            assert_eq!(
+                res.assignment[choice.ps], choice.cluster,
+                "PS {} is not a member of cluster {}",
+                choice.ps, choice.cluster
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_topology_partitions_every_satellite_once() {
+    // the clustering invariants the coordinator relies on, across every
+    // strategy: each satellite lands in exactly one of k clusters, the
+    // centroid/PS/model counts equal k, and every PS is a member of the
+    // cluster it serves (host backend — no artifacts needed)
+    let manifest = Manifest::host();
+    property("topology is a k-partition with member PSes", 8, |g: &mut Gen| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.clients = g.usize_in(8, 24);
+        cfg.clusters = g.usize_in(2, 4);
+        cfg.train_samples = cfg.clients * 16;
+        cfg.test_samples = 32;
+        cfg.seed = g.u64();
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        for strategy in [Strategy::fedhc(), Strategy::hbase(), Strategy::fedce()] {
+            let mut trial = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
+            let global = trial.clients[0].params.clone();
+            let topo = build_topology(&mut trial, &strategy, &global);
+            let k = cfg.clusters;
+            assert_eq!(topo.assignment.len(), cfg.clients, "{}", strategy.name);
+            assert!(
+                topo.assignment.iter().all(|&a| a < k),
+                "{}: assignment out of range",
+                strategy.name
+            );
+            assert_eq!(topo.centroids_km.len(), k, "{}", strategy.name);
+            assert_eq!(topo.ps.len(), k, "{}", strategy.name);
+            assert_eq!(topo.models.len(), k, "{}", strategy.name);
+            // clusters() groups each satellite exactly once
+            let clusters = topo.clusters(k);
+            let total: usize = clusters.iter().map(|m| m.len()).sum();
+            assert_eq!(total, cfg.clients, "{}: lost/duplicated members", strategy.name);
+            for (c, members) in clusters.iter().enumerate() {
+                for &m in members {
+                    assert_eq!(topo.assignment[m], c);
+                }
+                assert_eq!(
+                    topo.assignment[topo.ps[c]], c,
+                    "{}: PS of cluster {c} is an outsider",
+                    strategy.name
+                );
+            }
         }
     });
 }

@@ -1,0 +1,203 @@
+//! Scenario-plane acceptance tests (host backend — these always run).
+//!
+//! The headline claim: the `churn` preset actually exercises the paper's
+//! adaptivity loop — dropout rates cross `Z`, re-clustering fires, MAML
+//! warm-starts run — and the whole fault trajectory is event-sourced from
+//! stateless `(seed, round, sat)` streams, so a scenario run is
+//! bit-identical at any `--workers` count.
+
+use fedhc::config::{ExperimentConfig, Timeline};
+use fedhc::coordinator::{run_clustered, run_scenario_matrix, RunResult, Strategy, Trial};
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::sim::scenario::{ScenarioConfig, ScenarioEngine, ScenarioKind};
+
+fn run_with(cfg: &ExperimentConfig, strategy: Strategy) -> RunResult {
+    let manifest = Manifest::host();
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
+    run_clustered(&mut trial, strategy).unwrap()
+}
+
+fn churn_cfg(workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 12;
+    cfg.workers = workers;
+    cfg.target_accuracy = None;
+    cfg.recluster_threshold = 0.2;
+    // the event timeline with a ground pass every round: PSes wait for real
+    // visibility windows, so the simulated clock sweeps a meaningful arc of
+    // the orbit across the run and re-cluster rebuilds see genuinely
+    // drifted geometry (moved members → MAML warm-starts), exactly the
+    // dynamic-constellation regime the paper motivates
+    cfg.timeline = Timeline::Event;
+    cfg.ground_every = 1;
+    cfg.scenario = ScenarioConfig::preset(ScenarioKind::Churn);
+    cfg
+}
+
+/// The acceptance criterion: the churn preset end to end — re-clustering
+/// fires, the fault/recluster counters are non-zero, and the full
+/// trajectory is bit-identical across `--workers 1` and `--workers 4`.
+#[test]
+fn churn_preset_fires_recluster_and_is_worker_deterministic() {
+    let base = run_with(&churn_cfg(1), Strategy::fedhc());
+    assert!(
+        base.ledger.reclusters > 0,
+        "the churn preset must push some cluster's d_r past Z"
+    );
+    assert!(
+        base.ledger.faults_injected > 0,
+        "the churn preset must inject faults"
+    );
+    assert!(
+        base.ledger.maml_adaptations > 0,
+        "re-clustering under FedHC must MAML-warm-start moved members"
+    );
+
+    let other = run_with(&churn_cfg(4), Strategy::fedhc());
+    assert_eq!(base.ledger.records.len(), other.ledger.records.len());
+    for (a, b) in base.ledger.records.iter().zip(&other.ledger.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.accuracy, b.accuracy, "round {}: accuracy diverged", a.round);
+        assert_eq!(a.loss, b.loss, "round {}: loss diverged", a.round);
+        assert_eq!(a.time_s, b.time_s, "round {}: time diverged", a.round);
+        assert_eq!(a.energy_j, b.energy_j, "round {}: energy diverged", a.round);
+        assert_eq!(a.reclustered, b.reclustered, "round {}", a.round);
+    }
+    assert_eq!(base.ledger.reclusters, other.ledger.reclusters);
+    assert_eq!(base.ledger.maml_adaptations, other.ledger.maml_adaptations);
+    assert_eq!(base.ledger.faults_injected, other.ledger.faults_injected);
+    assert_eq!(base.ledger.straggler_wait_s, other.ledger.straggler_wait_s);
+    assert_eq!(base.ledger.stale_passes, other.ledger.stale_passes);
+    assert_eq!(base.final_accuracy, other.final_accuracy);
+}
+
+#[test]
+fn straggler_preset_accumulates_wait_and_costs_time() {
+    let mut nominal = ExperimentConfig::tiny();
+    nominal.rounds = 8;
+    nominal.target_accuracy = None;
+    // a dropout *rate* can never exceed 1.0: with re-clustering pinned off,
+    // the nominal and straggler runs share the exact same topology
+    // evolution and the comparison below is airtight
+    nominal.recluster_threshold = 1.0;
+    let mut straggler = nominal.clone();
+    straggler.scenario = ScenarioConfig::preset(ScenarioKind::Stragglers);
+
+    let base = run_with(&nominal, Strategy::fedhc());
+    let slow = run_with(&straggler, Strategy::fedhc());
+    assert!(
+        slow.ledger.straggler_wait_s > 0.0,
+        "a 15% straggler rate must slow someone within 8 rounds"
+    );
+    // slowdowns only stretch member compute times, and the cluster fold is
+    // a max over members — simulated time is monotone in the slowdowns
+    assert!(
+        slow.ledger.time_s >= base.ledger.time_s,
+        "straggler time {} fell below nominal {}",
+        slow.ledger.time_s,
+        base.ledger.time_s
+    );
+    // the learning trajectory itself is untouched: stragglers are slow,
+    // not absent, so accuracies match the nominal run exactly
+    for (a, b) in base.ledger.records.iter().zip(&slow.ledger.records) {
+        assert_eq!(a.accuracy, b.accuracy, "round {}: slowdown changed learning", a.round);
+    }
+}
+
+#[test]
+fn flaky_ground_preset_stalls_passes_when_the_segment_goes_dark() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 12;
+    cfg.target_accuracy = None;
+    cfg.scenario = ScenarioConfig::preset(ScenarioKind::FlakyGround);
+    cfg.scenario.ground_outage_prob = 0.6;
+
+    // a single-station ground segment so "every station dark" happens
+    // within a few rounds at p = 0.6
+    let manifest = Manifest::host();
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
+    trial.ground.truncate(1);
+    trial.scenario = ScenarioEngine::new(
+        cfg.scenario,
+        cfg.outage_prob,
+        cfg.seed,
+        cfg.clients,
+        trial.ground.len(),
+    )
+    .unwrap();
+    let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    assert!(
+        res.ledger.stale_passes > 0,
+        "a 60% per-round station outage must skip some ground pass"
+    );
+    assert!(res.ledger.faults_injected > 0);
+    assert!(res.ledger.records.len() == 12, "the run must still complete");
+}
+
+#[test]
+fn eclipse_preset_injects_power_save_and_stays_deterministic() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 6;
+    cfg.target_accuracy = None;
+    cfg.outage_prob = 0.0; // isolate the eclipse process
+    cfg.scenario = ScenarioConfig::preset(ScenarioKind::Eclipse);
+
+    let a = run_with(&cfg, Strategy::fedhc());
+    assert!(
+        a.ledger.faults_injected > 0,
+        "part of a LEO shell is always inside Earth's shadow"
+    );
+    let mut cfg2 = cfg.clone();
+    cfg2.workers = 3;
+    let b = run_with(&cfg2, Strategy::fedhc());
+    for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
+        assert_eq!(x.accuracy, y.accuracy);
+        assert_eq!(x.time_s, y.time_s);
+    }
+    assert_eq!(a.ledger.faults_injected, b.ledger.faults_injected);
+}
+
+#[test]
+fn nominal_preset_reports_only_transient_outages() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 6;
+    cfg.target_accuracy = None;
+    cfg.outage_prob = 0.0;
+    let res = run_with(&cfg, Strategy::fedhc());
+    assert_eq!(
+        res.ledger.faults_injected, 0,
+        "nominal with zero transient rate must inject nothing"
+    );
+    assert_eq!(res.ledger.straggler_wait_s, 0.0);
+}
+
+#[test]
+fn scenario_matrix_sweep_covers_every_cell() {
+    let manifest = Manifest::host();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 3;
+    cfg.target_accuracy = None;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let scenarios = [ScenarioKind::Nominal, ScenarioKind::Churn];
+    let methods = ["fedhc", "cfedavg"];
+    let cells = run_scenario_matrix(&cfg, &manifest, &rt, &scenarios, &methods).unwrap();
+    assert_eq!(cells.len(), 4);
+    for cell in &cells {
+        assert!(
+            !cell.result.ledger.records.is_empty(),
+            "{}/{} produced no records",
+            cell.scenario.name(),
+            cell.method
+        );
+    }
+    // the churn cells actually saw faults; the nominal ones saw (at most)
+    // transient outages
+    let churn_faults: usize = cells
+        .iter()
+        .filter(|c| c.scenario == ScenarioKind::Churn)
+        .map(|c| c.result.ledger.faults_injected)
+        .sum();
+    assert!(churn_faults > 0, "churn cells must inject faults");
+}
