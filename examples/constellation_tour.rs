@@ -8,8 +8,9 @@
 use fedhc::clustering::kmeans::KMeans;
 use fedhc::clustering::recluster::changed_members;
 use fedhc::orbit::geo::default_ground_segment;
+use fedhc::orbit::index::SphereGrid;
 use fedhc::orbit::propagate::Constellation;
-use fedhc::orbit::visibility::{visible_sats, windows};
+use fedhc::orbit::visibility::{visible_sats, visible_sats_indexed, windows};
 use fedhc::orbit::walker::WalkerConstellation;
 use fedhc::util::Rng;
 
@@ -29,9 +30,13 @@ fn main() {
         c.elements[0].speed() / 1e3
     );
 
-    // ground-station visibility
+    // ground-station visibility — probed through the constellation
+    // plane's sphere grid, cross-checked against the exhaustive scan
+    let snap0 = c.snapshot(0.0);
+    let grid = SphereGrid::build(&snap0.features_km(), SphereGrid::auto_bands(c.len()));
     for gs in default_ground_segment() {
-        let now = visible_sats(&gs, &c, 0.0);
+        let now = visible_sats_indexed(&gs, &snap0, &grid);
+        assert_eq!(now, visible_sats(&gs, &c, 0.0), "index must be exact");
         let ws = windows(&gs, &c, 0.0, period, 30.0);
         let mean_pass = if ws.is_empty() {
             0.0
@@ -53,7 +58,7 @@ fn main() {
     println!("\ncluster decay (K=5, Eq. 13–15 clustering frozen at t=0):");
     let mut rng = Rng::new(7);
     let feats0 = c.snapshot(0.0).features_km();
-    let res = KMeans::new(5).run(&feats0, &mut rng);
+    let res = KMeans::new(5).run(&feats0, &mut rng).expect("kmeans");
     println!("  t=0: sizes {:?}, inertia {:.0}", res.sizes(), res.inertia);
     for pct in [5, 10, 15, 20, 25] {
         let t = period * pct as f64 / 100.0;

@@ -2,19 +2,33 @@
 //! (Eq. 13–15) across constellation sizes and K — it runs on every
 //! re-clustering event, so it must stay far off the critical path.
 //!
-//!     cargo bench --bench bench_clustering
+//! Emits machine-readable `BENCH_clustering.json` at the workspace root
+//! (same conventions as `BENCH_runtime.json`: a `mode` field and named
+//! entries with ms statistics). `--fast` runs the CI smoke preset.
+//!
+//!     cargo bench --bench bench_clustering [-- --fast]
 
 use fedhc::clustering::kmeans::KMeans;
 use fedhc::clustering::ps_select::select_parameter_servers;
 use fedhc::network::{LinkModel, NetworkParams};
 use fedhc::orbit::propagate::Constellation;
 use fedhc::orbit::walker::WalkerConstellation;
-use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::util::json::Json;
+use fedhc::util::stats::{bench_loop, bench_report, stats_json};
 use fedhc::util::Rng;
 
 fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let sizes: &[(usize, usize)] = if fast {
+        &[(4, 6), (8, 12)]
+    } else {
+        &[(4, 6), (8, 12), (12, 20), (24, 34)]
+    };
+    let (warmup, iters) = if fast { (1, 5) } else { (2, 20) };
+
     let link = LinkModel::new(NetworkParams::default());
-    for &(planes, spp) in &[(4usize, 6usize), (8, 12), (12, 20), (24, 34)] {
+    let mut entries: Vec<Json> = Vec::new();
+    for &(planes, spp) in sizes {
         let c = Constellation::from_walker(&WalkerConstellation::paper_shell(planes, spp));
         let n = c.len();
         let feats = c.snapshot(0.0).features_km();
@@ -23,19 +37,41 @@ fn main() {
             if k > n {
                 continue;
             }
-            let t = bench_loop(2, 20, || {
+            let t = bench_loop(warmup, iters, || {
                 let mut rng = Rng::new(7);
-                let res = KMeans::new(k).run(&feats, &mut rng);
+                let res = KMeans::new(k).run(&feats, &mut rng).expect("kmeans");
                 std::hint::black_box(&res);
             });
-            println!("{}", bench_report(&format!("kmeans n={n} k={k}"), &t));
+            let name = format!("kmeans n={n} k={k}");
+            println!("{}", bench_report(&name, &t));
+            entries.push(Json::obj(vec![
+                ("name", Json::str(&name)),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(k as f64)),
+                ("stats", stats_json(&t)),
+            ]));
             let mut rng = Rng::new(7);
-            let res = KMeans::new(k).run(&feats, &mut rng);
-            let t = bench_loop(2, 20, || {
+            let res = KMeans::new(k).run(&feats, &mut rng).expect("kmeans");
+            let t = bench_loop(warmup, iters, || {
                 let ps = select_parameter_servers(&res, &positions, &link);
                 std::hint::black_box(&ps);
             });
-            println!("{}", bench_report(&format!("ps_select n={n} k={k}"), &t));
+            let name = format!("ps_select n={n} k={k}");
+            println!("{}", bench_report(&name, &t));
+            entries.push(Json::obj(vec![
+                ("name", Json::str(&name)),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(k as f64)),
+                ("stats", stats_json(&t)),
+            ]));
         }
     }
+
+    let json = Json::obj(vec![
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_clustering.json");
+    std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_clustering.json");
+    println!("wrote {path}");
 }

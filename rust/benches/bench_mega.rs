@@ -1,0 +1,256 @@
+//! Mega-constellation bench: the constellation plane at N ∈ {96, 1k, 5k}.
+//!
+//! Three question groups, emitted to `BENCH_mega.json`:
+//!
+//! 1. **Index build** — sphere-grid construction time per epoch.
+//! 2. **Query speedups** — k-means nearest-centroid assignment,
+//!    ground-visibility probing and LoS neighbor queries, brute force vs
+//!    index-pruned, with bit-identity asserted on every comparison (the
+//!    exactness guarantee is a correctness claim, so it panics the bench;
+//!    the speedup numbers are reported, never thresholded — repo bench
+//!    convention).
+//! 3. **End-to-end rounds/sec** — the full FedHC round loop on the
+//!    `mega-sparse` (1 000 clients) and `mega-dense` (5 000 clients)
+//!    presets: spatial index on, bounded-memory pooled round path, event
+//!    timeline. `--fast` still runs the complete 5 000-satellite
+//!    configuration, just fewer rounds/iterations.
+//!
+//!     cargo bench --bench bench_mega [-- --fast]
+
+use fedhc::clustering::kmeans::KMeans;
+use fedhc::clustering::ps_select::{select_parameter_servers, select_parameter_servers_los};
+use fedhc::config::ExperimentConfig;
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::network::{LinkModel, NetworkParams};
+use fedhc::orbit::geo::default_ground_segment;
+use fedhc::orbit::index::{assign_nearest_brute, los_neighbors_brute, SphereGrid};
+use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::visibility::{visible_sats, visible_sats_indexed};
+use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::util::json::Json;
+use fedhc::util::stats::{bench_loop, mean, Timer};
+use fedhc::util::Rng;
+
+struct Tier {
+    label: &'static str,
+    walker: WalkerConstellation,
+    k: usize,
+}
+
+fn tiers() -> Vec<Tier> {
+    vec![
+        Tier {
+            label: "paper-96",
+            walker: WalkerConstellation::paper_shell(8, 12),
+            k: 3,
+        },
+        Tier {
+            label: "mega-1k",
+            walker: WalkerConstellation::mega_shell(40, 25),
+            k: 10,
+        },
+        Tier {
+            label: "mega-5k",
+            walker: WalkerConstellation::mega_shell(40, 125),
+            k: 40,
+        },
+    ]
+}
+
+fn geometry_suite(fast: bool) -> Json {
+    println!("== constellation plane: index build + query speedups (bit-identity asserted) ==");
+    let (warmup, iters) = if fast { (1, 8) } else { (2, 30) };
+    let mut rows: Vec<Json> = Vec::new();
+    for tier in tiers() {
+        let c = Constellation::from_walker(&tier.walker);
+        let n = c.len();
+        let epoch = 1234.5;
+        let snap = c.snapshot(epoch);
+        let feats = snap.features_km();
+        let bands = SphereGrid::auto_bands(n);
+        let grid = SphereGrid::build(&feats, bands);
+
+        // index build time per epoch
+        let t_build = bench_loop(warmup, iters, || {
+            std::hint::black_box(SphereGrid::build(&feats, bands));
+        });
+
+        // (a) k-means assignment: converged centroids, then the Eq. 13
+        // step brute vs pruned — winners must match bit for bit, and the
+        // full Lloyd runs must agree too
+        let mut rng = Rng::new(7);
+        let res = KMeans::new(tier.k).run(&feats, &mut rng).expect("kmeans");
+        let mut rng_ix = Rng::new(7);
+        let res_ix = KMeans::new(tier.k)
+            .run_indexed(&feats, &mut rng_ix, Some(&grid))
+            .expect("kmeans (indexed)");
+        assert_eq!(
+            res.assignment, res_ix.assignment,
+            "{}: indexed k-means diverged from brute force",
+            tier.label
+        );
+        let cents = &res.centroids;
+        let mut a_brute = Vec::new();
+        let mut a_index = Vec::new();
+        assign_nearest_brute(&feats, cents, &mut a_brute);
+        grid.assign_nearest(cents, &mut a_index);
+        assert_eq!(a_brute, a_index, "{}: assignment step diverged", tier.label);
+        let t_ab = bench_loop(warmup, iters, || {
+            assign_nearest_brute(&feats, cents, &mut a_brute);
+            std::hint::black_box(&a_brute);
+        });
+        let t_ai = bench_loop(warmup, iters, || {
+            grid.assign_nearest(cents, &mut a_index);
+            std::hint::black_box(&a_index);
+        });
+
+        // (b) ground-visibility probe
+        let gs = &default_ground_segment()[0];
+        let v_brute = visible_sats(gs, &c, epoch);
+        let v_index = visible_sats_indexed(gs, &snap, &grid);
+        assert_eq!(v_brute, v_index, "{}: visible set diverged", tier.label);
+        let t_vb = bench_loop(warmup, iters, || {
+            std::hint::black_box(visible_sats(gs, &c, epoch));
+        });
+        let t_vi = bench_loop(warmup, iters, || {
+            std::hint::black_box(visible_sats_indexed(gs, &snap, &grid));
+        });
+
+        // (c) LoS neighbors within a 2 000 km ISL budget
+        let range_m = 2_000e3;
+        let probe = n / 2;
+        let mut l_brute = Vec::new();
+        let mut l_index = Vec::new();
+        los_neighbors_brute(probe, range_m, &snap.positions, &mut l_brute);
+        grid.los_neighbors(probe, range_m, &snap.positions, &mut l_index);
+        assert_eq!(l_brute, l_index, "{}: LoS neighbors diverged", tier.label);
+        let t_lb = bench_loop(warmup, iters, || {
+            los_neighbors_brute(probe, range_m, &snap.positions, &mut l_brute);
+            std::hint::black_box(&l_brute);
+        });
+        let t_li = bench_loop(warmup, iters, || {
+            grid.los_neighbors(probe, range_m, &snap.positions, &mut l_index);
+            std::hint::black_box(&l_index);
+        });
+
+        // PS selection: the classic tie-break vs the LoS-aware one (only
+        // ISL-feasible peers count), the latter through the grid
+        let link = LinkModel::new(NetworkParams::default());
+        let (t_ps, t_ps_los) = if res.sizes().iter().all(|&s| s > 0) {
+            let t_ps = bench_loop(warmup, iters.min(10), || {
+                std::hint::black_box(select_parameter_servers(&res, &snap.positions, &link));
+            });
+            let t_ps_los = bench_loop(warmup, iters.min(10), || {
+                std::hint::black_box(select_parameter_servers_los(
+                    &res,
+                    &snap.positions,
+                    &link,
+                    Some(&grid),
+                    range_m,
+                ));
+            });
+            (mean(&t_ps) * 1e3, mean(&t_ps_los) * 1e3)
+        } else {
+            // an empty cluster would trip ps_select's precondition;
+            // -1 marks the skipped measurement in the JSON
+            (-1.0, -1.0)
+        };
+
+        let assign_speedup = mean(&t_ab) / mean(&t_ai);
+        let visible_speedup = mean(&t_vb) / mean(&t_vi);
+        let los_speedup = mean(&t_lb) / mean(&t_li);
+        println!(
+            "  {:<9} n={n:>5} k={:>2} bands={bands:>2} cells={:>4}: build {:>8.3} ms | \
+             assign x{assign_speedup:<5.2} visible x{visible_speedup:<5.2} los x{los_speedup:<5.2}",
+            tier.label,
+            tier.k,
+            grid.cells(),
+            mean(&t_build) * 1e3,
+        );
+        rows.push(Json::obj(vec![
+            ("tier", Json::str(tier.label)),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(tier.k as f64)),
+            ("bands", Json::num(bands as f64)),
+            ("cells", Json::num(grid.cells() as f64)),
+            ("index_build_ms", Json::num(mean(&t_build) * 1e3)),
+            ("assign_brute_ms", Json::num(mean(&t_ab) * 1e3)),
+            ("assign_indexed_ms", Json::num(mean(&t_ai) * 1e3)),
+            ("assign_speedup", Json::num(assign_speedup)),
+            ("visible_brute_ms", Json::num(mean(&t_vb) * 1e3)),
+            ("visible_indexed_ms", Json::num(mean(&t_vi) * 1e3)),
+            ("visible_speedup", Json::num(visible_speedup)),
+            ("los_brute_ms", Json::num(mean(&t_lb) * 1e3)),
+            ("los_indexed_ms", Json::num(mean(&t_li) * 1e3)),
+            ("los_speedup", Json::num(los_speedup)),
+            ("ps_select_ms", Json::num(t_ps)),
+            ("ps_select_los_ms", Json::num(t_ps_los)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+fn end_to_end(fast: bool) -> Json {
+    let manifest = Manifest::host();
+    let rounds = if fast { 2 } else { 5 };
+    println!("\n== end-to-end FedHC rounds (pooled round path, index on, event timeline) ==");
+    let mut rows: Vec<Json> = Vec::new();
+    for preset in ["mega-sparse", "mega-dense"] {
+        let mut cfg = ExperimentConfig::preset(preset).expect("mega preset");
+        cfg.rounds = rounds;
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).expect("runtime");
+        let timer = Timer::start();
+        let mut trial = Trial::new(cfg.clone(), &manifest, &rt).expect("trial");
+        let setup_ms = timer.elapsed_ms();
+        let timer = Timer::start();
+        let res = run_clustered(&mut trial, Strategy::fedhc()).expect("run");
+        let wall = timer.elapsed_secs();
+        let rps = rounds as f64 / wall;
+        // structural claims, not perf thresholds: the run completed its
+        // budget, recorded evaluations, simulated real time/energy, and
+        // the pooled mode left no resident per-client parameters
+        assert!(!res.ledger.records.is_empty(), "{preset}: no eval records");
+        assert!(res.ledger.time_s > 0.0 && res.ledger.energy_j > 0.0);
+        assert!(
+            trial.clients.iter().all(|c| c.params.is_empty()),
+            "{preset}: pooled mode left resident client parameters"
+        );
+        println!(
+            "  {preset:<12} {:>5} clients K={:<3} setup {:>8.0} ms | {rounds} rounds in {:>8.1} ms \
+             ({rps:.2} rounds/s, sim {:.0} s, acc {:.1}%)",
+            cfg.clients,
+            cfg.clusters,
+            setup_ms,
+            wall * 1e3,
+            res.ledger.time_s,
+            res.final_accuracy * 100.0,
+        );
+        rows.push(Json::obj(vec![
+            ("preset", Json::str(preset)),
+            ("clients", Json::num(cfg.clients as f64)),
+            ("clusters", Json::num(cfg.clusters as f64)),
+            ("rounds", Json::num(rounds as f64)),
+            ("setup_ms", Json::num(setup_ms)),
+            ("wall_ms", Json::num(wall * 1e3)),
+            ("rounds_per_sec", Json::num(rps)),
+            ("sim_time_s", Json::num(res.ledger.time_s)),
+            ("best_accuracy", Json::num(res.final_accuracy)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let geometry = geometry_suite(fast);
+    let e2e = end_to_end(fast);
+    let json = Json::obj(vec![
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("geometry", geometry),
+        ("end_to_end", e2e),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_mega.json");
+    std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_mega.json");
+    println!("\nwrote {path}");
+}

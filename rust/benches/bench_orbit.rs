@@ -1,35 +1,103 @@
-//! Orbit substrate bench: snapshot propagation (runs every round) and
-//! visibility-window computation (runs at setup / analysis time).
+//! Orbit substrate bench: snapshot propagation (runs every round),
+//! visibility probing — brute force vs the sphere-grid index, with a
+//! bit-identity cross-check — and visibility-window computation.
 //!
-//!     cargo bench --bench bench_orbit
+//! Emits machine-readable `BENCH_orbit.json` at the workspace root (same
+//! conventions as `BENCH_runtime.json`). `--fast` runs the CI smoke
+//! preset.
+//!
+//!     cargo bench --bench bench_orbit [-- --fast]
 
 use fedhc::orbit::geo::default_ground_segment;
+use fedhc::orbit::index::SphereGrid;
 use fedhc::orbit::propagate::Constellation;
-use fedhc::orbit::visibility::{visible_sats, windows};
+use fedhc::orbit::visibility::{visible_sats, visible_sats_indexed, windows};
 use fedhc::orbit::walker::WalkerConstellation;
-use fedhc::util::stats::{bench_loop, bench_report};
+use fedhc::util::json::Json;
+use fedhc::util::stats::{bench_loop, bench_report, stats_json};
+
+fn entry(name: &str, n: usize, secs: &[f64]) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("n", Json::num(n as f64)),
+        ("stats", stats_json(secs)),
+    ])
+}
 
 fn main() {
-    for &(planes, spp) in &[(8usize, 12usize), (24, 34), (40, 50)] {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let shells: &[(usize, usize)] = if fast {
+        &[(8, 12), (24, 34)]
+    } else {
+        &[(8, 12), (24, 34), (40, 50)]
+    };
+    let (warmup, iters) = if fast { (1, 20) } else { (3, 100) };
+    let mut entries: Vec<Json> = Vec::new();
+
+    for &(planes, spp) in shells {
         let c = Constellation::from_walker(&WalkerConstellation::paper_shell(planes, spp));
         let n = c.len();
-        let t = bench_loop(3, 100, || {
+        let t = bench_loop(warmup, iters, || {
             let s = c.snapshot(1234.5);
             std::hint::black_box(&s);
         });
-        println!("{}", bench_report(&format!("snapshot n={n}"), &t));
+        let name = format!("snapshot n={n}");
+        println!("{}", bench_report(&name, &t));
+        entries.push(entry(&name, n, &t));
+
+        // visibility probe: brute force vs index (bit-identity asserted)
+        let gs = &default_ground_segment()[0];
+        let epoch = 777.0;
+        let snap = c.snapshot(epoch);
+        let grid = SphereGrid::build(&snap.features_km(), SphereGrid::auto_bands(n));
+        assert_eq!(
+            visible_sats(gs, &c, epoch),
+            visible_sats_indexed(gs, &snap, &grid),
+            "index diverged from the brute-force visible set"
+        );
+        let t = bench_loop(warmup, iters, || {
+            std::hint::black_box(visible_sats(gs, &c, epoch));
+        });
+        let name = format!("visible_sats/brute n={n}");
+        println!("{}", bench_report(&name, &t));
+        entries.push(entry(&name, n, &t));
+        let t = bench_loop(warmup, iters, || {
+            std::hint::black_box(visible_sats_indexed(gs, &snap, &grid));
+        });
+        let name = format!("visible_sats/indexed n={n}");
+        println!("{}", bench_report(&name, &t));
+        entries.push(entry(&name, n, &t));
+        // index build alone (features already propagated — the same
+        // quantity bench_mega's index_build_ms reports)
+        let feats = snap.features_km();
+        let t = bench_loop(warmup, iters, || {
+            std::hint::black_box(SphereGrid::build(&feats, SphereGrid::auto_bands(n)));
+        });
+        let name = format!("index_build n={n}");
+        println!("{}", bench_report(&name, &t));
+        entries.push(entry(&name, n, &t));
     }
 
     let c = Constellation::from_walker(&WalkerConstellation::paper_shell(8, 12));
     let gs = &default_ground_segment()[0];
-    let t = bench_loop(3, 100, || {
-        std::hint::black_box(visible_sats(gs, &c, 777.0));
-    });
-    println!("{}", bench_report("visible_sats n=96", &t));
-
     let period = c.min_period();
-    let t = bench_loop(1, 5, || {
-        std::hint::black_box(windows(gs, &c, 0.0, period, 30.0));
+    let span = if fast { 0.25 * period } else { period };
+    let t = bench_loop(1, if fast { 2 } else { 5 }, || {
+        std::hint::black_box(windows(gs, &c, 0.0, span, 30.0));
     });
-    println!("{}", bench_report("windows n=96 one-period", &t));
+    let name = if fast {
+        "windows n=96 quarter-period"
+    } else {
+        "windows n=96 one-period"
+    };
+    println!("{}", bench_report(name, &t));
+    entries.push(entry(name, c.len(), &t));
+
+    let json = Json::obj(vec![
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_orbit.json");
+    std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_orbit.json");
+    println!("wrote {path}");
 }

@@ -62,7 +62,10 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     }
     let union = Dataset::new(kind, images, labels);
     let cpu_hz = trial.clients[central].cpu_hz;
-    let init = trial.clients[central].params.clone();
+    // every client starts from the same init, so the trial-level copy is
+    // the central model too (and the only source in the bounded-memory
+    // mode, where clients hold no resident parameters)
+    let init = trial.init.clone();
     let mut node = SatClient::new(central, union, init, cpu_hz);
     // the central epoch reuses the shared local-training stage (same
     // stateless (seed, round, sat) RNG discipline as the clustered runs)

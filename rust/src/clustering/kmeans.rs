@@ -4,8 +4,17 @@
 //! uses the Euclidean metric of Eq. 13; the update step is the centroid
 //! mean of Eq. 14; convergence is the summed squared centroid displacement
 //! of Eq. 15.
+//!
+//! The assignment step (the O(N·K) hot loop) can be served by the
+//! constellation plane's sphere grid ([`crate::orbit::index::SphereGrid`]):
+//! [`KMeans::run_indexed`] prunes the centroid candidates per grid cell
+//! and is **bit-identical** to the exhaustive scan — same winners, same
+//! lowest-index tie-breaks — so the index is purely a speed knob (pinned
+//! by `tests/proptests.rs::prop_sphere_grid_assignment_is_exact`).
 
+use crate::orbit::index::{assign_nearest_brute, d2, SphereGrid};
 use crate::util::Rng;
+use anyhow::{bail, Result};
 
 /// Configuration for a k-means run.
 #[derive(Clone, Copy, Debug)]
@@ -37,14 +46,6 @@ impl Default for KMeans {
     }
 }
 
-#[inline]
-fn d2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
-    let dx = a[0] - b[0];
-    let dy = a[1] - b[1];
-    let dz = a[2] - b[2];
-    dx * dx + dy * dy + dz * dz
-}
-
 impl KMeans {
     pub fn new(k: usize) -> Self {
         KMeans {
@@ -53,16 +54,47 @@ impl KMeans {
         }
     }
 
-    /// Run Lloyd's algorithm on `points` (e.g. satellite positions in km).
-    pub fn run(&self, points: &[[f64; 3]], rng: &mut Rng) -> KMeansResult {
+    /// Run Lloyd's algorithm on `points` (e.g. satellite positions in km)
+    /// with the exhaustive assignment scan. An infeasible `k` (zero, or
+    /// more clusters than points — e.g. a mega preset with an aggressive
+    /// `--k` override) is a usage error, not a panic.
+    pub fn run(&self, points: &[[f64; 3]], rng: &mut Rng) -> Result<KMeansResult> {
+        self.run_indexed(points, rng, None)
+    }
+
+    /// Like [`KMeans::run`], with the assignment step optionally served by
+    /// a sphere grid built over exactly `points` (same epoch, same order).
+    /// Results are bit-identical either way.
+    pub fn run_indexed(
+        &self,
+        points: &[[f64; 3]],
+        rng: &mut Rng,
+        grid: Option<&SphereGrid>,
+    ) -> Result<KMeansResult> {
         let n = points.len();
-        assert!(self.k >= 1, "k must be >= 1");
-        assert!(
-            n >= self.k,
-            "cannot form {} clusters from {} points",
-            self.k,
-            n
-        );
+        if self.k < 1 {
+            bail!("k-means needs at least 1 cluster, got k = {}", self.k);
+        }
+        if n < self.k {
+            bail!(
+                "cannot form {} clusters from {} points — lower --k or grow the constellation",
+                self.k,
+                n
+            );
+        }
+        if let Some(g) = grid {
+            // full equality, not a sample: a stale or reordered grid must
+            // never silently break the bit-identity guarantee (O(N) once
+            // per run, negligible next to the Lloyd iterations)
+            if g.feats() != points {
+                bail!(
+                    "spatial index does not cover the clustering input \
+                     ({} indexed vs {} points) — refresh the index for this epoch",
+                    g.len(),
+                    n
+                );
+            }
+        }
 
         let mut centroids = self.init_pp(points, rng);
         let mut assignment = vec![0usize; n];
@@ -70,19 +102,8 @@ impl KMeans {
 
         loop {
             iterations += 1;
-            // assignment step (Eq. 13)
-            for (i, p) in points.iter().enumerate() {
-                let mut best = 0;
-                let mut best_d = f64::INFINITY;
-                for (c, cent) in centroids.iter().enumerate() {
-                    let d = d2(p, cent);
-                    if d < best_d {
-                        best_d = d;
-                        best = c;
-                    }
-                }
-                assignment[i] = best;
-            }
+            // assignment step (Eq. 13), index-pruned when a grid is given
+            assign_step(points, &centroids, grid, &mut assignment);
             // update step (Eq. 14)
             let mut sums = vec![[0.0f64; 3]; self.k];
             let mut counts = vec![0usize; self.k];
@@ -125,27 +146,18 @@ impl KMeans {
         }
 
         // final assignment + inertia under the converged centroids
+        assign_step(points, &centroids, grid, &mut assignment);
         let mut inertia = 0.0;
         for (i, p) in points.iter().enumerate() {
-            let mut best = 0;
-            let mut best_d = f64::INFINITY;
-            for (c, cent) in centroids.iter().enumerate() {
-                let d = d2(p, cent);
-                if d < best_d {
-                    best_d = d;
-                    best = c;
-                }
-            }
-            assignment[i] = best;
-            inertia += best_d;
+            inertia += d2(p, &centroids[assignment[i]]);
         }
 
-        KMeansResult {
+        Ok(KMeansResult {
             centroids,
             assignment,
             iterations,
             inertia,
-        }
+        })
     }
 
     /// k-means++ seeding.
@@ -177,6 +189,22 @@ impl KMeans {
             centroids.push(points[next]);
         }
         centroids
+    }
+}
+
+/// One Eq. 13 assignment pass: index-pruned when a grid is available,
+/// [`assign_nearest_brute`] otherwise. Both paths score candidates with
+/// [`d2`] in ascending centroid order under a strict `<`, so they agree
+/// bit for bit.
+fn assign_step(
+    points: &[[f64; 3]],
+    centroids: &[[f64; 3]],
+    grid: Option<&SphereGrid>,
+    assignment: &mut Vec<usize>,
+) {
+    match grid {
+        Some(g) => g.assign_nearest(centroids, assignment),
+        None => assign_nearest_brute(points, centroids, assignment),
     }
 }
 
@@ -238,7 +266,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let centers = [[0.0, 0.0, 0.0], [100.0, 0.0, 0.0], [0.0, 100.0, 0.0]];
         let pts = blobs(&mut rng, &centers, 40, 2.0);
-        let res = KMeans::new(3).run(&pts, &mut rng);
+        let res = KMeans::new(3).run(&pts, &mut rng).unwrap();
         // every blob should map to a single cluster
         for b in 0..3 {
             let ids: Vec<usize> = (b * 40..(b + 1) * 40).map(|i| res.assignment[i]).collect();
@@ -258,7 +286,7 @@ mod tests {
     fn assignment_is_nearest_centroid() {
         let mut rng = Rng::new(2);
         let pts = blobs(&mut rng, &[[0.0; 3], [50.0, 0.0, 0.0]], 30, 5.0);
-        let res = KMeans::new(2).run(&pts, &mut rng);
+        let res = KMeans::new(2).run(&pts, &mut rng).unwrap();
         for (i, p) in pts.iter().enumerate() {
             let assigned = res.assignment[i];
             for (c, cent) in res.centroids.iter().enumerate() {
@@ -271,10 +299,70 @@ mod tests {
     }
 
     #[test]
+    fn infeasible_k_is_a_usage_error() {
+        let mut rng = Rng::new(11);
+        let pts = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [2.0, 0.0, 0.0]];
+        let e = KMeans::new(4).run(&pts, &mut rng).unwrap_err();
+        assert!(
+            e.to_string().contains("cannot form 4 clusters from 3 points"),
+            "{e}"
+        );
+        let e = KMeans::new(0).run(&pts, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("at least 1 cluster"), "{e}");
+        // the boundary itself stays fine
+        assert!(KMeans::new(3).run(&pts, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn stale_index_is_rejected() {
+        let mut rng = Rng::new(12);
+        let pts = blobs(&mut rng, &[[7000.0, 0.0, 0.0], [0.0, 7000.0, 0.0]], 10, 30.0);
+        let other = blobs(&mut rng, &[[0.0, 0.0, 7000.0]], 20, 30.0);
+        let grid = SphereGrid::build(&other, 4);
+        let e = KMeans::new(2)
+            .run_indexed(&pts, &mut rng, Some(&grid))
+            .unwrap_err();
+        assert!(e.to_string().contains("spatial index"), "{e}");
+    }
+
+    #[test]
+    fn indexed_run_is_bit_identical_to_brute_force() {
+        // shell-like points so the sphere grid is meaningful
+        let mut rng = Rng::new(13);
+        let pts: Vec<[f64; 3]> = (0..200)
+            .map(|_| {
+                let v = [rng.normal(), rng.normal(), rng.normal()];
+                let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt().max(1e-9);
+                let r = 7000.0 + 100.0 * rng.normal();
+                [v[0] / n * r, v[1] / n * r, v[2] / n * r]
+            })
+            .collect();
+        for bands in [1usize, 3, 8] {
+            let grid = SphereGrid::build(&pts, bands);
+            let mut r1 = Rng::new(99);
+            let mut r2 = Rng::new(99);
+            let brute = KMeans::new(5).run(&pts, &mut r1).unwrap();
+            let indexed = KMeans::new(5)
+                .run_indexed(&pts, &mut r2, Some(&grid))
+                .unwrap();
+            assert_eq!(brute.assignment, indexed.assignment, "bands={bands}");
+            assert_eq!(brute.iterations, indexed.iterations, "bands={bands}");
+            assert_eq!(
+                brute.inertia.to_bits(),
+                indexed.inertia.to_bits(),
+                "bands={bands}"
+            );
+            for (a, b) in brute.centroids.iter().zip(&indexed.centroids) {
+                assert_eq!(a, b, "bands={bands}");
+            }
+        }
+    }
+
+    #[test]
     fn k_equals_n_gives_zero_inertia() {
         let mut rng = Rng::new(3);
         let pts = vec![[0.0, 0.0, 0.0], [10.0, 0.0, 0.0], [0.0, 10.0, 0.0]];
-        let res = KMeans::new(3).run(&pts, &mut rng);
+        let res = KMeans::new(3).run(&pts, &mut rng).unwrap();
         assert!(res.inertia < 1e-9);
         let mut sizes = res.sizes();
         sizes.sort_unstable();
@@ -285,7 +373,7 @@ mod tests {
     fn k_one_centroid_is_mean() {
         let mut rng = Rng::new(4);
         let pts = vec![[0.0, 0.0, 0.0], [2.0, 4.0, 6.0]];
-        let res = KMeans::new(1).run(&pts, &mut rng);
+        let res = KMeans::new(1).run(&pts, &mut rng).unwrap();
         assert!((res.centroids[0][0] - 1.0).abs() < 1e-9);
         assert!((res.centroids[0][1] - 2.0).abs() < 1e-9);
         assert!((res.centroids[0][2] - 3.0).abs() < 1e-9);
@@ -306,7 +394,7 @@ mod tests {
             let best = (0..3)
                 .map(|s| {
                     let mut r = Rng::new(100 + s);
-                    KMeans::new(k).run(&pts, &mut r).inertia
+                    KMeans::new(k).run(&pts, &mut r).unwrap().inertia
                 })
                 .fold(f64::INFINITY, f64::min);
             assert!(
@@ -322,8 +410,8 @@ mod tests {
         let mut r1 = Rng::new(9);
         let mut r2 = Rng::new(9);
         let pts = blobs(&mut Rng::new(8), &[[0.0; 3], [20.0, 0.0, 0.0]], 50, 3.0);
-        let a = KMeans::new(2).run(&pts, &mut r1);
-        let b = KMeans::new(2).run(&pts, &mut r2);
+        let a = KMeans::new(2).run(&pts, &mut r1).unwrap();
+        let b = KMeans::new(2).run(&pts, &mut r2).unwrap();
         assert_eq!(a.assignment, b.assignment);
         assert_eq!(a.iterations, b.iterations);
     }
@@ -334,7 +422,7 @@ mod tests {
         let pts: Vec<[f64; 3]> = (0..200)
             .map(|_| [rng.uniform() * 100.0, rng.uniform() * 100.0, rng.uniform() * 100.0])
             .collect();
-        let res = KMeans::new(5).run(&pts, &mut rng);
+        let res = KMeans::new(5).run(&pts, &mut rng).unwrap();
         assert!(res.sizes().iter().all(|&s| s > 0), "{:?}", res.sizes());
     }
 }

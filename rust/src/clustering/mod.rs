@@ -18,7 +18,7 @@
 //!     [9.0, 9.0, 9.0],
 //!     [9.1, 9.0, 9.0],
 //! ];
-//! let res = KMeans::new(2).run(&points, &mut Rng::new(7));
+//! let res = KMeans::new(2).run(&points, &mut Rng::new(7)).unwrap();
 //! assert_eq!(res.assignment.len(), 4);
 //! assert_eq!(res.assignment[0], res.assignment[1]);
 //! assert_eq!(res.assignment[2], res.assignment[3]);

@@ -2,9 +2,20 @@
 //! satellite nearest the converged centroid becomes the PS; ties and
 //! communication quality are broken by the achievable-rate the candidate
 //! offers to its cluster peers ("strong communication capabilities").
+//!
+//! [`select_parameter_servers`] is the historical exact criterion (every
+//! cluster peer counts toward the rate tie-break, Earth occlusion
+//! ignored). [`select_parameter_servers_los`] is the mega-constellation
+//! variant: the tie-break only credits peers the candidate can actually
+//! reach — inside ISL range *and* with a clear line of sight — with the
+//! neighbor sets served by the constellation plane's sphere grid
+//! ([`crate::orbit::index::SphereGrid::los_neighbors`], exactness-pinned
+//! against the brute-force scan). The default coordinator path keeps the
+//! historical criterion so committed trajectories stay byte-stable.
 
 use super::kmeans::KMeansResult;
 use crate::network::LinkModel;
+use crate::orbit::index::{los_neighbors_brute, SphereGrid};
 use crate::orbit::Vec3;
 
 /// Per-cluster parameter-server choice.
@@ -14,6 +25,19 @@ pub struct PsChoice {
     pub ps: usize,
     /// Distance from the PS to the centroid, km.
     pub centroid_dist_km: f64,
+}
+
+/// How the rate tie-break counts a candidate's cluster peers.
+enum PeerRule<'a> {
+    /// Every other member (the paper's implicit assumption at 96-sat
+    /// scale, where clusters are small).
+    All,
+    /// Only members within `max_range_m` with a clear line of sight, via
+    /// the sphere grid when one is supplied (brute-force scan otherwise).
+    Los {
+        grid: Option<&'a SphereGrid>,
+        max_range_m: f64,
+    },
 }
 
 /// Select one PS per cluster. `positions` are ECI meters (same order as the
@@ -28,8 +52,33 @@ pub fn select_parameter_servers(
     positions: &[Vec3],
     link: &LinkModel,
 ) -> Vec<PsChoice> {
+    select_with_rule(result, positions, link, &PeerRule::All)
+}
+
+/// Like [`select_parameter_servers`], but the rate tie-break only counts
+/// peers the candidate can reach over an ISL: within `max_range_m` and
+/// with a line of sight clearing the Earth. `grid` (built from the same
+/// epoch's positions) prunes the neighbor scan; `None` falls back to the
+/// exhaustive scan with identical results.
+pub fn select_parameter_servers_los(
+    result: &KMeansResult,
+    positions: &[Vec3],
+    link: &LinkModel,
+    grid: Option<&SphereGrid>,
+    max_range_m: f64,
+) -> Vec<PsChoice> {
+    select_with_rule(result, positions, link, &PeerRule::Los { grid, max_range_m })
+}
+
+fn select_with_rule(
+    result: &KMeansResult,
+    positions: &[Vec3],
+    link: &LinkModel,
+    rule: &PeerRule,
+) -> Vec<PsChoice> {
     let clusters = result.clusters();
     let mut out = Vec::with_capacity(clusters.len());
+    let mut neighbors: Vec<usize> = Vec::new();
     for (c, members) in clusters.iter().enumerate() {
         assert!(!members.is_empty(), "cluster {c} is empty");
         let cent = result.centroids[c];
@@ -49,15 +98,43 @@ pub fn select_parameter_servers(
             if dists[mi] > band {
                 continue;
             }
-            let mean_rate = if members.len() == 1 {
-                f64::INFINITY
-            } else {
-                members
-                    .iter()
-                    .filter(|&&j| j != i)
-                    .map(|&j| link.rate(positions[i].dist(positions[j]).max(1.0)))
-                    .sum::<f64>()
-                    / (members.len() - 1) as f64
+            let mean_rate = match rule {
+                PeerRule::All => {
+                    if members.len() == 1 {
+                        f64::INFINITY
+                    } else {
+                        members
+                            .iter()
+                            .filter(|&&j| j != i)
+                            .map(|&j| link.rate(positions[i].dist(positions[j]).max(1.0)))
+                            .sum::<f64>()
+                            / (members.len() - 1) as f64
+                    }
+                }
+                // a singleton has no peers — skip the neighbor scan
+                PeerRule::Los { .. } if members.len() == 1 => f64::INFINITY,
+                PeerRule::Los { grid, max_range_m } => {
+                    match grid {
+                        Some(g) => g.los_neighbors(i, *max_range_m, positions, &mut neighbors),
+                        None => los_neighbors_brute(i, *max_range_m, positions, &mut neighbors),
+                    }
+                    // restrict the (whole-constellation) neighbor set to
+                    // this candidate's own cluster
+                    let mut sum = 0.0f64;
+                    let mut n_peers = 0usize;
+                    for &j in &neighbors {
+                        if result.assignment[j] == c {
+                            sum += link.rate(positions[i].dist(positions[j]).max(1.0));
+                            n_peers += 1;
+                        }
+                    }
+                    if n_peers == 0 {
+                        // a candidate that reaches nobody offers no rate
+                        0.0
+                    } else {
+                        sum / n_peers as f64
+                    }
+                }
             };
             if best.map(|(_, r)| mean_rate > r).unwrap_or(true) {
                 best = Some((i, mean_rate));
@@ -94,7 +171,7 @@ mod tests {
                 ]);
             }
         }
-        let res = KMeans::new(2).run(&pts_km, &mut rng);
+        let res = KMeans::new(2).run(&pts_km, &mut rng).unwrap();
         let pos: Vec<Vec3> = pts_km
             .iter()
             .map(|p| Vec3::new(p[0] * 1e3, p[1] * 1e3, p[2] * 1e3))
@@ -145,7 +222,7 @@ mod tests {
     fn singleton_cluster_ps_is_member() {
         let mut rng = Rng::new(5);
         let pts = vec![[0.0, 0.0, 0.0], [1000.0, 0.0, 0.0]];
-        let res = KMeans::new(2).run(&pts, &mut rng);
+        let res = KMeans::new(2).run(&pts, &mut rng).unwrap();
         let pos: Vec<Vec3> = pts
             .iter()
             .map(|p| Vec3::new(p[0] * 1e3, p[1] * 1e3, p[2] * 1e3))
@@ -156,5 +233,31 @@ mod tests {
         let mut ids: Vec<usize> = ps.iter().map(|p| p.ps).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn los_variant_matches_classic_when_all_peers_reachable() {
+        // tight LEO blobs: every intra-cluster pair is within range and
+        // unoccluded, so the LoS rule counts exactly the classic peer set
+        let (res, pos, link) = setup(15);
+        let feats: Vec<[f64; 3]> = pos.iter().map(|p| [p.x / 1e3, p.y / 1e3, p.z / 1e3]).collect();
+        let grid = SphereGrid::build(&feats, 6);
+        let classic = select_parameter_servers(&res, &pos, &link);
+        let with_grid = select_parameter_servers_los(&res, &pos, &link, Some(&grid), 1e9);
+        let with_brute = select_parameter_servers_los(&res, &pos, &link, None, 1e9);
+        assert_eq!(classic, with_grid);
+        assert_eq!(classic, with_brute);
+    }
+
+    #[test]
+    fn los_variant_still_picks_a_member_when_nobody_is_reachable() {
+        let (res, pos, link) = setup(10);
+        // a 1 m range leaves every candidate peerless (rate 0): selection
+        // must still return one member per cluster, inside the 5% band
+        let out = select_parameter_servers_los(&res, &pos, &link, None, 1.0);
+        assert_eq!(out.len(), 2);
+        for choice in out {
+            assert_eq!(res.assignment[choice.ps], choice.cluster);
+        }
     }
 }

@@ -2,6 +2,14 @@
 //! cluster monitors its dropout rate `d_r = C^d / C^k`; when `d_r > Z` the
 //! constellation is re-clustered and newly-assigned satellites are
 //! warm-started via MAML (handled by the coordinator).
+//!
+//! A re-cluster event is also the constellation plane's mid-round index
+//! refresh point: topology is rebuilt at the post-aggregation epoch, so
+//! the coordinator re-syncs its [`crate::orbit::index::ConstellationIndex`]
+//! before the k-means pass (see `coordinator::fedhc::run_staged`). Label
+//! alignment below is geometry-free and needs no index: the contingency
+//! table is O(k²) and the mega-scale path (k > 8) uses the greedy
+//! matching, not the factorial-exact search.
 
 use anyhow::{bail, Result};
 

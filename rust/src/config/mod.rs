@@ -76,6 +76,24 @@ pub struct ExperimentConfig {
     /// Walker constellation geometry.
     pub planes: usize,
     pub sats_per_plane: usize,
+    /// Shell altitude, km (paper presets: 1300; mega presets: the
+    /// Starlink-class 550).
+    pub altitude_km: f64,
+    /// Shell inclination, degrees.
+    pub inclination_deg: f64,
+    /// Constellation plane: serve nearest-centroid assignment and churn
+    /// through the sphere-grid spatial index (`orbit::index`). Pruned
+    /// searches are exactness-guaranteed, so this is purely a speed knob —
+    /// `--no-index` disables it without changing any result.
+    pub spatial_index: bool,
+    /// Latitude bands of the sphere grid (`--index-bands`; 0 = auto-sized
+    /// from the constellation).
+    pub index_bands: usize,
+    /// Keep a resident parameter vector per client (the historical
+    /// behaviour, required only for inspecting per-client models). Mega
+    /// presets disable it: members train on pooled buffers and resident
+    /// parameter state stays O(K + largest cluster) instead of O(N).
+    pub resident_params: bool,
     /// Per-round client outage probability (the scenario plane's
     /// transient-outage process; runs under every scenario preset).
     pub outage_prob: f64,
@@ -136,6 +154,11 @@ impl ExperimentConfig {
             dirichlet_alpha: 0.5,
             planes: 4,
             sats_per_plane: 6,
+            altitude_km: 1300.0,
+            inclination_deg: 53.0,
+            spatial_index: true,
+            index_bands: 0,
+            resident_params: true,
             outage_prob: 0.02,
             scenario: ScenarioConfig::default(),
             cpu_het: (0.5, 2.0),
@@ -171,6 +194,11 @@ impl ExperimentConfig {
             dirichlet_alpha: 0.5,
             planes: 8,
             sats_per_plane: 12,
+            altitude_km: 1300.0,
+            inclination_deg: 53.0,
+            spatial_index: true,
+            index_bands: 0,
+            resident_params: true,
             outage_prob: 0.02,
             scenario: ScenarioConfig::default(),
             cpu_het: (0.5, 2.0),
@@ -197,12 +225,66 @@ impl ExperimentConfig {
         }
     }
 
+    /// Mega-constellation tier 1: a Starlink-class 40-plane × 125-slot
+    /// shell (5 000 satellites at 550 km) with 1 000 of them enrolled as
+    /// FL clients. Tiny model so the workload stays geometry-bound; the
+    /// spatial index and the bounded-memory (pooled) round path carry the
+    /// scale.
+    pub fn mega_sparse() -> Self {
+        ExperimentConfig {
+            dataset: DatasetKind::Tiny,
+            clients: 1000,
+            clusters: 10,
+            rounds: 40,
+            local_epochs: 1,
+            lr: 0.2,
+            ground_every: 5,
+            recluster_threshold: 0.25,
+            maml_alpha: 0.05,
+            maml_beta: 0.05,
+            target_accuracy: None,
+            train_samples: 16_000,
+            test_samples: 256,
+            dirichlet_alpha: 0.5,
+            planes: 40,
+            sats_per_plane: 125,
+            altitude_km: 550.0,
+            inclination_deg: 53.0,
+            spatial_index: true,
+            index_bands: 0,
+            resident_params: false,
+            outage_prob: 0.02,
+            scenario: ScenarioConfig::default(),
+            cpu_het: (0.5, 2.0),
+            eval_batches: 4,
+            eval_every: 5,
+            workers: 0,
+            timeline: Timeline::Event,
+            max_ground_wait_s: 7000.0,
+            window_step_s: 30.0,
+            seed: 42,
+        }
+    }
+
+    /// Mega-constellation tier 2: the full 5 000-satellite shell enrolled,
+    /// K = 40 clusters. This is the `bench_mega` end-to-end configuration.
+    pub fn mega_dense() -> Self {
+        ExperimentConfig {
+            clients: 5000,
+            clusters: 40,
+            train_samples: 80_000,
+            ..Self::mega_sparse()
+        }
+    }
+
     /// Preset by name.
     pub fn preset(name: &str) -> Option<Self> {
         match name {
             "tiny" => Some(Self::tiny()),
             "mnist" => Some(Self::mnist()),
             "cifar10" | "cifar" => Some(Self::cifar10()),
+            "mega-sparse" => Some(Self::mega_sparse()),
+            "mega-dense" => Some(Self::mega_dense()),
             _ => None,
         }
     }
@@ -247,6 +329,18 @@ impl ExperimentConfig {
         self.dirichlet_alpha = args.get_f64("dirichlet", self.dirichlet_alpha)?;
         self.planes = args.get_usize("planes", self.planes)?;
         self.sats_per_plane = args.get_usize("sats-per-plane", self.sats_per_plane)?;
+        self.altitude_km = args.get_f64("altitude-km", self.altitude_km)?;
+        self.inclination_deg = args.get_f64("inclination", self.inclination_deg)?;
+        if args.flag("no-index") {
+            self.spatial_index = false;
+        }
+        self.index_bands = args.get_usize("index-bands", self.index_bands)?;
+        match (args.flag("pooled-params"), args.flag("resident-params")) {
+            (true, true) => bail!("--pooled-params and --resident-params are mutually exclusive"),
+            (true, false) => self.resident_params = false,
+            (false, true) => self.resident_params = true,
+            (false, false) => {}
+        }
         self.outage_prob = args.get_f64("outage", self.outage_prob)?;
         if let Some(s) = args.get("scenario") {
             let kind = ScenarioKind::parse(s).ok_or_else(|| {
@@ -294,6 +388,23 @@ impl ExperimentConfig {
         if self.planes * self.sats_per_plane < self.clients {
             bail!("constellation smaller than client count");
         }
+        if !self.altitude_km.is_finite() || self.altitude_km <= 0.0 {
+            bail!("shell altitude must be positive, got {} km", self.altitude_km);
+        }
+        if !(0.0..=180.0).contains(&self.inclination_deg) {
+            bail!(
+                "shell inclination must be in [0, 180] degrees, got {}",
+                self.inclination_deg
+            );
+        }
+        // cells grow ~1.27·bands²; 512 bands (~333k cells) is already far
+        // beyond useful resolution, anything more is a typo heading for OOM
+        if self.index_bands > 512 {
+            bail!(
+                "index bands must be at most 512 (0 = auto), got {}",
+                self.index_bands
+            );
+        }
         if self.clusters < 1 || self.rounds < 1 || self.local_epochs < 1 {
             bail!("clusters, rounds and epochs must all be at least 1");
         }
@@ -331,10 +442,21 @@ mod tests {
 
     #[test]
     fn presets_are_valid() {
-        for name in ["tiny", "mnist", "cifar10"] {
+        for name in ["tiny", "mnist", "cifar10", "mega-sparse", "mega-dense"] {
             ExperimentConfig::preset(name).unwrap().validate().unwrap();
         }
         assert!(ExperimentConfig::preset("nope").is_none());
+        // mega presets: Starlink-class shell, pooled round path, index on
+        let mega = ExperimentConfig::mega_dense();
+        assert_eq!(mega.planes * mega.sats_per_plane, 5000);
+        assert_eq!(mega.clients, 5000);
+        assert_eq!(mega.altitude_km, 550.0);
+        assert!(mega.spatial_index && !mega.resident_params);
+        assert_eq!(ExperimentConfig::mega_sparse().clients, 1000);
+        // paper presets keep the historical shell and resident params
+        assert_eq!(ExperimentConfig::mnist().altitude_km, 1300.0);
+        assert!(ExperimentConfig::tiny().resident_params);
+        assert!(ExperimentConfig::tiny().spatial_index, "index defaults on");
         // paper-scale presets default to the event timeline; the smoke
         // preset pins analytic for the fast deterministic suite
         assert_eq!(ExperimentConfig::mnist().timeline, Timeline::Event);
@@ -389,6 +511,52 @@ mod tests {
         let bad = Args::parse(["--timeline", "wallclock"].iter().map(|s| s.to_string()), &[]);
         let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
         assert!(e.to_string().contains("--timeline"), "{e}");
+    }
+
+    #[test]
+    fn constellation_plane_overrides_apply() {
+        let args = Args::parse(
+            ["--no-index", "--index-bands", "7", "--altitude-km", "600"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["no-index"],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert!(!c.spatial_index);
+        assert_eq!(c.index_bands, 7);
+        assert_eq!(c.altitude_km, 600.0);
+        let args = Args::parse(
+            ["--pooled-params"].iter().map(|s| s.to_string()),
+            &["pooled-params"],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert!(!c.resident_params);
+        let args = Args::parse(
+            ["--resident-params"].iter().map(|s| s.to_string()),
+            &["resident-params"],
+        );
+        let c = ExperimentConfig::mega_sparse().with_args(&args).unwrap();
+        assert!(c.resident_params);
+        // bad shell geometry is a usage error
+        let args = Args::parse(
+            ["--altitude-km", "-5"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("altitude"), "{e}");
+        let args = Args::parse(
+            ["--inclination", "200"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("inclination"), "{e}");
+        // an absurd band count is a usage error, not an OOM
+        let args = Args::parse(
+            ["--index-bands", "200000"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("index bands"), "{e}");
     }
 
     #[test]

@@ -159,6 +159,28 @@ mod tests {
     }
 
     #[test]
+    fn oversized_cluster_count_is_rejected_before_kmeans() {
+        // an aggressive --k override on a mega preset used to reach
+        // KMeans::run and panic (k > points); now both layers reject it as
+        // a usage error — the config at validation time, and the algorithm
+        // itself if a caller bypasses the config
+        let mut args = Args::parse(std::iter::empty::<String>(), &[]);
+        merge_file_into_args(&mut args, "k = 5000").unwrap();
+        let e = crate::config::ExperimentConfig::preset("mega-sparse")
+            .unwrap()
+            .with_args(&args)
+            .unwrap_err();
+        assert!(e.to_string().contains("fewer clients than clusters"), "{e}");
+
+        use crate::clustering::kmeans::KMeans;
+        use crate::util::Rng;
+        let pts = vec![[0.0f64; 3], [1.0, 0.0, 0.0]];
+        let e = KMeans::new(3).run(&pts, &mut Rng::new(1)).unwrap_err();
+        assert!(e.to_string().contains("cannot form 3 clusters"), "{e}");
+        assert!(KMeans::new(0).run(&pts, &mut Rng::new(1)).is_err());
+    }
+
+    #[test]
     fn cli_wins_over_file() {
         let mut args = Args::parse(
             ["--k", "9"].iter().map(|s| s.to_string()),

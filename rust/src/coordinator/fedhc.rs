@@ -25,6 +25,7 @@ use crate::config::Timeline;
 use crate::fl::aggregate::{aggregate, fedavg_weights};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
+use crate::orbit::index::{ConstellationIndex, SphereGrid};
 use crate::orbit::GroundStation;
 use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
@@ -144,13 +145,29 @@ pub struct RunResult {
     pub final_accuracy: f64,
 }
 
-/// Build a topology under the strategy's clustering/PS policy.
-pub fn build_topology(trial: &mut Trial, strategy: &Strategy, global: &[f32]) -> Topology {
+/// Build a topology under the strategy's clustering/PS policy. `grid` is
+/// the constellation plane's sphere grid for the current epoch (when the
+/// index is enabled): the geo k-means assignment step runs index-pruned
+/// but bit-identical, and the clustering features are read straight off
+/// the index instead of re-propagating the snapshot.
+pub fn build_topology(
+    trial: &mut Trial,
+    strategy: &Strategy,
+    global: &[f32],
+    grid: Option<&SphereGrid>,
+) -> Result<Topology> {
     let k = trial.cfg.clusters;
-    let feats = trial.features_km();
+    let feats_owned;
+    let feats: &[[f64; 3]] = match grid {
+        Some(g) => g.feats(),
+        None => {
+            feats_owned = trial.features_km();
+            &feats_owned
+        }
+    };
     let (assignment, centroids_km) = match strategy.cluster {
         ClusterPolicy::GeoKMeans => {
-            let res = KMeans::new(k).run(&feats, &mut trial.rng);
+            let res = KMeans::new(k).run_indexed(feats, &mut trial.rng, grid)?;
             (res.assignment, res.centroids)
         }
         ClusterPolicy::Random => {
@@ -161,7 +178,7 @@ pub fn build_topology(trial: &mut Trial, strategy: &Strategy, global: &[f32]) ->
                 *a = if i < k { i } else { trial.rng.below_usize(k) };
             }
             // centroids = mean member position (for churn accounting)
-            (assignment.clone(), centroids_of(&feats, &assignment, k))
+            (assignment.clone(), centroids_of(feats, &assignment, k))
         }
         ClusterPolicy::DataDistribution => {
             let hists: Vec<Vec<f64>> = trial
@@ -174,7 +191,7 @@ pub fn build_topology(trial: &mut Trial, strategy: &Strategy, global: &[f32]) ->
         }
     };
     let centroids_km = if centroids_km.is_empty() {
-        centroids_of(&feats, &assignment, k)
+        centroids_of(feats, &assignment, k)
     } else {
         centroids_km
     };
@@ -242,12 +259,22 @@ pub fn build_topology(trial: &mut Trial, strategy: &Strategy, global: &[f32]) ->
         }
     };
 
-    Topology {
+    Ok(Topology {
         assignment,
         centroids_km,
         ps,
         models: vec![global.to_vec(); k],
+    })
+}
+
+/// Largest cluster in a topology — the pooled round path's peak concurrent
+/// parameter-buffer demand.
+fn max_cluster_size(topo: &Topology, k: usize) -> usize {
+    let mut counts = vec![0usize; k];
+    for &a in &topo.assignment {
+        counts[a] += 1;
     }
+    counts.into_iter().max().unwrap_or(0)
 }
 
 fn centroids_of(feats: &[[f64; 3]], assignment: &[usize], k: usize) -> Vec<[f64; 3]> {
@@ -320,6 +347,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let rt = trial.rt;
     let k = cfg.clusters;
     let model_bits = rt.spec.param_count as f64 * 32.0;
+    let resident = cfg.resident_params;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold)?;
     let engine = Engine::new(cfg.workers);
     let pools = RoundPools::new(rt);
@@ -327,12 +355,28 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let mut agg_buf: Vec<f32> = Vec::new(); // recycled cluster-merge output
     let mut eval_scratch = HostScratch::new();
 
+    // constellation plane: one sphere grid per epoch, rebuilt in place at
+    // round starts and on re-cluster events (`--no-index` disables it;
+    // results are bit-identical either way — the index only prunes)
+    let mut geo: Option<ConstellationIndex> = if cfg.spatial_index {
+        Some(ConstellationIndex::new(cfg.index_bands))
+    } else {
+        None
+    };
+
     // Algorithm 1 line 1: satellite-clustered PS selection
-    let global0 = trial.clients[0].params.clone();
-    let mut topo = build_topology(trial, &strategy, &global0);
+    let global0 = trial.init.clone();
+    if let Some(g) = geo.as_mut() {
+        g.refresh(&trial.constellation, trial.clock.now());
+    }
+    let mut topo = build_topology(trial, &strategy, &global0, geo.as_ref().map(|g| g.grid()))?;
+    // warm the pool up to the largest cluster once, so steady-state rounds
+    // never allocate parameter-sized buffers however availability moves
+    pools.params.ensure_free(max_cluster_size(&topo, k));
     let mut global = global0;
     let mut converged_at = None;
     let mut batch_buf = BatchBuf::new(rt);
+    let mut jobs: Vec<(usize, usize)> = Vec::new(); // (member, cluster)
 
     for round in 1..=cfg.rounds {
         let positions = trial.positions();
@@ -342,63 +386,59 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
         let avail = trial.scenario.advance_round(round as u64, &positions);
         trial.ledger.add_faults(avail.faults_injected);
         // membership churn at the current epoch (drives line 15's d_r);
-        // unreachable satellites count as dropouts alongside orbital drift
-        let churn = trial.mobility.churn(
+        // unreachable satellites count as dropouts alongside orbital
+        // drift. The index refresh reuses the positions this round just
+        // propagated — no second Kepler pass.
+        if let Some(g) = geo.as_mut() {
+            g.refresh_positions(&positions, trial.clock.now());
+        }
+        let churn = trial.mobility.churn_with(
             &trial.constellation,
             &topo.assignment,
             &topo.centroids_km,
             trial.clock.now(),
             &avail.unreachable,
+            geo.as_ref().map(|g| g.grid()),
         );
         let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
 
-        // ---- local training stage (lines 6–10) ----
-        // Scatter: every active member of every cluster local-trains from
-        // its cluster model, fanned out across the engine's workers.
+        // ---- local training + cluster aggregation (lines 6–13) ----
+        // Sharded per cluster: each cluster scatters its active members
+        // across the engine, gathers in member order, merges at the PS and
+        // recycles its buffers before the next cluster starts. Peak pooled
+        // demand is therefore the largest *cluster*, not the whole
+        // constellation — the bounded-memory round path mega presets rely
+        // on — and the outcome is bit-identical to an all-at-once scatter
+        // (member results derive from stateless `(seed, round, sat)`
+        // streams and are reduced in the same member order either way).
         let clusters = topo.clusters(k);
-        let mut jobs: Vec<(usize, usize)> = Vec::new(); // (member, cluster)
-        let mut active_counts = vec![0usize; k];
+        let mut stage_time = 0.0f64;
         for (c, members) in clusters.iter().enumerate() {
+            jobs.clear();
             for &m in members {
                 if !outage.contains(&m) {
                     jobs.push((m, c));
-                    active_counts[c] += 1;
                 }
             }
-        }
-        let mut results = stages.local.train(
-            &engine,
-            rt,
-            &cfg,
-            &trial.clients,
-            &topo.models,
-            &jobs,
-            round as u64,
-            &pools,
-        )?;
-
-        // ---- cluster aggregation stage (lines 11–13) ----
-        // Gather: apply member results and reduce per cluster, in member
-        // order (deterministic regardless of the scatter schedule).
-        let mut stage_time = 0.0f64;
-        let mut offset = 0usize;
-        for c in 0..k {
-            let n_active = active_counts[c];
-            if n_active == 0 {
+            if jobs.is_empty() {
                 continue;
             }
-            let batch = &mut results[offset..offset + n_active];
-            offset += n_active;
-            let mut work = Vec::with_capacity(n_active);
-            let mut losses = Vec::with_capacity(n_active);
-            let mut sizes = Vec::with_capacity(n_active);
-            for r in batch.iter_mut() {
+            let mut batch = stages.local.train(
+                &engine,
+                rt,
+                &cfg,
+                &trial.clients,
+                &topo.models,
+                &jobs,
+                round as u64,
+                &pools,
+            )?;
+            let mut work = Vec::with_capacity(batch.len());
+            let mut losses = Vec::with_capacity(batch.len());
+            let mut sizes = Vec::with_capacity(batch.len());
+            for r in batch.iter() {
                 let m = r.member;
                 debug_assert_eq!(r.cluster, c, "gather out of cluster order");
-                // swap the trained pooled buffer in and recycle the
-                // client's previous parameter vector
-                std::mem::swap(&mut trial.clients[m].params, &mut r.params);
-                pools.params.put(std::mem::take(&mut r.params));
                 trial.clients[m].last_loss = r.mean_loss;
                 trial.clients[m].rounds_trained += 1;
                 // scenario degradations: a straggler's effective CPU rate
@@ -422,16 +462,27 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
             }
-            // line 13: aggregate at the PS under the strategy's weighting
+            // line 13: aggregate at the PS under the strategy's weighting,
+            // merging straight from the trained pooled buffers into the
+            // recycled output, then swap it in: the displaced model vector
+            // becomes the next merge's output
             let weights = stages.cluster.member_weights(&losses, &sizes);
-            let rows: Vec<&[f32]> = batch
-                .iter()
-                .map(|r| trial.clients[r.member].params.as_slice())
-                .collect();
-            // merge into the recycled buffer, then swap it in: the
-            // displaced model vector becomes the next merge's output
+            let rows: Vec<&[f32]> = batch.iter().map(|r| r.params.as_slice()).collect();
             stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
             std::mem::swap(&mut topo.models[c], &mut agg_buf);
+            // recycle the trained buffers: resident mode swaps them into
+            // the clients (the displaced vector returns to the pool); the
+            // pooled mode returns them directly, keeping resident
+            // parameter state at O(K), not O(N)
+            for r in batch.iter_mut() {
+                let buf = std::mem::take(&mut r.params);
+                if resident {
+                    let old = std::mem::replace(&mut trial.clients[r.member].params, buf);
+                    pools.params.put(old);
+                } else {
+                    pools.params.put(buf);
+                }
+            }
 
             // Eq. 7 inner max + Eq. 8/9 energy for this cluster: the
             // closed-form fold and the event replay are bit-identical —
@@ -469,7 +520,13 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             trial.ledger.reclusters += 1;
             let old_assignment = topo.assignment.clone();
             let old_models = topo.models.clone();
-            let mut new_topo = build_topology(trial, &strategy, &global);
+            // topology rebuilds at the post-aggregation epoch: re-sync the
+            // constellation index to it before the k-means pass
+            if let Some(g) = geo.as_mut() {
+                g.refresh(&trial.constellation, trial.clock.now());
+            }
+            let mut new_topo =
+                build_topology(trial, &strategy, &global, geo.as_ref().map(|g| g.grid()))?;
             new_topo.assignment = align_labels(&old_assignment, &new_topo.assignment, k);
             // carry each cluster's model forward to its aligned successor
             new_topo.models = old_models;
@@ -485,19 +542,29 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 if strategy.maml_warmstart {
                     // §III-C: inherit the new cluster head's model, adapt
                     // with one MAML step (support = head's data, query =
-                    // own) — in place on the member's own buffer seeded
-                    // from the destination cluster model
+                    // own) — on the member's resident buffer, or on a
+                    // pooled one in the bounded-memory mode
                     let head = new_topo.ps[dest];
                     batch_buf.fill_support(&trial.clients[head].shard, &mut trial.rng);
                     batch_buf.fill_query(&trial.clients[m].shard, &mut trial.rng);
-                    trial.clients[m].params.clone_from(&new_topo.models[dest]);
+                    let mut pooled: Option<Vec<f32>> = None;
+                    let params: &mut Vec<f32> = if resident {
+                        trial.clients[m].params.clone_from(&new_topo.models[dest]);
+                        &mut trial.clients[m].params
+                    } else {
+                        pooled = Some(pools.params.take_copy(&new_topo.models[dest]));
+                        pooled.as_mut().unwrap()
+                    };
                     let _qloss = rt.maml_step_into(
-                        &mut trial.clients[m].params,
+                        params,
                         &batch_buf.x1, &batch_buf.y1, &batch_buf.x2, &batch_buf.y2,
                         cfg.maml_alpha,
                         cfg.maml_beta,
                         &mut batch_buf.scratch,
                     )?;
+                    if let Some(buf) = pooled {
+                        pools.params.put(buf);
+                    }
                     trial.ledger.maml_adaptations += 1;
                     // adaptation cost: one support-batch transfer + one
                     // batch of compute at the member
@@ -511,12 +578,17 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                             .energy
                             .compute_energy(2 * rt.spec.batch, trial.clients[m].cpu_hz),
                     );
-                } else {
-                    // baselines: cold reset to the destination cluster model
+                } else if resident {
+                    // baselines: cold reset to the destination cluster
+                    // model (the pooled mode has no resident member state
+                    // to reset — members start every round from their
+                    // cluster model regardless)
                     trial.clients[m].params.clone_from(&new_topo.models[dest]);
                 }
             }
             topo = new_topo;
+            // cluster sizes moved: re-warm the pool to the new maximum
+            pools.params.ensure_free(max_cluster_size(&topo, k));
         }
 
         // ---- ground station aggregation stage (lines 21–24) ----
@@ -692,8 +764,8 @@ mod tests {
         with_runtime(|m, rt| {
             for strat in [Strategy::fedhc(), Strategy::hbase(), Strategy::fedce()] {
                 let mut trial = Trial::new(ExperimentConfig::tiny(), m, rt).unwrap();
-                let global = trial.clients[0].params.clone();
-                let topo = build_topology(&mut trial, &strat, &global);
+                let global = trial.init.clone();
+                let topo = build_topology(&mut trial, &strat, &global, None).unwrap();
                 let k = trial.cfg.clusters;
                 assert_eq!(topo.assignment.len(), trial.clients.len());
                 assert!(topo.assignment.iter().all(|&a| a < k));
@@ -757,6 +829,55 @@ mod tests {
                 panic!("tiny task should reach 50% within 50 rounds");
             }
         });
+    }
+
+    /// The constellation plane's exactness guarantee, end to end: the same
+    /// run with the spatial index on (the default) and off must produce
+    /// byte-identical metrics — the index only prunes, never re-scores.
+    #[test]
+    fn disabling_the_index_does_not_change_results() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 5;
+        cfg.target_accuracy = None;
+        assert!(cfg.spatial_index, "the index must default to on");
+        let mut with_ix = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let a = run_clustered(&mut with_ix, Strategy::fedhc()).unwrap();
+        cfg.spatial_index = false;
+        let mut without = Trial::new(cfg, &m, &rt).unwrap();
+        let b = run_clustered(&mut without, Strategy::fedhc()).unwrap();
+        assert_eq!(a.ledger.time_s.to_bits(), b.ledger.time_s.to_bits());
+        assert_eq!(a.ledger.energy_j.to_bits(), b.ledger.energy_j.to_bits());
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.ledger.reclusters, b.ledger.reclusters);
+        assert_eq!(a.ledger.records.len(), b.ledger.records.len());
+    }
+
+    /// The bounded-memory (pooled) round path must be a pure memory
+    /// optimisation: identical ledger, with no resident per-client
+    /// parameter vectors afterwards.
+    #[test]
+    fn pooled_params_mode_matches_resident_ledger() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 6;
+        cfg.target_accuracy = None;
+        let mut res_trial = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let res = run_clustered(&mut res_trial, Strategy::fedhc()).unwrap();
+        cfg.resident_params = false;
+        let mut pool_trial = Trial::new(cfg, &m, &rt).unwrap();
+        let pooled = run_clustered(&mut pool_trial, Strategy::fedhc()).unwrap();
+        assert_eq!(res.ledger.time_s.to_bits(), pooled.ledger.time_s.to_bits());
+        assert_eq!(res.ledger.energy_j.to_bits(), pooled.ledger.energy_j.to_bits());
+        assert_eq!(res.final_accuracy.to_bits(), pooled.final_accuracy.to_bits());
+        assert_eq!(res.ledger.maml_adaptations, pooled.ledger.maml_adaptations);
+        assert!(
+            pool_trial.clients.iter().all(|c| c.params.is_empty()),
+            "pooled mode must not leave resident per-client parameters"
+        );
+        assert!(res_trial.clients.iter().all(|c| !c.params.is_empty()));
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub struct Trial<'rt> {
     /// events into the per-round availability the coordinator consumes.
     pub scenario: ScenarioEngine,
     pub clients: Vec<SatClient>,
+    /// The shared initial model every client starts from. In the default
+    /// resident mode each client also holds a copy in `SatClient::params`;
+    /// the bounded-memory mode (`resident_params = false`, mega presets)
+    /// keeps only this one vector plus the per-cluster models, so resident
+    /// parameter state is O(K), not O(N).
+    pub init: Vec<f32>,
     pub test: Dataset,
     pub clock: SimClock,
     pub ledger: Ledger,
@@ -58,8 +64,16 @@ impl<'rt> Trial<'rt> {
         );
         let mut rng = Rng::new(cfg.seed);
 
-        // constellation: Walker shell, first `clients` slots become clients
-        let walker = WalkerConstellation::paper_shell(cfg.planes, cfg.sats_per_plane);
+        // constellation: Walker shell (altitude/inclination from the
+        // config — paper presets pin 1300 km / 53°, mega presets the
+        // Starlink-class 550 km shell), first `clients` slots become
+        // clients
+        let walker = WalkerConstellation::shell(
+            cfg.altitude_km * 1e3,
+            cfg.inclination_deg,
+            cfg.planes,
+            cfg.sats_per_plane,
+        );
         let all = walker.elements();
         let mut ids: Vec<usize> = (0..all.len()).collect();
         rng.shuffle(&mut ids);
@@ -91,7 +105,14 @@ impl<'rt> Trial<'rt> {
             .enumerate()
             .map(|(i, shard)| {
                 let hz = base_hz * rng.uniform_in(cfg.cpu_het.0, cfg.cpu_het.1);
-                SatClient::new(i, shard, init.clone(), hz)
+                // the bounded-memory mode keeps no resident per-client
+                // parameter vector — members train on pooled buffers
+                let params = if cfg.resident_params {
+                    init.clone()
+                } else {
+                    Vec::new()
+                };
+                SatClient::new(i, shard, params, hz)
             })
             .collect();
 
@@ -118,6 +139,7 @@ impl<'rt> Trial<'rt> {
             mobility,
             scenario,
             clients,
+            init,
             test,
             clock: SimClock::new(),
             ledger: Ledger::new(),

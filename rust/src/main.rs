@@ -23,7 +23,14 @@ use fedhc::runtime::{Manifest, ModelRuntime};
 use fedhc::util::cli::Args;
 use std::path::Path;
 
-const FLAGS: &[&str] = &["no-target", "verbose", "help"];
+const FLAGS: &[&str] = &[
+    "no-target",
+    "verbose",
+    "help",
+    "no-index",
+    "pooled-params",
+    "resident-params",
+];
 
 fn main() {
     if let Err(e) = real_main() {
@@ -67,12 +74,25 @@ SUBCOMMANDS
   inspect   show artifacts, variants and constellation info
 
 COMMON OPTIONS
-  --preset tiny|mnist|cifar10    base configuration (default mnist)
+  --preset tiny|mnist|cifar10|mega-sparse|mega-dense
+                                 base configuration (default mnist); the
+                                 mega presets run a Starlink-class 40×125
+                                 shell (1k / 5k clients) on the tiny model
   --method fedhc|cfedavg|hbase|fedce|fedhc-nomaml   (run only)
   --dataset mnist|cifar10|tiny   switch dataset family
   --k N --clients N --rounds N --epochs N --lr F --seed N
   --target F | --no-target       convergence target accuracy
   --ground-every N --z F --alpha F --beta F
+  --planes N --sats-per-plane N --altitude-km F --inclination F
+                                 Walker shell geometry
+  --no-index                     disable the sphere-grid spatial index
+                                 (constellation plane); results are
+                                 bit-identical, only slower at scale
+  --index-bands N                grid latitude bands (0 = auto)
+  --pooled-params | --resident-params
+                                 bounded-memory pooled member models vs a
+                                 resident parameter vector per client
+                                 (identical metrics; mega presets pool)
   --timeline analytic|event      clock semantics: closed-form Eq. 7 folds, or
                                  the discrete-event timeline with PS↔GS
                                  exchanges gated by visibility windows
@@ -108,7 +128,12 @@ BACKENDS
 fn config_from(args: &Args) -> Result<ExperimentConfig> {
     let preset = args.get_or("preset", "mnist");
     ExperimentConfig::preset(preset)
-        .ok_or_else(|| anyhow!("unknown preset '{preset}' (expected tiny|mnist|cifar10)"))?
+        .ok_or_else(|| {
+            anyhow!(
+                "unknown preset '{preset}' \
+                 (expected tiny|mnist|cifar10|mega-sparse|mega-dense)"
+            )
+        })?
         .with_args(args)
 }
 

@@ -1,0 +1,641 @@
+//! Sphere-grid spatial index — the constellation plane's geometry engine.
+//!
+//! Every geometry query the coordinator issues was brute force until this
+//! module existed: k-means assignment scanned all K centroids per
+//! satellite (`clustering::kmeans`), ground-station visibility probes
+//! scanned all N satellites (`orbit::visibility::visible_sats`), and
+//! line-of-sight neighbor checks were all-pairs. None of that survives
+//! mega-constellation scale (N ≥ 5 000), which is the regime the paper
+//! targets and the `mega-sparse`/`mega-dense` presets model.
+//!
+//! [`SphereGrid`] bins satellites into latitude/longitude cells over the
+//! unit sphere (equal-height latitude bands, per-band longitude sectors
+//! sized by `cos φ` so cells are roughly equal-area). Each cell carries two
+//! conservative bounding volumes computed from its *actual* members at
+//! build time:
+//!
+//! * a Euclidean ball (mean member position + max member distance, km) —
+//!   prunes nearest-centroid candidates by the triangle inequality;
+//! * an angular cap (mean member direction + max member angle) — prunes
+//!   visibility and LoS queries against analytic footprint bounds.
+//!
+//! ```text
+//!        lat bands                 one cell's bounds
+//!   ┌───┬───────┬───┐           center ●──ρ──┐  Euclidean ball (km)
+//!   │ ∙ │ ∙∙  ∙ │   │              dir ↗ ⌒⌒ │  angular cap (rad)
+//!   ├───┼───┬───┼───┤           query prunes a cell iff its bound
+//!   │∙  │ ∙ │∙ ∙│ ∙ │           provably cannot contain a winner
+//!   └───┴───┴───┴───┘
+//! ```
+//!
+//! **Exactness guarantee.** Index-pruned searches return the bit-identical
+//! result of the exhaustive scan — same winners, same tie-breaks, same
+//! float comparisons — because pruning only decides *which candidates are
+//! examined*, never how they are scored, and every bound is conservative
+//! (a small epsilon absorbs the rounding of the bound itself). The
+//! guarantee is pinned by property tests over random Walker geometries and
+//! cell resolutions, including the degenerate single-cell grid
+//! (`tests/proptests.rs::prop_sphere_grid_*`), and is what lets the index
+//! default to **on** without perturbing the committed golden trajectories.
+//!
+//! [`ConstellationIndex`] is the coordinator-facing wrapper: built once
+//! per epoch from `orbit::propagate` positions and incrementally refreshed
+//! (allocation-reusing rebuild) when the simulated clock moves — each
+//! round start, and again on re-cluster events, which rebuild topology at
+//! a later in-round epoch.
+
+use super::geo::{GroundStation, Vec3};
+use super::propagate::Constellation;
+use super::visibility::has_line_of_sight;
+use super::EARTH_RADIUS;
+use std::f64::consts::{FRAC_PI_2, PI};
+
+/// Absolute slack (km) on Euclidean pruning bounds: orders of magnitude
+/// above the rounding of a `sqrt`+`add` chain at LEO scales (~1e-8 km),
+/// orders below any real geometry margin.
+const ASSIGN_EPS_KM: f64 = 1e-6;
+/// Absolute slack (rad) on angular pruning bounds (`acos` of a unit-dot
+/// rounds at ~1e-8 near the poles of its domain).
+const ANG_EPS: f64 = 1e-6;
+
+/// Squared Euclidean distance with a fixed operation order — the one
+/// metric every exact geometry comparison in the crate goes through
+/// (k-means Eq. 13, churn's nearest-centroid fold, the index's candidate
+/// scoring), so index-pruned and brute-force searches score candidates
+/// bit-identically.
+#[inline]
+pub fn d2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Angle between two unit vectors, radians.
+#[inline]
+fn angle_between(a: Vec3, b: Vec3) -> f64 {
+    a.dot(b).clamp(-1.0, 1.0).acos()
+}
+
+/// A lat/lon cell grid over the unit sphere holding one epoch's satellite
+/// positions (clustering feature space, km). See the module docs for the
+/// pruning scheme and the exactness guarantee.
+#[derive(Clone, Debug)]
+pub struct SphereGrid {
+    bands: usize,
+    /// Longitude sectors per latitude band.
+    band_sectors: Vec<usize>,
+    /// First cell id of each band (+ one trailing entry = total cells).
+    band_start: Vec<usize>,
+    /// Member point indices per cell (rebuilt in place on refresh).
+    members: Vec<Vec<usize>>,
+    /// Per-cell Euclidean mean of member features, km.
+    center_km: Vec<[f64; 3]>,
+    /// Per-cell max Euclidean distance from the center to a member, km.
+    radius_km: Vec<f64>,
+    /// Per-cell unit direction of the angular-cap center.
+    dir: Vec<Vec3>,
+    /// Per-cell max angle between `dir` and a member direction, rad.
+    ang_radius: Vec<f64>,
+    /// The indexed features (km) — the clustering feature space.
+    feats: Vec<[f64; 3]>,
+    /// Unit direction of every indexed point.
+    point_dir: Vec<Vec3>,
+    r_min_km: f64,
+    r_max_km: f64,
+}
+
+impl SphereGrid {
+    /// Default band count for an N-point constellation: coarse enough that
+    /// cell-header scans stay cheap against small K, fine enough that
+    /// candidate lists stay short at mega scale.
+    pub fn auto_bands(n: usize) -> usize {
+        (((n as f64) / 20.0).sqrt().ceil() as usize).clamp(1, 64)
+    }
+
+    /// Build a grid with `bands` latitude bands over `feats` (km).
+    /// `bands == 1` is the degenerate single-cell grid (every query
+    /// degrades to the brute-force scan, exactly).
+    pub fn build(feats: &[[f64; 3]], bands: usize) -> SphereGrid {
+        let bands = bands.max(1);
+        let mut band_sectors = Vec::with_capacity(bands);
+        let mut band_start = Vec::with_capacity(bands + 1);
+        let mut cells = 0usize;
+        for b in 0..bands {
+            let lat_center = -FRAC_PI_2 + (b as f64 + 0.5) * PI / bands as f64;
+            let sectors = if bands == 1 {
+                1
+            } else {
+                ((2.0 * bands as f64 * lat_center.cos()).round() as usize).max(1)
+            };
+            band_start.push(cells);
+            band_sectors.push(sectors);
+            cells += sectors;
+        }
+        band_start.push(cells);
+        let mut g = SphereGrid {
+            bands,
+            band_sectors,
+            band_start,
+            members: vec![Vec::new(); cells],
+            center_km: vec![[0.0; 3]; cells],
+            radius_km: vec![0.0; cells],
+            dir: vec![Vec3::new(0.0, 0.0, 1.0); cells],
+            ang_radius: vec![0.0; cells],
+            feats: Vec::new(),
+            point_dir: Vec::new(),
+            r_min_km: f64::INFINITY,
+            r_max_km: 0.0,
+        };
+        g.rebuild(feats);
+        g
+    }
+
+    /// Re-index a new epoch's features in place, reusing every allocation
+    /// (cell lists, point arrays). Grid geometry (bands/sectors) is fixed
+    /// at construction.
+    pub fn rebuild(&mut self, feats: &[[f64; 3]]) {
+        for m in &mut self.members {
+            m.clear();
+        }
+        self.feats.clear();
+        self.feats.extend_from_slice(feats);
+        self.point_dir.clear();
+        self.r_min_km = f64::INFINITY;
+        self.r_max_km = 0.0;
+        for (i, f) in feats.iter().enumerate() {
+            let v = Vec3::new(f[0], f[1], f[2]);
+            let r = v.norm();
+            assert!(r > 0.0, "point {i} at the geocenter cannot be indexed");
+            let d = v.scale(1.0 / r);
+            self.r_min_km = self.r_min_km.min(r);
+            self.r_max_km = self.r_max_km.max(r);
+            let cell = self.cell_of(d);
+            self.members[cell].push(i);
+            self.point_dir.push(d);
+        }
+        for cell in 0..self.cells() {
+            let members = &self.members[cell];
+            if members.is_empty() {
+                self.radius_km[cell] = 0.0;
+                self.ang_radius[cell] = 0.0;
+                continue;
+            }
+            let inv = 1.0 / members.len() as f64;
+            let mut center = [0.0f64; 3];
+            let mut dir_sum = Vec3::ZERO;
+            for &i in members {
+                for (c, f) in center.iter_mut().zip(&self.feats[i]) {
+                    *c += *f * inv;
+                }
+                dir_sum = dir_sum.add(self.point_dir[i]);
+            }
+            // a degenerate direction sum (antipodal members in one huge
+            // cell) falls back to a whole-sphere cap — still conservative
+            let (dir, mut ang) = if dir_sum.norm() > 1e-9 {
+                (dir_sum.scale(1.0 / dir_sum.norm()), 0.0)
+            } else {
+                (self.point_dir[members[0]], PI)
+            };
+            let mut radius = 0.0f64;
+            for &i in members {
+                radius = radius.max(d2(&self.feats[i], &center).sqrt());
+                ang = ang.max(angle_between(dir, self.point_dir[i]));
+            }
+            self.center_km[cell] = center;
+            self.radius_km[cell] = radius;
+            self.dir[cell] = dir;
+            self.ang_radius[cell] = ang;
+        }
+    }
+
+    /// Indexed point count.
+    pub fn len(&self) -> usize {
+        self.feats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.feats.is_empty()
+    }
+
+    /// Total cell count (latitude bands × per-band longitude sectors).
+    pub fn cells(&self) -> usize {
+        self.band_start[self.bands]
+    }
+
+    /// Latitude band count the grid was built with.
+    pub fn bands(&self) -> usize {
+        self.bands
+    }
+
+    /// The indexed features (km), in point order — the exact values every
+    /// pruned search scores against.
+    pub fn feats(&self) -> &[[f64; 3]] {
+        &self.feats
+    }
+
+    /// Cell id of a unit direction.
+    fn cell_of(&self, d: Vec3) -> usize {
+        let lat = d.z.clamp(-1.0, 1.0).asin();
+        let band = (((lat / PI) + 0.5) * self.bands as f64).floor() as usize;
+        let band = band.min(self.bands - 1);
+        let sectors = self.band_sectors[band];
+        let lon = d.y.atan2(d.x);
+        let sector = (((lon / (2.0 * PI)) + 0.5) * sectors as f64).floor() as usize;
+        self.band_start[band] + sector.min(sectors - 1)
+    }
+
+    /// Nearest-centroid assignment of every indexed point (the k-means
+    /// Eq. 13 step and the churn model's natural-assignment fold),
+    /// bit-identical to [`assign_nearest_brute`] over the same features.
+    ///
+    /// Per cell: centroids farther from the cell's center than
+    /// `d_nearest + 2ρ` cannot win for any member (triangle inequality),
+    /// so members only score the surviving candidates — in ascending
+    /// centroid order with a strict `<`, reproducing the brute-force
+    /// lowest-index tie-break exactly.
+    pub fn assign_nearest(&self, centroids: &[[f64; 3]], out: &mut Vec<usize>) {
+        assert!(!centroids.is_empty(), "no centroids to assign to");
+        out.clear();
+        out.resize(self.feats.len(), 0);
+        let mut dists: Vec<f64> = Vec::with_capacity(centroids.len());
+        let mut cand: Vec<usize> = Vec::with_capacity(centroids.len());
+        for cell in 0..self.cells() {
+            let members = &self.members[cell];
+            if members.is_empty() {
+                continue;
+            }
+            let center = &self.center_km[cell];
+            dists.clear();
+            let mut d_min = f64::INFINITY;
+            for c in centroids {
+                let d = d2(center, c).sqrt();
+                dists.push(d);
+                d_min = d_min.min(d);
+            }
+            let bound = d_min + 2.0 * self.radius_km[cell] + ASSIGN_EPS_KM;
+            cand.clear();
+            for (ci, d) in dists.iter().enumerate() {
+                if *d <= bound {
+                    cand.push(ci);
+                }
+            }
+            for &i in members {
+                let p = &self.feats[i];
+                let mut best = cand[0];
+                let mut best_d = d2(p, &centroids[cand[0]]);
+                for &ci in &cand[1..] {
+                    let d = d2(p, &centroids[ci]);
+                    if d < best_d {
+                        best_d = d;
+                        best = ci;
+                    }
+                }
+                out[i] = best;
+            }
+        }
+    }
+
+    /// Indices of indexed satellites visible from `gs` at time `t`,
+    /// ascending — bit-identical to scanning every satellite with
+    /// [`GroundStation::sees`]. `positions` are the ECI meter positions of
+    /// the same epoch the grid was built from (`Snapshot::positions`).
+    ///
+    /// Pruning: a satellite at radius r is visible above elevation mask e
+    /// only within Earth-central angle `λ*(r) = acos((Re/r)·cos e) − e` of
+    /// the station's zenith direction; cells whose angular cap lies wholly
+    /// outside `λ*(r_max)` cannot contain a visible satellite.
+    pub fn visible_from(
+        &self,
+        gs: &GroundStation,
+        positions: &[Vec3],
+        t: f64,
+        out: &mut Vec<usize>,
+    ) {
+        assert_eq!(
+            positions.len(),
+            self.feats.len(),
+            "positions do not cover the indexed constellation"
+        );
+        out.clear();
+        let gdir = gs.eci(t).normalized();
+        let e_min = gs.min_elevation_deg.to_radians();
+        let lam_max = if e_min <= -FRAC_PI_2 {
+            PI
+        } else {
+            let c = (EARTH_RADIUS / 1e3 / self.r_max_km) * e_min.cos();
+            (c.clamp(-1.0, 1.0).acos() - e_min).clamp(0.0, PI)
+        };
+        for cell in 0..self.cells() {
+            let members = &self.members[cell];
+            if members.is_empty() {
+                continue;
+            }
+            if angle_between(gdir, self.dir[cell]) > lam_max + self.ang_radius[cell] + ANG_EPS {
+                continue;
+            }
+            for &i in members {
+                if gs.sees(positions[i], t) {
+                    out.push(i);
+                }
+            }
+        }
+        out.sort_unstable();
+    }
+
+    /// Indices of satellites within `max_range_m` of satellite `i` with a
+    /// clear line of sight, ascending — bit-identical to
+    /// [`los_neighbors_brute`]. `positions` are the epoch's ECI meter
+    /// positions.
+    ///
+    /// Pruning: for shell radii ≥ r_min, chord distance d implies angular
+    /// separation `θ ≤ acos(1 − d²/(2·r_min²))`; cells whose cap lies
+    /// wholly outside that angle of satellite `i`'s direction cannot hold
+    /// a neighbor.
+    pub fn los_neighbors(
+        &self,
+        i: usize,
+        max_range_m: f64,
+        positions: &[Vec3],
+        out: &mut Vec<usize>,
+    ) {
+        assert_eq!(
+            positions.len(),
+            self.feats.len(),
+            "positions do not cover the indexed constellation"
+        );
+        out.clear();
+        let d_km = max_range_m / 1e3;
+        let cos_theta = 1.0 - (d_km * d_km) / (2.0 * self.r_min_km * self.r_min_km);
+        let theta = cos_theta.clamp(-1.0, 1.0).acos();
+        let qdir = self.point_dir[i];
+        for cell in 0..self.cells() {
+            let members = &self.members[cell];
+            if members.is_empty() {
+                continue;
+            }
+            if angle_between(qdir, self.dir[cell]) > theta + self.ang_radius[cell] + ANG_EPS {
+                continue;
+            }
+            for &j in members {
+                if j != i
+                    && positions[i].dist(positions[j]) <= max_range_m
+                    && has_line_of_sight(positions[i], positions[j])
+                {
+                    out.push(j);
+                }
+            }
+        }
+        out.sort_unstable();
+    }
+}
+
+/// Exhaustive nearest-centroid assignment — the brute-force fallback and
+/// the oracle [`SphereGrid::assign_nearest`] is pinned against.
+pub fn assign_nearest_brute(feats: &[[f64; 3]], centroids: &[[f64; 3]], out: &mut Vec<usize>) {
+    assert!(!centroids.is_empty(), "no centroids to assign to");
+    out.clear();
+    out.reserve(feats.len());
+    for p in feats {
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for (c, cent) in centroids.iter().enumerate() {
+            let d = d2(p, cent);
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        out.push(best);
+    }
+}
+
+/// Exhaustive LoS neighbor scan — the brute-force fallback and the oracle
+/// [`SphereGrid::los_neighbors`] is pinned against.
+pub fn los_neighbors_brute(i: usize, max_range_m: f64, positions: &[Vec3], out: &mut Vec<usize>) {
+    out.clear();
+    for (j, &p) in positions.iter().enumerate() {
+        if j != i
+            && positions[i].dist(p) <= max_range_m
+            && has_line_of_sight(positions[i], p)
+        {
+            out.push(j);
+        }
+    }
+}
+
+/// Coordinator-facing epoch cache: one [`SphereGrid`] rebuilt in place
+/// whenever the simulated clock moves (round starts and re-cluster
+/// events), never rebuilt twice for the same epoch.
+pub struct ConstellationIndex {
+    /// Requested band count; 0 = [`SphereGrid::auto_bands`], resolved at
+    /// the first refresh (when the constellation size is known).
+    requested_bands: usize,
+    grid: SphereGrid,
+    epoch: Option<f64>,
+    feats_scratch: Vec<[f64; 3]>,
+}
+
+impl ConstellationIndex {
+    /// `bands == 0` selects [`SphereGrid::auto_bands`] lazily at the first
+    /// refresh (when the constellation size is known).
+    pub fn new(bands: usize) -> ConstellationIndex {
+        ConstellationIndex {
+            requested_bands: bands,
+            grid: SphereGrid::build(&[], bands.max(1)),
+            epoch: None,
+            feats_scratch: Vec::new(),
+        }
+    }
+
+    /// Ensure the grid reflects `c` at epoch `t`; a repeated call for the
+    /// same epoch is free. Propagates the constellation itself — when the
+    /// caller already holds this epoch's positions (the coordinator
+    /// snapshots every round anyway), [`ConstellationIndex::refresh_positions`]
+    /// skips the duplicate Kepler pass.
+    pub fn refresh(&mut self, c: &Constellation, t: f64) {
+        if self.epoch == Some(t) && self.grid.len() == c.len() {
+            return;
+        }
+        let snap = c.snapshot(t);
+        self.refresh_positions(&snap.positions, t);
+    }
+
+    /// Like [`ConstellationIndex::refresh`], from already-propagated ECI
+    /// meter positions of epoch `t`. Features are derived exactly as
+    /// `Snapshot::features_km` does (position / 1e3 per component), so
+    /// pruned searches score the same bits the brute-force paths see.
+    pub fn refresh_positions(&mut self, positions: &[Vec3], t: f64) {
+        if self.epoch == Some(t) && self.grid.len() == positions.len() {
+            return;
+        }
+        let want = if self.requested_bands == 0 {
+            SphereGrid::auto_bands(positions.len())
+        } else {
+            self.requested_bands
+        };
+        if self.grid.bands() != want {
+            self.grid = SphereGrid::build(&[], want);
+        }
+        self.feats_scratch.clear();
+        for p in positions {
+            self.feats_scratch.push([p.x / 1e3, p.y / 1e3, p.z / 1e3]);
+        }
+        self.grid.rebuild(&self.feats_scratch);
+        self.epoch = Some(t);
+    }
+
+    /// The current epoch's grid.
+    pub fn grid(&self) -> &SphereGrid {
+        &self.grid
+    }
+
+    /// Epoch of the last refresh, if any.
+    pub fn epoch(&self) -> Option<f64> {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::walker::WalkerConstellation;
+
+    fn shell_feats(planes: usize, spp: usize, t: f64) -> (Constellation, Vec<[f64; 3]>, Vec<Vec3>) {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(planes, spp));
+        let snap = c.snapshot(t);
+        let feats = snap.features_km();
+        let pos = snap.positions.clone();
+        (c, feats, pos)
+    }
+
+    #[test]
+    fn every_point_lands_in_exactly_one_cell() {
+        let (_, feats, _) = shell_feats(8, 12, 0.0);
+        for bands in [1usize, 2, 5, 16] {
+            let g = SphereGrid::build(&feats, bands);
+            assert_eq!(g.len(), feats.len());
+            let total: usize = (0..g.cells()).map(|c| g.members[c].len()).sum();
+            assert_eq!(total, feats.len(), "bands={bands}");
+        }
+    }
+
+    #[test]
+    fn single_cell_grid_has_one_cell() {
+        let (_, feats, _) = shell_feats(3, 4, 0.0);
+        let g = SphereGrid::build(&feats, 1);
+        assert_eq!(g.cells(), 1);
+        assert_eq!(g.members[0].len(), feats.len());
+        // the cap of a whole-shell cell must cover (almost) the sphere
+        assert!(g.ang_radius[0] > 1.0);
+    }
+
+    #[test]
+    fn cell_bounds_contain_their_members() {
+        let (_, feats, _) = shell_feats(6, 9, 432.1);
+        let g = SphereGrid::build(&feats, 7);
+        for cell in 0..g.cells() {
+            for &i in &g.members[cell] {
+                let d = d2(&feats[i], &g.center_km[cell]).sqrt();
+                assert!(d <= g.radius_km[cell] + 1e-9, "cell {cell} point {i}");
+                let a = angle_between(g.dir[cell], g.point_dir[i]);
+                assert!(a <= g.ang_radius[cell] + 1e-12, "cell {cell} point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_matches_brute_force() {
+        let (_, feats, _) = shell_feats(8, 12, 1234.5);
+        let cents = [
+            [7000.0, 0.0, 0.0],
+            [-3000.0, 5000.0, 1000.0],
+            [0.0, 0.0, -7400.0],
+        ];
+        let mut brute = Vec::new();
+        assign_nearest_brute(&feats, &cents, &mut brute);
+        for bands in [1usize, 2, 4, 9, 32] {
+            let g = SphereGrid::build(&feats, bands);
+            let mut idx = Vec::new();
+            g.assign_nearest(&cents, &mut idx);
+            assert_eq!(idx, brute, "bands={bands}");
+        }
+    }
+
+    #[test]
+    fn visibility_matches_brute_force() {
+        use crate::orbit::visibility::visible_sats;
+        let (c, feats, pos) = shell_feats(8, 12, 777.0);
+        for mask in [-95.0f64, -45.0, 0.0, 10.0, 45.0, 85.0] {
+            let gs = GroundStation::new(0, "p", 38.0, -77.0, mask);
+            let brute = visible_sats(&gs, &c, 777.0);
+            for bands in [1usize, 3, 12] {
+                let g = SphereGrid::build(&feats, bands);
+                let mut idx = Vec::new();
+                g.visible_from(&gs, &pos, 777.0, &mut idx);
+                assert_eq!(idx, brute, "mask={mask} bands={bands}");
+            }
+        }
+    }
+
+    #[test]
+    fn los_neighbors_match_brute_force() {
+        let (_, feats, pos) = shell_feats(8, 12, 55.5);
+        for range in [500e3f64, 2_000e3, 6_000e3, 20_000e3] {
+            let mut brute = Vec::new();
+            los_neighbors_brute(17, range, &pos, &mut brute);
+            for bands in [1usize, 4, 16] {
+                let g = SphereGrid::build(&feats, bands);
+                let mut idx = Vec::new();
+                g.los_neighbors(17, range, &pos, &mut idx);
+                assert_eq!(idx, brute, "range={range} bands={bands}");
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_tracks_the_epoch_and_reuses_the_grid() {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(4, 6));
+        let mut ix = ConstellationIndex::new(3);
+        assert_eq!(ix.epoch(), None);
+        ix.refresh(&c, 0.0);
+        assert_eq!(ix.epoch(), Some(0.0));
+        assert_eq!(ix.grid().len(), c.len());
+        assert_eq!(ix.grid().feats(), c.snapshot(0.0).features_km().as_slice());
+        // same epoch: a no-op; new epoch: features move
+        ix.refresh(&c, 0.0);
+        ix.refresh(&c, 600.0);
+        assert_eq!(ix.epoch(), Some(600.0));
+        assert_eq!(
+            ix.grid().feats(),
+            c.snapshot(600.0).features_km().as_slice()
+        );
+    }
+
+    #[test]
+    fn auto_band_request_resolves_at_first_refresh() {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(8, 12));
+        let mut ix = ConstellationIndex::new(0);
+        ix.refresh(&c, 0.0);
+        assert_eq!(ix.grid().bands(), SphereGrid::auto_bands(c.len()));
+        assert_eq!(ix.grid().len(), c.len());
+    }
+
+    #[test]
+    fn auto_bands_scale_with_size() {
+        assert_eq!(SphereGrid::auto_bands(1), 1);
+        assert!(SphereGrid::auto_bands(96) <= SphereGrid::auto_bands(1000));
+        assert!(SphereGrid::auto_bands(1000) <= SphereGrid::auto_bands(5000));
+        assert!(SphereGrid::auto_bands(1_000_000) <= 64);
+    }
+
+    #[test]
+    fn d2_matches_manual_expansion() {
+        let a = [1.0, -2.0, 3.5];
+        let b = [0.5, 4.0, -1.0];
+        let manual = (a[0] - b[0]) * (a[0] - b[0])
+            + (a[1] - b[1]) * (a[1] - b[1])
+            + (a[2] - b[2]) * (a[2] - b[2]);
+        assert_eq!(d2(&a, &b).to_bits(), manual.to_bits());
+    }
+}

@@ -10,12 +10,14 @@
 
 pub mod elements;
 pub mod geo;
+pub mod index;
 pub mod propagate;
 pub mod visibility;
 pub mod walker;
 
 pub use elements::OrbitalElements;
 pub use geo::{GroundStation, Vec3};
+pub use index::{ConstellationIndex, SphereGrid};
 pub use propagate::Constellation;
 pub use walker::WalkerConstellation;
 

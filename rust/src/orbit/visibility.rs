@@ -20,7 +20,8 @@ impl Window {
     }
 }
 
-/// Indices of satellites visible from `gs` at time `t`.
+/// Indices of satellites visible from `gs` at time `t` (exhaustive scan —
+/// the brute-force fallback of [`visible_sats_indexed`]).
 pub fn visible_sats(gs: &GroundStation, c: &Constellation, t: f64) -> Vec<usize> {
     c.elements
         .iter()
@@ -28,6 +29,23 @@ pub fn visible_sats(gs: &GroundStation, c: &Constellation, t: f64) -> Vec<usize>
         .filter(|(_, e)| gs.sees(e.position_eci(t), t))
         .map(|(i, _)| i)
         .collect()
+}
+
+/// Index-pruned visibility probe: bit-identical to [`visible_sats`] over
+/// the snapshot's constellation (the sphere grid only prunes cells that
+/// provably cannot hold a visible satellite — see [`crate::orbit::index`]),
+/// sub-linear in N for realistic elevation masks. Takes the epoch's
+/// already-propagated [`Snapshot`] — the per-round cost the coordinator
+/// pays anyway — so the probe itself touches only footprint cells; `grid`
+/// must be built from the same snapshot.
+pub fn visible_sats_indexed(
+    gs: &GroundStation,
+    snap: &crate::orbit::propagate::Snapshot,
+    grid: &crate::orbit::index::SphereGrid,
+) -> Vec<usize> {
+    let mut out = Vec::new();
+    grid.visible_from(gs, &snap.positions, snap.t, &mut out);
+    out
 }
 
 /// Compute visibility windows for every satellite from `gs` over

@@ -40,10 +40,35 @@ impl WalkerConstellation {
         }
     }
 
+    /// A shell at arbitrary altitude/inclination with the standard F=1
+    /// inter-plane phasing (F=0 for a single plane).
+    pub fn shell(
+        altitude_m: f64,
+        inclination_deg: f64,
+        planes: usize,
+        sats_per_plane: usize,
+    ) -> Self {
+        WalkerConstellation::new(
+            altitude_m,
+            inclination_deg,
+            planes,
+            sats_per_plane,
+            1.min(planes - 1),
+        )
+    }
+
     /// The paper's testbed shell: 1300 km, 53°. Planes/sats chosen by the
     /// caller to hit the desired client count.
     pub fn paper_shell(planes: usize, sats_per_plane: usize) -> Self {
-        WalkerConstellation::new(1_300_000.0, 53.0, planes, sats_per_plane, 1.min(planes - 1))
+        WalkerConstellation::shell(1_300_000.0, 53.0, planes, sats_per_plane)
+    }
+
+    /// A mega-constellation shell (Starlink-class first shell: 550 km,
+    /// 53°). `mega_shell(40, 125)` is the 5 000-satellite geometry behind
+    /// the `mega-dense` preset; `mega_shell(40, 25)` the 1 000-satellite
+    /// `mega-sparse` tier.
+    pub fn mega_shell(planes: usize, sats_per_plane: usize) -> Self {
+        WalkerConstellation::shell(550_000.0, 53.0, planes, sats_per_plane)
     }
 
     pub fn total(&self) -> usize {
@@ -118,6 +143,19 @@ mod tests {
             assert!((e.semi_major_axis - (super::super::EARTH_RADIUS + 1_300_000.0)).abs() < 1e-6);
             assert!((e.inclination - 53f64.to_radians()).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn mega_shell_geometry() {
+        let w = WalkerConstellation::mega_shell(40, 125);
+        assert_eq!(w.total(), 5000);
+        let e = &w.elements()[0];
+        assert!((e.semi_major_axis - (super::super::EARTH_RADIUS + 550_000.0)).abs() < 1e-6);
+        assert!((e.inclination - 53f64.to_radians()).abs() < 1e-12);
+        // a single-plane shell degenerates to F=0 without panicking
+        let single = WalkerConstellation::shell(550_000.0, 53.0, 1, 10);
+        assert_eq!(single.phasing, 0);
+        assert_eq!(single.total(), 10);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! function of the orbital state and the fault trajectory.
 
 use crate::clustering::recluster::DropoutStats;
+use crate::orbit::index::{assign_nearest_brute, SphereGrid};
 use crate::orbit::propagate::Constellation;
 use anyhow::{bail, Result};
 
@@ -66,30 +67,59 @@ impl MobilityModel {
         t: f64,
         unavailable: &[bool],
     ) -> ChurnReport {
+        self.churn_with(constellation, assignment, centroids_km, t, unavailable, None)
+    }
+
+    /// [`MobilityModel::churn`] with the nearest-centroid fold optionally
+    /// served by the constellation plane's sphere grid (built from the
+    /// same epoch `t`). The pruned fold is bit-identical to the exhaustive
+    /// scan — see [`crate::orbit::index`] — so the report is the same
+    /// either way; the index only makes it sub-linear in K per satellite.
+    pub fn churn_with(
+        &self,
+        constellation: &Constellation,
+        assignment: &[usize],
+        centroids_km: &[[f64; 3]],
+        t: f64,
+        unavailable: &[bool],
+        grid: Option<&SphereGrid>,
+    ) -> ChurnReport {
         assert_eq!(
             assignment.len(),
             unavailable.len(),
             "availability mask does not cover the constellation"
         );
         let k = centroids_km.len();
-        let snap = constellation.snapshot(t);
-        let feats = snap.features_km();
-        let mut natural = Vec::with_capacity(feats.len());
-        for f in &feats {
-            let mut best = 0;
-            let mut best_d = f64::INFINITY;
-            for (c, cent) in centroids_km.iter().enumerate() {
-                let dx = f[0] - cent[0];
-                let dy = f[1] - cent[1];
-                let dz = f[2] - cent[2];
-                let d = dx * dx + dy * dy + dz * dz;
-                if d < best_d {
-                    best_d = d;
-                    best = c;
+        let natural = match grid {
+            Some(g) => {
+                assert_eq!(
+                    g.len(),
+                    assignment.len(),
+                    "spatial index does not cover the constellation"
+                );
+                // O(1) epoch guard: the first satellite's indexed features
+                // must be bit-identical to its features at `t` (any epoch
+                // drift moves them) — a stale grid must not silently yield
+                // churn for the wrong time
+                if let (Some(f), Some(e)) = (g.feats().first(), constellation.elements.first()) {
+                    let p = e.position_eci(t);
+                    assert_eq!(
+                        f,
+                        &[p.x / 1e3, p.y / 1e3, p.z / 1e3],
+                        "spatial index was built for a different epoch than t={t}"
+                    );
                 }
+                let mut out = Vec::new();
+                g.assign_nearest(centroids_km, &mut out);
+                out
             }
-            natural.push(best);
-        }
+            None => {
+                let feats = constellation.snapshot(t).features_km();
+                let mut natural = Vec::new();
+                assign_nearest_brute(&feats, centroids_km, &mut natural);
+                natural
+            }
+        };
         let mut stats = vec![DropoutStats::default(); k];
         let mut outages = Vec::new();
         for (i, &home) in assignment.iter().enumerate() {
@@ -122,8 +152,27 @@ mod tests {
         let c = Constellation::from_walker(&WalkerConstellation::paper_shell(4, 8));
         let feats = c.snapshot(0.0).features_km();
         let mut rng = Rng::new(1);
-        let res = KMeans::new(4).run(&feats, &mut rng);
+        let res = KMeans::new(4).run(&feats, &mut rng).unwrap();
         (c, res.assignment, res.centroids)
+    }
+
+    #[test]
+    fn indexed_churn_is_bit_identical() {
+        let (c, asg, cents) = setup();
+        let m = MobilityModel::default();
+        let none = vec![false; asg.len()];
+        for t in [0.0, 500.0, 2000.0] {
+            let mut ix = crate::orbit::index::ConstellationIndex::new(0);
+            ix.refresh(&c, t);
+            let brute = m.churn(&c, &asg, &cents, t, &none);
+            let indexed = m.churn_with(&c, &asg, &cents, t, &none, Some(ix.grid()));
+            assert_eq!(brute.natural_assignment, indexed.natural_assignment, "t={t}");
+            for (a, b) in brute.stats.iter().zip(&indexed.stats) {
+                assert_eq!(a.members, b.members, "t={t}");
+                assert_eq!(a.dropped, b.dropped, "t={t}");
+            }
+            assert_eq!(brute.outages, indexed.outages, "t={t}");
+        }
     }
 
     #[test]

@@ -60,6 +60,20 @@ impl ParamPool {
         }
     }
 
+    /// Grow the free list until it holds at least `n` buffers, so a
+    /// bounded scatter of `n` concurrent takes recycles instead of
+    /// allocating. The per-cluster sharded round path calls this at
+    /// topology-(re)build time with the largest cluster size: warm-up cost
+    /// is paid once, and steady-state rounds stay free of parameter-sized
+    /// allocations no matter how per-round availability fluctuates.
+    pub fn ensure_free(&self, n: usize) {
+        let mut free = self.free.lock().expect("param pool poisoned");
+        while free.len() < n {
+            self.allocated.fetch_add(1, Ordering::Relaxed);
+            free.push(vec![0.0f32; self.param_count]);
+        }
+    }
+
     /// Check a buffer back in for reuse. Buffers of the wrong length
     /// (e.g. an empty vector left by `std::mem::take`) are dropped rather
     /// than poisoning the free list.
@@ -170,6 +184,24 @@ mod tests {
         let b = pool.take_copy(&other);
         assert_eq!(b, other, "recycled buffer must be fully overwritten");
         assert_eq!(pool.stats(), (1, 1), "second take must reuse the buffer");
+    }
+
+    #[test]
+    fn ensure_free_prefills_once() {
+        let pool = ParamPool::new(8);
+        pool.ensure_free(3);
+        assert_eq!(pool.stats().0, 3, "three warm-up allocations");
+        pool.ensure_free(3);
+        assert_eq!(pool.stats().0, 3, "already satisfied: no growth");
+        let src = [0.5f32; 8];
+        let a = pool.take_copy(&src);
+        let b = pool.take_copy(&src);
+        let c = pool.take_copy(&src);
+        assert_eq!(pool.stats(), (3, 3), "all takes recycle the prefill");
+        assert_eq!(a, src);
+        pool.put(a);
+        pool.put(b);
+        pool.put(c);
     }
 
     #[test]

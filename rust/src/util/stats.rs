@@ -1,6 +1,7 @@
 //! Summary statistics and timing helpers used by the bench harness and the
 //! metrics ledger.
 
+use super::json::Json;
 use std::time::Instant;
 
 /// Online mean/variance accumulator (Welford).
@@ -101,6 +102,18 @@ pub fn bench_loop<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64>
         out.push(t.elapsed().as_secs_f64());
     }
     out
+}
+
+/// Timing statistics as the shared `BENCH_*.json` fragment (mean/p50/p95
+/// milliseconds + iteration count) from [`bench_loop`]'s per-iteration
+/// seconds — one schema for every bench binary.
+pub fn stats_json(secs: &[f64]) -> Json {
+    Json::obj(vec![
+        ("mean_ms", Json::num(mean(secs) * 1e3)),
+        ("p50_ms", Json::num(percentile(secs, 50.0) * 1e3)),
+        ("p95_ms", Json::num(percentile(secs, 95.0) * 1e3)),
+        ("iters", Json::num(secs.len() as f64)),
+    ])
 }
 
 /// Format a bench result line consistently across bench binaries.

@@ -11,9 +11,11 @@ use fedhc::data::synth::synth_tiny;
 use fedhc::data::{partition_dirichlet, partition_iid};
 use fedhc::fl::aggregate::{fedavg_weights, quality_weights};
 use fedhc::network::{LinkModel, NetworkParams};
-use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::index::{assign_nearest_brute, los_neighbors_brute, SphereGrid};
+use fedhc::orbit::propagate::{Constellation, Snapshot};
+use fedhc::orbit::visibility::{visible_sats, visible_sats_indexed};
 use fedhc::orbit::walker::WalkerConstellation;
-use fedhc::orbit::Vec3;
+use fedhc::orbit::{GroundStation, Vec3};
 use fedhc::runtime::host_model::reference;
 use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
 use fedhc::util::quickprop::{property, Gen};
@@ -33,7 +35,7 @@ fn prop_kmeans_partitions_all_points() {
                 ]
             })
             .collect();
-        let res = KMeans::new(k).run(&pts, g.rng());
+        let res = KMeans::new(k).run(&pts, g.rng()).unwrap();
         assert_eq!(res.assignment.len(), n);
         assert!(res.assignment.iter().all(|&a| a < k));
         assert_eq!(res.centroids.len(), k, "centroid count must equal k");
@@ -126,6 +128,89 @@ fn prop_recluster_boundary_is_strict() {
     });
 }
 
+/// A random Walker geometry at a random epoch, plus a sphere grid over a
+/// random cell resolution — `bands == 1` is the degenerate single-cell
+/// grid, which must degrade to the brute-force scan exactly.
+fn random_walker_grid(g: &mut Gen) -> (Constellation, Vec<[f64; 3]>, Vec<Vec3>, SphereGrid, f64) {
+    let planes = g.usize_in(1, 8);
+    let spp = g.usize_in(1, 12);
+    let alt = g.f64_in(400_000.0, 2_500_000.0);
+    let incl = g.f64_in(0.0, 98.0);
+    let phasing = g.rng().below_usize(planes);
+    let w = WalkerConstellation::new(alt, incl, planes, spp, phasing);
+    let c = Constellation::from_walker(&w);
+    let t = g.f64_in(0.0, 20_000.0);
+    let snap = c.snapshot(t);
+    let feats = snap.features_km();
+    let pos = snap.positions.clone();
+    let bands = g.usize_in(1, 24);
+    let grid = SphereGrid::build(&feats, bands);
+    (c, feats, pos, grid, t)
+}
+
+#[test]
+fn prop_sphere_grid_assignment_is_exact() {
+    // the constellation plane's exactness guarantee, query (a): the
+    // cell-pruned nearest-centroid search returns the bit-identical winner
+    // of the exhaustive scan, for arbitrary centroid sets (k-means puts
+    // centroids off the shell — even inside the Earth — after Eq. 14)
+    property("sphere-grid nearest centroid == brute force", 40, |g: &mut Gen| {
+        let (_, feats, _, grid, _) = random_walker_grid(g);
+        let k = g.usize_in(1, 8);
+        let cents: Vec<[f64; 3]> = (0..k)
+            .map(|_| {
+                [
+                    g.f64_in(-9000.0, 9000.0),
+                    g.f64_in(-9000.0, 9000.0),
+                    g.f64_in(-9000.0, 9000.0),
+                ]
+            })
+            .collect();
+        let mut pruned = Vec::new();
+        grid.assign_nearest(&cents, &mut pruned);
+        let mut brute = Vec::new();
+        assign_nearest_brute(&feats, &cents, &mut brute);
+        assert_eq!(pruned, brute, "bands={}", grid.bands());
+    });
+}
+
+#[test]
+fn prop_sphere_grid_visibility_is_exact() {
+    // query (b): the cap-pruned visibility probe returns exactly the
+    // brute-force visible set, across elevation masks including the
+    // always-visible (< -90°) and never-visible extremes
+    property("sphere-grid visibility == brute force", 40, |g: &mut Gen| {
+        let (c, _, pos, grid, t) = random_walker_grid(g);
+        let gs = GroundStation::new(
+            0,
+            "probe",
+            g.f64_in(-88.0, 88.0),
+            g.f64_in(-180.0, 180.0),
+            g.f64_in(-95.0, 85.0),
+        );
+        let snap = Snapshot { t, positions: pos };
+        let brute = visible_sats(&gs, &c, t);
+        let pruned = visible_sats_indexed(&gs, &snap, &grid);
+        assert_eq!(pruned, brute, "mask={} bands={}", gs.min_elevation_deg, grid.bands());
+    });
+}
+
+#[test]
+fn prop_sphere_grid_los_neighbors_are_exact() {
+    // query (c): the cap-pruned LoS neighbor list equals the brute-force
+    // scan — same range cut, same Earth-grazing test, same order
+    property("sphere-grid LoS neighbors == brute force", 40, |g: &mut Gen| {
+        let (c, _, pos, grid, _) = random_walker_grid(g);
+        let i = g.rng().below_usize(c.len());
+        let range = g.f64_in(50_000.0, 12_000_000.0);
+        let mut pruned = Vec::new();
+        grid.los_neighbors(i, range, &pos, &mut pruned);
+        let mut brute = Vec::new();
+        los_neighbors_brute(i, range, &pos, &mut brute);
+        assert_eq!(pruned, brute, "i={i} range={range} bands={}", grid.bands());
+    });
+}
+
 #[test]
 fn prop_ps_select_returns_a_member_of_its_own_cluster() {
     property("ps belongs to its cluster", 20, |g: &mut Gen| {
@@ -144,7 +229,7 @@ fn prop_ps_select_returns_a_member_of_its_own_cluster() {
                 ]);
             }
         }
-        let res = KMeans::new(k).run(&pts_km, g.rng());
+        let res = KMeans::new(k).run(&pts_km, g.rng()).unwrap();
         if res.sizes().iter().any(|&s| s == 0) {
             return; // degenerate local optimum: ps_select's precondition fails
         }
@@ -182,8 +267,8 @@ fn prop_topology_partitions_every_satellite_once() {
         let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
         for strategy in [Strategy::fedhc(), Strategy::hbase(), Strategy::fedce()] {
             let mut trial = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
-            let global = trial.clients[0].params.clone();
-            let topo = build_topology(&mut trial, &strategy, &global);
+            let global = trial.init.clone();
+            let topo = build_topology(&mut trial, &strategy, &global, None).unwrap();
             let k = cfg.clusters;
             assert_eq!(topo.assignment.len(), cfg.clients, "{}", strategy.name);
             assert!(
