@@ -5,7 +5,7 @@
 //!     cargo bench --bench bench_fig3
 
 use fedhc::baselines::run_cfedavg;
-use fedhc::config::ExperimentConfig;
+use fedhc::config::{AggregationMode, ExperimentConfig};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
 use fedhc::metrics::report::format_fig3;
 use fedhc::metrics::Ledger;
@@ -78,6 +78,30 @@ fn main() {
             ledger.energy_j,
             ledger.ground_wait_s,
             ledger.stale_passes
+        );
+    }
+
+    // aggregation sweep: the same FedHC run under each `--aggregation` mode —
+    // the idle-vs-stale columns show what a partial buffer trades the
+    // synchronous barrier for (FedBuff's staleness discount pays for the
+    // reclaimed idle time)
+    for (label, mode, buffer) in [
+        ("sync", AggregationMode::Sync, 0usize),
+        ("buffered", AggregationMode::Buffered, 2),
+        ("async", AggregationMode::Async, 0),
+    ] {
+        let mut cfg = base.clone();
+        cfg.aggregation = mode;
+        cfg.buffer_size = buffer;
+        let ledger = series(cfg, "FedHC");
+        println!(
+            "aggregation {:<9}: time {:>9.0} s  best acc {:>5.1}%  merges {:>4}  idle {:>8.0} s  stale {:>8.0} s",
+            label,
+            ledger.time_s,
+            ledger.best_accuracy() * 100.0,
+            ledger.buffered_merges,
+            ledger.idle_s,
+            ledger.stale_s
         );
     }
 }

@@ -12,7 +12,7 @@
 //!
 //!     cargo bench --bench bench_runtime [-- --fast]
 
-use fedhc::config::ExperimentConfig;
+use fedhc::config::{AggregationMode, ExperimentConfig};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
 use fedhc::runtime::host_model::reference;
 use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
@@ -209,11 +209,13 @@ fn alloc_accounting(fast: bool) -> Json {
     let manifest = Manifest::host();
     let (r1, r2) = if fast { (3usize, 6usize) } else { (4, 8) };
     let param_bytes = manifest.variant("tiny_mlp").unwrap().param_count * 4;
-    let run = |rounds: usize| -> (u64, u64) {
+    let run = |rounds: usize, aggregation: AggregationMode, buffer: usize| -> (u64, u64) {
         let mut cfg = ExperimentConfig::tiny();
         cfg.rounds = rounds;
         cfg.workers = 4;
         cfg.eval_every = 1;
+        cfg.aggregation = aggregation;
+        cfg.buffer_size = buffer;
         // a dropout *rate* can never exceed 1.0: re-clustering (which
         // legitimately rebuilds models) stays out of the steady state
         cfg.recluster_threshold = 1.0;
@@ -230,8 +232,8 @@ fn alloc_accounting(fast: bool) -> Json {
         PARAM_BYTES.store(usize::MAX, Ordering::Relaxed);
         (total, param)
     };
-    let (t_a, p_a) = run(r1);
-    let (t_b, p_b) = run(r2);
+    let (t_a, p_a) = run(r1, AggregationMode::Sync, 0);
+    let (t_b, p_b) = run(r2, AggregationMode::Sync, 0);
     let extra = (r2 - r1) as f64;
     let param_per_round = (p_b as f64 - p_a as f64) / extra;
     let total_per_round = (t_b as f64 - t_a as f64) / extra;
@@ -244,10 +246,24 @@ fn alloc_accounting(fast: bool) -> Json {
         p_b, p_a,
         "steady-state rounds must perform zero parameter-sized allocations"
     );
+    // the buffered collection plane must keep the same invariant: parked
+    // contributions recycle pool buffers, they never allocate fresh ones —
+    // a goal of 2 forces real cross-round parking, the worst case
+    let (_, bp_a) = run(r1, AggregationMode::Buffered, 2);
+    let (_, bp_b) = run(r2, AggregationMode::Buffered, 2);
+    let buffered_per_round = (bp_b as f64 - bp_a as f64) / extra;
+    println!(
+        "  buffered (goal 2): {bp_a} → {bp_b} parameter-sized allocs ({buffered_per_round:.1}/round)"
+    );
+    assert_eq!(
+        bp_b, bp_a,
+        "buffered steady-state rounds must perform zero parameter-sized allocations"
+    );
     Json::obj(vec![
         ("param_bytes_threshold", Json::num(param_bytes as f64)),
         ("param_sized_per_round", Json::num(param_per_round)),
         ("total_per_round", Json::num(total_per_round)),
+        ("buffered_param_sized_per_round", Json::num(buffered_per_round)),
     ])
 }
 

@@ -11,10 +11,11 @@
 //!
 //!     cargo bench --bench bench_scenarios [-- --fast]
 
-use fedhc::config::ExperimentConfig;
-use fedhc::coordinator::run_scenario_matrix;
+use fedhc::config::{AggregationMode, ExperimentConfig};
+use fedhc::coordinator::{run_clustered, run_scenario_matrix, Strategy, Trial};
 use fedhc::metrics::report::format_scenario_matrix;
 use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::sim::scenario::ScenarioConfig;
 use fedhc::sim::ScenarioKind;
 use fedhc::util::json::Json;
 
@@ -85,6 +86,47 @@ fn main() {
         "the straggler preset must accumulate slowed compute"
     );
 
+    // aggregation axis: FedHC on the churn preset under each `--aggregation`
+    // mode — the idle-vs-stale columns quantify the FedBuff tradeoff (sync
+    // and a full buffer idle-wait for every member; small buffers and async
+    // merge early and pay in staleness instead)
+    println!("== aggregation axis: fedhc x churn, idle vs stale ==");
+    let half_cluster = (cfg.clients / cfg.clusters / 2).max(1);
+    let mut agg_rows = Vec::new();
+    for (label, mode, buffer) in [
+        ("sync", AggregationMode::Sync, 0usize),
+        ("buffered-auto", AggregationMode::Buffered, 0),
+        ("buffered-half", AggregationMode::Buffered, half_cluster),
+        ("async", AggregationMode::Async, 0),
+    ] {
+        let mut c = cfg.clone();
+        c.scenario = ScenarioConfig::preset(ScenarioKind::Churn);
+        c.aggregation = mode;
+        c.buffer_size = buffer;
+        let mut trial = Trial::new(c, &manifest, &rt).expect("trial");
+        let res = run_clustered(&mut trial, Strategy::fedhc()).expect("aggregation-axis run");
+        let stale_n: usize = res.ledger.staleness_hist[1..].iter().sum();
+        println!(
+            "  {label:<14} time {:>9.0} s   acc {:>5.1}%   merges {:>4}   idle {:>8.0} s   stale {:>8.0} s ({stale_n} stale contributions)",
+            res.ledger.time_s,
+            res.final_accuracy * 100.0,
+            res.ledger.buffered_merges,
+            res.ledger.idle_s,
+            res.ledger.stale_s,
+        );
+        agg_rows.push(Json::obj(vec![
+            ("mode", Json::str(label)),
+            ("buffer_size", Json::num(buffer as f64)),
+            ("time_s", Json::num(res.ledger.time_s)),
+            ("best_accuracy", Json::num(res.final_accuracy)),
+            ("buffered_merges", Json::num(res.ledger.buffered_merges as f64)),
+            ("idle_s", Json::num(res.ledger.idle_s)),
+            ("stale_s", Json::num(res.ledger.stale_s)),
+            ("stale_contributions", Json::num(stale_n as f64)),
+        ]));
+    }
+    println!();
+
     let json_rows: Vec<Json> = cells
         .iter()
         .map(|c| {
@@ -107,6 +149,7 @@ fn main() {
         ("clients", Json::num(cfg.clients as f64)),
         ("rounds", Json::num(cfg.rounds as f64)),
         ("cells", Json::Arr(json_rows)),
+        ("aggregation", Json::Arr(agg_rows)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scenarios.json");
     std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_scenarios.json");

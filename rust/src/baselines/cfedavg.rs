@@ -11,8 +11,9 @@
 //! Independent of K by construction — Table I reports one column
 //! replicated across K.
 
+use crate::config::AggregationMode;
 use crate::coordinator::fedhc::RunResult;
-use crate::coordinator::round::{data_upload_with, throttle_cpu};
+use crate::coordinator::round::{data_upload_with, throttle_cpu, upload_cost};
 use crate::coordinator::stages::{EngineLocalTrain, LocalTrainStage, RoundPools};
 use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
@@ -93,14 +94,66 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
                 .map(|(i, c)| (c.data_size(), positions[i], avail.link_factor[i]))
                 .collect();
             // per-uploader link costs fanned out on the engine (order-stable)
-            let (t_up, e_up) = data_upload_with(
-                &engine,
-                &trial.link,
-                &trial.energy,
-                &uploads,
-                bits_per_sample,
-                positions[central],
-            );
+            let (t_up, e_up) = if cfg.aggregation == AggregationMode::Sync {
+                data_upload_with(
+                    &engine,
+                    &trial.link,
+                    &trial.energy,
+                    &uploads,
+                    bits_per_sample,
+                    positions[central],
+                )
+            } else {
+                // buffered/async collection: each shard arrives at its own
+                // offset and the central epoch starts at the goal-th
+                // arrival instead of the slowest upload (`--buffer-size`,
+                // 0 = wait for everyone — which is bit-for-bit the sync
+                // fold). Early arrivals idle until the start; later ones
+                // still join the union epoch but their data is one
+                // collection round stale. Energy is payload-determined and
+                // unchanged.
+                let costs: Vec<(f64, f64)> = uploads
+                    .iter()
+                    .map(|&(samples, pos, factor)| {
+                        upload_cost(
+                            &trial.link,
+                            &trial.energy,
+                            samples,
+                            pos,
+                            factor,
+                            bits_per_sample,
+                            positions[central],
+                        )
+                    })
+                    .collect();
+                let mut e_total = 0.0f64;
+                for &(_, e_i) in &costs {
+                    e_total += e_i;
+                }
+                let mut times: Vec<f64> = costs.iter().map(|&(t, _)| t).collect();
+                times.sort_by(f64::total_cmp);
+                let goal = if cfg.buffer_size == 0 {
+                    times.len()
+                } else {
+                    cfg.buffer_size.min(times.len())
+                };
+                let t_start = goal
+                    .checked_sub(1)
+                    .and_then(|i| times.get(i))
+                    .copied()
+                    .unwrap_or(0.0);
+                if !times.is_empty() {
+                    for &t_i in &times {
+                        if t_i <= t_start {
+                            trial.ledger.add_idle(t_start - t_i);
+                        } else {
+                            trial.ledger.add_staleness(t_i - t_start, 1);
+                        }
+                    }
+                    trial.ledger.add_buffered_merge();
+                }
+                (t_start, e_total)
+            };
             trial.ledger.add_time(t_up);
             trial.ledger.add_energy(e_up);
             trial.clock.advance(t_up);
@@ -206,6 +259,46 @@ mod tests {
             assert!(first.time_s > 0.0);
             assert!(first.energy_j > 0.0);
         });
+    }
+
+    /// The buffered collection plane: the auto goal (wait for every
+    /// upload) is bit-for-bit the sync fold, with the waiting billed as
+    /// idleness; a sub-goal start cuts collection time and marks the late
+    /// shards stale — without changing the learning trajectory (the union
+    /// epoch still trains on all collected data).
+    #[test]
+    fn buffered_collection_degenerates_to_sync_at_the_auto_goal() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 4;
+        cfg.target_accuracy = None;
+        let mut sync_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let sync = run_cfedavg(&mut sync_t).unwrap();
+        cfg.aggregation = AggregationMode::Buffered;
+        let mut buf_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let buffered = run_cfedavg(&mut buf_t).unwrap();
+        assert_eq!(sync.ledger.time_s.to_bits(), buffered.ledger.time_s.to_bits());
+        assert_eq!(sync.ledger.energy_j.to_bits(), buffered.ledger.energy_j.to_bits());
+        assert_eq!(sync.final_accuracy.to_bits(), buffered.final_accuracy.to_bits());
+        assert!(buffered.ledger.idle_s > 0.0, "waiting on the slowest upload is idleness");
+        assert!(buffered.ledger.buffered_merges > 0);
+        assert_eq!(buffered.ledger.stale_s, 0.0, "the auto goal leaves nothing late");
+        cfg.buffer_size = 4;
+        let mut sub_t = Trial::new(cfg, &m, &rt).unwrap();
+        let sub = run_cfedavg(&mut sub_t).unwrap();
+        assert!(
+            sub.ledger.time_s < sync.ledger.time_s,
+            "a sub-goal start must shorten collection: {} vs {}",
+            sub.ledger.time_s,
+            sync.ledger.time_s
+        );
+        assert!(sub.ledger.stale_s > 0.0, "late shards must register as stale");
+        assert_eq!(
+            sub.final_accuracy.to_bits(),
+            sync.final_accuracy.to_bits(),
+            "collection timing must not change the learning trajectory"
+        );
     }
 
     #[test]

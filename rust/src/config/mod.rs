@@ -42,6 +42,46 @@ impl Timeline {
     }
 }
 
+/// When a cluster PS folds member contributions into the cluster model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregationMode {
+    /// Synchronous barrier: every scheduled member trains, the PS merges
+    /// once per round (the original reproduction semantics).
+    Sync,
+    /// FedBuff-style buffered aggregation: members upload as soon as their
+    /// compute + uplink finishes, the PS merges whenever `buffer_size`
+    /// contributions have accumulated (and once at round end if none did),
+    /// down-weighting stale contributions by `1/(1+τ)^β`. With
+    /// always-visible geometry and `buffer_size` = cluster size this
+    /// degenerates bit-exactly to `Sync` (see
+    /// `tests/aggregation_equivalence.rs`).
+    Buffered,
+    /// Fully asynchronous: every arriving contribution is folded into the
+    /// cluster model immediately as a staleness-damped update
+    /// `m += s(τ)·(u − m)`, FedAsync-style. No buffer, no barrier.
+    Async,
+}
+
+impl AggregationMode {
+    /// Parse the `--aggregation` flag value.
+    pub fn parse(s: &str) -> Option<AggregationMode> {
+        match s {
+            "sync" => Some(AggregationMode::Sync),
+            "buffered" => Some(AggregationMode::Buffered),
+            "async" => Some(AggregationMode::Async),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationMode::Sync => "sync",
+            AggregationMode::Buffered => "buffered",
+            AggregationMode::Async => "async",
+        }
+    }
+}
+
 /// Complete configuration of one FL experiment.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -113,6 +153,15 @@ pub struct ExperimentConfig {
     pub workers: usize,
     /// Timeline semantics (`--timeline analytic|event`).
     pub timeline: Timeline,
+    /// Aggregation semantics (`--aggregation sync|buffered|async`).
+    pub aggregation: AggregationMode,
+    /// Staleness decay exponent β for buffered/async merges: a
+    /// contribution computed τ model versions ago is weighted by
+    /// `1/(1+τ)^β` (β = 0 ignores staleness entirely).
+    pub staleness_beta: f64,
+    /// Buffered mode: merge once this many contributions have arrived
+    /// (0 = auto, the cluster's member count — the sync-degenerate goal).
+    pub buffer_size: usize,
     /// Event timeline: how long a cluster PS may wait for a ground
     /// visibility window before it goes stale and skips the pass, seconds.
     pub max_ground_wait_s: f64,
@@ -169,6 +218,9 @@ impl ExperimentConfig {
             // deterministic test suite keeps the legacy Eq. 7 semantics;
             // paper-scale presets default to the event timeline
             timeline: Timeline::Analytic,
+            aggregation: AggregationMode::Sync,
+            staleness_beta: 0.5,
+            buffer_size: 0,
             max_ground_wait_s: 7000.0,
             window_step_s: 30.0,
             seed: 42,
@@ -206,6 +258,9 @@ impl ExperimentConfig {
             eval_every: 1,
             workers: 0,
             timeline: Timeline::Event,
+            aggregation: AggregationMode::Sync,
+            staleness_beta: 0.5,
+            buffer_size: 0,
             // one paper-shell orbital period (≈ 6680 s) plus margin: a PS
             // that cannot reach its station within an orbit goes stale
             max_ground_wait_s: 7000.0,
@@ -260,6 +315,9 @@ impl ExperimentConfig {
             eval_every: 5,
             workers: 0,
             timeline: Timeline::Event,
+            aggregation: AggregationMode::Sync,
+            staleness_beta: 0.5,
+            buffer_size: 0,
             max_ground_wait_s: 7000.0,
             window_step_s: 30.0,
             seed: 42,
@@ -373,6 +431,13 @@ impl ExperimentConfig {
             self.timeline = Timeline::parse(t)
                 .ok_or_else(|| anyhow!("--timeline expects 'analytic' or 'event', got '{t}'"))?;
         }
+        if let Some(a) = args.get("aggregation") {
+            self.aggregation = AggregationMode::parse(a).ok_or_else(|| {
+                anyhow!("--aggregation expects 'sync', 'buffered' or 'async', got '{a}'")
+            })?;
+        }
+        self.staleness_beta = args.get_f64("staleness-beta", self.staleness_beta)?;
+        self.buffer_size = args.get_usize("buffer-size", self.buffer_size)?;
         self.max_ground_wait_s = args.get_f64("max-ground-wait", self.max_ground_wait_s)?;
         self.window_step_s = args.get_f64("window-step", self.window_step_s)?;
         self.seed = args.get_u64("seed", self.seed)?;
@@ -425,6 +490,12 @@ impl ExperimentConfig {
             if !(0.0..=1.0).contains(&t) {
                 bail!("target accuracy must be in [0, 1]");
             }
+        }
+        if !self.staleness_beta.is_finite() || self.staleness_beta < 0.0 {
+            bail!(
+                "staleness beta must be finite and non-negative, got {}",
+                self.staleness_beta
+            );
         }
         if !self.max_ground_wait_s.is_finite() || self.max_ground_wait_s <= 0.0 {
             bail!("max ground wait must be positive and finite");
@@ -511,6 +582,41 @@ mod tests {
         let bad = Args::parse(["--timeline", "wallclock"].iter().map(|s| s.to_string()), &[]);
         let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
         assert!(e.to_string().contains("--timeline"), "{e}");
+    }
+
+    #[test]
+    fn aggregation_override_applies() {
+        // every preset defaults to the synchronous barrier
+        for name in ["tiny", "mnist", "cifar10", "mega-sparse", "mega-dense"] {
+            let c = ExperimentConfig::preset(name).unwrap();
+            assert_eq!(c.aggregation, AggregationMode::Sync, "{name}");
+            assert_eq!(c.buffer_size, 0, "{name}: buffer goal defaults to auto");
+        }
+        let args = Args::parse(
+            ["--aggregation", "buffered", "--staleness-beta", "1.5", "--buffer-size", "4"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.aggregation, AggregationMode::Buffered);
+        assert_eq!(c.staleness_beta, 1.5);
+        assert_eq!(c.buffer_size, 4);
+        let args = Args::parse(["--aggregation", "async"].iter().map(|s| s.to_string()), &[]);
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.aggregation, AggregationMode::Async);
+        let bad = Args::parse(
+            ["--aggregation", "eventual"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("--aggregation"), "{e}");
+        let bad = Args::parse(
+            ["--staleness-beta", "-1"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("staleness beta"), "{e}");
     }
 
     #[test]

@@ -14,22 +14,22 @@
 //! C-FedAvg is structurally different (raw-data upload + centralised
 //! training) and lives in `baselines::cfedavg`.
 
-use super::round::{cluster_round_with, throttle_cpu, MemberWork};
-use super::stages::{cluster_round_events, GroundCtx, RoundPools, Stages};
+use super::round::{cluster_round_with, member_times, throttle_cpu, MemberWork};
+use super::stages::{cluster_round_events, ClusterAggregateStage, GroundCtx, RoundPools, Stages};
 use super::trial::Trial;
 use crate::clustering::kmeans::KMeans;
 use crate::clustering::ps_select::select_parameter_servers;
 use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
-use crate::config::Timeline;
-use crate::fl::aggregate::{aggregate, fedavg_weights};
+use crate::config::{AggregationMode, Timeline};
+use crate::fl::aggregate::{aggregate, fedavg_weights, fold_stale, staleness_weight};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
 use crate::orbit::index::{ConstellationIndex, SphereGrid};
 use crate::orbit::GroundStation;
 use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
-use crate::sim::events::EventQueue;
+use crate::sim::events::{Event, EventQueue};
 use anyhow::Result;
 
 /// Clustering policy.
@@ -343,6 +343,12 @@ pub fn run_clustered(trial: &mut Trial, strategy: Strategy) -> Result<RunResult>
 /// visibility windows; under `--timeline analytic` the legacy Eq. 7
 /// closed-form folds apply.
 pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Result<RunResult> {
+    // the buffered/async aggregation plane replaces the intra-cluster
+    // barrier with an event-driven merge schedule; the sync path below is
+    // byte-for-byte the pre-aggregation-axis behaviour
+    if trial.cfg.aggregation != AggregationMode::Sync {
+        return run_staged_buffered(trial, strategy, stages);
+    }
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
     let k = cfg.clusters;
@@ -706,6 +712,557 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     })
 }
 
+/// One member contribution parked at (or in flight to) its cluster PS
+/// under `--aggregation buffered|async`.
+struct Contribution {
+    /// Trained parameters — a pooled buffer, returned on merge or flush.
+    params: Vec<f32>,
+    /// Mean training loss (Eq. 12 quality weighting input).
+    loss: f32,
+    /// Shard size at training time (Eq. 5 FedAvg weighting input).
+    size: usize,
+    /// Slant range to the PS at training time (broadcast billing).
+    dist: f64,
+    /// Absolute sim time the upload reached the PS.
+    arrival: f64,
+    /// Cluster-model version the member trained from, and that version's
+    /// publish timestamp — the two staleness measures (integer τ and
+    /// publish-lag seconds).
+    based_on_ver: u64,
+    based_on_t: f64,
+}
+
+/// Merge every parked contribution of `members`' cluster at stage offset
+/// `at`: staleness-composed weights, fold **in member order** (the same
+/// order as the sync merge — the hinge of the degeneracy differential),
+/// one PS broadcast to the farthest merged member, ledger accounting, and
+/// buffer recycling. Returns the cluster-stage offset at which the new
+/// version is published.
+#[allow(clippy::too_many_arguments)]
+fn merge_parked(
+    rt: &crate::runtime::ModelRuntime,
+    stage: &dyn ClusterAggregateStage,
+    link: &crate::network::LinkModel,
+    ledger: &mut crate::metrics::Ledger,
+    pools: &RoundPools,
+    members: &[usize],
+    parked: &mut [Option<Contribution>],
+    model: &mut Vec<f32>,
+    agg_buf: &mut Vec<f32>,
+    version: &mut u64,
+    pub_time: &mut f64,
+    beta: f64,
+    model_bits: f64,
+    stage_start: f64,
+    at: f64,
+) -> Result<f64> {
+    let mut merged: Vec<usize> = Vec::new();
+    let mut losses: Vec<f32> = Vec::new();
+    let mut sizes: Vec<usize> = Vec::new();
+    let mut staleness: Vec<f64> = Vec::new();
+    let mut far: Option<f64> = None;
+    for &m in members {
+        let Some(ct) = parked[m].as_ref() else { continue };
+        merged.push(m);
+        losses.push(ct.loss);
+        sizes.push(ct.size);
+        staleness.push((*version - ct.based_on_ver) as f64);
+        far = Some(far.map_or(ct.dist, |a: f64| a.max(ct.dist)));
+    }
+    debug_assert!(!merged.is_empty(), "merge of an empty buffer");
+    let weights = stage.member_weights_stale(&losses, &sizes, &staleness, beta);
+    let rows: Vec<&[f32]> = merged
+        .iter()
+        .map(|&m| parked[m].as_ref().unwrap().params.as_slice())
+        .collect();
+    stage.merge(rt, &rows, &weights, agg_buf)?;
+    drop(rows);
+    std::mem::swap(model, agg_buf);
+    let end = at + link.comm_time(model_bits, far.expect("merge with no members"));
+    let now = stage_start + at;
+    for (i, &m) in merged.iter().enumerate() {
+        let ct = parked[m].take().expect("parked contribution vanished");
+        // buffer-wait idleness (arrival → merge) and model staleness
+        // (publish lag of the version the member trained from); both are
+        // exact zeros for a same-instant fresh contribution
+        ledger.add_idle(now - ct.arrival);
+        ledger.add_staleness(*pub_time - ct.based_on_t, staleness[i] as usize);
+        pools.params.put(ct.params);
+    }
+    ledger.add_buffered_merge();
+    *version += 1;
+    *pub_time = stage_start + end;
+    Ok(end)
+}
+
+/// Algorithm 1 under `--aggregation buffered|async`: the intra-cluster
+/// barrier is replaced by an event-driven merge schedule on the
+/// `sim::events` queue. Members upload the moment compute + uplink
+/// finishes ([`Event::UploadReady`]); the PS merges FedBuff-style when the
+/// buffer reaches its goal count ([`Event::MergeDue`], goal =
+/// `--buffer-size`, 0 = the cluster's member count), weighting each
+/// contribution by the strategy weights composed with the `1/(1+τ)^β`
+/// staleness discount. Under-goal leftovers merge at the round barrier
+/// when no goal fired (liveness); otherwise they stay parked — their
+/// members skip the next training round (genuine staleness ≥ 1 plus
+/// buffer-wait idleness, the FedSpace tradeoff). `async` instead folds
+/// every arrival into the cluster model immediately, damped by data share
+/// × staleness discount. Evaluation is mediated by [`Event::EvalDue`]
+/// pops rather than the round index directly.
+///
+/// Determinism matches the sync path: arrivals are scheduled in member
+/// order, ties pop FIFO, merges fold in member order, and with
+/// always-visible geometry + the auto buffer goal the buffered schedule
+/// degenerates to the sync fold bit-for-bit (every merge is all-fresh, so
+/// the staleness composition returns the sync weights bitwise unchanged).
+fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Result<RunResult> {
+    let cfg = trial.cfg.clone();
+    let rt = trial.rt;
+    let k = cfg.clusters;
+    let model_bits = rt.spec.param_count as f64 * 32.0;
+    let beta = cfg.staleness_beta;
+    let policy = ReclusterPolicy::new(cfg.recluster_threshold)?;
+    let engine = Engine::new(cfg.workers);
+    let pools = RoundPools::new(rt);
+    let mut queue = EventQueue::new(); // per-cluster arrival/merge schedule
+    let mut eval_queue = EventQueue::new();
+    let mut agg_buf: Vec<f32> = Vec::new();
+    let mut eval_scratch = HostScratch::new();
+
+    let mut geo: Option<ConstellationIndex> = if cfg.spatial_index {
+        Some(ConstellationIndex::new(cfg.index_bands))
+    } else {
+        None
+    };
+
+    let global0 = trial.init.clone();
+    if let Some(g) = geo.as_mut() {
+        g.refresh(&trial.constellation, trial.clock.now());
+    }
+    let mut topo = build_topology(trial, &strategy, &global0, geo.as_ref().map(|g| g.grid()))?;
+    // an auto goal (and the async fold) flushes every buffer by the round
+    // barrier, so pooled demand stays the largest cluster exactly as in
+    // sync mode; an explicit sub-cluster goal parks contributions across
+    // rounds, so the warm pool must cover the whole constellation once
+    let warm = if cfg.buffer_size == 0 || cfg.aggregation == AggregationMode::Async {
+        max_cluster_size(&topo, k)
+    } else {
+        trial.clients.len()
+    };
+    pools.params.ensure_free(warm);
+    let mut global = global0;
+    let mut converged_at = None;
+    let mut batch_buf = BatchBuf::new(rt);
+    let mut jobs: Vec<(usize, usize)> = Vec::new(); // (member, cluster)
+
+    // aggregation-plane bookkeeping: per-cluster model version + publish
+    // time, per-member in-flight uploads and parked PS buffers
+    let mut version = vec![0u64; k];
+    let mut pub_time = vec![0.0f64; k];
+    let mut in_flight: Vec<Option<Contribution>> =
+        (0..trial.clients.len()).map(|_| None).collect();
+    let mut parked: Vec<Option<Contribution>> =
+        (0..trial.clients.len()).map(|_| None).collect();
+
+    for round in 1..=cfg.rounds {
+        let positions = trial.positions();
+        let avail = trial.scenario.advance_round(round as u64, &positions);
+        trial.ledger.add_faults(avail.faults_injected);
+        if let Some(g) = geo.as_mut() {
+            g.refresh_positions(&positions, trial.clock.now());
+        }
+        let churn = trial.mobility.churn_with(
+            &trial.constellation,
+            &topo.assignment,
+            &topo.centroids_km,
+            trial.clock.now(),
+            &avail.unreachable,
+            geo.as_ref().map(|g| g.grid()),
+        );
+        let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
+
+        // ---- local training + event-driven staleness-weighted merges ----
+        let clusters = topo.clusters(k);
+        let mut stage_time = 0.0f64;
+        let stage_start = trial.clock.now();
+        for (c, members) in clusters.iter().enumerate() {
+            // members with a contribution still parked at the PS skip
+            // training this round — their update is queued, not lost
+            jobs.clear();
+            for &m in members {
+                if !outage.contains(&m) && parked[m].is_none() {
+                    jobs.push((m, c));
+                }
+            }
+            let parked_count = members.iter().filter(|&&m| parked[m].is_some()).count();
+            if jobs.is_empty() && parked_count == 0 {
+                continue;
+            }
+            let goal = if cfg.buffer_size == 0 {
+                members.len()
+            } else {
+                cfg.buffer_size
+            };
+
+            debug_assert!(queue.is_empty(), "arrival schedule leaked across clusters");
+            let mut async_total = 0usize; // async data-share denominator
+            if !jobs.is_empty() {
+                let mut batch = stages.local.train(
+                    &engine,
+                    rt,
+                    &cfg,
+                    &trial.clients,
+                    &topo.models,
+                    &jobs,
+                    round as u64,
+                    &pools,
+                )?;
+                // schedule every upload at its compute+uplink offset (in
+                // member order, so ties pop in member order) and bill
+                // energy with exactly the sync path's per-member terms
+                let mut e_total = 0.0f64;
+                for r in batch.iter_mut() {
+                    let m = r.member;
+                    debug_assert_eq!(r.cluster, c, "gather out of cluster order");
+                    trial.clients[m].last_loss = r.mean_loss;
+                    trial.clients[m].rounds_trained += 1;
+                    let cpu_hz = throttle_cpu(
+                        &trial.link,
+                        &mut trial.ledger,
+                        r.samples,
+                        trial.clients[m].cpu_hz,
+                        avail.compute_slowdown[m],
+                    );
+                    let work = MemberWork {
+                        samples: r.samples,
+                        cpu_hz,
+                        pos: positions[m],
+                        link_factor: avail.link_factor[m],
+                    };
+                    let (t_cmp, t_com, d) =
+                        member_times(&trial.link, &work, positions[topo.ps[c]], model_bits);
+                    let arrives = t_cmp + t_com;
+                    queue.push(arrives, Event::UploadReady { member: m, cluster: c });
+                    e_total += trial.energy.tx_energy(model_bits, d)
+                        + trial.energy.compute_energy(r.samples, cpu_hz)
+                        + trial.energy.tx_energy(model_bits, d);
+                    async_total += trial.clients[m].data_size();
+                    in_flight[m] = Some(Contribution {
+                        params: std::mem::take(&mut r.params),
+                        loss: r.mean_loss,
+                        size: trial.clients[m].data_size(),
+                        dist: d,
+                        arrival: stage_start + arrives,
+                        based_on_ver: version[c],
+                        based_on_t: pub_time[c],
+                    });
+                }
+                trial.ledger.add_energy(e_total);
+            }
+
+            let mut cluster_time = 0.0f64;
+            let mut last_arrival = 0.0f64;
+            match cfg.aggregation {
+                AggregationMode::Buffered => {
+                    let mut buf_count = parked_count;
+                    let mut merges_round = 0usize;
+                    // a backlog can already satisfy the goal (membership
+                    // shrank, goal lowered): merge before any new arrival
+                    if buf_count >= goal {
+                        queue.push(0.0, Event::MergeDue { cluster: c });
+                    }
+                    while let Some(ev) = queue.pop() {
+                        match ev.event {
+                            Event::UploadReady { member, .. } => {
+                                parked[member] = in_flight[member].take();
+                                debug_assert!(parked[member].is_some());
+                                buf_count += 1;
+                                last_arrival = last_arrival.max(ev.at);
+                                if buf_count == goal {
+                                    queue.push(ev.at, Event::MergeDue { cluster: c });
+                                }
+                            }
+                            Event::MergeDue { .. } => {
+                                if buf_count == 0 {
+                                    continue;
+                                }
+                                let end = merge_parked(
+                                    rt,
+                                    stages.cluster.as_ref(),
+                                    &trial.link,
+                                    &mut trial.ledger,
+                                    &pools,
+                                    members,
+                                    &mut parked,
+                                    &mut topo.models[c],
+                                    &mut agg_buf,
+                                    &mut version[c],
+                                    &mut pub_time[c],
+                                    beta,
+                                    model_bits,
+                                    stage_start,
+                                    ev.at,
+                                )?;
+                                cluster_time = cluster_time.max(end);
+                                merges_round += 1;
+                                buf_count = 0;
+                            }
+                            _ => unreachable!("unexpected event in the buffered drain"),
+                        }
+                    }
+                    // liveness at the round barrier: when no goal fired,
+                    // the under-goal buffer merges at its last arrival —
+                    // which is exactly the sync barrier's fold instant
+                    if merges_round == 0 && buf_count > 0 {
+                        let end = merge_parked(
+                            rt,
+                            stages.cluster.as_ref(),
+                            &trial.link,
+                            &mut trial.ledger,
+                            &pools,
+                            members,
+                            &mut parked,
+                            &mut topo.models[c],
+                            &mut agg_buf,
+                            &mut version[c],
+                            &mut pub_time[c],
+                            beta,
+                            model_bits,
+                            stage_start,
+                            last_arrival,
+                        )?;
+                        cluster_time = cluster_time.max(end);
+                    }
+                }
+                AggregationMode::Async => {
+                    // FedAsync-style: every arrival folds into the cluster
+                    // model immediately, damped by data share × staleness
+                    // discount; an arrival of the model itself is an exact
+                    // fixed point (`fold_stale` adds a zero delta)
+                    let mut far: Option<f64> = None;
+                    while let Some(ev) = queue.pop() {
+                        let Event::UploadReady { member, .. } = ev.event else {
+                            unreachable!("unexpected event in the async drain");
+                        };
+                        let ct = in_flight[member]
+                            .take()
+                            .expect("async upload without a contribution");
+                        let tau = version[c] - ct.based_on_ver;
+                        let share = ct.size as f32 / async_total as f32;
+                        let step = share * staleness_weight(tau as f64, beta);
+                        fold_stale(&mut topo.models[c], &ct.params, step);
+                        version[c] += 1;
+                        trial.ledger.add_buffered_merge();
+                        trial.ledger.add_staleness(pub_time[c] - ct.based_on_t, tau as usize);
+                        pub_time[c] = stage_start + ev.at;
+                        last_arrival = last_arrival.max(ev.at);
+                        far = Some(far.map_or(ct.dist, |a: f64| a.max(ct.dist)));
+                        pools.params.put(ct.params);
+                    }
+                    // the PS announces the final round state once, to the
+                    // farthest contributing member
+                    cluster_time = match far {
+                        Some(d) => last_arrival + trial.link.comm_time(model_bits, d),
+                        None => 0.0,
+                    };
+                }
+                AggregationMode::Sync => unreachable!("sync runs the barrier path"),
+            }
+            stage_time = stage_time.max(cluster_time); // clusters run in parallel
+        }
+        let stage_end = trial.clock.now() + stage_time;
+        trial.clock.advance_to(stage_end);
+        trial.ledger.advance_to(stage_end);
+
+        // ---- re-clustering check (lines 14–18) ----
+        let mut reclustered = false;
+        if policy.should_recluster(&churn.stats) {
+            reclustered = true;
+            trial.ledger.reclusters += 1;
+            // in-flight work addressed to the old PSes dies with the
+            // topology: recycle parked contributions so moved members
+            // retrain fresh against their aligned cluster model
+            for slot in parked.iter_mut() {
+                if let Some(ct) = slot.take() {
+                    pools.params.put(ct.params);
+                }
+            }
+            let old_assignment = topo.assignment.clone();
+            let old_models = topo.models.clone();
+            if let Some(g) = geo.as_mut() {
+                g.refresh(&trial.constellation, trial.clock.now());
+            }
+            let mut new_topo =
+                build_topology(trial, &strategy, &global, geo.as_ref().map(|g| g.grid()))?;
+            new_topo.assignment = align_labels(&old_assignment, &new_topo.assignment, k);
+            new_topo.models = old_models;
+            let changed = changed_members(&old_assignment, &new_topo.assignment);
+            info!(
+                "round {round}: re-clustering ({} members moved, strategy {})",
+                changed.len(),
+                strategy.name
+            );
+            for &m in &changed {
+                let dest = new_topo.assignment[m];
+                if strategy.maml_warmstart {
+                    let head = new_topo.ps[dest];
+                    batch_buf.fill_support(&trial.clients[head].shard, &mut trial.rng);
+                    batch_buf.fill_query(&trial.clients[m].shard, &mut trial.rng);
+                    let mut pooled = pools.params.take_copy(&new_topo.models[dest]);
+                    let _qloss = rt.maml_step_into(
+                        &mut pooled,
+                        &batch_buf.x1, &batch_buf.y1, &batch_buf.x2, &batch_buf.y2,
+                        cfg.maml_alpha,
+                        cfg.maml_beta,
+                        &mut batch_buf.scratch,
+                    )?;
+                    pools.params.put(pooled);
+                    trial.ledger.maml_adaptations += 1;
+                    let d = positions[m].dist(positions[head]).max(1.0);
+                    let batch_bits = (rt.spec.batch * rt.spec.input_dim()) as f64 * 32.0;
+                    trial
+                        .ledger
+                        .add_energy(trial.energy.tx_energy(batch_bits, d));
+                    trial.ledger.add_energy(
+                        trial
+                            .energy
+                            .compute_energy(2 * rt.spec.batch, trial.clients[m].cpu_hz),
+                    );
+                }
+            }
+            topo = new_topo;
+            let warm = if cfg.buffer_size == 0 || cfg.aggregation == AggregationMode::Async {
+                max_cluster_size(&topo, k)
+            } else {
+                trial.clients.len()
+            };
+            pools.params.ensure_free(warm);
+        }
+
+        // ---- ground station aggregation stage (lines 21–24) ----
+        if round % cfg.ground_every == 0 {
+            let live: Vec<usize> = (0..topo.ps.len())
+                .filter(|&c| !avail.unreachable[topo.ps[c]])
+                .collect();
+            trial.ledger.add_stale_passes(topo.ps.len() - live.len());
+            let any_station_down = avail.ground_down.iter().any(|&d| d);
+            let all_stations_down = any_station_down && avail.ground_down.iter().all(|&d| d);
+            if all_stations_down || live.is_empty() {
+                trial.ledger.add_stale_passes(live.len());
+            } else {
+                let live_stations: Vec<GroundStation>;
+                let stations: &[GroundStation] = if any_station_down {
+                    live_stations = trial
+                        .ground
+                        .iter()
+                        .zip(&avail.ground_down)
+                        .filter(|(_, &down)| !down)
+                        .map(|(g, _)| g.clone())
+                        .collect();
+                    &live_stations
+                } else {
+                    &trial.ground
+                };
+                let t = trial.clock.now();
+                let ctx = GroundCtx {
+                    link: &trial.link,
+                    energy: &trial.energy,
+                    stations,
+                    constellation: &trial.constellation,
+                };
+                let live_ps: Vec<usize> = live.iter().map(|&c| topo.ps[c]).collect();
+                let out = stages.ground.exchange(&ctx, &live_ps, t, model_bits);
+                let exchanged: Vec<usize> = out.exchanged.iter().map(|&i| live[i]).collect();
+                let pass_end = t + out.duration_s;
+                if !exchanged.is_empty() {
+                    let members_of = topo.clusters(k);
+                    let sizes: Vec<usize> = exchanged
+                        .iter()
+                        .map(|&c| {
+                            members_of[c]
+                                .iter()
+                                .map(|&m| trial.clients[m].data_size())
+                                .sum()
+                        })
+                        .collect();
+                    let weights = fedavg_weights(&sizes);
+                    let rows: Vec<&[f32]> = exchanged
+                        .iter()
+                        .map(|&c| topo.models[c].as_slice())
+                        .collect();
+                    aggregate(rt, &rows, &weights, &mut global)?;
+                    // the broadcast publishes a *new* cluster-model version:
+                    // anything still parked is now one version staler
+                    for &c in &exchanged {
+                        topo.models[c].clone_from(&global);
+                        version[c] += 1;
+                        pub_time[c] = pass_end;
+                    }
+                }
+                trial.ledger.add_energy(out.energy_j);
+                trial.ledger.add_stale_passes(out.stale.len());
+                trial.ledger.add_ground_wait(out.wait_s);
+                trial.clock.advance_to(pass_end);
+                trial.ledger.advance_to(pass_end);
+            }
+        }
+
+        // ---- evaluation / convergence check ----
+        // cadence decoupled from the round barrier: the round schedules an
+        // EvalDue at its completion timestamp; evaluation runs when the
+        // event pops, evaluating the same logical global as the sync path
+        if round % cfg.eval_every == 0 || round == cfg.rounds {
+            eval_queue.push(trial.clock.now(), Event::EvalDue { round });
+        }
+        while eval_queue
+            .peek_time()
+            .is_some_and(|due| due <= trial.clock.now())
+        {
+            let sched = eval_queue.pop().expect("peeked event vanished");
+            let Event::EvalDue { round: due_round } = sched.event else {
+                unreachable!("unexpected event on the eval queue");
+            };
+            let sizes: Vec<usize> = topo
+                .clusters(k)
+                .iter()
+                .map(|ms| ms.iter().map(|&m| trial.clients[m].data_size()).sum())
+                .collect();
+            let weights = fedavg_weights(&sizes);
+            let rows: Vec<&[f32]> = topo.models.iter().map(|m| m.as_slice()).collect();
+            aggregate(rt, &rows, &weights, &mut global)?;
+            let eval =
+                evaluate_with(rt, &global, &trial.test, cfg.eval_batches, &mut eval_scratch)?;
+            trial
+                .ledger
+                .record(due_round, eval.accuracy, eval.loss, reclustered);
+            if let Some(target) = cfg.target_accuracy {
+                if eval.accuracy >= target && converged_at.is_none() {
+                    converged_at =
+                        Some((due_round, trial.ledger.time_s, trial.ledger.energy_j));
+                }
+            }
+        }
+        if converged_at.is_some() {
+            break;
+        }
+    }
+
+    // un-merged leftovers at run end return to the pool
+    for slot in parked.iter_mut() {
+        if let Some(ct) = slot.take() {
+            pools.params.put(ct.params);
+        }
+    }
+
+    let final_accuracy = trial.ledger.best_accuracy();
+    Ok(RunResult {
+        name: strategy.name,
+        ledger: std::mem::take(&mut trial.ledger),
+        converged_at,
+        final_accuracy,
+    })
+}
+
 /// Reusable batch sampling buffers (and kernel scratch) for MAML warm
 /// starts.
 struct BatchBuf {
@@ -878,6 +1435,38 @@ mod tests {
             "pooled mode must not leave resident per-client parameters"
         );
         assert!(res_trial.clients.iter().all(|c| !c.params.is_empty()));
+    }
+
+    /// The buffered plane end to end: a sub-cluster goal forces mid-round
+    /// merges and cross-round parking (populating the staleness counters),
+    /// async folds every arrival. Ledgers must stay monotone throughout.
+    #[test]
+    fn buffered_and_async_runs_populate_staleness_counters() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 6;
+        cfg.target_accuracy = None;
+        cfg.aggregation = crate::config::AggregationMode::Buffered;
+        cfg.buffer_size = 2;
+        let mut t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let buffered = run_clustered(&mut t, Strategy::fedhc()).unwrap();
+        assert!(buffered.ledger.buffered_merges > 0, "no buffered merges fired");
+        let merged: usize = buffered.ledger.staleness_hist.iter().sum();
+        assert!(merged > 0, "staleness histogram stayed empty");
+        assert!(buffered.ledger.idle_s > 0.0, "a goal of 2 must make members wait");
+        assert!(buffered.ledger.time_s > 0.0 && buffered.ledger.energy_j > 0.0);
+        assert!(!buffered.ledger.records.is_empty());
+        for w in buffered.ledger.records.windows(2) {
+            assert!(w[1].time_s >= w[0].time_s);
+            assert!(w[1].energy_j >= w[0].energy_j);
+        }
+        cfg.aggregation = crate::config::AggregationMode::Async;
+        let mut t = Trial::new(cfg, &m, &rt).unwrap();
+        let asy = run_clustered(&mut t, Strategy::fedhc()).unwrap();
+        assert!(asy.ledger.buffered_merges > 0);
+        assert_eq!(asy.ledger.idle_s, 0.0, "async merges at arrival — no buffer wait");
+        assert!(asy.final_accuracy > 0.0);
     }
 
     #[test]

@@ -187,8 +187,9 @@ pub fn ground_exchange(
 /// One uploader's contribution to the C-FedAvg collection stage:
 /// `(samples, position, link_factor)`. The scenario-plane rate factor
 /// stretches the upload time; transmit energy stays the Eq. 8 function of
-/// payload and distance.
-fn upload_cost(
+/// payload and distance. Public because the buffered collection plane
+/// schedules each arrival individually instead of folding the max.
+pub fn upload_cost(
     link: &LinkModel,
     energy: &EnergyModel,
     samples: usize,

@@ -25,7 +25,7 @@ use super::ground;
 use super::round::{ground_exchange, member_times, MemberWork};
 use crate::config::{ExperimentConfig, Timeline};
 use crate::coordinator::fedhc::{Strategy, WeightPolicy};
-use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights};
+use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights, stale_composed_weights};
 use crate::fl::client::SatClient;
 use crate::fl::local::{train_params, TrainScratch};
 use crate::network::{EnergyModel, LinkModel};
@@ -153,6 +153,22 @@ impl LocalTrainStage for EngineLocalTrain {
 pub trait ClusterAggregateStage {
     /// Member weights for the PS merge (Eq. 12 or Eq. 5).
     fn member_weights(&self, losses: &[f32], sizes: &[usize]) -> Vec<f32>;
+
+    /// FedBuff-style weights for a buffered merge: the stage's own
+    /// weighting composed with each contribution's staleness discount
+    /// `1/(1+τ)^β` and renormalised. When every contribution is fresh
+    /// (τ = 0 across the buffer) this returns [`Self::member_weights`]
+    /// **bitwise unchanged** — the hinge of the sync-degeneracy
+    /// differential test.
+    fn member_weights_stale(
+        &self,
+        losses: &[f32],
+        sizes: &[usize],
+        staleness: &[f64],
+        beta: f64,
+    ) -> Vec<f32> {
+        stale_composed_weights(&self.member_weights(losses, sizes), staleness, beta)
+    }
 
     /// Weighted model merge (kernel-backed when the cluster fits the AOT
     /// slot count — see [`aggregate`]).
@@ -351,7 +367,11 @@ impl GroundExchangeStage for EventGroundExchange {
                     end_off = end_off.max(ev.at);
                 }
                 Event::WindowClose { .. } => {}
-                Event::ComputeDone { .. } | Event::EvalDue { .. } | Event::Fault { .. } => {
+                Event::ComputeDone { .. }
+                | Event::UploadReady { .. }
+                | Event::MergeDue { .. }
+                | Event::EvalDue { .. }
+                | Event::Fault { .. } => {
                     unreachable!("ground pass scheduled a non-ground event")
                 }
             }
@@ -477,6 +497,24 @@ mod tests {
             cluster_round(&l, &e, &[], ps, bits),
             cluster_round_events(&mut queue, &l, &e, &[], 0, ps, bits)
         );
+    }
+
+    #[test]
+    fn fresh_stale_weights_are_bitwise_the_sync_weights() {
+        let losses = [0.9f32, 0.4, 1.7, 0.6];
+        let sizes = [64usize, 48, 80, 64];
+        for policy in [WeightPolicy::Quality, WeightPolicy::FedAvg] {
+            let stage = WeightedClusterAggregate { policy };
+            let sync = stage.member_weights(&losses, &sizes);
+            let fresh = stage.member_weights_stale(&losses, &sizes, &[0.0; 4], 0.5);
+            for (a, b) in sync.iter().zip(&fresh) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fresh buffer must merge like sync");
+            }
+            // a genuinely stale member loses weight relative to sync
+            let stale = stage.member_weights_stale(&losses, &sizes, &[0.0, 0.0, 0.0, 2.0], 1.0);
+            assert!(stale[3] < sync[3], "staleness must discount member 3");
+            assert!((stale.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
     }
 
     /// Two equatorial satellites (one overhead at t=0, one antipodal) and

@@ -35,6 +35,47 @@ pub fn quality_weights(losses: &[f32]) -> Vec<f32> {
     inv.iter().map(|&x| x / sum).collect()
 }
 
+/// FedBuff staleness discount: a contribution computed against a model
+/// `staleness` versions old is down-weighted by `1/(1+τ)^β`. Always in
+/// `(0, 1]`, monotone decreasing in `τ`, and **exactly** 1.0 for a fresh
+/// contribution (`pow(1,β) = 1` in IEEE 754, any β) — that identity is
+/// what lets buffered mode degenerate bit-exactly to sync when every
+/// contribution is fresh.
+pub fn staleness_weight(staleness: f64, beta: f64) -> f32 {
+    debug_assert!(staleness >= 0.0 && beta >= 0.0);
+    (1.0 / (1.0 + staleness).powf(beta)) as f32
+}
+
+/// Compose per-member merge weights with their staleness discounts and
+/// renormalise. When every contribution is fresh the discounts are all
+/// exactly 1.0, so the input weights come back **bitwise unchanged** — the
+/// degeneracy hinge for `tests/aggregation_equivalence.rs`.
+pub fn stale_composed_weights(weights: &[f32], staleness: &[f64], beta: f64) -> Vec<f32> {
+    assert_eq!(weights.len(), staleness.len());
+    if staleness.iter().all(|&t| t == 0.0) {
+        return weights.to_vec();
+    }
+    let u: Vec<f32> = weights
+        .iter()
+        .zip(staleness)
+        .map(|(&w, &t)| w * staleness_weight(t, beta))
+        .collect();
+    let total: f32 = u.iter().sum();
+    assert!(total > 0.0, "stale-composed weights vanished");
+    u.iter().map(|&x| x / total).collect()
+}
+
+/// Asynchronous damped fold (FedAsync-style): `m_j += s·(u_j − m_j)`.
+/// Folding a row identical to the model is an **exact** fixed point
+/// (`u − m = 0` bitwise, any step size), which pins down that an async
+/// merge of already-agreed parameters changes nothing.
+pub fn fold_stale(model: &mut [f32], row: &[f32], step: f32) {
+    assert_eq!(model.len(), row.len());
+    for (m, &u) in model.iter_mut().zip(row) {
+        *m += step * (u - *m);
+    }
+}
+
 /// Aggregate client parameter rows with the given weights. Uses the Pallas
 /// kernel through PJRT when the cluster fits the AOT slot count, otherwise
 /// the host fallback (identical numerics — see runtime tests). Both
@@ -92,6 +133,73 @@ mod tests {
         assert!(w.iter().all(|x| x.is_finite() && *x > 0.0));
         // the infinite-loss client is treated as worst (2.0), not dominant
         assert!((w[0] - w[2]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staleness_weight_is_bounded_and_monotone() {
+        property("staleness weight in (0,1], monotone", 128, |g: &mut Gen| {
+            let beta = g.f64_in(0.0, 4.0);
+            let t1 = g.f64_in(0.0, 50.0);
+            let t2 = t1 + g.f64_in(0.0, 50.0);
+            let w1 = staleness_weight(t1, beta);
+            let w2 = staleness_weight(t2, beta);
+            assert!(w1 > 0.0 && w1 <= 1.0, "w({t1},{beta}) = {w1}");
+            assert!(w2 > 0.0 && w2 <= 1.0, "w({t2},{beta}) = {w2}");
+            assert!(w2 <= w1, "weight rose with staleness: {w2} > {w1}");
+            // freshness is an exact identity, not an approximation
+            assert_eq!(staleness_weight(0.0, beta).to_bits(), 1.0f32.to_bits());
+        });
+    }
+
+    #[test]
+    fn fresh_composition_is_bitwise_identity() {
+        property("all-fresh staleness composition is id", 64, |g: &mut Gen| {
+            let n = g.usize_in(1, 16);
+            let sizes: Vec<usize> = (0..n).map(|_| g.usize_in(1, 500)).collect();
+            let w = fedavg_weights(&sizes);
+            let beta = g.f64_in(0.0, 4.0);
+            let composed = stale_composed_weights(&w, &vec![0.0; n], beta);
+            for (a, b) in w.iter().zip(&composed) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fresh composition moved a weight");
+            }
+        });
+    }
+
+    #[test]
+    fn stale_composition_is_a_distribution_that_penalises_staleness() {
+        let w = fedavg_weights(&[100, 100]);
+        let composed = stale_composed_weights(&w, &[0.0, 3.0], 1.0);
+        assert!((composed.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(
+            composed[0] > composed[1],
+            "equal data, stale member must weigh less: {composed:?}"
+        );
+    }
+
+    #[test]
+    fn fold_of_identical_params_is_bit_identical() {
+        property("async fold fixed point", 64, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let params = g.f32_vec(n, -2.0, 2.0);
+            let mut model = params.clone();
+            // any staleness mix, any β: folding the model into itself is a no-op
+            for _ in 0..g.usize_in(1, 5) {
+                let step = staleness_weight(g.f64_in(0.0, 20.0), g.f64_in(0.0, 3.0));
+                fold_stale(&mut model, &params, step);
+            }
+            for (a, b) in model.iter().zip(&params) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fixed point drifted");
+            }
+        });
+    }
+
+    #[test]
+    fn fold_moves_toward_the_row() {
+        let mut m = vec![0.0f32, 1.0];
+        fold_stale(&mut m, &[1.0, 1.0], 0.5);
+        assert_eq!(m, vec![0.5, 1.0]);
+        fold_stale(&mut m, &[1.0, 1.0], 1.0);
+        assert_eq!(m, vec![1.0, 1.0]);
     }
 
     #[test]

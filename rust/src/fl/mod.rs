@@ -8,5 +8,5 @@ pub mod client;
 pub mod evaluate;
 pub mod local;
 
-pub use aggregate::{fedavg_weights, quality_weights};
+pub use aggregate::{fedavg_weights, fold_stale, quality_weights, stale_composed_weights, staleness_weight};
 pub use client::SatClient;

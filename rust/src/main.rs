@@ -109,6 +109,17 @@ COMMON OPTIONS
                                  --scenario-eclipse 0|1
   --outage P                     transient per-round outage probability
                                  (runs under every scenario preset)
+  --aggregation sync|buffered|async
+                                 intra-cluster aggregation plane: the round
+                                 barrier (default), FedBuff-style buffered
+                                 merges when the PS buffer hits its goal
+                                 count, or per-arrival async folds. Knobs:
+                                 --staleness-beta F   staleness discount
+                                                      exponent 1/(1+τ)^β
+                                                      (default 0.5)
+                                 --buffer-size N      merge goal count
+                                                      (0 = auto: the
+                                                      cluster member count)
   --max-ground-wait S            event timeline: seconds a PS may wait for a
                                  window before going stale (default 7000)
   --window-step S                event timeline: window-search sampling step
@@ -162,13 +173,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (manifest, rt) = load_runtime(&cfg)?;
     eprintln!(
         "running {method} on {} (K={}, clients={}, rounds≤{}, timeline={}, scenario={}, \
-         platform={})",
+         aggregation={}, platform={})",
         cfg.dataset.name(),
         cfg.clusters,
         cfg.clients,
         cfg.rounds,
         cfg.timeline.name(),
         cfg.scenario.kind.name(),
+        cfg.aggregation.name(),
         rt.platform()
     );
     let res = run_method(&cfg, &manifest, &rt, method)?;
@@ -198,6 +210,17 @@ fn print_result(res: &RunResult) {
     }
     if res.ledger.straggler_wait_s > 0.0 {
         println!("  straggler wait: {:.0} s of slowed compute", res.ledger.straggler_wait_s);
+    }
+    if res.ledger.buffered_merges > 0 {
+        println!(
+            "  buffered aggr : {} staleness-weighted merge(s), idle {:.0} s, stale {:.0} s",
+            res.ledger.buffered_merges, res.ledger.idle_s, res.ledger.stale_s
+        );
+        let h = &res.ledger.staleness_hist;
+        println!(
+            "  staleness hist: τ=0:{} 1:{} 2:{} 3:{} ≥4:{}",
+            h[0], h[1], h[2], h[3], h[4]
+        );
     }
     match res.converged_at {
         Some((round, t, e)) => {

@@ -48,6 +48,22 @@ pub struct Ledger {
     /// straggler slowdowns (already included in `time_s` when the slowed
     /// member was on its cluster's critical path).
     pub straggler_wait_s: f64,
+    /// Aggregation plane: staleness-weighted merges performed under
+    /// `--aggregation buffered|async` (sync runs keep this at 0).
+    pub buffered_merges: usize,
+    /// Aggregation plane: cumulative time contributions sat in a PS's
+    /// merge buffer waiting for the goal count — satellite *idleness*
+    /// (the FedSpace tradeoff's first axis; diagnostic, already inside
+    /// `time_s`).
+    pub idle_s: f64,
+    /// Aggregation plane: cumulative model-version lag of merged
+    /// contributions, expressed in publish-timestamp seconds — model
+    /// *staleness* (the tradeoff's second axis).
+    pub stale_s: f64,
+    /// Aggregation plane: merged contributions bucketed by integer
+    /// staleness τ = 0, 1, 2, 3, ≥ 4 (fixed-size — no allocation on the
+    /// round path).
+    pub staleness_hist: [usize; 5],
 }
 
 impl Ledger {
@@ -98,6 +114,25 @@ impl Ledger {
     pub fn add_straggler_wait(&mut self, dt: f64) {
         assert!(dt >= 0.0 && dt.is_finite(), "bad straggler wait {dt}");
         self.straggler_wait_s += dt;
+    }
+
+    /// Record one staleness-weighted merge.
+    pub fn add_buffered_merge(&mut self) {
+        self.buffered_merges += 1;
+    }
+
+    /// Record buffer-wait idleness (contribution arrival → merge).
+    pub fn add_idle(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad idle increment {dt}");
+        self.idle_s += dt;
+    }
+
+    /// Record model-version staleness of a merged contribution, both as
+    /// publish-lag seconds and as an integer-τ histogram bump.
+    pub fn add_staleness(&mut self, lag_s: f64, tau: usize) {
+        assert!(lag_s >= 0.0 && lag_s.is_finite(), "bad staleness lag {lag_s}");
+        self.stale_s += lag_s;
+        self.staleness_hist[tau.min(4)] += 1;
     }
 
     /// Add consumed energy.
@@ -199,6 +234,28 @@ mod tests {
     #[should_panic(expected = "bad straggler wait")]
     fn rejects_negative_straggler_wait() {
         Ledger::new().add_straggler_wait(-1.0);
+    }
+
+    #[test]
+    fn aggregation_counters_accumulate_and_saturate() {
+        let mut l = Ledger::new();
+        l.add_buffered_merge();
+        l.add_buffered_merge();
+        l.add_idle(3.0);
+        l.add_idle(1.5);
+        l.add_staleness(0.0, 0);
+        l.add_staleness(12.5, 2);
+        l.add_staleness(40.0, 9); // deep staleness saturates the last bucket
+        assert_eq!(l.buffered_merges, 2);
+        assert_eq!(l.idle_s, 4.5);
+        assert_eq!(l.stale_s, 52.5);
+        assert_eq!(l.staleness_hist, [1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad idle increment")]
+    fn rejects_negative_idle() {
+        Ledger::new().add_idle(-0.5);
     }
 
     #[test]

@@ -28,6 +28,19 @@ pub fn to_json(ledger: &Ledger) -> Json {
         ("ground_wait_s", Json::num(ledger.ground_wait_s)),
         ("faults_injected", Json::num(ledger.faults_injected as f64)),
         ("straggler_wait_s", Json::num(ledger.straggler_wait_s)),
+        ("buffered_merges", Json::num(ledger.buffered_merges as f64)),
+        ("idle_s", Json::num(ledger.idle_s)),
+        ("stale_s", Json::num(ledger.stale_s)),
+        (
+            "staleness_hist",
+            Json::Arr(
+                ledger
+                    .staleness_hist
+                    .iter()
+                    .map(|&n| Json::num(n as f64))
+                    .collect(),
+            ),
+        ),
         (
             "records",
             Json::Arr(
@@ -91,6 +104,11 @@ mod tests {
         // scenario counters ride along for golden-trajectory diffs
         assert_eq!(parsed.get("faults_injected").as_usize(), Some(0));
         assert_eq!(parsed.get("straggler_wait_s").as_f64(), Some(0.0));
+        // aggregation-plane counters too (sync runs serialise zeros)
+        assert_eq!(parsed.get("buffered_merges").as_usize(), Some(0));
+        assert_eq!(parsed.get("idle_s").as_f64(), Some(0.0));
+        assert_eq!(parsed.get("stale_s").as_f64(), Some(0.0));
+        assert_eq!(parsed.get("staleness_hist").as_arr().unwrap().len(), 5);
     }
 
     #[test]

@@ -34,8 +34,17 @@ pub enum Event {
     /// the matching [`Event::WindowOpen`] pops (that is when the antenna
     /// commits), so a transfer never starts after this.
     WindowClose { cluster: usize },
-    /// An evaluation point is due. Reserved for time-driven evaluation
-    /// schedules; round-boundary evaluation does not need it.
+    /// A member's buffered/async contribution reached its PS: compute plus
+    /// uplink finished and the parameters sit in the PS's merge buffer.
+    /// Only scheduled under `--aggregation buffered|async`.
+    UploadReady { member: usize, cluster: usize },
+    /// A cluster PS's merge buffer reached its goal count; the
+    /// staleness-weighted fold runs at this timestamp. Only scheduled
+    /// under `--aggregation buffered|async`.
+    MergeDue { cluster: usize },
+    /// An evaluation point is due. Under `--aggregation buffered|async`
+    /// the eval cadence decouples from the round barrier: evaluation fires
+    /// when this pops, not when a round index divides `eval_every`.
     EvalDue { round: usize },
     /// A typed fault onset or recovery ([`crate::sim::faults::Fault`]).
     /// Scheduled by the scenario engine at **round-indexed** timestamps
@@ -161,6 +170,65 @@ mod tests {
         assert_eq!(q.pop().unwrap().event, Event::WindowOpen { cluster: 1 });
         assert_eq!(q.pop().unwrap().at, 4.0);
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn upload_and_merge_events_flow_through_the_queue() {
+        // the buffered plane's event shapes ride the same queue: uploads
+        // arrive at their compute+uplink offsets, the merge goal fires last
+        let mut q = EventQueue::new();
+        q.push(7.5, Event::MergeDue { cluster: 1 });
+        q.push(2.5, Event::UploadReady { member: 3, cluster: 1 });
+        q.push(2.5, Event::UploadReady { member: 4, cluster: 1 });
+        assert_eq!(q.pop().unwrap().event, Event::UploadReady { member: 3, cluster: 1 });
+        assert_eq!(q.pop().unwrap().event, Event::UploadReady { member: 4, cluster: 1 });
+        assert_eq!(q.pop().unwrap().event, Event::MergeDue { cluster: 1 });
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn random_interleaving_pops_non_decreasing_with_fifo_ties() {
+        use crate::util::quickprop::{property, Gen};
+        property("queue pops non-decreasing, FIFO among ties", 128, |g: &mut Gen| {
+            let mut q = EventQueue::new();
+            let mut popped: Vec<Scheduled> = Vec::new();
+            let ops = g.usize_in(1, 64);
+            for _ in 0..ops {
+                if g.bool() || q.is_empty() {
+                    // a coarse grid of times forces plenty of exact ties
+                    let at = g.usize_in(0, 8) as f64;
+                    let member = g.usize_in(0, 31);
+                    q.push(at, Event::UploadReady { member, cluster: 0 });
+                } else {
+                    popped.push(q.pop().unwrap());
+                }
+            }
+            while let Some(s) = q.pop() {
+                popped.push(s);
+            }
+            // interleaved pushes may rewind time between drains, so the
+            // definitive check replays every event into a fresh queue and
+            // verifies the full drain is sorted with FIFO tie-breaks
+            let mut replay = EventQueue::new();
+            for s in &popped {
+                replay.push(s.at, s.event);
+            }
+            let mut last: Option<Scheduled> = None;
+            while let Some(s) = replay.pop() {
+                if let Some(prev) = last {
+                    assert!(
+                        s.at >= prev.at,
+                        "time went backwards: {} after {}",
+                        s.at,
+                        prev.at
+                    );
+                    if s.at == prev.at {
+                        assert!(s.seq > prev.seq, "tie broke FIFO order");
+                    }
+                }
+                last = Some(s);
+            }
+        });
     }
 
     #[test]

@@ -55,6 +55,20 @@ impl Fault {
                 | Fault::SlowdownStart { .. }
         )
     }
+
+    /// The restore event that undoes this onset (identity for restores).
+    /// The scenario engine schedules every onset paired with exactly this
+    /// event, which is what keeps [`FaultState::apply`] total over the
+    /// replayed stream at any (round-indexed *or* continuous) timestamps.
+    pub fn recovery(&self) -> Fault {
+        match *self {
+            Fault::SatFail { sat } => Fault::SatRecover { sat },
+            Fault::GroundOutage { station } => Fault::GroundRestore { station },
+            Fault::LinkDegrade { sat, milli } => Fault::LinkRestore { sat, milli },
+            Fault::SlowdownStart { sat, milli } => Fault::SlowdownEnd { sat, milli },
+            restore => restore,
+        }
+    }
 }
 
 /// Convert a milli-unit factor to the f64 multiplier it encodes.
@@ -146,6 +160,29 @@ mod tests {
         assert!(!Fault::GroundRestore { station: 1 }.is_onset());
         assert!(!Fault::LinkRestore { sat: 0, milli: 500 }.is_onset());
         assert!(!Fault::SlowdownEnd { sat: 0, milli: 2000 }.is_onset());
+    }
+
+    #[test]
+    fn recovery_pairs_with_its_onset() {
+        let onsets = [
+            Fault::SatFail { sat: 3 },
+            Fault::GroundOutage { station: 1 },
+            Fault::LinkDegrade { sat: 2, milli: 400 },
+            Fault::SlowdownStart { sat: 0, milli: 2000 },
+        ];
+        for onset in onsets {
+            let rec = onset.recovery();
+            assert!(!rec.is_onset(), "{onset:?} paired with onset {rec:?}");
+            assert_eq!(rec.recovery(), rec, "recovery of a restore is itself");
+            // applying the pair round-trips the state to nominal
+            let mut s = FaultState::new(4, 2);
+            s.apply(onset).unwrap();
+            s.apply(rec).unwrap();
+            assert_eq!(s.sat_down, vec![0; 4]);
+            assert_eq!(s.ground_down, vec![0; 2]);
+            assert_eq!(s.link_factor, vec![1.0; 4]);
+            assert_eq!(s.compute_slowdown, vec![1.0; 4]);
+        }
     }
 
     #[test]

@@ -226,8 +226,13 @@ pub struct Availability {
 /// Per-run fault-injection engine: owns the fault event queue and the
 /// event-sourced [`FaultState`], and folds both with the stateless
 /// transient-outage and eclipse processes into one [`Availability`] per
-/// round. Construct once per trial; call [`ScenarioEngine::advance_round`]
-/// exactly once per round, in round order.
+/// advance. Construct once per trial; drive it either per round
+/// ([`ScenarioEngine::advance_round`], the sync coordinator) or at
+/// arbitrary non-decreasing event times
+/// ([`ScenarioEngine::advance_to`], the buffered/async plane). Both are
+/// the same machine: round `r` is event time `r` seconds of round-time,
+/// and the per-round onset draws fire exactly once per integer boundary
+/// no matter how finely the interval is sampled.
 #[derive(Debug)]
 pub struct ScenarioEngine {
     cfg: ScenarioConfig,
@@ -240,6 +245,15 @@ pub struct ScenarioEngine {
     queue: EventQueue,
     state: FaultState,
     in_eclipse: Vec<bool>,
+    /// Highest integer round boundary whose onset draws have run — the
+    /// cursor that guarantees each boundary's draws happen exactly once.
+    drawn_to: u64,
+    /// Monotone clock of the last `advance_to` (round-time units).
+    advanced_to: f64,
+    /// Transient-outage fold of the last crossed boundary, reused by
+    /// fractional advances inside the same round (a transient outage
+    /// lasts its whole round; re-drawing it mid-round would double-fire).
+    transient: Vec<bool>,
 }
 
 impl ScenarioEngine {
@@ -263,6 +277,9 @@ impl ScenarioEngine {
             queue: EventQueue::new(),
             state: FaultState::new(n_sats, n_stations),
             in_eclipse: vec![false; n_sats],
+            drawn_to: 0,
+            advanced_to: 0.0,
+            transient: vec![false; n_sats],
         })
     }
 
@@ -274,12 +291,69 @@ impl ScenarioEngine {
     /// Inject this round's new faults, replay every due fault event, and
     /// fold the availability the round runs under. `positions` are the
     /// satellites' ECI positions at the round start (drives the eclipse
-    /// geometry; ignored unless the eclipse process is on).
+    /// geometry; ignored unless the eclipse process is on). Exactly
+    /// [`ScenarioEngine::advance_to`] at event time `round` — the
+    /// round-indexed schedule lands every fault at the precise timestamp
+    /// the old round boundary implied (pinned by `tests/scenarios.rs`).
     pub fn advance_round(&mut self, round: u64, positions: &[Vec3]) -> Availability {
-        let c = self.cfg;
+        self.advance_to(round as f64, positions)
+    }
 
-        // 1. schedule new fault onsets (and their recoveries) from the
-        //    stateless per-(round, satellite) streams
+    /// Advance the fault plane to continuous event time `rtime`
+    /// (round-time units; must be non-decreasing across calls). Crossing
+    /// an integer round boundary runs that boundary's onset draws and
+    /// transient coin flips exactly once — fractional re-samples inside a
+    /// round replay only queued events, so no onset, recovery or
+    /// transient outage can ever double-fire.
+    pub fn advance_to(&mut self, rtime: f64, positions: &[Vec3]) -> Availability {
+        assert!(rtime.is_finite() && rtime >= 0.0, "bad scenario time {rtime}");
+        assert!(
+            rtime >= self.advanced_to,
+            "scenario time went backwards: {rtime} after {}",
+            self.advanced_to
+        );
+        self.advanced_to = rtime;
+
+        let mut injected = 0usize;
+        // 1. cross every integer boundary up to rtime in order: draw that
+        //    boundary's onsets, apply its due events, refresh transients.
+        //    Draws run before the boundary's own events apply, exactly as
+        //    the round-indexed engine did (a satellite recovering at
+        //    round r is still down for round r's onset guard).
+        let hi = rtime.floor() as u64;
+        while self.drawn_to < hi {
+            let round = self.drawn_to + 1;
+            self.draw_onsets(round);
+            injected += self.replay_due(round as f64);
+            injected += self.refresh_transients(round);
+            self.drawn_to = round;
+        }
+        // 2. the fractional tail: anything `push_at` scheduled strictly
+        //    between the last boundary and rtime
+        injected += self.replay_due(rtime);
+        // 3. eclipse power-save tracks the sampled geometry continuously;
+        //    the in/out latch counts each shadow entry exactly once
+        injected += self.refresh_eclipse(positions);
+
+        // 4. fold
+        let mut unreachable = self.transient.clone();
+        for sat in 0..self.n_sats {
+            unreachable[sat] =
+                unreachable[sat] || self.state.sat_down[sat] > 0 || self.in_eclipse[sat];
+        }
+        Availability {
+            unreachable,
+            link_factor: self.state.link_factor.clone(),
+            compute_slowdown: self.state.compute_slowdown.clone(),
+            ground_down: self.state.ground_down.iter().map(|&d| d > 0).collect(),
+            faults_injected: injected,
+        }
+    }
+
+    /// Schedule new fault onsets (and their recoveries) for one round
+    /// boundary from the stateless per-(round, entity) streams.
+    fn draw_onsets(&mut self, round: u64) {
+        let c = self.cfg;
         let sat_processes =
             c.sat_fail_prob > 0.0 || c.link_degrade_prob > 0.0 || c.straggler_prob > 0.0;
         if sat_processes {
@@ -322,10 +396,13 @@ impl ScenarioEngine {
                 }
             }
         }
+    }
 
-        // 2. replay every fault event due by this round into the state
+    /// Replay every fault event due by `t` into the state; returns the
+    /// number of onsets applied.
+    fn replay_due(&mut self, t: f64) -> usize {
         let mut injected = 0usize;
-        while self.queue.peek_time().is_some_and(|t| t <= round as f64) {
+        while self.queue.peek_time().is_some_and(|due| due <= t) {
             let ev = self.queue.pop().expect("peeked event vanished");
             let Event::Fault { fault } = ev.event else {
                 unreachable!("scenario queue held a non-fault event");
@@ -337,25 +414,17 @@ impl ScenarioEngine {
                 .apply(fault)
                 .expect("paired fault schedule produced an unmatched restore");
         }
+        injected
+    }
 
-        // 3. eclipse power-save: deterministic shadow geometry, counted as
-        //    an injection on each shadow entry
-        if c.eclipse {
-            debug_assert_eq!(positions.len(), self.n_sats);
-            for (sat, p) in positions.iter().enumerate() {
-                let shadowed = in_earth_shadow(*p);
-                if shadowed && !self.in_eclipse[sat] {
-                    injected += 1;
-                }
-                self.in_eclipse[sat] = shadowed;
-            }
-        }
-
-        // 4. transient per-round outages (the legacy mobility coin flip,
-        //    re-seeded onto a stateless stream)
-        let mut unreachable = vec![false; self.n_sats];
+    /// Re-draw the transient per-round outages for one boundary (the
+    /// legacy mobility coin flip, re-seeded onto a stateless stream);
+    /// returns the number of outages drawn.
+    fn refresh_transients(&mut self, round: u64) -> usize {
+        let mut injected = 0usize;
+        self.transient.iter_mut().for_each(|t| *t = false);
         if self.outage_prob > 0.0 {
-            for (sat, out) in unreachable.iter_mut().enumerate() {
+            for (sat, out) in self.transient.iter_mut().enumerate() {
                 let mut rng = Rng::new(stream_seed(self.seed ^ TRANSIENT_SALT, round, sat as u64));
                 if rng.uniform() < self.outage_prob {
                     *out = true;
@@ -363,23 +432,37 @@ impl ScenarioEngine {
                 }
             }
         }
+        injected
+    }
 
-        // 5. fold
-        for sat in 0..self.n_sats {
-            unreachable[sat] =
-                unreachable[sat] || self.state.sat_down[sat] > 0 || self.in_eclipse[sat];
+    /// Update the eclipse latch from the sampled positions; returns the
+    /// number of fresh shadow entries.
+    fn refresh_eclipse(&mut self, positions: &[Vec3]) -> usize {
+        if !self.cfg.eclipse {
+            return 0;
         }
-        Availability {
-            unreachable,
-            link_factor: self.state.link_factor.clone(),
-            compute_slowdown: self.state.compute_slowdown.clone(),
-            ground_down: self.state.ground_down.iter().map(|&d| d > 0).collect(),
-            faults_injected: injected,
+        debug_assert_eq!(positions.len(), self.n_sats);
+        let mut injected = 0usize;
+        for (sat, p) in positions.iter().enumerate() {
+            let shadowed = in_earth_shadow(*p);
+            if shadowed && !self.in_eclipse[sat] {
+                injected += 1;
+            }
+            self.in_eclipse[sat] = shadowed;
         }
+        injected
+    }
+
+    /// Schedule a typed fault at an exact continuous event time. Faults
+    /// drawn by the engine itself land on integer round boundaries; this
+    /// entry point exists for callers (and tests) that inject at
+    /// fractional times under the buffered/async plane.
+    pub fn push_at(&mut self, at: f64, fault: Fault) {
+        self.queue.push(at, Event::Fault { fault });
     }
 
     fn push(&mut self, round: u64, fault: Fault) {
-        self.queue.push(round as f64, Event::Fault { fault });
+        self.push_at(round as f64, fault);
     }
 }
 
@@ -540,6 +623,78 @@ mod tests {
         let a = e.advance_round(2, &pos);
         assert_eq!(a.unreachable, vec![true, false]);
         assert_eq!(a.faults_injected, 0);
+    }
+
+    #[test]
+    fn fractional_advances_match_integer_advances_exactly() {
+        // sampling the fault plane at fractional times between the round
+        // boundaries changes nothing: the integer-boundary folds and the
+        // total injection count are bit-identical to per-round advances
+        let cfg = ScenarioConfig {
+            sat_fail_prob: 0.2,
+            link_degrade_prob: 0.2,
+            straggler_prob: 0.2,
+            ground_outage_prob: 0.3,
+            ..ScenarioConfig::preset(ScenarioKind::Churn)
+        };
+        let mut a = ScenarioEngine::new(cfg, 0.05, 99, 12, 3).unwrap();
+        let mut b = ScenarioEngine::new(cfg, 0.05, 99, 12, 3).unwrap();
+        let p = positions(12);
+        let (mut inj_a, mut inj_b) = (0usize, 0usize);
+        for round in 1..=10u64 {
+            let ra = a.advance_round(round, &p);
+            inj_a += ra.faults_injected;
+            inj_b += b.advance_to(round as f64 - 0.5, &p).faults_injected;
+            let rb = b.advance_to(round as f64, &p);
+            inj_b += rb.faults_injected;
+            assert_eq!(ra.unreachable, rb.unreachable, "round {round}");
+            assert_eq!(ra.link_factor, rb.link_factor, "round {round}");
+            assert_eq!(ra.compute_slowdown, rb.compute_slowdown, "round {round}");
+            assert_eq!(ra.ground_down, rb.ground_down, "round {round}");
+        }
+        assert_eq!(inj_a, inj_b, "fractional sampling changed the fault count");
+        assert!(inj_a > 0, "the comparison must exercise real faults");
+    }
+
+    #[test]
+    fn repeated_fractional_advances_never_double_fire() {
+        let cfg = ScenarioConfig {
+            sat_fail_prob: 0.5,
+            ..ScenarioConfig::preset(ScenarioKind::Churn)
+        };
+        let mut e = ScenarioEngine::new(cfg, 0.1, 7, 16, 1).unwrap();
+        let p = positions(16);
+        let _ = e.advance_to(1.0, &p);
+        let mut again = 0usize;
+        for step in 1..=4 {
+            again += e.advance_to(1.0 + 0.2 * step as f64, &p).faults_injected;
+        }
+        assert_eq!(again, 0, "no new integer boundary, no new draws");
+    }
+
+    #[test]
+    fn pushed_faults_apply_at_their_exact_continuous_times() {
+        let mut e = ScenarioEngine::new(ScenarioConfig::default(), 0.0, 1, 4, 1).unwrap();
+        e.push_at(1.25, Fault::SatFail { sat: 2 });
+        e.push_at(2.75, Fault::SatRecover { sat: 2 });
+        let p = positions(4);
+        assert!(!e.advance_to(1.0, &p).unreachable[2], "not yet due");
+        let a = e.advance_to(1.25, &p);
+        assert!(a.unreachable[2], "onset applies at its exact timestamp");
+        assert_eq!(a.faults_injected, 1);
+        assert!(e.advance_to(2.5, &p).unreachable[2], "still down");
+        let a = e.advance_to(2.75, &p);
+        assert!(!a.unreachable[2], "recovery applies at its exact timestamp");
+        assert_eq!(a.faults_injected, 0, "a recovery is not an injection");
+    }
+
+    #[test]
+    #[should_panic(expected = "scenario time went backwards")]
+    fn advance_to_rejects_time_reversal() {
+        let mut e = ScenarioEngine::new(ScenarioConfig::default(), 0.0, 2, 2, 1).unwrap();
+        let p = positions(2);
+        e.advance_to(2.0, &p);
+        e.advance_to(1.0, &p);
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Aggregation-plane acceptance tests (host backend — these always run).
+//!
+//! The differential harness behind `--aggregation`:
+//!
+//! 1. `sync` is the pre-existing path, byte for byte: its serialised ledger
+//!    is identical to a default-config run and every buffered-plane counter
+//!    stays at zero.
+//! 2. `buffered` with the auto buffer size (goal = cluster size) collapses
+//!    onto `sync` bit-exactly — same accuracy/loss/time/energy trajectory,
+//!    same recluster and MAML counters — because a full buffer merges at
+//!    the last arrival with all-fresh weights, which short-circuits to the
+//!    sync weight vector.
+//! 3. A partial buffer genuinely changes the semantics: parked
+//!    contributions go stale, the staleness histogram fills, and the
+//!    discount `1/(1+τ)^β` bends the trajectory away from sync.
+//! 4. `buffered` and `async` keep the engine's worker-count determinism:
+//!    the full metrics JSON is byte-identical across `--workers 1|4`.
+
+use fedhc::config::{AggregationMode, ExperimentConfig, Timeline};
+use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
+use fedhc::metrics::recorder;
+use fedhc::orbit::GroundStation;
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+/// Run FedHC under the given aggregation mode; `all_visible` swaps the
+/// ground segment for a single station that sees every satellite always.
+fn run(cfg: &ExperimentConfig, mode: AggregationMode, all_visible: bool) -> RunResult {
+    let manifest = Manifest::host();
+    let mut cfg = cfg.clone();
+    cfg.aggregation = mode;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    if all_visible {
+        // below the geometric minimum of -90°: always visible, everywhere
+        trial.ground = vec![GroundStation::new(0, "everywhere", 0.0, 0.0, -91.0)];
+    }
+    run_clustered(&mut trial, Strategy::fedhc()).unwrap()
+}
+
+fn base_cfg(timeline: Timeline) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 6;
+    cfg.target_accuracy = None;
+    cfg.timeline = timeline;
+    cfg
+}
+
+/// `--aggregation sync` *is* the pre-PR engine: a default config (which
+/// never mentions aggregation at all) serialises to the same bytes, and
+/// none of the buffered-plane counters ever move.
+#[test]
+fn sync_mode_is_byte_identical_to_the_default_config() {
+    for timeline in [Timeline::Analytic, Timeline::Event] {
+        let cfg = base_cfg(timeline);
+        assert_eq!(cfg.aggregation, AggregationMode::Sync, "presets default to sync");
+        let default = run(&cfg, cfg.aggregation, false);
+        let explicit = run(&cfg, AggregationMode::Sync, false);
+        let a = recorder::to_json(&default.ledger).to_pretty();
+        let b = recorder::to_json(&explicit.ledger).to_pretty();
+        assert_eq!(a, b, "{}: explicit sync drifted from the default path", timeline.name());
+        assert_eq!(default.ledger.buffered_merges, 0);
+        assert_eq!(default.ledger.idle_s, 0.0);
+        assert_eq!(default.ledger.stale_s, 0.0);
+        assert_eq!(default.ledger.staleness_hist, [0; 5]);
+    }
+}
+
+/// The degeneracy pin: buffered aggregation with the auto buffer size
+/// waits for every present member, so the merge happens at the last
+/// arrival with all-fresh (τ = 0) weights — the learning trajectory, the
+/// simulated clock, and the energy ledger match sync bit for bit. Only the
+/// collection-plane bookkeeping (merge count, idle seconds) is new.
+#[test]
+fn buffered_auto_goal_degenerates_to_sync_bit_exactly() {
+    for timeline in [Timeline::Analytic, Timeline::Event] {
+        let cfg = base_cfg(timeline);
+        let sync = run(&cfg, AggregationMode::Sync, true);
+        let buffered = run(&cfg, AggregationMode::Buffered, true);
+        assert_eq!(
+            sync.ledger.records.len(),
+            buffered.ledger.records.len(),
+            "{}: record counts diverged",
+            timeline.name()
+        );
+        for (s, b) in sync.ledger.records.iter().zip(&buffered.ledger.records) {
+            assert_eq!(s.round, b.round);
+            assert_eq!(s.accuracy, b.accuracy, "round {}: accuracy diverged", s.round);
+            assert_eq!(s.loss, b.loss, "round {}: loss diverged", s.round);
+            assert_eq!(s.time_s, b.time_s, "round {}: time diverged", s.round);
+            assert_eq!(s.energy_j, b.energy_j, "round {}: energy diverged", s.round);
+            assert_eq!(s.reclustered, b.reclustered, "round {}", s.round);
+        }
+        assert_eq!(sync.ledger.time_s, buffered.ledger.time_s);
+        assert_eq!(sync.ledger.energy_j, buffered.ledger.energy_j);
+        assert_eq!(sync.ledger.reclusters, buffered.ledger.reclusters);
+        assert_eq!(sync.ledger.maml_adaptations, buffered.ledger.maml_adaptations);
+        assert_eq!(sync.final_accuracy, buffered.final_accuracy);
+        // the collection plane did run: one merge per cluster-round, and
+        // everyone but the last arrival sat idle in the buffer
+        assert!(buffered.ledger.buffered_merges > 0, "no buffered merge ever fired");
+        assert!(buffered.ledger.idle_s > 0.0, "a full buffer still has early arrivals");
+        // a full buffer is all-fresh: nothing ever went stale
+        assert_eq!(buffered.ledger.staleness_hist[1..], [0; 4]);
+        assert_eq!(buffered.ledger.stale_s, 0.0);
+    }
+}
+
+/// A partial buffer is *not* sync: with goal 2 the merge fires at the
+/// second arrival, later uploads park across rounds, and the staleness
+/// discount reweights them when they finally merge.
+#[test]
+fn partial_buffers_go_stale_and_bend_the_trajectory() {
+    let cfg = base_cfg(Timeline::Analytic);
+    let sync = run(&cfg, AggregationMode::Sync, true);
+    let mut part = cfg.clone();
+    part.buffer_size = 2;
+    let buffered = run(&part, AggregationMode::Buffered, true);
+    let stale: usize = buffered.ledger.staleness_hist[1..].iter().sum();
+    assert!(stale > 0, "goal 2 on larger clusters must park someone past a version bump");
+    assert!(buffered.ledger.stale_s > 0.0);
+    assert!(
+        buffered.final_accuracy != sync.final_accuracy
+            || buffered.ledger.time_s != sync.ledger.time_s,
+        "a partial buffer must change either the trajectory or the clock"
+    );
+}
+
+/// Buffered and async drains are event-ordered (timestamp, then FIFO
+/// sequence), never thread-ordered: the full metrics JSON is byte-identical
+/// across worker counts.
+#[test]
+fn buffered_and_async_are_deterministic_across_worker_counts() {
+    for mode in [AggregationMode::Buffered, AggregationMode::Async] {
+        let run_workers = |workers: usize| {
+            let mut cfg = base_cfg(Timeline::Event);
+            cfg.workers = workers;
+            cfg.buffer_size = 2;
+            run(&cfg, mode, false)
+        };
+        let a = run_workers(1);
+        let b = run_workers(4);
+        let aj = recorder::to_json(&a.ledger).to_pretty();
+        let bj = recorder::to_json(&b.ledger).to_pretty();
+        assert_eq!(aj, bj, "{mode:?}: trajectory depends on worker count");
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+    }
+}

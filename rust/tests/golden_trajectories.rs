@@ -21,7 +21,7 @@
 //! subsequent run.
 
 use fedhc::baselines::run_cfedavg;
-use fedhc::config::{ExperimentConfig, Timeline};
+use fedhc::config::{AggregationMode, ExperimentConfig, Timeline};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
 use fedhc::metrics::recorder;
 use fedhc::runtime::{Manifest, ModelRuntime};
@@ -84,6 +84,59 @@ fn golden_trajectories_match_exactly() {
                  intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
                  --test golden_trajectories` and review the diff",
                 timeline.name()
+            );
+        }
+    }
+    if !seeded.is_empty() {
+        eprintln!("seeded {} golden file(s): {seeded:?} — commit them to pin", seeded.len());
+    }
+}
+
+/// The aggregation plane gets its own snapshots: FedHC and C-FedAvg under
+/// `--aggregation buffered` and `--aggregation async` with an explicit
+/// `--buffer-size 2`, so parking, staleness discounts, and the idle/stale
+/// ledger columns all genuinely engage (the auto buffer size would collapse
+/// onto the sync snapshots above and pin nothing new).
+fn run_aggregation(method: &str, mode: AggregationMode) -> String {
+    let manifest = Manifest::host();
+    let mut cfg = golden_cfg(Timeline::Event);
+    cfg.aggregation = mode;
+    cfg.buffer_size = 2;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = match method {
+        "fedhc" => run_clustered(&mut trial, Strategy::fedhc()).unwrap(),
+        "cfedavg" => run_cfedavg(&mut trial).unwrap(),
+        other => unreachable!("unknown aggregation golden method {other}"),
+    };
+    recorder::to_json(&res.ledger).to_pretty() + "\n"
+}
+
+#[test]
+fn golden_aggregation_trajectories_match_exactly() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    let mut seeded = Vec::new();
+    for method in ["fedhc", "cfedavg"] {
+        for mode in [AggregationMode::Buffered, AggregationMode::Async] {
+            let name = format!("{method}_{}.json", mode.name());
+            let path = dir.join(&name);
+            let got = run_aggregation(method, mode);
+            if update || !path.exists() {
+                std::fs::write(&path, &got).unwrap();
+                if !update {
+                    seeded.push(name);
+                }
+                continue;
+            }
+            let want = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                got, want,
+                "golden trajectory drifted for {method}/{} — if the change is \
+                 intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
+                 --test golden_trajectories` and review the diff",
+                mode.name()
             );
         }
     }

@@ -9,7 +9,10 @@ use fedhc::coordinator::fedhc::{build_topology, Strategy};
 use fedhc::coordinator::Trial;
 use fedhc::data::synth::synth_tiny;
 use fedhc::data::{partition_dirichlet, partition_iid};
-use fedhc::fl::aggregate::{fedavg_weights, quality_weights};
+use fedhc::fl::aggregate::{
+    aggregate, fedavg_weights, fold_stale, quality_weights, stale_composed_weights,
+    staleness_weight,
+};
 use fedhc::network::{LinkModel, NetworkParams};
 use fedhc::orbit::index::{assign_nearest_brute, los_neighbors_brute, SphereGrid};
 use fedhc::orbit::propagate::{Constellation, Snapshot};
@@ -18,6 +21,8 @@ use fedhc::orbit::walker::WalkerConstellation;
 use fedhc::orbit::{GroundStation, Vec3};
 use fedhc::runtime::host_model::reference;
 use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
+use fedhc::sim::events::{Event, EventQueue, Scheduled};
+use fedhc::sim::scenario::{ScenarioConfig, ScenarioEngine, ScenarioKind};
 use fedhc::util::quickprop::{property, Gen};
 use fedhc::util::Rng;
 
@@ -446,6 +451,138 @@ fn prop_blocked_kernels_bit_identical_to_scalar_reference() {
             .unwrap();
         assert_eq!(q_ref, q_new, "maml_step params diverged");
         assert_eq!(ql_ref.to_bits(), ql_new.to_bits(), "maml query loss diverged");
+    });
+}
+
+#[test]
+fn prop_event_queue_pops_non_decreasing_with_fifo_ties() {
+    // the buffered plane's ordering contract: pops come out in
+    // non-decreasing time, and same-timestamp events keep their insertion
+    // order — a coarse time grid forces plenty of exact ties
+    property("event queue time order + FIFO ties", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 200);
+        let mut q = EventQueue::new();
+        for member in 0..n {
+            let at = g.usize_in(0, 8) as f64 * 0.5;
+            q.push(at, Event::UploadReady { member, cluster: 0 });
+        }
+        let mut last: Option<Scheduled> = None;
+        let mut popped = 0usize;
+        while let Some(s) = q.pop() {
+            if let Some(prev) = &last {
+                assert!(s.at >= prev.at, "time went backwards: {} after {}", s.at, prev.at);
+                if s.at == prev.at {
+                    assert!(s.seq > prev.seq, "FIFO tie order violated at t={}", s.at);
+                }
+            }
+            last = Some(s);
+            popped += 1;
+        }
+        assert_eq!(popped, n, "queue lost or duplicated events");
+        assert!(q.is_empty());
+    });
+}
+
+#[test]
+fn prop_staleness_discount_is_bounded_and_composes_to_a_distribution() {
+    property("staleness discount well-formed", 60, |g: &mut Gen| {
+        let beta = g.f64_in(0.0, 4.0);
+        let tau = g.usize_in(0, 40) as f64;
+        let w = staleness_weight(tau, beta);
+        assert!(w > 0.0 && w <= 1.0, "w({tau},{beta}) = {w}");
+        assert!(
+            staleness_weight(tau + 1.0, beta) <= w,
+            "discount rose with staleness"
+        );
+        // freshness is an exact identity: pow(1, β) == 1 in IEEE 754
+        assert_eq!(staleness_weight(0.0, beta).to_bits(), 1.0f32.to_bits());
+        // composition with arbitrary staleness stays a distribution
+        let n = g.usize_in(1, 12);
+        let sizes: Vec<usize> = (0..n).map(|_| g.usize_in(1, 500)).collect();
+        let staleness: Vec<f64> = (0..n).map(|_| g.usize_in(0, 6) as f64).collect();
+        let composed = stale_composed_weights(&fedavg_weights(&sizes), &staleness, beta);
+        assert!((composed.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(composed.iter().all(|&x| x > 0.0));
+    });
+}
+
+#[test]
+fn prop_merging_an_already_agreed_model_is_an_exact_identity() {
+    // the fixed points the buffered/async planes lean on. A lone buffered
+    // contribution renormalises to weight exactly 1.0 (v/v == 1 for any
+    // finite nonzero v) so aggregate() hands the model back bit for bit;
+    // the async fold's u − m vanishes bitwise at any step size.
+    let manifest = Manifest::host();
+    let cfg = ExperimentConfig::tiny();
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    property("identical-params merge fixed point", 16, |g: &mut Gen| {
+        let p = rt.spec.param_count;
+        let model: Vec<f32> = (0..p).map(|_| g.f64_in(-1.5, 1.5) as f32).collect();
+        let tau = g.usize_in(0, 6) as f64;
+        let beta = g.f64_in(0.0, 3.0);
+        let weights =
+            stale_composed_weights(&fedavg_weights(&[g.usize_in(1, 400)]), &[tau], beta);
+        assert_eq!(
+            weights[0].to_bits(),
+            1.0f32.to_bits(),
+            "lone weight must renormalise to exactly 1"
+        );
+        let rows = [model.as_slice()];
+        let mut out = Vec::new();
+        aggregate(&rt, &rows, &weights, &mut out).unwrap();
+        for (a, b) in out.iter().zip(&model) {
+            assert_eq!(a.to_bits(), b.to_bits(), "merge moved an already-agreed model");
+        }
+        let mut folded = model.clone();
+        fold_stale(&mut folded, &model, staleness_weight(tau, beta));
+        for (a, b) in folded.iter().zip(&model) {
+            assert_eq!(a.to_bits(), b.to_bits(), "async fold moved an already-agreed model");
+        }
+    });
+}
+
+#[test]
+fn prop_fractional_scenario_advances_never_double_fire() {
+    // the continuous-time fault plane must be the *same machine* as the
+    // round-indexed one: sampling the interval (r-1, r) at arbitrary
+    // fractional times before landing on the boundary yields the same
+    // availability fold and the same onset count as one whole-round step —
+    // no onset, recovery, or transient outage fires twice or goes missing
+    property("advance_to == advance_round at boundaries", 12, |g: &mut Gen| {
+        let n_sats = g.usize_in(4, 24);
+        let n_stations = g.usize_in(1, 3);
+        let seed = g.u64();
+        let kind = if g.bool() { ScenarioKind::Churn } else { ScenarioKind::Stragglers };
+        let outage = g.f64_in(0.0, 0.3);
+        let positions = vec![Vec3::new(7.0e6, 0.0, 0.0); n_sats];
+        let mk = || {
+            ScenarioEngine::new(ScenarioConfig::preset(kind), outage, seed, n_sats, n_stations)
+                .unwrap()
+        };
+        let (mut whole, mut frac) = (mk(), mk());
+        let rounds = g.usize_in(2, 10) as u64;
+        for r in 1..=rounds {
+            let aw = whole.advance_round(r, &positions);
+            let mut frac_faults = 0usize;
+            let mut t = (r - 1) as f64;
+            for _ in 0..g.usize_in(0, 4) {
+                t = (t + g.f64_in(0.0, 0.2)).min(r as f64);
+                frac_faults += frac.advance_to(t, &positions).faults_injected;
+            }
+            let af = frac.advance_to(r as f64, &positions);
+            frac_faults += af.faults_injected;
+            assert_eq!(aw.unreachable, af.unreachable, "round {r}: availability diverged");
+            assert_eq!(aw.ground_down, af.ground_down, "round {r}: ground fold diverged");
+            assert_eq!(aw.link_factor, af.link_factor, "round {r}: link fold diverged");
+            assert_eq!(
+                aw.compute_slowdown, af.compute_slowdown,
+                "round {r}: slowdown fold diverged"
+            );
+            assert_eq!(
+                aw.faults_injected, frac_faults,
+                "round {r}: onsets double-fired or went missing"
+            );
+        }
     });
 }
 

@@ -6,7 +6,7 @@
 //! stateless `(seed, round, sat)` streams, so a scenario run is
 //! bit-identical at any `--workers` count.
 
-use fedhc::config::{ExperimentConfig, Timeline};
+use fedhc::config::{AggregationMode, ExperimentConfig, Timeline};
 use fedhc::coordinator::{run_clustered, run_scenario_matrix, RunResult, Strategy, Trial};
 use fedhc::runtime::{Manifest, ModelRuntime};
 use fedhc::sim::scenario::{ScenarioConfig, ScenarioEngine, ScenarioKind};
@@ -70,6 +70,43 @@ fn churn_preset_fires_recluster_and_is_worker_deterministic() {
     assert_eq!(base.ledger.straggler_wait_s, other.ledger.straggler_wait_s);
     assert_eq!(base.ledger.stale_passes, other.ledger.stale_passes);
     assert_eq!(base.final_accuracy, other.final_accuracy);
+}
+
+/// The aggregation plane rides the same fault plane. The buffered
+/// coordinator drives the scenario engine through the identical per-round
+/// schedule (`advance_round(r)` is `advance_to(r)` — the conversion pinned
+/// property-wise in `proptests.rs`), and with the auto buffer size every
+/// present member's upload merges at the last arrival with all-fresh
+/// weights. So the whole churn story — onsets, recoveries, dropout rates
+/// crossing `Z`, re-cluster rebuilds, MAML warm-starts — replays the sync
+/// run bit for bit, while the collection-plane counters prove the
+/// buffered machinery (not the sync fast path) actually ran.
+#[test]
+fn buffered_churn_replays_the_sync_fault_trajectory_bit_exactly() {
+    let sync = run_with(&churn_cfg(1), Strategy::fedhc());
+    assert!(sync.ledger.reclusters > 0, "the pin needs re-clustering to fire");
+    let mut cfg = churn_cfg(1);
+    cfg.aggregation = AggregationMode::Buffered;
+    let buf = run_with(&cfg, Strategy::fedhc());
+    assert_eq!(sync.ledger.records.len(), buf.ledger.records.len());
+    for (a, b) in sync.ledger.records.iter().zip(&buf.ledger.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.accuracy, b.accuracy, "round {}: accuracy diverged", a.round);
+        assert_eq!(a.loss, b.loss, "round {}: loss diverged", a.round);
+        assert_eq!(a.time_s, b.time_s, "round {}: time diverged", a.round);
+        assert_eq!(a.energy_j, b.energy_j, "round {}: energy diverged", a.round);
+        assert_eq!(a.reclustered, b.reclustered, "round {}: recluster diverged", a.round);
+    }
+    assert_eq!(sync.ledger.faults_injected, buf.ledger.faults_injected);
+    assert_eq!(sync.ledger.reclusters, buf.ledger.reclusters);
+    assert_eq!(sync.ledger.maml_adaptations, buf.ledger.maml_adaptations);
+    assert_eq!(sync.ledger.straggler_wait_s, buf.ledger.straggler_wait_s);
+    assert_eq!(sync.ledger.stale_passes, buf.ledger.stale_passes);
+    assert_eq!(sync.ledger.ground_wait_s, buf.ledger.ground_wait_s);
+    assert_eq!(sync.final_accuracy, buf.final_accuracy);
+    // the buffered plane genuinely ran: merges fired, early arrivals idled
+    assert!(buf.ledger.buffered_merges > 0);
+    assert_eq!(buf.ledger.stale_s, 0.0, "auto buffer size never parks anyone");
 }
 
 #[test]
