@@ -1,0 +1,151 @@
+//! Vendored minimal `wide`-style SIMD vector for the offline image: an
+//! 8-lane `f32` value type with the arithmetic the FedHC host kernels
+//! need, plus runtime AVX2 detection for the dispatch in
+//! `runtime::host_model`.
+//!
+//! The type is deliberately *portable*: it is a `#[repr(C, align(32))]`
+//! array of eight lanes with element-wise `Add`/`Sub`/`Mul`. Every method
+//! is `#[inline(always)]`, so when the ops are called from a
+//! `#[target_feature(enable = "avx2")]` function the compiler lowers each
+//! one to a single 256-bit vector instruction; called from ordinary code
+//! they autovectorise to whatever the baseline target supports. Lane
+//! arithmetic is exact IEEE-754 single precision either way — there is no
+//! FMA contraction and no reassociation inside a lane, which is what lets
+//! the host kernels keep their bit-exactness contract while vectorising.
+
+#![forbid(unsafe_code)]
+
+/// Eight `f32` lanes, element-wise arithmetic.
+#[allow(non_camel_case_types)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C, align(32))]
+pub struct f32x8 {
+    lanes: [f32; 8],
+}
+
+/// Lane count of [`f32x8`].
+pub const LANES: usize = 8;
+
+impl f32x8 {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> f32x8 {
+        f32x8 { lanes: [v; 8] }
+    }
+
+    /// Load the first eight elements of `src` (which must hold at least
+    /// eight).
+    #[inline(always)]
+    pub fn from_slice(src: &[f32]) -> f32x8 {
+        let mut lanes = [0.0f32; 8];
+        lanes.copy_from_slice(&src[..8]);
+        f32x8 { lanes }
+    }
+
+    /// Store the lanes into the first eight elements of `dst` (which must
+    /// hold at least eight).
+    #[inline(always)]
+    pub fn write_to_slice(self, dst: &mut [f32]) {
+        dst[..8].copy_from_slice(&self.lanes);
+    }
+
+    /// The lanes as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 8] {
+        self.lanes
+    }
+}
+
+impl std::ops::Add for f32x8 {
+    type Output = f32x8;
+
+    #[inline(always)]
+    fn add(self, rhs: f32x8) -> f32x8 {
+        let mut lanes = [0.0f32; 8];
+        for i in 0..8 {
+            lanes[i] = self.lanes[i] + rhs.lanes[i];
+        }
+        f32x8 { lanes }
+    }
+}
+
+impl std::ops::Sub for f32x8 {
+    type Output = f32x8;
+
+    #[inline(always)]
+    fn sub(self, rhs: f32x8) -> f32x8 {
+        let mut lanes = [0.0f32; 8];
+        for i in 0..8 {
+            lanes[i] = self.lanes[i] - rhs.lanes[i];
+        }
+        f32x8 { lanes }
+    }
+}
+
+impl std::ops::Mul for f32x8 {
+    type Output = f32x8;
+
+    #[inline(always)]
+    fn mul(self, rhs: f32x8) -> f32x8 {
+        let mut lanes = [0.0f32; 8];
+        for i in 0..8 {
+            lanes[i] = self.lanes[i] * rhs.lanes[i];
+        }
+        f32x8 { lanes }
+    }
+}
+
+/// Whether the running CPU supports AVX2 (always `false` off x86-64).
+/// Detection is cached by the standard library, so calling this on a hot
+/// path costs one relaxed atomic load.
+#[cfg(target_arch = "x86_64")]
+pub fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Whether the running CPU supports AVX2 (always `false` off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn have_avx2() -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_arithmetic_is_element_wise() {
+        let a = f32x8::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = f32x8::splat(0.5);
+        assert_eq!((a * b).to_array(), [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0]);
+        assert_eq!((a + b).to_array()[0], 1.5);
+        assert_eq!((a - b).to_array()[7], 7.5);
+    }
+
+    #[test]
+    fn lane_ops_are_exact_ieee_singles() {
+        // no FMA, no reassociation: each lane must equal the scalar op
+        let xs = [0.1f32, -2.5e-7, 3.9e8, -0.0, 1.0e-38, 7.7, -123.456, 42.0];
+        let ys = [9.3f32, 1.5e-3, -2.0e8, 0.0, 3.0e-38, -0.1, 654.321, -42.0];
+        let a = f32x8::from_slice(&xs);
+        let b = f32x8::from_slice(&ys);
+        let sum = (a + b).to_array();
+        let prod = (a * b).to_array();
+        let diff = (a - b).to_array();
+        for i in 0..8 {
+            assert_eq!(sum[i].to_bits(), (xs[i] + ys[i]).to_bits());
+            assert_eq!(prod[i].to_bits(), (xs[i] * ys[i]).to_bits());
+            assert_eq!(diff[i].to_bits(), (xs[i] - ys[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_slices() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let v = f32x8::from_slice(&src);
+        let mut dst = [0.0f32; 9];
+        v.write_to_slice(&mut dst);
+        assert_eq!(&dst[..8], &src[..8]);
+        assert_eq!(dst[8], 0.0, "store must touch exactly eight lanes");
+    }
+}

@@ -7,6 +7,7 @@
 use fedhc::baselines::run_cfedavg;
 use fedhc::config::{AggregationMode, ExperimentConfig};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::fl::CompressMode;
 use fedhc::metrics::report::format_fig3;
 use fedhc::metrics::Ledger;
 use fedhc::runtime::{Manifest, ModelRuntime};
@@ -27,9 +28,10 @@ fn series(cfg: ExperimentConfig, method: &'static str) -> Ledger {
 }
 
 fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
     let mut base = ExperimentConfig::tiny();
     base.target_accuracy = None;
-    base.rounds = 20;
+    base.rounds = if fast { 8 } else { 20 };
 
     let mut handles = Vec::new();
     for &method in METHODS {
@@ -103,5 +105,41 @@ fn main() {
             ledger.idle_s,
             ledger.stale_s
         );
+    }
+
+    // wire sweep: the same FedHC run under each `--compress` mode — uplink
+    // bytes shrink by the payload ratio while error feedback keeps the
+    // accuracy curve close to the dense run
+    for (label, mode) in [
+        ("none", CompressMode::None),
+        ("topk:0.1", CompressMode::TopK(0.1)),
+        ("int8", CompressMode::Int8),
+    ] {
+        let mut cfg = base.clone();
+        cfg.compress = mode;
+        let ledger = series(cfg, "FedHC");
+        let best = ledger.best_accuracy();
+        println!(
+            "compress {:<9}: time {:>9.0} s  energy {:>8.0} J  best acc {:>5.1}%  \
+             wire {:>9.0} B/round",
+            label,
+            ledger.time_s,
+            ledger.energy_j,
+            best * 100.0,
+            ledger.wire_bytes / base.rounds as f64
+        );
+        if matches!(mode, CompressMode::None) {
+            // the dense sweep leg is the same run as the Fig. 3 FedHC curve
+            assert_eq!(
+                best.to_bits(),
+                fedhc.to_bits(),
+                "--compress none drifted from the default FedHC run"
+            );
+        } else {
+            assert!(
+                best > fedhc - 0.15,
+                "compressed ({label}) accuracy collapsed: {best} vs dense {fedhc}"
+            );
+        }
     }
 }

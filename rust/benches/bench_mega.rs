@@ -21,6 +21,7 @@ use fedhc::clustering::kmeans::KMeans;
 use fedhc::clustering::ps_select::{select_parameter_servers, select_parameter_servers_los};
 use fedhc::config::ExperimentConfig;
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::fl::CompressMode;
 use fedhc::network::{LinkModel, NetworkParams};
 use fedhc::orbit::geo::default_ground_segment;
 use fedhc::orbit::index::{assign_nearest_brute, los_neighbors_brute, SphereGrid};
@@ -216,6 +217,20 @@ fn end_to_end(fast: bool) -> Json {
             trial.clients.iter().all(|c| c.params.is_empty()),
             "{preset}: pooled mode left resident client parameters"
         );
+        // wire plane: the same run under `--compress topk:0.1` must bill
+        // ≤ 15 % of the dense uplink bytes per round — a wire-format
+        // property (bit-packed indices), deterministic, so it is asserted
+        let bytes_per_round = res.ledger.wire_bytes / rounds as f64;
+        let mut topk_cfg = cfg.clone();
+        topk_cfg.compress = CompressMode::TopK(0.1);
+        let mut topk_trial = Trial::new(topk_cfg, &manifest, &rt).expect("trial (topk)");
+        let topk = run_clustered(&mut topk_trial, Strategy::fedhc()).expect("run (topk)");
+        let topk_bytes_per_round = topk.ledger.wire_bytes / rounds as f64;
+        let topk_ratio = topk_bytes_per_round / bytes_per_round;
+        assert!(
+            topk_ratio <= 0.15,
+            "{preset}: topk:0.1 billed {topk_ratio} of dense bytes (> 15 %)"
+        );
         println!(
             "  {preset:<12} {:>5} clients K={:<3} setup {:>8.0} ms | {rounds} rounds in {:>8.1} ms \
              ({rps:.2} rounds/s, sim {:.0} s, acc {:.1}%)",
@@ -225,6 +240,10 @@ fn end_to_end(fast: bool) -> Json {
             wall * 1e3,
             res.ledger.time_s,
             res.final_accuracy * 100.0,
+        );
+        println!(
+            "  {preset:<12} wire: dense {bytes_per_round:>12.0} B/round, \
+             topk:0.1 {topk_bytes_per_round:>11.0} B/round (x{topk_ratio:.3})"
         );
         rows.push(Json::obj(vec![
             ("preset", Json::str(preset)),
@@ -236,6 +255,9 @@ fn end_to_end(fast: bool) -> Json {
             ("rounds_per_sec", Json::num(rps)),
             ("sim_time_s", Json::num(res.ledger.time_s)),
             ("best_accuracy", Json::num(res.final_accuracy)),
+            ("bytes_per_round", Json::num(bytes_per_round)),
+            ("topk_bytes_per_round", Json::num(topk_bytes_per_round)),
+            ("topk_ratio_vs_dense", Json::num(topk_ratio)),
         ]));
     }
     Json::Arr(rows)

@@ -14,7 +14,8 @@
 
 use fedhc::config::{AggregationMode, ExperimentConfig};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
-use fedhc::runtime::host_model::reference;
+use fedhc::fl::CompressMode;
+use fedhc::runtime::host_model::{float_mode, reference};
 use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
 use fedhc::sim::engine::Engine;
 use fedhc::util::json::Json;
@@ -49,11 +50,32 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
 
-/// Host MLP hot loop, before vs after: the seed's scalar `train_step`
-/// (allocating, stride-`h` `W1` walk) against the blocked in-place kernel
-/// on a recycled buffer. Cross-checks bit-identity before timing.
+/// Sign-magnitude ulp index, so adjacent floats across the zero crossing
+/// are one apart (mirrors the oracle in `runtime::host_model` tests).
+fn ulp_index(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 == 0 {
+        b as i64
+    } else {
+        -((b & 0x7fff_ffff) as i64)
+    }
+}
+
+fn max_ulp(a: &[f32], b: &[f32]) -> u64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (ulp_index(x) - ulp_index(y)).unsigned_abs())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Host MLP hot loop, three generations deep: the seed's scalar
+/// `train_step` (allocating, stride-`h` `W1` walk), the blocked in-place
+/// kernel (`--strict-float`), and the default SIMD lanes. Cross-checks
+/// bit-identity (reference vs blocked) and records the SIMD-vs-strict ulp
+/// drift — the design contract pins it at exactly zero — before timing.
 fn kernel_before_after(fast: bool) -> Json {
-    println!("== host MLP kernels: scalar reference vs blocked in-place ==");
+    println!("== host MLP kernels: scalar reference vs blocked vs SIMD ==");
     let manifest = Manifest::host();
     let mut entries: Vec<(&str, Json)> = Vec::new();
     let variants: [(&str, usize); 2] = [
@@ -70,39 +92,97 @@ fn kernel_before_after(fast: bool) -> Json {
         let x: Vec<f32> = (0..b * d).map(|_| rng.uniform_f32()).collect();
         let y: Vec<f32> = (0..b).map(|_| rng.below(10) as f32).collect();
 
-        // the blocked kernel must match the scalar reference bit for bit
+        // the blocked (strict) kernel must match the scalar reference bit
+        // for bit, and the SIMD path must match the blocked one
+        float_mode::set_strict(true);
         let (p_ref, l_ref) = reference::train_step(&m, &params, &x, &y, 0.01).unwrap();
         let mut p = params.clone();
         let mut scratch = HostScratch::new();
         let l_new = m.train_step_into(&mut p, &x, &y, 0.01, &mut scratch).unwrap();
         assert_eq!(p_ref, p, "{name}: blocked kernel diverged from the scalar reference");
         assert_eq!(l_ref.to_bits(), l_new.to_bits(), "{name}: loss diverged");
+        float_mode::set_strict(false);
+        let mut p_simd = params.clone();
+        let l_simd = m.train_step_into(&mut p_simd, &x, &y, 0.01, &mut scratch).unwrap();
+        let ulp = max_ulp(&p, &p_simd);
+        assert_eq!(ulp, 0, "{name}: SIMD drifted {ulp} ulp from the strict kernel");
+        assert_eq!(l_new.to_bits(), l_simd.to_bits(), "{name}: SIMD loss diverged");
 
         let t_ref = bench_loop(2, iters, || {
             let (np, _) = reference::train_step(&m, &params, &x, &y, 0.01).unwrap();
             std::hint::black_box(&np);
         });
-        let t_new = bench_loop(2, iters, || {
+        float_mode::set_strict(true);
+        let t_blocked = bench_loop(2, iters, || {
+            p.copy_from_slice(&params);
+            let loss = m.train_step_into(&mut p, &x, &y, 0.01, &mut scratch).unwrap();
+            std::hint::black_box(loss);
+        });
+        float_mode::set_strict(false);
+        let t_simd = bench_loop(2, iters, || {
             p.copy_from_slice(&params);
             let loss = m.train_step_into(&mut p, &x, &y, 0.01, &mut scratch).unwrap();
             std::hint::black_box(loss);
         });
         let ns_ref = mean(&t_ref) * 1e9;
-        let ns_new = mean(&t_new) * 1e9;
-        let speedup = ns_ref / ns_new;
+        let ns_blocked = mean(&t_blocked) * 1e9;
+        let ns_simd = mean(&t_simd) * 1e9;
+        let speedup = ns_ref / ns_blocked;
+        let simd_speedup = ns_blocked / ns_simd;
         println!(
-            "  {name:<12} reference {ns_ref:>12.0} ns/step   blocked {ns_new:>12.0} ns/step   speedup x{speedup:.2}"
+            "  {name:<12} reference {ns_ref:>11.0} ns/step   blocked {ns_blocked:>11.0} \
+             ns/step (x{speedup:.2})   simd {ns_simd:>11.0} ns/step (x{simd_speedup:.2}, 0 ulp)"
         );
         entries.push((
             name,
             Json::obj(vec![
                 ("ns_per_step_reference", Json::num(ns_ref)),
-                ("ns_per_step_blocked", Json::num(ns_new)),
+                ("ns_per_step_blocked", Json::num(ns_blocked)),
+                // the headline number: the default (SIMD) path
+                ("ns_per_step", Json::num(ns_simd)),
                 ("speedup", Json::num(speedup)),
+                ("simd_speedup", Json::num(simd_speedup)),
+                ("simd_max_ulp_vs_strict", Json::num(ulp as f64)),
             ]),
         ));
     }
     Json::obj(entries)
+}
+
+/// Wire plane: billed uplink bytes per round for each `--compress` mode
+/// on the tiny preset, with the ratio against the dense format.
+fn wire_plane(fast: bool) -> Json {
+    println!("\n== wire plane: billed uplink bytes per round by --compress mode ==");
+    let manifest = Manifest::host();
+    let rounds = if fast { 3usize } else { 5 };
+    let modes = [CompressMode::None, CompressMode::TopK(0.1), CompressMode::Int8];
+    let mut entries = Vec::new();
+    let mut dense_bytes = f64::NAN;
+    for mode in modes {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = rounds;
+        cfg.target_accuracy = None;
+        cfg.compress = mode;
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+        let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+        let per_round = res.ledger.wire_bytes / rounds as f64;
+        if mode.is_none() {
+            dense_bytes = per_round;
+        }
+        let ratio = per_round / dense_bytes;
+        println!(
+            "  {:<10} {per_round:>12.0} bytes/round   x{ratio:.3} of dense   (acc {:.1}%)",
+            mode.name(),
+            res.final_accuracy * 100.0
+        );
+        entries.push(Json::obj(vec![
+            ("mode", Json::str(&mode.name())),
+            ("bytes_per_round", Json::num(per_round)),
+            ("ratio_vs_dense", Json::num(ratio)),
+        ]));
+    }
+    Json::Arr(entries)
 }
 
 /// Scatter-gather over a CPU-bound per-client job (parameter-vector math
@@ -326,6 +406,7 @@ fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
 
     let kernels = kernel_before_after(fast);
+    let wire = wire_plane(fast);
     engine_sweep_synthetic(fast);
     let round_loop = engine_sweep_round_loop(fast);
     let allocs = alloc_accounting(fast);
@@ -344,6 +425,7 @@ fn main() {
     let json = Json::obj(vec![
         ("mode", Json::str(if fast { "fast" } else { "full" })),
         ("host_kernels", kernels),
+        ("wire_plane", wire),
         ("round_loop", round_loop),
         ("allocs", allocs),
     ]);

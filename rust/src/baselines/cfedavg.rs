@@ -19,6 +19,7 @@ use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
 use crate::fl::client::SatClient;
 use crate::fl::evaluate::evaluate;
+use crate::network::Payload;
 use crate::sim::engine::Engine;
 use anyhow::Result;
 
@@ -51,7 +52,18 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     let engine = Engine::new(cfg.workers);
     let pools = RoundPools::new(rt);
     let central = pick_central(trial);
-    let bits_per_sample = (trial.clients[0].shard.kind.sample_len() * 32 + 8) as f64;
+    // raw-data plane: one sample on the wire is its f32 features plus a
+    // one-byte label, billed through the same [`Payload`] seam as model
+    // uploads (`--compress` shrinks *parameter* uploads only — raw data
+    // ships dense, which is exactly the cost the hierarchy removes)
+    let sample_payload = Payload {
+        values: trial.clients[0].shard.kind.sample_len(),
+        value_bits: 32,
+        indices: 0,
+        index_bits: 0,
+        header_bytes: 1,
+    };
+    let bits_per_sample = sample_payload.bits();
 
     // union dataset at the central node
     let kind = trial.clients[0].shard.kind;
@@ -154,6 +166,10 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
                 }
                 (t_start, e_total)
             };
+            let round_samples: usize = uploads.iter().map(|&(s, _, _)| s).sum();
+            trial
+                .ledger
+                .add_wire_bytes(trial.link.upload_bytes(&sample_payload) * round_samples as f64);
             trial.ledger.add_time(t_up);
             trial.ledger.add_energy(e_up);
             trial.clock.advance(t_up);

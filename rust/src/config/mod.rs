@@ -5,6 +5,7 @@
 pub mod parse;
 
 use crate::data::DatasetKind;
+use crate::fl::CompressMode;
 use crate::sim::scenario::{ScenarioConfig, ScenarioKind};
 use crate::util::cli::Args;
 use anyhow::{anyhow, bail, Result};
@@ -169,6 +170,16 @@ pub struct ExperimentConfig {
     /// seconds (edges are bisection-refined; windows shorter than this can
     /// be missed).
     pub window_step_s: f64,
+    /// Upload compression (`--compress none|topk:<frac>|int8`): how member
+    /// → PS and PS → GS parameter uploads are coded on the wire, with
+    /// error-feedback residuals. `None` is a structural no-op —
+    /// byte-identical to the pre-compression trajectories. See
+    /// [`crate::fl::compress`].
+    pub compress: CompressMode,
+    /// Pin the scalar (pre-SIMD) kernel path (`--strict-float`). A pure
+    /// performance switch: the SIMD path is bit-identical to it (see
+    /// `runtime::host_model`), so results never change either way.
+    pub strict_float: bool,
     /// Master seed.
     pub seed: u64,
 }
@@ -223,6 +234,8 @@ impl ExperimentConfig {
             buffer_size: 0,
             max_ground_wait_s: 7000.0,
             window_step_s: 30.0,
+            compress: CompressMode::None,
+            strict_float: false,
             seed: 42,
         }
     }
@@ -265,6 +278,8 @@ impl ExperimentConfig {
             // that cannot reach its station within an orbit goes stale
             max_ground_wait_s: 7000.0,
             window_step_s: 30.0,
+            compress: CompressMode::None,
+            strict_float: false,
             seed: 42,
         }
     }
@@ -320,6 +335,8 @@ impl ExperimentConfig {
             buffer_size: 0,
             max_ground_wait_s: 7000.0,
             window_step_s: 30.0,
+            compress: CompressMode::None,
+            strict_float: false,
             seed: 42,
         }
     }
@@ -440,6 +457,14 @@ impl ExperimentConfig {
         self.buffer_size = args.get_usize("buffer-size", self.buffer_size)?;
         self.max_ground_wait_s = args.get_f64("max-ground-wait", self.max_ground_wait_s)?;
         self.window_step_s = args.get_f64("window-step", self.window_step_s)?;
+        if let Some(c) = args.get("compress") {
+            self.compress = CompressMode::parse(c).ok_or_else(|| {
+                anyhow!("--compress expects 'none', 'topk:<frac>' or 'int8', got '{c}'")
+            })?;
+        }
+        if args.flag("strict-float") {
+            self.strict_float = true;
+        }
         self.seed = args.get_u64("seed", self.seed)?;
         self.validate()?;
         Ok(self)
@@ -502,6 +527,11 @@ impl ExperimentConfig {
         }
         if !self.window_step_s.is_finite() || self.window_step_s <= 0.0 {
             bail!("window step must be positive and finite");
+        }
+        if let CompressMode::TopK(frac) = self.compress {
+            if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+                bail!("top-k compress fraction must be in (0, 1], got {frac}");
+            }
         }
         Ok(())
     }
@@ -617,6 +647,38 @@ mod tests {
         );
         let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
         assert!(e.to_string().contains("staleness beta"), "{e}");
+    }
+
+    #[test]
+    fn compress_and_strict_float_overrides_apply() {
+        // every preset defaults to the uncompressed wire and fast kernels
+        for name in ["tiny", "mnist", "cifar10", "mega-sparse", "mega-dense"] {
+            let c = ExperimentConfig::preset(name).unwrap();
+            assert_eq!(c.compress, CompressMode::None, "{name}");
+            assert!(!c.strict_float, "{name}");
+        }
+        let args = Args::parse(
+            ["--compress", "topk:0.1", "--strict-float"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["strict-float"],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.compress, CompressMode::TopK(0.1));
+        assert!(c.strict_float);
+        let args = Args::parse(["--compress", "int8"].iter().map(|s| s.to_string()), &[]);
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.compress, CompressMode::Int8);
+        // malformed modes and out-of-range fractions are usage errors
+        let bad = Args::parse(["--compress", "gzip"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("--compress"), "{e}");
+        let bad = Args::parse(["--compress", "topk:0"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("top-k compress fraction"), "{e}");
+        let bad = Args::parse(["--compress", "topk:1.5"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("top-k compress fraction"), "{e}");
     }
 
     #[test]

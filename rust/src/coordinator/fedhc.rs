@@ -23,8 +23,10 @@ use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
 use crate::config::{AggregationMode, Timeline};
 use crate::fl::aggregate::{aggregate, fedavg_weights, fold_stale, staleness_weight};
+use crate::fl::compress::{encode_upload, CompressScratch};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
+use crate::network::Payload;
 use crate::orbit::index::{ConstellationIndex, SphereGrid};
 use crate::orbit::GroundStation;
 use crate::runtime::HostScratch;
@@ -267,6 +269,20 @@ pub fn build_topology(
     })
 }
 
+/// Billed bits of one MAML warm-start support batch: raw f32 features on
+/// the wire, through the [`Payload`] accounting seam (never compressed —
+/// data transfers are outside the `--compress` parameter plane).
+fn maml_batch_bits(rt: &crate::runtime::ModelRuntime) -> f64 {
+    Payload {
+        values: rt.spec.batch * rt.spec.input_dim(),
+        value_bits: 32,
+        indices: 0,
+        index_bits: 0,
+        header_bytes: 0,
+    }
+    .bits()
+}
+
 /// Largest cluster in a topology — the pooled round path's peak concurrent
 /// parameter-buffer demand.
 fn max_cluster_size(topo: &Topology, k: usize) -> usize {
@@ -352,7 +368,26 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
     let k = cfg.clusters;
-    let model_bits = rt.spec.param_count as f64 * 32.0;
+    // wire plane: bits billed per model exchange (compressed uplink, dense
+    // downlink) and the exact bytes of one uplink payload; with `--compress
+    // none` the WireBits are symmetric and every fold below is bit-identical
+    // to the historical single-`model_bits` accounting
+    let wire = cfg.compress.wire(rt.spec.param_count);
+    let up_bytes = trial.link.upload_bytes(&cfg.compress.payload(rt.spec.param_count));
+    let compressing = !cfg.compress.is_none();
+    let mut wire_scratch = CompressScratch::new();
+    // error-feedback residuals, pooled lazily on first encode: one per
+    // member (member → PS uploads) and one per cluster slot (PS → GS)
+    let mut residuals: Vec<Option<Vec<f32>>> = if compressing {
+        (0..trial.clients.len()).map(|_| None).collect()
+    } else {
+        Vec::new()
+    };
+    let mut ground_residuals: Vec<Option<Vec<f32>>> = if compressing {
+        (0..k).map(|_| None).collect()
+    } else {
+        Vec::new()
+    };
     let resident = cfg.resident_params;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold)?;
     let engine = Engine::new(cfg.workers);
@@ -468,6 +503,25 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
             }
+            // wire plane: encode each member → PS upload in member order on
+            // the coordinator thread (worker-count invariant), against the
+            // cluster model the member trained from; what the encoder drops
+            // folds into the member's persistent residual. The merge below
+            // then sees exactly what the wire delivered.
+            if compressing {
+                for r in batch.iter_mut() {
+                    let res = residuals[r.member]
+                        .get_or_insert_with(|| pools.params.take_zeroed());
+                    encode_upload(
+                        cfg.compress,
+                        &mut r.params,
+                        &topo.models[c],
+                        res,
+                        &mut wire_scratch,
+                    );
+                }
+            }
+            trial.ledger.add_wire_bytes(up_bytes * batch.len() as f64);
             // line 13: aggregate at the PS under the strategy's weighting,
             // merging straight from the trained pooled buffers into the
             // recycled output, then swap it in: the displaced model vector
@@ -500,7 +554,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     &trial.energy,
                     &work,
                     positions[topo.ps[c]],
-                    model_bits,
+                    wire,
                 ),
                 Timeline::Event => cluster_round_events(
                     &mut queue,
@@ -509,7 +563,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     &work,
                     c,
                     positions[topo.ps[c]],
-                    model_bits,
+                    wire,
                 ),
             };
             stage_time = stage_time.max(t); // clusters run in parallel
@@ -575,7 +629,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     // adaptation cost: one support-batch transfer + one
                     // batch of compute at the member
                     let d = positions[m].dist(positions[head]).max(1.0);
-                    let batch_bits = (rt.spec.batch * rt.spec.input_dim()) as f64 * 32.0;
+                    let batch_bits = maml_batch_bits(rt);
                     trial
                         .ledger
                         .add_energy(trial.energy.tx_energy(batch_bits, d));
@@ -593,6 +647,15 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 }
             }
             topo = new_topo;
+            // wire plane: residuals are deltas against base models the
+            // re-clustering just replaced — flush them to the pool so every
+            // sender restarts its error feedback from zero, exactly like
+            // parked buffered contributions
+            for slot in residuals.iter_mut().chain(ground_residuals.iter_mut()) {
+                if let Some(buf) = slot.take() {
+                    pools.params.put(buf);
+                }
+            }
             // cluster sizes moved: re-warm the pool to the new maximum
             pools.params.ensure_free(max_cluster_size(&topo, k));
         }
@@ -636,7 +699,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 // the stage sees only the live PSes; its cluster indices
                 // are positions in `live_ps`, mapped back through `live`
                 let live_ps: Vec<usize> = live.iter().map(|&c| topo.ps[c]).collect();
-                let out = stages.ground.exchange(&ctx, &live_ps, t, model_bits);
+                let out = stages.ground.exchange(&ctx, &live_ps, t, wire);
                 let exchanged: Vec<usize> = out.exchanged.iter().map(|&i| live[i]).collect();
                 if !exchanged.is_empty() {
                     // Eq. 5 over the participating clusters, by data size
@@ -651,12 +714,32 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                         })
                         .collect();
                     let weights = fedavg_weights(&sizes);
-                    let rows: Vec<&[f32]> = exchanged
-                        .iter()
-                        .map(|&c| topo.models[c].as_slice())
-                        .collect();
+                    // wire plane: each PS → GS upload is encoded against the
+                    // ground segment's current global model with a per-
+                    // cluster-slot residual, so the global aggregate sees
+                    // exactly what the wire delivered
+                    let mut uploads: Vec<Vec<f32>> = Vec::new();
+                    if compressing {
+                        for &c in &exchanged {
+                            let mut up = pools.params.take_copy(&topo.models[c]);
+                            let res = ground_residuals[c]
+                                .get_or_insert_with(|| pools.params.take_zeroed());
+                            encode_upload(cfg.compress, &mut up, &global, res, &mut wire_scratch);
+                            uploads.push(up);
+                        }
+                    }
+                    let rows: Vec<&[f32]> = if compressing {
+                        uploads.iter().map(|u| u.as_slice()).collect()
+                    } else {
+                        exchanged.iter().map(|&c| topo.models[c].as_slice()).collect()
+                    };
                     // aggregate straight into the persistent global buffer
                     aggregate(rt, &rows, &weights, &mut global)?;
+                    drop(rows);
+                    for up in uploads {
+                        pools.params.put(up);
+                    }
+                    trial.ledger.add_wire_bytes(up_bytes * exchanged.len() as f64);
                     // broadcast back to participating clusters; stale
                     // clusters keep training on their own model until a
                     // later pass
@@ -700,6 +783,13 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     break;
                 }
             }
+        }
+    }
+
+    // wire plane: residual buffers return to the pool with the run
+    for slot in residuals.iter_mut().chain(ground_residuals.iter_mut()) {
+        if let Some(buf) = slot.take() {
+            pools.params.put(buf);
         }
     }
 
@@ -752,7 +842,7 @@ fn merge_parked(
     version: &mut u64,
     pub_time: &mut f64,
     beta: f64,
-    model_bits: f64,
+    down_bits: f64,
     stage_start: f64,
     at: f64,
 ) -> Result<f64> {
@@ -778,7 +868,7 @@ fn merge_parked(
     stage.merge(rt, &rows, &weights, agg_buf)?;
     drop(rows);
     std::mem::swap(model, agg_buf);
-    let end = at + link.comm_time(model_bits, far.expect("merge with no members"));
+    let end = at + link.comm_time(down_bits, far.expect("merge with no members"));
     let now = stage_start + at;
     for (i, &m) in merged.iter().enumerate() {
         let ct = parked[m].take().expect("parked contribution vanished");
@@ -819,7 +909,22 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
     let cfg = trial.cfg.clone();
     let rt = trial.rt;
     let k = cfg.clusters;
-    let model_bits = rt.spec.param_count as f64 * 32.0;
+    // wire plane (see `run_staged`): compressed uplink, dense downlink,
+    // error-feedback residuals per member and per cluster slot
+    let wire = cfg.compress.wire(rt.spec.param_count);
+    let up_bytes = trial.link.upload_bytes(&cfg.compress.payload(rt.spec.param_count));
+    let compressing = !cfg.compress.is_none();
+    let mut wire_scratch = CompressScratch::new();
+    let mut residuals: Vec<Option<Vec<f32>>> = if compressing {
+        (0..trial.clients.len()).map(|_| None).collect()
+    } else {
+        Vec::new()
+    };
+    let mut ground_residuals: Vec<Option<Vec<f32>>> = if compressing {
+        (0..k).map(|_| None).collect()
+    } else {
+        Vec::new()
+    };
     let beta = cfg.staleness_beta;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold)?;
     let engine = Engine::new(cfg.workers);
@@ -940,13 +1045,27 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         link_factor: avail.link_factor[m],
                     };
                     let (t_cmp, t_com, d) =
-                        member_times(&trial.link, &work, positions[topo.ps[c]], model_bits);
+                        member_times(&trial.link, &work, positions[topo.ps[c]], wire.up);
                     let arrives = t_cmp + t_com;
                     queue.push(arrives, Event::UploadReady { member: m, cluster: c });
-                    e_total += trial.energy.tx_energy(model_bits, d)
+                    e_total += trial.energy.tx_energy(wire.up, d)
                         + trial.energy.compute_energy(r.samples, cpu_hz)
-                        + trial.energy.tx_energy(model_bits, d);
+                        + trial.energy.tx_energy(wire.down, d);
                     async_total += trial.clients[m].data_size();
+                    // wire plane: encode at send time, against the cluster
+                    // model the member trained from — the contribution
+                    // parked at (or folded into) the PS is what the wire
+                    // delivered, however stale it is when merged
+                    if compressing {
+                        let res = residuals[m].get_or_insert_with(|| pools.params.take_zeroed());
+                        encode_upload(
+                            cfg.compress,
+                            &mut r.params,
+                            &topo.models[c],
+                            res,
+                            &mut wire_scratch,
+                        );
+                    }
                     in_flight[m] = Some(Contribution {
                         params: std::mem::take(&mut r.params),
                         loss: r.mean_loss,
@@ -957,6 +1076,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         based_on_t: pub_time[c],
                     });
                 }
+                trial.ledger.add_wire_bytes(up_bytes * batch.len() as f64);
                 trial.ledger.add_energy(e_total);
             }
 
@@ -999,7 +1119,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                                     &mut version[c],
                                     &mut pub_time[c],
                                     beta,
-                                    model_bits,
+                                    wire.down,
                                     stage_start,
                                     ev.at,
                                 )?;
@@ -1027,7 +1147,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                             &mut version[c],
                             &mut pub_time[c],
                             beta,
-                            model_bits,
+                            wire.down,
                             stage_start,
                             last_arrival,
                         )?;
@@ -1062,7 +1182,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     // the PS announces the final round state once, to the
                     // farthest contributing member
                     cluster_time = match far {
-                        Some(d) => last_arrival + trial.link.comm_time(model_bits, d),
+                        Some(d) => last_arrival + trial.link.comm_time(wire.down, d),
                         None => 0.0,
                     };
                 }
@@ -1081,10 +1201,17 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
             trial.ledger.reclusters += 1;
             // in-flight work addressed to the old PSes dies with the
             // topology: recycle parked contributions so moved members
-            // retrain fresh against their aligned cluster model
+            // retrain fresh against their aligned cluster model; the wire
+            // plane's error-feedback residuals are likewise deltas against
+            // the replaced base models, so they flush with them
             for slot in parked.iter_mut() {
                 if let Some(ct) = slot.take() {
                     pools.params.put(ct.params);
+                }
+            }
+            for slot in residuals.iter_mut().chain(ground_residuals.iter_mut()) {
+                if let Some(buf) = slot.take() {
+                    pools.params.put(buf);
                 }
             }
             let old_assignment = topo.assignment.clone();
@@ -1119,7 +1246,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     pools.params.put(pooled);
                     trial.ledger.maml_adaptations += 1;
                     let d = positions[m].dist(positions[head]).max(1.0);
-                    let batch_bits = (rt.spec.batch * rt.spec.input_dim()) as f64 * 32.0;
+                    let batch_bits = maml_batch_bits(rt);
                     trial
                         .ledger
                         .add_energy(trial.energy.tx_energy(batch_bits, d));
@@ -1171,7 +1298,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     constellation: &trial.constellation,
                 };
                 let live_ps: Vec<usize> = live.iter().map(|&c| topo.ps[c]).collect();
-                let out = stages.ground.exchange(&ctx, &live_ps, t, model_bits);
+                let out = stages.ground.exchange(&ctx, &live_ps, t, wire);
                 let exchanged: Vec<usize> = out.exchanged.iter().map(|&i| live[i]).collect();
                 let pass_end = t + out.duration_s;
                 if !exchanged.is_empty() {
@@ -1186,11 +1313,29 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         })
                         .collect();
                     let weights = fedavg_weights(&sizes);
-                    let rows: Vec<&[f32]> = exchanged
-                        .iter()
-                        .map(|&c| topo.models[c].as_slice())
-                        .collect();
+                    // wire plane: PS → GS uploads encode against the ground
+                    // segment's current global model (see `run_staged`)
+                    let mut uploads: Vec<Vec<f32>> = Vec::new();
+                    if compressing {
+                        for &c in &exchanged {
+                            let mut up = pools.params.take_copy(&topo.models[c]);
+                            let res = ground_residuals[c]
+                                .get_or_insert_with(|| pools.params.take_zeroed());
+                            encode_upload(cfg.compress, &mut up, &global, res, &mut wire_scratch);
+                            uploads.push(up);
+                        }
+                    }
+                    let rows: Vec<&[f32]> = if compressing {
+                        uploads.iter().map(|u| u.as_slice()).collect()
+                    } else {
+                        exchanged.iter().map(|&c| topo.models[c].as_slice()).collect()
+                    };
                     aggregate(rt, &rows, &weights, &mut global)?;
+                    drop(rows);
+                    for up in uploads {
+                        pools.params.put(up);
+                    }
+                    trial.ledger.add_wire_bytes(up_bytes * exchanged.len() as f64);
                     // the broadcast publishes a *new* cluster-model version:
                     // anything still parked is now one version staler
                     for &c in &exchanged {
@@ -1247,10 +1392,15 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
         }
     }
 
-    // un-merged leftovers at run end return to the pool
+    // un-merged leftovers at run end return to the pool, residuals with them
     for slot in parked.iter_mut() {
         if let Some(ct) = slot.take() {
             pools.params.put(ct.params);
+        }
+    }
+    for slot in residuals.iter_mut().chain(ground_residuals.iter_mut()) {
+        if let Some(buf) = slot.take() {
+            pools.params.put(buf);
         }
     }
 
@@ -1467,6 +1617,36 @@ mod tests {
         assert!(asy.ledger.buffered_merges > 0);
         assert_eq!(asy.ledger.idle_s, 0.0, "async merges at arrival — no buffer wait");
         assert!(asy.final_accuracy > 0.0);
+    }
+
+    /// The wire plane end to end: compressed uplinks bill fewer bytes,
+    /// less time and less energy than dense ones, and the run still learns.
+    #[test]
+    fn compressed_runs_bill_fewer_bytes_time_and_energy() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 5;
+        cfg.target_accuracy = None;
+        let mut dense_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let dense = run_clustered(&mut dense_t, Strategy::fedhc()).unwrap();
+        assert!(dense.ledger.wire_bytes > 0.0, "dense runs must still bill bytes");
+
+        cfg.compress = crate::fl::CompressMode::TopK(0.1);
+        let mut topk_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let topk = run_clustered(&mut topk_t, Strategy::fedhc()).unwrap();
+        let ratio = topk.ledger.wire_bytes / dense.ledger.wire_bytes;
+        assert!(ratio < 0.15, "top-k 0.1 billed {ratio} of dense bytes");
+        assert!(topk.ledger.time_s < dense.ledger.time_s, "thin uplinks must be faster");
+        assert!(topk.ledger.energy_j < dense.ledger.energy_j, "and cheaper");
+        assert!(topk.final_accuracy > 0.0);
+
+        cfg.compress = crate::fl::CompressMode::Int8;
+        let mut int8_t = Trial::new(cfg, &m, &rt).unwrap();
+        let int8 = run_clustered(&mut int8_t, Strategy::fedhc()).unwrap();
+        let ratio = int8.ledger.wire_bytes / dense.ledger.wire_bytes;
+        assert!(ratio < 0.3, "int8 billed {ratio} of dense bytes");
+        assert!(int8.final_accuracy > 0.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //!   ε0·f²·cycles computation energy of every trained sample.
 
 use crate::metrics::Ledger;
-use crate::network::{EnergyModel, LinkModel};
+use crate::network::{EnergyModel, LinkModel, WireBits};
 use crate::orbit::Vec3;
 use crate::sim::engine::Engine;
 
@@ -75,39 +75,40 @@ pub fn member_times(
     link: &LinkModel,
     m: &MemberWork,
     ps_pos: Vec3,
-    model_bits: f64,
+    up_bits: f64,
 ) -> (f64, f64, f64) {
     let d = m.pos.dist(ps_pos).max(1.0);
     (
         link.compute_time(m.samples, m.cpu_hz),
-        link.comm_time_scaled(model_bits, d, m.link_factor),
+        link.comm_time_scaled(up_bits, d, m.link_factor),
         d,
     )
 }
 
 /// One member's contribution to the cluster round: `(t_cmp + t_com,
 /// Eq. 8 upload + Eq. 9 compute + Eq. 8 PS broadcast back, distance to
-/// the PS)`. Pure per-member math — the scatter job of the engine-mapped
-/// accounting.
+/// the PS)`. The upload bills the (possibly compressed) uplink payload,
+/// the broadcast back the dense downlink. Pure per-member math — the
+/// scatter job of the engine-mapped accounting.
 fn member_cost(
     link: &LinkModel,
     energy: &EnergyModel,
     m: &MemberWork,
     ps_pos: Vec3,
-    model_bits: f64,
+    wire: WireBits,
 ) -> (f64, f64, f64) {
-    let (t_cmp, t_com, d) = member_times(link, m, ps_pos, model_bits);
+    let (t_cmp, t_com, d) = member_times(link, m, ps_pos, wire.up);
     let t = t_cmp + t_com;
-    let e = energy.tx_energy(model_bits, d)
+    let e = energy.tx_energy(wire.up, d)
         + energy.compute_energy(m.samples, m.cpu_hz)
-        + energy.tx_energy(model_bits, d);
+        + energy.tx_energy(wire.down, d);
     (t, e, d)
 }
 
 /// Deterministic reduction of per-member costs, in member order: the
-/// synchronous round takes the max member time plus one PS broadcast to
-/// the farthest member; energy is additive.
-fn reduce_costs(link: &LinkModel, costs: &[(f64, f64, f64)], model_bits: f64) -> (f64, f64) {
+/// synchronous round takes the max member time plus one PS broadcast (the
+/// dense downlink) to the farthest member; energy is additive.
+fn reduce_costs(link: &LinkModel, costs: &[(f64, f64, f64)], down_bits: f64) -> (f64, f64) {
     let mut t_max = 0.0f64;
     let mut e_total = 0.0f64;
     let mut far: Option<f64> = None;
@@ -119,7 +120,7 @@ fn reduce_costs(link: &LinkModel, costs: &[(f64, f64, f64)], model_bits: f64) ->
     // broadcast time: the PS transmit to the farthest member overlaps the
     // next round's compute only partially; count the slowest broadcast once
     if let Some(d) = far {
-        t_max += link.comm_time(model_bits, d);
+        t_max += link.comm_time(down_bits, d);
     }
     (t_max, e_total)
 }
@@ -131,13 +132,13 @@ pub fn cluster_round(
     energy: &EnergyModel,
     members: &[MemberWork],
     ps_pos: Vec3,
-    model_bits: f64,
+    wire: WireBits,
 ) -> (f64, f64) {
     let costs: Vec<(f64, f64, f64)> = members
         .iter()
-        .map(|m| member_cost(link, energy, m, ps_pos, model_bits))
+        .map(|m| member_cost(link, energy, m, ps_pos, wire))
         .collect();
-    reduce_costs(link, &costs, model_bits)
+    reduce_costs(link, &costs, wire.down)
 }
 
 /// Below this membership the per-member cost math (a handful of flops) is
@@ -158,29 +159,31 @@ pub fn cluster_round_with(
     energy: &EnergyModel,
     members: &[MemberWork],
     ps_pos: Vec3,
-    model_bits: f64,
+    wire: WireBits,
 ) -> (f64, f64) {
     if members.len() < ENGINE_MAP_MIN_MEMBERS {
-        return cluster_round(link, energy, members, ps_pos, model_bits);
+        return cluster_round(link, energy, members, ps_pos, wire);
     }
-    let costs = engine.run(members, |_, m| member_cost(link, energy, m, ps_pos, model_bits));
-    reduce_costs(link, &costs, model_bits)
+    let costs = engine.run(members, |_, m| member_cost(link, energy, m, ps_pos, wire));
+    reduce_costs(link, &costs, wire.down)
 }
 
-/// Time + energy of the ground-station stage for one PS link: model up to
-/// the GS and the global model back down (Eq. 7 `t_j^com`, doubled for the
-/// return broadcast; Eq. 8 energy on the satellite side).
+/// Time + energy of the ground-station stage for one PS link: the
+/// (possibly compressed) cluster model up to the GS and the dense global
+/// model back down (Eq. 7 `t_j^com` for both directions; Eq. 8 energy on
+/// the satellite side). With a symmetric payload the `up + down` sum is
+/// bit-identical to the historical `2·t_oneway` (IEEE: `x + x == 2·x`).
 pub fn ground_exchange(
     link: &LinkModel,
     energy: &EnergyModel,
     ps_pos: Vec3,
     gs_pos: Vec3,
-    model_bits: f64,
+    wire: WireBits,
 ) -> (f64, f64) {
     let d = ps_pos.dist(gs_pos).max(1.0);
-    let t = 2.0 * link.ground_comm_time(model_bits, d);
+    let t = link.ground_comm_time(wire.up, d) + link.ground_comm_time(wire.down, d);
     // satellite transmits up once; the downlink is ground-powered
-    let e = energy.ground_tx_energy(model_bits, d);
+    let e = energy.ground_tx_energy(wire.up, d);
     (t, e)
 }
 
@@ -275,12 +278,12 @@ mod tests {
     fn round_time_is_slowest_member() {
         let (l, e) = models();
         let ps = Vec3::new(0.0, 0.0, 7.0e6);
-        let bits = 44_426.0 * 32.0;
+        let wire = WireBits::symmetric(44_426.0 * 32.0);
         let fast = member(640, 2e9, 1.0e5);
         let slow = member(640, 0.5e9, 1.0e5);
-        let (t_fast, _) = cluster_round(&l, &e, &[fast], ps, bits);
-        let (t_both, _) = cluster_round(&l, &e, &[fast, slow], ps, bits);
-        let (t_slow, _) = cluster_round(&l, &e, &[slow], ps, bits);
+        let (t_fast, _) = cluster_round(&l, &e, &[fast], ps, wire);
+        let (t_both, _) = cluster_round(&l, &e, &[fast, slow], ps, wire);
+        let (t_slow, _) = cluster_round(&l, &e, &[slow], ps, wire);
         assert!(t_both >= t_slow && t_slow > t_fast);
     }
 
@@ -288,20 +291,20 @@ mod tests {
     fn energy_additive_in_members() {
         let (l, e) = models();
         let ps = Vec3::new(0.0, 0.0, 7.0e6);
-        let bits = 1e6;
+        let wire = WireBits::symmetric(1e6);
         let m = member(320, 1e9, 2.0e5);
-        let (_, e1) = cluster_round(&l, &e, &[m], ps, bits);
-        let (_, e2) = cluster_round(&l, &e, &[m, m], ps, bits);
+        let (_, e1) = cluster_round(&l, &e, &[m], ps, wire);
+        let (_, e2) = cluster_round(&l, &e, &[m, m], ps, wire);
         assert!((e2 / e1 - 2.0).abs() < 1e-9);
     }
 
     #[test]
     fn farther_ps_costs_more() {
         let (l, e) = models();
-        let bits = 1e6;
+        let wire = WireBits::symmetric(1e6);
         let m = member(320, 1e9, 1.0e5);
-        let (t_near, e_near) = cluster_round(&l, &e, &[m], Vec3::new(2.0e5, 0.0, 7.0e6), bits);
-        let (t_far, e_far) = cluster_round(&l, &e, &[m], Vec3::new(3.0e6, 0.0, 7.0e6), bits);
+        let (t_near, e_near) = cluster_round(&l, &e, &[m], Vec3::new(2.0e5, 0.0, 7.0e6), wire);
+        let (t_far, e_far) = cluster_round(&l, &e, &[m], Vec3::new(3.0e6, 0.0, 7.0e6), wire);
         assert!(t_far > t_near);
         assert!(e_far > e_near);
     }
@@ -311,36 +314,62 @@ mod tests {
         let (l, e) = models();
         let ps = Vec3::new(7.0e6, 0.0, 0.0);
         let gs = Vec3::new(6.371e6, 0.0, 0.0);
-        let (t, en) = ground_exchange(&l, &e, ps, gs, 1e6);
+        let (t, en) = ground_exchange(&l, &e, ps, gs, WireBits::symmetric(1e6));
         assert!(t > 0.0 && en > 0.0);
-        // up+down takes twice one-way
+        // a symmetric up+down takes exactly twice one-way, bitwise
         let d = ps.dist(gs);
-        assert!((t - 2.0 * l.ground_comm_time(1e6, d)).abs() < 1e-12);
+        assert_eq!(t, 2.0 * l.ground_comm_time(1e6, d));
+    }
+
+    #[test]
+    fn compressed_uplink_bills_less_than_dense() {
+        let (l, e) = models();
+        let ps = Vec3::new(0.0, 0.0, 7.0e6);
+        let m = member(320, 1e9, 2.0e5);
+        let dense = WireBits::dense(44_426);
+        let thin = WireBits {
+            up: dense.up / 10.0,
+            down: dense.down,
+        };
+        let (t_dense, e_dense) = cluster_round(&l, &e, &[m], ps, dense);
+        let (t_thin, e_thin) = cluster_round(&l, &e, &[m], ps, thin);
+        assert!(t_thin < t_dense, "smaller uplink payload is faster");
+        assert!(e_thin < e_dense, "and cheaper (Eq. 8)");
+        // the ground hop bills the compressed up but the dense down
+        let gs = Vec3::new(6.371e6, 0.0, 0.0);
+        let (tg_dense, eg_dense) = ground_exchange(&l, &e, ps, gs, dense);
+        let (tg_thin, eg_thin) = ground_exchange(&l, &e, ps, gs, thin);
+        assert!(tg_thin < tg_dense && eg_thin < eg_dense);
+        let d = ps.dist(gs);
+        assert_eq!(
+            tg_thin,
+            l.ground_comm_time(thin.up, d) + l.ground_comm_time(dense.down, d)
+        );
     }
 
     #[test]
     fn engine_mapped_costs_match_sequential_exactly() {
         let (l, e) = models();
         let ps = Vec3::new(0.0, 0.0, 7.0e6);
-        let bits = 44_426.0 * 32.0;
+        let wire = WireBits::symmetric(44_426.0 * 32.0);
         // large enough to take the engine-mapped path (above the inline
         // fold threshold), so the parallel map itself is exercised
         let n = ENGINE_MAP_MIN_MEMBERS + 200;
         let members: Vec<MemberWork> = (0..n)
             .map(|i| member(320 + 16 * i, 0.5e9 + 1e7 * i as f64, 1.0e5 + 3.0e4 * i as f64))
             .collect();
-        let seq = cluster_round(&l, &e, &members, ps, bits);
+        let seq = cluster_round(&l, &e, &members, ps, wire);
         for workers in [1usize, 2, 4, 8] {
             let eng = Engine::new(workers);
-            let par = cluster_round_with(&eng, &l, &e, &members, ps, bits);
+            let par = cluster_round_with(&eng, &l, &e, &members, ps, wire);
             assert_eq!(seq, par, "workers={workers}");
         }
         // small memberships short-circuit to the sequential fold
         let small = &members[..9];
         let eng = Engine::new(8);
         assert_eq!(
-            cluster_round(&l, &e, small, ps, bits),
-            cluster_round_with(&eng, &l, &e, small, ps, bits)
+            cluster_round(&l, &e, small, ps, wire),
+            cluster_round_with(&eng, &l, &e, small, ps, wire)
         );
         let uploads: Vec<(usize, Vec3, f64)> = (0..n)
             .map(|i| (100 + i, Vec3::new(1.0e5 + 1.0e4 * i as f64, 0.0, 7.0e6), 1.0))
@@ -382,14 +411,14 @@ mod tests {
     fn degraded_member_slows_the_round_but_not_its_energy() {
         let (l, e) = models();
         let ps = Vec3::new(0.0, 0.0, 7.0e6);
-        let bits = 44_426.0 * 32.0;
+        let wire = WireBits::symmetric(44_426.0 * 32.0);
         let nominal = member(320, 1e9, 2.0e5);
         let degraded = MemberWork {
             link_factor: 0.25,
             ..nominal
         };
-        let (t_nom, e_nom) = cluster_round(&l, &e, &[nominal], ps, bits);
-        let (t_deg, e_deg) = cluster_round(&l, &e, &[degraded], ps, bits);
+        let (t_nom, e_nom) = cluster_round(&l, &e, &[nominal], ps, wire);
+        let (t_deg, e_deg) = cluster_round(&l, &e, &[degraded], ps, wire);
         assert!(t_deg > t_nom, "a degraded uplink must stretch the round");
         assert_eq!(e_nom, e_deg, "Eq. 8 energy depends on payload, not rate");
         // an explicit 1.0 factor is the nominal path, bit for bit
@@ -397,6 +426,6 @@ mod tests {
             link_factor: 1.0,
             ..nominal
         };
-        assert_eq!(cluster_round(&l, &e, &[unit], ps, bits), (t_nom, e_nom));
+        assert_eq!(cluster_round(&l, &e, &[unit], ps, wire), (t_nom, e_nom));
     }
 }

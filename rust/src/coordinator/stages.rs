@@ -28,7 +28,7 @@ use crate::coordinator::fedhc::{Strategy, WeightPolicy};
 use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights, stale_composed_weights};
 use crate::fl::client::SatClient;
 use crate::fl::local::{train_params, TrainScratch};
-use crate::network::{EnergyModel, LinkModel};
+use crate::network::{EnergyModel, LinkModel, WireBits};
 use crate::orbit::propagate::Constellation;
 use crate::orbit::visibility::next_window_open;
 use crate::orbit::GroundStation;
@@ -224,11 +224,12 @@ pub struct GroundOutcome {
     pub wait_s: f64,
 }
 
-/// Ground-station exchange stage: PS models up, global model back down.
+/// Ground-station exchange stage: PS models up (billed at the possibly
+/// compressed uplink payload), global model back down (dense).
 pub trait GroundExchangeStage {
     /// Run one pass for the clusters whose PS client indices are `ps`,
     /// starting at absolute sim time `now`.
-    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, model_bits: f64) -> GroundOutcome;
+    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, wire: WireBits) -> GroundOutcome;
 }
 
 /// Legacy Eq. 7 semantics: the plan's station serves exactly the PSes it
@@ -237,7 +238,7 @@ pub trait GroundExchangeStage {
 pub struct AnalyticGroundExchange;
 
 impl GroundExchangeStage for AnalyticGroundExchange {
-    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, model_bits: f64) -> GroundOutcome {
+    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, wire: WireBits) -> GroundOutcome {
         let ps_pos: Vec<_> = ps
             .iter()
             .map(|&p| ctx.constellation.elements[p].position_eci(now))
@@ -247,7 +248,7 @@ impl GroundExchangeStage for AnalyticGroundExchange {
         let mut duration = 0.0f64;
         let mut energy = 0.0f64;
         for &c in &plan.clusters {
-            let (t_x, e_x) = ground_exchange(ctx.link, ctx.energy, ps_pos[c], gs_pos, model_bits);
+            let (t_x, e_x) = ground_exchange(ctx.link, ctx.energy, ps_pos[c], gs_pos, wire);
             duration += t_x;
             energy += e_x;
         }
@@ -281,7 +282,7 @@ pub struct EventGroundExchange {
 }
 
 impl GroundExchangeStage for EventGroundExchange {
-    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, model_bits: f64) -> GroundOutcome {
+    fn exchange(&self, ctx: &GroundCtx, ps: &[usize], now: f64, wire: WireBits) -> GroundOutcome {
         let ps_pos: Vec<_> = ps
             .iter()
             .map(|&p| ctx.constellation.elements[p].position_eci(now))
@@ -350,7 +351,7 @@ impl GroundExchangeStage for EventGroundExchange {
                         (ps_pos[cluster], gs_pos)
                     };
                     let (t_x, e_x) =
-                        ground_exchange(ctx.link, ctx.energy, sat_pos, station_pos, model_bits);
+                        ground_exchange(ctx.link, ctx.energy, sat_pos, station_pos, wire);
                     wait_s += open_off[cluster];
                     energy += e_x;
                     free_off = start + t_x;
@@ -401,19 +402,19 @@ pub fn cluster_round_events(
     members: &[MemberWork],
     cluster: usize,
     ps_pos: crate::orbit::Vec3,
-    model_bits: f64,
+    wire: WireBits,
 ) -> (f64, f64) {
     debug_assert!(queue.is_empty(), "cluster round expects a drained queue");
     let mut uplink = Vec::with_capacity(members.len());
     let mut e_total = 0.0f64;
     let mut far: Option<f64> = None;
     for (i, m) in members.iter().enumerate() {
-        let (t_cmp, t_com, d) = member_times(link, m, ps_pos, model_bits);
+        let (t_cmp, t_com, d) = member_times(link, m, ps_pos, wire.up);
         queue.push(t_cmp, Event::ComputeDone { member: i, cluster });
         uplink.push(t_com);
-        e_total += energy.tx_energy(model_bits, d)
+        e_total += energy.tx_energy(wire.up, d)
             + energy.compute_energy(m.samples, m.cpu_hz)
-            + energy.tx_energy(model_bits, d);
+            + energy.tx_energy(wire.down, d);
         far = Some(far.map_or(d, |a: f64| a.max(d)));
     }
     let mut t_max = 0.0f64;
@@ -427,7 +428,7 @@ pub fn cluster_round_events(
         }
     }
     if let Some(d) = far {
-        t_max += link.comm_time(model_bits, d);
+        t_max += link.comm_time(wire.down, d);
     }
     (t_max, e_total)
 }
@@ -476,7 +477,7 @@ mod tests {
     fn event_cluster_round_matches_analytic_bitwise() {
         let (l, e) = models();
         let ps = Vec3::new(0.0, 0.0, 7.0e6);
-        let bits = 44_426.0 * 32.0;
+        let wire = WireBits::symmetric(44_426.0 * 32.0);
         let members: Vec<MemberWork> = (0..17)
             .map(|i| {
                 MemberWork::nominal(
@@ -486,16 +487,26 @@ mod tests {
                 )
             })
             .collect();
-        let analytic = cluster_round(&l, &e, &members, ps, bits);
+        let analytic = cluster_round(&l, &e, &members, ps, wire);
         let mut queue = EventQueue::new();
-        let event = cluster_round_events(&mut queue, &l, &e, &members, 0, ps, bits);
+        let event = cluster_round_events(&mut queue, &l, &e, &members, 0, ps, wire);
         assert_eq!(analytic, event, "timelines disagree on the cluster round");
         assert!(queue.is_empty());
+        // an asymmetric (compressed-uplink) wire keeps the identity too
+        let thin = WireBits {
+            up: wire.up / 8.0,
+            down: wire.down,
+        };
+        let mut queue = EventQueue::new();
+        assert_eq!(
+            cluster_round(&l, &e, &members, ps, thin),
+            cluster_round_events(&mut queue, &l, &e, &members, 0, ps, thin)
+        );
         // and for the empty cluster
         let mut queue = EventQueue::new();
         assert_eq!(
-            cluster_round(&l, &e, &[], ps, bits),
-            cluster_round_events(&mut queue, &l, &e, &[], 0, ps, bits)
+            cluster_round(&l, &e, &[], ps, wire),
+            cluster_round_events(&mut queue, &l, &e, &[], 0, ps, wire)
         );
     }
 
@@ -540,13 +551,13 @@ mod tests {
             stations: &stations,
             constellation: &c,
         };
-        let bits = 1e6;
-        let analytic = AnalyticGroundExchange.exchange(&ctx, &[0, 1], 0.0, bits);
+        let wire = WireBits::symmetric(1e6);
+        let analytic = AnalyticGroundExchange.exchange(&ctx, &[0, 1], 0.0, wire);
         let event = EventGroundExchange {
             max_wait_s: 7000.0,
             window_step_s: 30.0,
         }
-        .exchange(&ctx, &[0, 1], 0.0, bits);
+        .exchange(&ctx, &[0, 1], 0.0, wire);
         assert_eq!(analytic.exchanged, vec![0, 1]);
         assert_eq!(event.exchanged, vec![0, 1]);
         assert_eq!(analytic.duration_s, event.duration_s, "durations diverged");
@@ -567,17 +578,18 @@ mod tests {
             stations: &stations,
             constellation: &c,
         };
+        let wire = WireBits::symmetric(1e6);
         let out = EventGroundExchange {
             max_wait_s: 7000.0,
             window_step_s: 30.0,
         }
-        .exchange(&ctx, &[0, 1], 0.0, 1e6);
+        .exchange(&ctx, &[0, 1], 0.0, wire);
         assert_eq!(out.exchanged, vec![0, 1], "both should eventually exchange");
         assert!(out.wait_s > 1000.0, "antipodal PS should wait: {}", out.wait_s);
         assert!(out.duration_s > out.wait_s * 0.5, "waits must be simulated time");
         assert!(out.stale.is_empty());
         // the analytic stage charges nothing for the invisible PS
-        let analytic = AnalyticGroundExchange.exchange(&ctx, &[0, 1], 0.0, 1e6);
+        let analytic = AnalyticGroundExchange.exchange(&ctx, &[0, 1], 0.0, wire);
         assert_eq!(analytic.exchanged, vec![0]);
         assert!(out.duration_s > analytic.duration_s);
     }
@@ -598,7 +610,7 @@ mod tests {
             max_wait_s: 2000.0,
             window_step_s: 30.0,
         }
-        .exchange(&ctx, &[0, 1], 0.0, 1e6);
+        .exchange(&ctx, &[0, 1], 0.0, WireBits::symmetric(1e6));
         assert!(out.exchanged.is_empty());
         assert_eq!(out.stale, vec![0, 1]);
         assert_eq!(out.duration_s, 0.0);

@@ -55,6 +55,9 @@ impl<'rt> Trial<'rt> {
     /// Build a trial: constellation, data shards, initial models.
     pub fn new(cfg: ExperimentConfig, manifest: &Manifest, rt: &'rt ModelRuntime) -> Result<Trial<'rt>> {
         cfg.validate()?;
+        // --strict-float pins the scalar kernel path; a pure performance
+        // switch, since both paths are bit-identical (host_model docs)
+        crate::runtime::host_model::float_mode::set_strict(cfg.strict_float);
         assert_eq!(
             rt.spec.name,
             cfg.variant(),

@@ -1,0 +1,410 @@
+//! Upload compression (`--compress none|topk:<frac>|int8`): the wire
+//! plane that shrinks member → PS and PS → GS parameter uploads, billed
+//! through the [`Payload`] accounting seam so Eq. 6/7 time and energy see
+//! the real bytes on the wire.
+//!
+//! Both lossy modes carry **error feedback**: what the encoder drops or
+//! rounds away this round is parked in a per-sender residual and added
+//! back into the next round's delta, so quantisation error accumulates
+//! into later uploads instead of being lost (Seide et al. 2014; Stich
+//! et al. 2018). Residual buffers live in the coordinator's `ParamPool`
+//! and are flushed when re-clustering invalidates the sender's base
+//! model, exactly like parked buffered contributions.
+//!
+//! Determinism contract: encoding happens on the coordinator thread in
+//! member order (never inside engine jobs), top-k selection uses a total
+//! order (`|v|` descending, lowest index wins ties), and `--compress
+//! none` is a structural no-op — byte-identical to the pre-compression
+//! goldens.
+
+use crate::network::{Payload, WireBits};
+
+/// What an upload looks like on the wire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressMode {
+    /// Dense f32 parameters — the historical wire format, bit-identical
+    /// to the pre-compression accounting and trajectories.
+    None,
+    /// Top-k sparsification: keep the `frac·P` largest-magnitude delta
+    /// coordinates, send them as f32 values plus bit-packed
+    /// `ceil(log2(P))`-bit indices; the rest feeds the residual.
+    TopK(f64),
+    /// Uniform int8 quantisation of the delta: one f32 scale per upload
+    /// (`max|v|/127`), 8-bit codes; rounding error feeds the residual.
+    Int8,
+}
+
+impl CompressMode {
+    /// Parse the `--compress` flag value (`none`, `topk:<frac>`, `int8`).
+    /// Range validation lives in `ExperimentConfig::validate`.
+    pub fn parse(s: &str) -> Option<CompressMode> {
+        match s {
+            "none" => Some(CompressMode::None),
+            "int8" => Some(CompressMode::Int8),
+            _ => {
+                let frac: f64 = s.strip_prefix("topk:")?.parse().ok()?;
+                frac.is_finite().then_some(CompressMode::TopK(frac))
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CompressMode::None => "none".into(),
+            CompressMode::TopK(frac) => format!("topk:{frac}"),
+            CompressMode::Int8 => "int8".into(),
+        }
+    }
+
+    /// Coordinates kept by a top-k upload of a `param_count` model.
+    pub fn kept(frac: f64, param_count: usize) -> usize {
+        ((frac * param_count as f64).ceil() as usize).clamp(1, param_count)
+    }
+
+    /// The exact wire format of one upload under this mode.
+    pub fn payload(&self, param_count: usize) -> Payload {
+        match *self {
+            CompressMode::None => Payload::dense(param_count),
+            CompressMode::TopK(frac) => {
+                let k = CompressMode::kept(frac, param_count);
+                Payload {
+                    values: k,
+                    value_bits: 32,
+                    indices: k,
+                    index_bits: ceil_log2(param_count),
+                    // kept-count (u32) + base-model version tag (u32)
+                    header_bytes: 8,
+                }
+            }
+            CompressMode::Int8 => Payload {
+                values: param_count,
+                value_bits: 8,
+                indices: 0,
+                index_bits: 0,
+                // scale (f32) + length (u32) + base-model version (u32)
+                header_bytes: 12,
+            },
+        }
+    }
+
+    /// Billed bits of one model exchange: compressed uplink, dense f32
+    /// downlink (the broadcast back is never compressed — every receiver
+    /// needs the exact new base model for the next round's delta).
+    pub fn wire(&self, param_count: usize) -> WireBits {
+        WireBits {
+            up: self.payload(param_count).bits(),
+            down: Payload::dense(param_count).bits(),
+        }
+    }
+
+    /// Whether encoding is a no-op (skip residual allocation entirely).
+    pub fn is_none(&self) -> bool {
+        matches!(self, CompressMode::None)
+    }
+}
+
+/// Bits needed to index a coordinate of an `n`-vector: `ceil(log2(n))`,
+/// at least 1.
+fn ceil_log2(n: usize) -> u32 {
+    assert!(n > 0, "empty payload");
+    (usize::BITS - (n - 1).leading_zeros()).max(1)
+}
+
+/// Reused encoder workspace (delta vector + index permutation), so the
+/// per-member encode loop allocates nothing in steady state.
+#[derive(Debug, Default)]
+pub struct CompressScratch {
+    v: Vec<f32>,
+    idx: Vec<u32>,
+}
+
+impl CompressScratch {
+    pub fn new() -> CompressScratch {
+        CompressScratch::default()
+    }
+}
+
+/// Encode one upload in place and return what it costs on the wire.
+///
+/// `params` holds the sender's trained model and `base` the broadcast
+/// model it trained from (which the receiver also holds — deltas are
+/// coded against it). The error-feedback delta is
+/// `v = (params − base) + residual`; on return `params` holds the
+/// **decoded** model the receiver reconstructs (`base` + transmitted
+/// delta) and `residual` holds what was dropped, so that transmitted +
+/// residual′ recovers `v` (bitwise exactly for top-k). `--compress none`
+/// touches nothing.
+pub fn encode_upload(
+    mode: CompressMode,
+    params: &mut [f32],
+    base: &[f32],
+    residual: &mut [f32],
+    scratch: &mut CompressScratch,
+) -> Payload {
+    let n = params.len();
+    assert_eq!(base.len(), n, "base/model length mismatch");
+    if mode.is_none() {
+        return Payload::dense(n);
+    }
+    assert_eq!(residual.len(), n, "residual length mismatch");
+    let v = &mut scratch.v;
+    v.clear();
+    v.extend((0..n).map(|i| (params[i] - base[i]) + residual[i]));
+    match mode {
+        CompressMode::None => unreachable!("handled above"),
+        CompressMode::TopK(frac) => {
+            let k = CompressMode::kept(frac, n);
+            let idx = &mut scratch.idx;
+            idx.clear();
+            idx.extend(0..n as u32);
+            if k < n {
+                // total order: |v| descending, lowest index wins ties —
+                // the selected set is unique, so encoding is deterministic
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    v[b as usize]
+                        .abs()
+                        .total_cmp(&v[a as usize].abs())
+                        .then(a.cmp(&b))
+                });
+            }
+            for i in 0..n {
+                params[i] = base[i];
+                residual[i] = v[i];
+            }
+            for &i in &idx[..k] {
+                let i = i as usize;
+                params[i] = base[i] + v[i];
+                residual[i] = 0.0;
+            }
+        }
+        CompressMode::Int8 => {
+            let max_abs = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            if max_abs == 0.0 {
+                // nothing to send: the delta is exactly zero everywhere
+                params.copy_from_slice(base);
+                residual.fill(0.0);
+            } else {
+                let scale = max_abs / 127.0;
+                for i in 0..n {
+                    let q = (v[i] / scale).round().clamp(-127.0, 127.0);
+                    let deq = q * scale;
+                    params[i] = base[i] + deq;
+                    residual[i] = v[i] - deq;
+                }
+            }
+        }
+    }
+    mode.payload(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::{property, Gen};
+
+    #[test]
+    fn parse_roundtrips_and_rejects_junk() {
+        assert_eq!(CompressMode::parse("none"), Some(CompressMode::None));
+        assert_eq!(CompressMode::parse("int8"), Some(CompressMode::Int8));
+        assert_eq!(
+            CompressMode::parse("topk:0.1"),
+            Some(CompressMode::TopK(0.1))
+        );
+        assert_eq!(CompressMode::parse("topk:"), None);
+        assert_eq!(CompressMode::parse("topk:lots"), None);
+        assert_eq!(CompressMode::parse("topk:inf"), None);
+        assert_eq!(CompressMode::parse("gzip"), None);
+        for s in ["none", "topk:0.25", "int8"] {
+            let m = CompressMode::parse(s).unwrap();
+            assert_eq!(CompressMode::parse(&m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn payload_shapes_and_index_packing() {
+        // dense: the historical 32·P bits exactly
+        let p = CompressMode::None.payload(2442);
+        assert_eq!(p, Payload::dense(2442));
+        assert_eq!(p.bits().to_bits(), (2442.0f64 * 32.0).to_bits());
+        // top-k: bit-packed indices make the 15 %-of-dense budget reachable
+        // on small models — 2442 params need 12-bit indices, not 32
+        let p = CompressMode::TopK(0.1).payload(2442);
+        assert_eq!(p.values, 245); // ceil(0.1 · 2442)
+        assert_eq!(p.indices, 245);
+        assert_eq!(p.index_bits, 12);
+        assert_eq!(p.header_bytes, 8);
+        assert!(p.bits() <= 0.15 * Payload::dense(2442).bits(), "{}", p.bits());
+        // int8: a quarter of dense plus a fixed header
+        let p = CompressMode::Int8.payload(2442);
+        assert_eq!(p.bits(), 2442.0 * 8.0 + 96.0);
+        // wire(): uplink compressed, downlink dense; `none` fully dense
+        let w = CompressMode::TopK(0.1).wire(2442);
+        assert!(w.up < w.down);
+        assert_eq!(w.down, Payload::dense(2442).bits());
+        let w = CompressMode::None.wire(2442);
+        assert_eq!(w.up.to_bits(), WireBits::dense(2442).up.to_bits());
+        assert_eq!(w.down.to_bits(), WireBits::dense(2442).down.to_bits());
+    }
+
+    #[test]
+    fn ceil_log2_is_index_width() {
+        for (n, bits) in [(1, 1), (2, 1), (3, 2), (4, 2), (5, 3), (2442, 12), (61_706, 16)] {
+            assert_eq!(ceil_log2(n), bits, "n={n}");
+            // every index 0..n fits in `bits`
+            assert!(n <= 1usize << bits);
+        }
+    }
+
+    #[test]
+    fn kept_clamps_to_valid_range() {
+        assert_eq!(CompressMode::kept(0.1, 2442), 245);
+        assert_eq!(CompressMode::kept(1.0, 10), 10);
+        assert_eq!(CompressMode::kept(1e-9, 10), 1);
+        assert_eq!(CompressMode::kept(5.0, 10), 10);
+    }
+
+    #[test]
+    fn none_mode_touches_nothing() {
+        let base = vec![1.0f32, 2.0, 3.0];
+        let mut params = vec![1.5f32, 1.5, 1.5];
+        let before = params.clone();
+        let mut residual = vec![0.25f32; 3];
+        let mut scratch = CompressScratch::new();
+        let p = encode_upload(
+            CompressMode::None,
+            &mut params,
+            &base,
+            &mut residual,
+            &mut scratch,
+        );
+        assert_eq!(p, Payload::dense(3));
+        assert_eq!(params, before);
+        assert_eq!(residual, vec![0.25; 3]);
+    }
+
+    #[test]
+    fn topk_ties_pick_lowest_index() {
+        // four coordinates with equal |delta|: k = 2 must keep 0 and 1
+        let base = vec![0.0f32; 4];
+        let mut params = vec![1.0f32, -1.0, 1.0, -1.0];
+        let mut residual = vec![0.0f32; 4];
+        let mut scratch = CompressScratch::new();
+        encode_upload(
+            CompressMode::TopK(0.5),
+            &mut params,
+            &base,
+            &mut residual,
+            &mut scratch,
+        );
+        assert_eq!(params, vec![1.0, -1.0, 0.0, 0.0]);
+        assert_eq!(residual, vec![0.0, 0.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn topk_error_feedback_is_bitwise_exact() {
+        property("top-k: transmitted + residual′ == v bitwise", 128, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let base = g.f32_vec(n, -1.0, 1.0);
+            let trained = g.f32_vec(n, -1.0, 1.0);
+            let residual0 = g.f32_vec(n, -0.1, 0.1);
+            let frac = g.f64_in(0.05, 1.0);
+            let v: Vec<f32> = (0..n)
+                .map(|i| (trained[i] - base[i]) + residual0[i])
+                .collect();
+            let mut params = trained.clone();
+            let mut residual = residual0.clone();
+            let mut scratch = CompressScratch::new();
+            let p = encode_upload(
+                CompressMode::TopK(frac),
+                &mut params,
+                &base,
+                &mut residual,
+                &mut scratch,
+            );
+            let k = CompressMode::kept(frac, n);
+            assert_eq!(p.values, k);
+            let mut sent = 0;
+            for i in 0..n {
+                if params[i].to_bits() == base[i].to_bits() {
+                    // dropped coordinate: the whole delta went to residual
+                    assert_eq!(residual[i].to_bits(), v[i].to_bits(), "i={i}");
+                } else {
+                    // kept coordinate: decoded = base + v, residual cleared
+                    sent += 1;
+                    assert_eq!(params[i].to_bits(), (base[i] + v[i]).to_bits(), "i={i}");
+                    assert_eq!(residual[i], 0.0, "i={i}");
+                }
+            }
+            assert!(sent <= k, "{sent} > k={k}");
+        });
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_step() {
+        property("int8: |v − deq| ≤ scale·0.501", 128, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let base = g.f32_vec(n, -2.0, 2.0);
+            let trained = g.f32_vec(n, -2.0, 2.0);
+            let residual0 = g.f32_vec(n, -0.1, 0.1);
+            let v: Vec<f32> = (0..n)
+                .map(|i| (trained[i] - base[i]) + residual0[i])
+                .collect();
+            let max_abs = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let mut params = trained.clone();
+            let mut residual = residual0.clone();
+            let mut scratch = CompressScratch::new();
+            encode_upload(
+                CompressMode::Int8,
+                &mut params,
+                &base,
+                &mut residual,
+                &mut scratch,
+            );
+            if max_abs == 0.0 {
+                for i in 0..n {
+                    assert_eq!(params[i], base[i]);
+                    assert_eq!(residual[i], 0.0);
+                }
+                return;
+            }
+            let scale = max_abs / 127.0;
+            for i in 0..n {
+                // the residual is exactly the rounding error, and it is
+                // bounded by (just over) half a quantisation step
+                assert!(residual[i].abs() <= scale * 0.501, "i={i}: {} vs {scale}", residual[i]);
+                let deq = v[i] - residual[i];
+                assert_eq!(params[i].to_bits(), (base[i] + deq).to_bits(), "i={i}");
+                // decoded delta is a representable code times the scale
+                let q = (deq / scale).round();
+                assert!(q.abs() <= 127.0, "i={i}: code {q}");
+            }
+        });
+    }
+
+    #[test]
+    fn residuals_accumulate_across_rounds() {
+        // a delta too small to survive top-k eventually ships once the
+        // residual has grown past the competing coordinate — the classic
+        // error-feedback liveness property
+        let base = vec![0.0f32; 2];
+        let mut residual = vec![0.0f32; 2];
+        let mut scratch = CompressScratch::new();
+        let mut shipped_small = false;
+        for _ in 0..8 {
+            // coordinate 0 trains a big delta, coordinate 1 a small one
+            let mut params = vec![1.0f32, 0.3];
+            encode_upload(
+                CompressMode::TopK(0.5),
+                &mut params,
+                &base,
+                &mut residual,
+                &mut scratch,
+            );
+            if params[1] != 0.0 {
+                shipped_small = true;
+                break;
+            }
+        }
+        assert!(shipped_small, "residual never flushed coordinate 1");
+    }
+}

@@ -5,8 +5,10 @@
 
 pub mod aggregate;
 pub mod client;
+pub mod compress;
 pub mod evaluate;
 pub mod local;
 
 pub use aggregate::{fedavg_weights, fold_stale, quality_weights, stale_composed_weights, staleness_weight};
 pub use client::SatClient;
+pub use compress::{encode_upload, CompressMode, CompressScratch};

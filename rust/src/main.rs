@@ -30,6 +30,7 @@ const FLAGS: &[&str] = &[
     "no-index",
     "pooled-params",
     "resident-params",
+    "strict-float",
 ];
 
 fn main() {
@@ -123,6 +124,15 @@ COMMON OPTIONS
   --max-ground-wait S            event timeline: seconds a PS may wait for a
                                  window before going stale (default 7000)
   --window-step S                event timeline: window-search sampling step
+  --compress none|topk:<frac>|int8
+                                 wire plane: compress member→PS and PS→GS
+                                 uploads (error-feedback top-k or int8),
+                                 billing the actual payload bytes into
+                                 Eq. 6/7 time and energy. 'none' (default)
+                                 is byte-identical to the historical runs
+  --strict-float                 pin the scalar (pre-SIMD) compute kernels;
+                                 pure speed knob — both paths are
+                                 bit-identical (see runtime::host_model)
   --workers N                    round-engine worker threads (0 = all cores;
                                  any value gives identical metrics)
   --config FILE                  key=value config file (CLI wins)

@@ -64,6 +64,12 @@ pub struct Ledger {
     /// staleness τ = 0, 1, 2, 3, ≥ 4 (fixed-size — no allocation on the
     /// round path).
     pub staleness_hist: [usize; 5],
+    /// Wire plane: cumulative uplink payload bytes actually billed
+    /// (member → PS uploads plus PS → GS uploads, at the `--compress`
+    /// mode's encoded size). Diagnostic — deliberately **not** part of
+    /// the recorded JSON series, so compression sweeps leave the
+    /// golden-trajectory files untouched.
+    pub wire_bytes: f64,
 }
 
 impl Ledger {
@@ -139,6 +145,12 @@ impl Ledger {
     pub fn add_energy(&mut self, de: f64) {
         assert!(de >= 0.0 && de.is_finite(), "bad energy increment {de}");
         self.energy_j += de;
+    }
+
+    /// Record uplink payload bytes billed on the wire.
+    pub fn add_wire_bytes(&mut self, bytes: f64) {
+        assert!(bytes >= 0.0 && bytes.is_finite(), "bad wire bytes {bytes}");
+        self.wire_bytes += bytes;
     }
 
     /// Record an evaluation point at the current totals.
@@ -256,6 +268,20 @@ mod tests {
     #[should_panic(expected = "bad idle increment")]
     fn rejects_negative_idle() {
         Ledger::new().add_idle(-0.5);
+    }
+
+    #[test]
+    fn wire_bytes_accumulate() {
+        let mut l = Ledger::new();
+        l.add_wire_bytes(9768.0);
+        l.add_wire_bytes(1342.5);
+        assert_eq!(l.wire_bytes, 11110.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad wire bytes")]
+    fn rejects_negative_wire_bytes() {
+        Ledger::new().add_wire_bytes(-1.0);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! Shannon `B·log2(1+SNR)` bit rate (= `rate / ln 2`) for callers that
 //! need physical units.
 
-use super::params::NetworkParams;
+use super::params::{NetworkParams, Payload};
 use crate::orbit::SPEED_OF_LIGHT;
 
 /// Achievable-rate link model. The paper writes
@@ -84,6 +84,14 @@ impl LinkModel {
     /// `cpu_hz`: `t_cmp = D·Q/f`.
     pub fn compute_time(&self, samples: usize, cpu_hz: f64) -> f64 {
         samples as f64 * self.params.cycles_per_sample / cpu_hz
+    }
+
+    /// The wire-plane accounting seam: exact billed bytes of one upload.
+    /// Every byte count a bench or ledger reports derives from a
+    /// [`Payload`] through here, so dense and compressed paths cannot
+    /// drift apart in their bytes-on-the-wire formula.
+    pub fn upload_bytes(&self, payload: &Payload) -> f64 {
+        payload.bytes()
     }
 }
 

@@ -23,4 +23,4 @@ pub mod params;
 
 pub use energy::EnergyModel;
 pub use link::LinkModel;
-pub use params::NetworkParams;
+pub use params::{NetworkParams, Payload, WireBits};

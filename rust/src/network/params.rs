@@ -1,4 +1,79 @@
-//! Physical-layer and compute constants.
+//! Physical-layer and compute constants, plus the wire-plane accounting
+//! seam: every upload in the system is described by a [`Payload`]
+//! (values + indices + header on the wire) and billed through
+//! [`Payload::bits`]/[`LinkModel::upload_bytes`], so the dense and
+//! compressed paths share one bytes-on-the-wire formula instead of
+//! scattering `4·P` byte math around the codebase.
+
+/// Exact on-the-wire size of one upload: `values` coefficients at
+/// `value_bits` each, `indices` coordinates at `index_bits` each (top-k
+/// sparsification), plus a fixed header. A dense f32 model is
+/// `Payload::dense(P)` = `32·P` bits with no header, which keeps the
+/// wire-plane refactor bit-identical to the historical `4·P` byte math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Payload {
+    /// Coefficients on the wire.
+    pub values: usize,
+    /// Bits per coefficient (32 dense/top-k, 8 int8-quantised).
+    pub value_bits: u32,
+    /// Coordinate count (top-k sends one per kept coefficient).
+    pub indices: usize,
+    /// Bits per coordinate (`ceil(log2(P))`, bit-packed).
+    pub index_bits: u32,
+    /// Fixed header bytes (length/scale framing).
+    pub header_bytes: usize,
+}
+
+impl Payload {
+    /// A dense f32 parameter upload (the uncompressed wire format).
+    pub fn dense(param_count: usize) -> Payload {
+        Payload {
+            values: param_count,
+            value_bits: 32,
+            indices: 0,
+            index_bits: 0,
+            header_bytes: 0,
+        }
+    }
+
+    /// Total size on the wire, bits — the Eq. 6/7 `ζ` this payload bills.
+    pub fn bits(&self) -> f64 {
+        self.values as f64 * self.value_bits as f64
+            + self.indices as f64 * self.index_bits as f64
+            + self.header_bytes as f64 * 8.0
+    }
+
+    /// Total size on the wire, bytes.
+    pub fn bytes(&self) -> f64 {
+        self.bits() / 8.0
+    }
+}
+
+/// Billed wire sizes of one model exchange: the uplink payload (member →
+/// PS, or PS → GS — the direction compression shrinks) and the downlink
+/// payload (the dense broadcast back). With `--compress none` both equal
+/// the historical `32·P`, keeping every time/energy fold bit-identical to
+/// the pre-wire-plane accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireBits {
+    /// Uplink payload, bits.
+    pub up: f64,
+    /// Downlink (broadcast) payload, bits.
+    pub down: f64,
+}
+
+impl WireBits {
+    /// Dense f32 model in both directions.
+    pub fn dense(param_count: usize) -> WireBits {
+        WireBits::symmetric(Payload::dense(param_count).bits())
+    }
+
+    /// The same raw bit count in both directions (tests and callers that
+    /// predate compression).
+    pub fn symmetric(bits: f64) -> WireBits {
+        WireBits { up: bits, down: bits }
+    }
+}
 
 /// All constants of the paper's §II-C models in SI units.
 #[derive(Clone, Copy, Debug)]
@@ -49,9 +124,15 @@ impl Default for NetworkParams {
 }
 
 impl NetworkParams {
-    /// Configure the upload payload from a parameter count (f32 weights).
-    pub fn with_model_params(mut self, param_count: usize) -> Self {
-        self.upload_bits = param_count as f64 * 32.0;
+    /// Configure the upload payload from a parameter count (dense f32
+    /// weights, via the [`Payload`] seam).
+    pub fn with_model_params(self, param_count: usize) -> Self {
+        self.with_payload(&Payload::dense(param_count))
+    }
+
+    /// Configure the upload payload from an exact wire format.
+    pub fn with_payload(mut self, payload: &Payload) -> Self {
+        self.upload_bits = payload.bits();
         self
     }
 }
@@ -73,5 +154,40 @@ mod tests {
     fn model_size_sets_payload() {
         let p = NetworkParams::default().with_model_params(61_706);
         assert_eq!(p.upload_bits, 61_706.0 * 32.0);
+    }
+
+    #[test]
+    fn dense_payload_matches_historical_byte_math() {
+        // the seam's golden-stability contract: a dense payload bills
+        // exactly the pre-wire-plane 32·P bits, bitwise
+        for n in [1usize, 2442, 50_890, 61_706] {
+            let p = Payload::dense(n);
+            assert_eq!(p.bits().to_bits(), (n as f64 * 32.0).to_bits());
+            assert_eq!(p.bytes(), n as f64 * 4.0);
+        }
+        let w = WireBits::dense(2442);
+        assert_eq!(w.up, 2442.0 * 32.0);
+        assert_eq!(w.up.to_bits(), w.down.to_bits());
+    }
+
+    #[test]
+    fn payload_bits_count_values_indices_and_header() {
+        let p = Payload {
+            values: 10,
+            value_bits: 32,
+            indices: 10,
+            index_bits: 12,
+            header_bytes: 8,
+        };
+        assert_eq!(p.bits(), 10.0 * 32.0 + 10.0 * 12.0 + 64.0);
+        assert_eq!(p.bytes(), p.bits() / 8.0);
+        let q = Payload {
+            values: 100,
+            value_bits: 8,
+            indices: 0,
+            index_bits: 0,
+            header_bytes: 12,
+        };
+        assert_eq!(q.bits(), 896.0);
     }
 }

@@ -30,6 +30,32 @@
 //! across random geometries. Results therefore remain deterministic on
 //! any worker thread — the property the engine's guarantee rests on.
 //!
+//! # The SIMD plane (DESIGN note: float reassociation)
+//!
+//! On top of the blocked schedule, the default ("fast") path vectorises
+//! the dominant `W1` forward/backward loops and the parameter-sized
+//! update loops with explicit 8-lane `f32` blocks (the vendored [`wide`]
+//! crate), dispatched at runtime: an `#[target_feature(enable = "avx2")]`
+//! specialisation when the CPU has AVX2, the same portable lane code
+//! otherwise. The vectorisation introduces **zero reassociation**: lanes
+//! are laid across *independent* accumulators (eight consecutive `a1[j]`
+//! or `gw1[k*h+j]` cells), each of which still receives its partial sums
+//! in the seed's `k`-ascending order — the forward kernel unrolls four
+//! `k`-rows per pass purely to hold the `a1` tile in registers, adding
+//! the four terms in the same order four scalar iterations would. There
+//! is no FMA contraction (Rust never fuses `a + b * c` implicitly, and
+//! [`wide`] lowers mul and add separately) and the transcendentals
+//! (`tanh`, `exp`, `ln`) stay scalar libm calls. The fast path is
+//! therefore **bit-identical** to the blocked path and to [`reference`] —
+//! pinned by the max-ulp property test in this module, which asserts a
+//! drift of exactly zero ulp across random geometries.
+//!
+//! [`float_mode`] (the `--strict-float` config/CLI knob) pins every
+//! kernel to the scalar blocked path anyway, as the paranoid oracle
+//! setting: `--strict-float` runs are byte-identical to default runs by
+//! the argument above, and the golden-trajectory suite holds under
+//! either setting.
+//!
 //! [`train_step_into`]: HostModel::train_step_into
 //! [`train_chunk_into`]: HostModel::train_chunk_into
 //! [`maml_step_into`]: HostModel::maml_step_into
@@ -37,6 +63,170 @@
 
 use super::artifacts::VariantSpec;
 use anyhow::{bail, Result};
+use wide::f32x8;
+
+/// Process-wide float-path selector for the host kernels — the
+/// `--strict-float` knob. `strict` pins the scalar cache-blocked kernels;
+/// the default "fast" mode runs the 8-lane SIMD schedule. Both paths are
+/// bit-identical (see the module docs), so the selector is a pure
+/// performance switch: flipping it mid-run cannot change any result,
+/// which is also why a relaxed global is sound under the parallel round
+/// engine.
+pub mod float_mode {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static STRICT: AtomicBool = AtomicBool::new(false);
+
+    /// Pin every host kernel to the scalar cache-blocked path
+    /// (`--strict-float`).
+    pub fn set_strict(on: bool) {
+        STRICT.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the scalar path is pinned.
+    pub fn strict() -> bool {
+        STRICT.load(Ordering::Relaxed)
+    }
+}
+
+/// `acc[j] += x * w[j]` over one row, eight lanes at a time. Per-cell
+/// arithmetic is exactly the scalar statement (one mul, one add, no FMA),
+/// so the vectorisation only changes how many independent cells advance
+/// per instruction.
+#[inline(always)]
+fn axpy_row(acc: &mut [f32], w: &[f32], x: f32) {
+    let n = acc.len();
+    let s = f32x8::splat(x);
+    let mut j = 0;
+    while j + 8 <= n {
+        let a = f32x8::from_slice(&acc[j..]) + f32x8::from_slice(&w[j..]) * s;
+        a.write_to_slice(&mut acc[j..]);
+        j += 8;
+    }
+    while j < n {
+        acc[j] += x * w[j];
+        j += 1;
+    }
+}
+
+/// Four consecutive `axpy_row`s (`w4` holds four rows of length `h`)
+/// with the `acc` tile held in registers across the four rows: each cell
+/// receives `x[0]·w0[j]`, `x[1]·w1[j]`, `x[2]·w2[j]`, `x[3]·w3[j]` in
+/// that order — the same partial-sum order as four scalar `k`-iterations
+/// — while loading and storing `acc` once instead of four times.
+#[inline(always)]
+fn axpy_rows4(acc: &mut [f32], w4: &[f32], h: usize, x: [f32; 4]) {
+    let (w0, rest) = w4.split_at(h);
+    let (w1, rest) = rest.split_at(h);
+    let (w2, w3) = rest.split_at(h);
+    let s0 = f32x8::splat(x[0]);
+    let s1 = f32x8::splat(x[1]);
+    let s2 = f32x8::splat(x[2]);
+    let s3 = f32x8::splat(x[3]);
+    let mut j = 0;
+    while j + 8 <= h {
+        let mut a = f32x8::from_slice(&acc[j..]);
+        a = a + f32x8::from_slice(&w0[j..]) * s0;
+        a = a + f32x8::from_slice(&w1[j..]) * s1;
+        a = a + f32x8::from_slice(&w2[j..]) * s2;
+        a = a + f32x8::from_slice(&w3[j..]) * s3;
+        a.write_to_slice(&mut acc[j..]);
+        j += 8;
+    }
+    while j < h {
+        let mut a = acc[j];
+        a += x[0] * w0[j];
+        a += x[1] * w1[j];
+        a += x[2] * w2[j];
+        a += x[3] * w3[j];
+        acc[j] = a;
+        j += 1;
+    }
+}
+
+/// `p[i] -= lr * g[i]`, eight lanes at a time (same per-cell arithmetic
+/// as the scalar statement).
+#[inline(always)]
+fn sgd_step_lanes(p: &mut [f32], g: &[f32], lr: f32) {
+    let n = p.len();
+    let s = f32x8::splat(lr);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = f32x8::from_slice(&p[i..]) - f32x8::from_slice(&g[i..]) * s;
+        v.write_to_slice(&mut p[i..]);
+        i += 8;
+    }
+    while i < n {
+        p[i] -= lr * g[i];
+        i += 1;
+    }
+}
+
+/// `out[i] = p[i] - rate * g[i]`, eight lanes at a time (the MAML
+/// adapted-parameter build).
+#[inline(always)]
+fn scaled_sub_lanes(out: &mut [f32], p: &[f32], g: &[f32], rate: f32) {
+    let n = out.len();
+    let s = f32x8::splat(rate);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = f32x8::from_slice(&p[i..]) - f32x8::from_slice(&g[i..]) * s;
+        v.write_to_slice(&mut out[i..]);
+        i += 8;
+    }
+    while i < n {
+        out[i] = p[i] - rate * g[i];
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sgd_step_avx2(p: &mut [f32], g: &[f32], lr: f32) {
+    sgd_step_lanes(p, g, lr);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scaled_sub_avx2(out: &mut [f32], p: &[f32], g: &[f32], rate: f32) {
+    scaled_sub_lanes(out, p, g, rate);
+}
+
+/// Dispatched SGD update `p -= lr·g`: scalar under
+/// [`float_mode::strict`], AVX2-specialised lanes when the CPU has them,
+/// portable lanes otherwise. All three produce identical bits.
+fn sgd_step(p: &mut [f32], g: &[f32], lr: f32) {
+    if float_mode::strict() {
+        for (pi, &gi) in p.iter_mut().zip(g.iter()) {
+            *pi -= lr * gi;
+        }
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if wide::have_avx2() {
+        // SAFETY: AVX2 support was verified at runtime just above.
+        unsafe { sgd_step_avx2(p, g, lr) };
+        return;
+    }
+    sgd_step_lanes(p, g, lr);
+}
+
+/// Dispatched `out = p - rate·g` (see [`sgd_step`] for the dispatch).
+fn scaled_sub(out: &mut [f32], p: &[f32], g: &[f32], rate: f32) {
+    if float_mode::strict() {
+        for ((o, &pi), &gi) in out.iter_mut().zip(p.iter()).zip(g.iter()) {
+            *o = pi - rate * gi;
+        }
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if wide::have_avx2() {
+        // SAFETY: AVX2 support was verified at runtime just above.
+        unsafe { scaled_sub_avx2(out, p, g, rate) };
+        return;
+    }
+    scaled_sub_lanes(out, p, g, rate);
+}
 
 /// One-hidden-layer MLP geometry recovered from a variant spec.
 #[derive(Clone, Copy, Debug)]
@@ -161,13 +351,179 @@ impl HostModel {
         Ok(())
     }
 
-    /// Cache-blocked forward (+ optional backward) pass over the batch;
-    /// returns `(mean_loss, correct_count)`. When `grad` is provided
-    /// (zeroed, `param_count` long), accumulates d(mean_loss)/d(params)
-    /// into it. Bit-identical to [`reference::batch_pass`]: the loop
-    /// interchange only reorders *independent* accumulators, never the
-    /// partial-sum order within one.
+    /// Forward (+ optional backward) pass over the batch; returns
+    /// `(mean_loss, correct_count)`. When `grad` is provided (zeroed,
+    /// `param_count` long), accumulates d(mean_loss)/d(params) into it.
+    /// Dispatches between the bit-identical schedules: the scalar
+    /// cache-blocked kernel under [`float_mode::strict`], the
+    /// AVX2-specialised 8-lane kernel when the CPU has AVX2, and the
+    /// portable 8-lane kernel otherwise.
     fn pass(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        grad: Option<&mut [f32]>,
+        act: &mut ActBufs,
+    ) -> (f32, f32) {
+        if float_mode::strict() {
+            return self.pass_blocked(params, x, y, grad, act);
+        }
+        #[cfg(target_arch = "x86_64")]
+        if wide::have_avx2() {
+            // SAFETY: AVX2 support was verified at runtime just above.
+            return unsafe { self.pass_avx2(params, x, y, grad, act) };
+        }
+        self.pass_lanes(params, x, y, grad, act)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn pass_avx2(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        grad: Option<&mut [f32]>,
+        act: &mut ActBufs,
+    ) -> (f32, f32) {
+        self.pass_lanes(params, x, y, grad, act)
+    }
+
+    /// The 8-lane pass: identical to [`HostModel::pass_blocked`] except
+    /// that the dominant `W1` forward/backward loops run through the
+    /// [`axpy_rows4`]/[`axpy_row`] lane kernels. Bit-identical to the
+    /// blocked schedule — lanes span independent accumulators, each cell
+    /// keeps its `k`-ascending partial-sum order, and no FMA is emitted
+    /// (see the module docs). `#[inline(always)]` so the AVX2 wrapper
+    /// specialises the whole body under its target features.
+    #[inline(always)]
+    fn pass_lanes(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        mut grad: Option<&mut [f32]>,
+        act: &mut ActBufs,
+    ) -> (f32, f32) {
+        let d = self.input;
+        let h = self.hidden;
+        let c = self.classes;
+        let bsz = y.len();
+        let (w1, rest) = params.split_at(d * h);
+        let (b1, rest) = rest.split_at(h);
+        let (w2, b2) = rest.split_at(h * c);
+        let ActBufs {
+            a1,
+            logits,
+            probs,
+            da1,
+            dl,
+        } = act;
+        let inv_b = 1.0f32 / bsz as f32;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+
+        for i in 0..bsz {
+            let xi = &x[i * d..(i + 1) * d];
+            let label = y[i] as usize;
+
+            // forward: a1 = tanh(W1ᵀx + b1); four k-rows per pass with the
+            // a1 tile in registers, then the leftover rows one at a time
+            a1.copy_from_slice(b1);
+            let mut k = 0;
+            while k + 4 <= d {
+                axpy_rows4(
+                    a1,
+                    &w1[k * h..(k + 4) * h],
+                    h,
+                    [xi[k], xi[k + 1], xi[k + 2], xi[k + 3]],
+                );
+                k += 4;
+            }
+            while k < d {
+                axpy_row(a1, &w1[k * h..(k + 1) * h], xi[k]);
+                k += 1;
+            }
+            for aj in a1.iter_mut() {
+                *aj = aj.tanh();
+            }
+            // logits = W2ᵀa1 + b2: c is small (≤ 10), stays scalar
+            logits.copy_from_slice(b2);
+            for j in 0..h {
+                let aj = a1[j];
+                for (lo, &w) in logits.iter_mut().zip(&w2[j * c..(j + 1) * c]) {
+                    *lo += aj * w;
+                }
+            }
+
+            // softmax cross-entropy (max-shifted for stability)
+            let mut maxl = logits[0];
+            for &l in &logits[1..] {
+                if l > maxl {
+                    maxl = l;
+                }
+            }
+            let mut sum = 0.0f32;
+            for (p, &l) in probs.iter_mut().zip(logits.iter()) {
+                *p = (l - maxl).exp();
+                sum += *p;
+            }
+            for p in probs.iter_mut() {
+                *p /= sum;
+            }
+            loss_sum += -(probs[label].max(1e-12) as f64).ln();
+            let mut best = 0;
+            for o in 1..c {
+                if logits[o] > logits[best] {
+                    best = o;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+
+            if let Some(g) = grad.as_deref_mut() {
+                let (gw1, grest) = g.split_at_mut(d * h);
+                let (gb1, grest) = grest.split_at_mut(h);
+                let (gw2, gb2) = grest.split_at_mut(h * c);
+                // d(mean loss)/d(logit_o) = (p_o − 1{o=y}) / B
+                for o in 0..c {
+                    let dlo = (probs[o] - if o == label { 1.0 } else { 0.0 }) * inv_b;
+                    dl[o] = dlo;
+                    gb2[o] += dlo;
+                }
+                // W2 backward, j-outer: c is small, stays scalar
+                for j in 0..h {
+                    let aj = a1[j];
+                    let w2row = &w2[j * c..(j + 1) * c];
+                    let gw2row = &mut gw2[j * c..(j + 1) * c];
+                    let mut acc = 0.0f32;
+                    for o in 0..c {
+                        gw2row[o] += aj * dl[o];
+                        acc += w2row[o] * dl[o];
+                    }
+                    da1[j] = acc;
+                }
+                // tanh' = 1 − a1²; then W1 backward, one lane kernel per
+                // contiguous gw1 row
+                for j in 0..h {
+                    da1[j] *= 1.0 - a1[j] * a1[j];
+                    gb1[j] += da1[j];
+                }
+                for k in 0..d {
+                    axpy_row(&mut gw1[k * h..(k + 1) * h], da1, xi[k]);
+                }
+            }
+        }
+        ((loss_sum / bsz as f64) as f32, correct as f32)
+    }
+
+    /// The scalar cache-blocked pass (the `--strict-float` path, and the
+    /// pre-SIMD behaviour verbatim). Bit-identical to
+    /// [`reference::batch_pass`]: the loop interchange only reorders
+    /// *independent* accumulators, never the partial-sum order within one.
+    fn pass_blocked(
         &self,
         params: &[f32],
         x: &[f32],
@@ -301,9 +657,7 @@ impl HostModel {
         let HostScratch { act, grad, .. } = scratch;
         grad.fill(0.0);
         let (loss, _) = self.pass(params, x, y, Some(grad.as_mut_slice()), act);
-        for (p, &g) in params.iter_mut().zip(grad.iter()) {
-            *p -= lr * g;
-        }
+        sgd_step(params, grad, lr);
         Ok(loss)
     }
 
@@ -376,14 +730,10 @@ impl HostModel {
         let HostScratch { act, grad, adapted } = scratch;
         grad.fill(0.0);
         let _ = self.pass(params, sx, sy, Some(grad.as_mut_slice()), act);
-        for ((a, &p), &g) in adapted.iter_mut().zip(params.iter()).zip(grad.iter()) {
-            *a = p - alpha * g;
-        }
+        scaled_sub(adapted, params, grad, alpha);
         grad.fill(0.0);
         let (qloss, _) = self.pass(adapted.as_slice(), qx, qy, Some(grad.as_mut_slice()), act);
-        for (p, &g) in params.iter_mut().zip(grad.iter()) {
-            *p -= beta * g;
-        }
+        sgd_step(params, grad, beta);
         Ok(qloss)
     }
 
@@ -848,6 +1198,124 @@ mod tests {
             assert_eq!(p_ref, p_new, "maml_step params diverged");
             assert_eq!(q_ref.to_bits(), q_new.to_bits(), "maml query loss diverged");
         });
+    }
+
+    /// Distance in units-in-the-last-place between two f32s: map the sign-
+    /// magnitude bit patterns onto a monotone integer line, then count the
+    /// representable values between them (0 for equal values).
+    fn ulp_diff(a: f32, b: f32) -> u64 {
+        fn index(v: f32) -> i64 {
+            let k = v.to_bits();
+            if k & 0x8000_0000 != 0 {
+                -((k & 0x7fff_ffff) as i64)
+            } else {
+                k as i64
+            }
+        }
+        index(a).abs_diff(index(b))
+    }
+
+    /// The SIMD plane's contract: the fast (lane) path drifts **zero ulp**
+    /// from the strict scalar path — the vectorisation reassociates
+    /// nothing (module docs), so the property pins exact bit-identity of
+    /// parameters and losses across random geometries, for every kernel
+    /// entry point.
+    #[test]
+    fn simd_path_drifts_zero_ulp_from_strict() {
+        property("fast kernels == strict kernels, 0 ulp", 48, |g: &mut Gen| {
+            let (m, params) = random_geometry(g);
+            let (x, y) = toy_batch(&m, m.batch, g.u64());
+            let (sx, sy) = toy_batch(&m, m.batch, g.u64());
+            let lr = 0.15f32;
+            let mut scratch = HostScratch::new();
+
+            float_mode::set_strict(true);
+            let mut p_strict = params.clone();
+            let l_strict = m.train_step_into(&mut p_strict, &x, &y, lr, &mut scratch).unwrap();
+            let mut q_strict = p_strict.clone();
+            let ml_strict = m
+                .maml_step_into(&mut q_strict, &sx, &sy, &x, &y, 0.03, 0.07, &mut scratch)
+                .unwrap();
+            let (el_strict, ec_strict) = m.eval_step_into(&q_strict, &x, &y, &mut scratch).unwrap();
+
+            float_mode::set_strict(false);
+            let mut p_fast = params.clone();
+            let l_fast = m.train_step_into(&mut p_fast, &x, &y, lr, &mut scratch).unwrap();
+            let mut q_fast = p_fast.clone();
+            let ml_fast = m
+                .maml_step_into(&mut q_fast, &sx, &sy, &x, &y, 0.03, 0.07, &mut scratch)
+                .unwrap();
+            let (el_fast, ec_fast) = m.eval_step_into(&q_fast, &x, &y, &mut scratch).unwrap();
+
+            let max_ulp = p_strict
+                .iter()
+                .zip(&p_fast)
+                .chain(q_strict.iter().zip(&q_fast))
+                .map(|(&a, &b)| ulp_diff(a, b))
+                .max()
+                .unwrap();
+            assert_eq!(
+                max_ulp, 0,
+                "fast path drifted {max_ulp} ulp from strict (d={} h={})",
+                m.input, m.hidden
+            );
+            for (a, b) in p_strict.iter().zip(&p_fast).chain(q_strict.iter().zip(&q_fast)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "params drifted bitwise");
+            }
+            assert_eq!(l_strict.to_bits(), l_fast.to_bits(), "train loss drifted");
+            assert_eq!(ml_strict.to_bits(), ml_fast.to_bits(), "maml loss drifted");
+            assert_eq!(el_strict.to_bits(), el_fast.to_bits(), "eval loss drifted");
+            assert_eq!(ec_strict, ec_fast, "eval correct-count drifted");
+        });
+    }
+
+    #[test]
+    fn strict_flag_toggles_and_reads_back() {
+        float_mode::set_strict(true);
+        assert!(float_mode::strict());
+        float_mode::set_strict(false);
+        assert!(!float_mode::strict());
+    }
+
+    #[test]
+    fn lane_kernels_match_scalar_statements_bitwise() {
+        let mut rng = Rng::new(77);
+        for n in [1usize, 7, 8, 9, 16, 23, 64, 100] {
+            let w: Vec<f32> = (0..4 * n).map(|_| rng.normal() as f32).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let xs = [0.3f32, -1.7, 0.0, 2.5e-3];
+            // axpy_rows4 == four scalar k-iterations in order
+            let mut fast = base.clone();
+            axpy_rows4(&mut fast, &w, n, xs);
+            let mut slow = base.clone();
+            for (k, &xk) in xs.iter().enumerate() {
+                for j in 0..n {
+                    slow[j] += xk * w[k * n + j];
+                }
+            }
+            assert_eq!(fast, slow, "axpy_rows4 diverged at n={n}");
+            // axpy_row == one scalar k-iteration
+            let mut fast = base.clone();
+            axpy_row(&mut fast, &w[..n], 0.9);
+            let mut slow = base.clone();
+            for j in 0..n {
+                slow[j] += 0.9 * w[j];
+            }
+            assert_eq!(fast, slow, "axpy_row diverged at n={n}");
+            // lane updates == scalar updates
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut fast = base.clone();
+            sgd_step_lanes(&mut fast, &g, 0.05);
+            let mut slow = base.clone();
+            for (p, &gi) in slow.iter_mut().zip(&g) {
+                *p -= 0.05 * gi;
+            }
+            assert_eq!(fast, slow, "sgd_step_lanes diverged at n={n}");
+            let mut fast = vec![0.0f32; n];
+            scaled_sub_lanes(&mut fast, &base, &g, 0.05);
+            let slow: Vec<f32> = base.iter().zip(&g).map(|(p, gi)| p - 0.05 * gi).collect();
+            assert_eq!(fast, slow, "scaled_sub_lanes diverged at n={n}");
+        }
     }
 
     #[test]

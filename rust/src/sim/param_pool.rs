@@ -60,6 +60,24 @@ impl ParamPool {
         }
     }
 
+    /// Take an all-zero buffer (recycled and cleared, or freshly
+    /// allocated). The wire plane uses these for error-feedback residuals,
+    /// which must start from exact zeros.
+    pub fn take_zeroed(&self) -> Vec<f32> {
+        let recycled = self.free.lock().expect("param pool poisoned").pop();
+        match recycled {
+            Some(mut buf) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                buf.fill(0.0);
+                buf
+            }
+            None => {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; self.param_count]
+            }
+        }
+    }
+
     /// Grow the free list until it holds at least `n` buffers, so a
     /// bounded scatter of `n` concurrent takes recycles instead of
     /// allocating. The per-cluster sharded round path calls this at
@@ -219,6 +237,18 @@ mod tests {
     #[should_panic(expected = "pool geometry mismatch")]
     fn take_copy_rejects_wrong_source_length() {
         ParamPool::new(4).take_copy(&[0.0; 3]);
+    }
+
+    #[test]
+    fn take_zeroed_clears_recycled_buffers() {
+        let pool = ParamPool::new(4);
+        let a = pool.take_zeroed();
+        assert_eq!(a, vec![0.0; 4]);
+        assert_eq!(pool.stats(), (1, 0));
+        pool.put(vec![1.0f32, 2.0, 3.0, 4.0]);
+        let b = pool.take_zeroed();
+        assert_eq!(b, vec![0.0; 4], "recycled residual must be re-zeroed");
+        assert_eq!(pool.stats(), (1, 1));
     }
 
     #[test]

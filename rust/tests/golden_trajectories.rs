@@ -23,6 +23,7 @@
 use fedhc::baselines::run_cfedavg;
 use fedhc::config::{AggregationMode, ExperimentConfig, Timeline};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::fl::CompressMode;
 use fedhc::metrics::recorder;
 use fedhc::runtime::{Manifest, ModelRuntime};
 use std::path::PathBuf;
@@ -142,6 +143,76 @@ fn golden_aggregation_trajectories_match_exactly() {
     }
     if !seeded.is_empty() {
         eprintln!("seeded {} golden file(s): {seeded:?} — commit them to pin", seeded.len());
+    }
+}
+
+/// The wire plane gets its own snapshots: FedHC under `--compress topk:0.1`
+/// and `--compress int8` on the analytic timeline. These pin the bit-packed
+/// payload maths, the per-sender error-feedback residuals, and the billed
+/// time/energy folds byte for byte.
+fn run_compressed(mode: CompressMode) -> String {
+    let manifest = Manifest::host();
+    let mut cfg = golden_cfg(Timeline::Analytic);
+    cfg.compress = mode;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    recorder::to_json(&res.ledger).to_pretty() + "\n"
+}
+
+#[test]
+fn golden_compressed_trajectories_match_exactly() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    let mut seeded = Vec::new();
+    for (stem, mode) in [
+        ("fedhc_topk01", CompressMode::TopK(0.1)),
+        ("fedhc_int8", CompressMode::Int8),
+    ] {
+        let name = format!("{stem}.json");
+        let path = dir.join(&name);
+        let got = run_compressed(mode);
+        if update || !path.exists() {
+            std::fs::write(&path, &got).unwrap();
+            if !update {
+                seeded.push(name);
+            }
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            got, want,
+            "golden trajectory drifted for fedhc/{stem} — if the change is \
+             intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
+             --test golden_trajectories` and review the diff"
+        );
+    }
+    if !seeded.is_empty() {
+        eprintln!("seeded {} golden file(s): {seeded:?} — commit them to pin", seeded.len());
+    }
+}
+
+/// `--strict-float` (scalar reference kernels) and `--compress none` (dense
+/// wire) must serialise byte-identically to the default run: SIMD blocking
+/// is drift-free by construction and the dense wire path bills exactly the
+/// historical `4·P`-byte folds.
+#[test]
+fn strict_float_dense_wire_matches_default() {
+    let default = run_one("fedhc", Timeline::Analytic);
+    let manifest = Manifest::host();
+    let mut cfg = golden_cfg(Timeline::Analytic);
+    cfg.strict_float = true;
+    cfg.compress = CompressMode::None;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    let strict = recorder::to_json(&res.ledger).to_pretty() + "\n";
+    assert_eq!(strict, default, "--strict-float drifted from the SIMD default run");
+    let path = golden_dir().join("fedhc_analytic.json");
+    if path.exists() && std::env::var("UPDATE_GOLDEN").is_err() {
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(strict, want, "--strict-float drifted from the committed golden");
     }
 }
 

@@ -1,0 +1,83 @@
+//! Wire-plane integration tests: compressed uploads must keep every
+//! determinism contract the dense path has. Encoding runs on the
+//! coordinator thread in member order, so metrics are byte-identical at
+//! any worker count, in both the sync and the buffered aggregation
+//! planes, and the pooled (bounded-memory) mode stays a pure memory
+//! optimisation. `--compress none` byte-identity to the pre-compression
+//! behaviour is pinned separately by the committed golden trajectories.
+
+use fedhc::config::{AggregationMode, ExperimentConfig};
+use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
+use fedhc::fl::CompressMode;
+use fedhc::runtime::{Manifest, ModelRuntime};
+
+fn run_with(cfg: ExperimentConfig) -> RunResult {
+    let manifest = Manifest::host();
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    run_clustered(&mut trial, Strategy::fedhc()).unwrap()
+}
+
+fn tiny_with(mode: CompressMode, workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 5;
+    cfg.workers = workers;
+    cfg.compress = mode;
+    cfg.target_accuracy = None;
+    cfg
+}
+
+fn assert_bitwise(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.ledger.records.len(), b.ledger.records.len(), "{label}");
+    for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
+        assert_eq!(x.round, y.round, "{label}");
+        assert_eq!(x.time_s.to_bits(), y.time_s.to_bits(), "{label} round {}", x.round);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label} round {}", x.round);
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{label} round {}", x.round);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{label} round {}", x.round);
+    }
+    assert_eq!(a.ledger.wire_bytes.to_bits(), b.ledger.wire_bytes.to_bits(), "{label}");
+    assert_eq!(a.ledger.reclusters, b.ledger.reclusters, "{label}");
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{label}");
+}
+
+#[test]
+fn compressed_metrics_identical_across_worker_counts() {
+    for mode in [CompressMode::TopK(0.1), CompressMode::Int8] {
+        let base = run_with(tiny_with(mode, 1));
+        assert!(base.ledger.wire_bytes > 0.0, "{mode:?} billed no bytes");
+        for workers in [4usize, 8] {
+            let other = run_with(tiny_with(mode, workers));
+            assert_bitwise(&base, &other, &format!("{mode:?} workers={workers}"));
+        }
+    }
+}
+
+#[test]
+fn buffered_compressed_metrics_identical_across_worker_counts() {
+    // the buffered plane encodes at send time (contribution creation),
+    // still on the coordinator thread — the event-driven merge schedule
+    // must not let the worker count leak into the wire format
+    let cfg_for = |workers: usize| {
+        let mut cfg = tiny_with(CompressMode::TopK(0.25), workers);
+        cfg.aggregation = AggregationMode::Buffered;
+        cfg.buffer_size = 2;
+        cfg
+    };
+    let base = run_with(cfg_for(1));
+    assert!(base.ledger.buffered_merges > 0, "buffered plane never merged");
+    let other = run_with(cfg_for(8));
+    assert_bitwise(&base, &other, "buffered topk:0.25 workers=8");
+}
+
+#[test]
+fn pooled_mode_matches_resident_under_compression() {
+    // resident mode keeps the *decoded* member params after encoding;
+    // that is inspection-only state, so the pooled (bounded-memory) mode
+    // must produce the identical ledger
+    let mut cfg = tiny_with(CompressMode::Int8, 2);
+    let resident = run_with(cfg.clone());
+    cfg.resident_params = false;
+    let pooled = run_with(cfg);
+    assert_bitwise(&resident, &pooled, "pooled vs resident int8");
+}
