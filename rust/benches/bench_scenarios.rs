@@ -1,11 +1,13 @@
-//! Scenario-matrix bench: all four methods across the five fault-injection
-//! presets (`nominal`, `churn`, `flaky-ground`, `stragglers`, `eclipse`),
-//! at Walker-constellation scale in the full mode and on the tiny smoke
-//! preset under `--fast`. Emits machine-readable `BENCH_scenarios.json` at
-//! the workspace root so scenario behaviour has a committed trajectory,
-//! and asserts the scenario plane's structural claims (panics, never perf
-//! thresholds): the churn preset must fire re-clustering and inject
-//! faults, and the straggler preset must accumulate slowed compute.
+//! Scenario-matrix bench: all four methods across the seven fault-injection
+//! presets (`nominal`, `churn`, `flaky-ground`, `stragglers`, `eclipse`,
+//! `noisy-links`, `ps-crash`), at Walker-constellation scale in the full
+//! mode and on the tiny smoke preset under `--fast`. Emits
+//! machine-readable `BENCH_scenarios.json` at the workspace root so
+//! scenario behaviour has a committed trajectory, and asserts the scenario
+//! plane's structural claims (panics, never perf thresholds): the churn
+//! preset must fire re-clustering and inject faults, the straggler preset
+//! must accumulate slowed compute, and the recovery axis below must
+//! retransmit corrupted uploads and promote backup PSes.
 //! (Cross-preset *time* comparisons live in `tests/scenarios.rs`, where
 //! re-clustering is pinned off so topologies stay comparable.)
 //!
@@ -85,6 +87,65 @@ fn main() {
         strag_fedhc.result.ledger.straggler_wait_s > 0.0,
         "the straggler preset must accumulate slowed compute"
     );
+    assert!(
+        cell(ScenarioKind::NoisyLinks, "fedhc").result.ledger.faults_injected > 0,
+        "the noisy-links preset must inject noise bursts"
+    );
+    assert!(
+        cell(ScenarioKind::PsCrash, "fedhc").result.ledger.faults_injected > 0,
+        "the ps-crash preset must crash PS processes"
+    );
+
+    // recovery axis: the matrix above runs the presets at their defaults,
+    // where the nano-BER bursts are tuned to Mbit-scale payloads and
+    // rarely corrupt the tiny model's ~77-kbit uploads — so the hard
+    // retransmit/failover assertions run here, with noise hot enough (and
+    // PS crashes frequent enough) that the recovery plane must engage
+    println!("== recovery axis: fedhc, retry/backoff + PS failover ==");
+    let mut rec_rows = Vec::new();
+    for label in ["noisy-links-hot", "ps-crash-hot"] {
+        let mut c = cfg.clone();
+        if label == "noisy-links-hot" {
+            c.scenario = ScenarioConfig::preset(ScenarioKind::NoisyLinks);
+            // bursts up to BER 5e-2: corruption is certain at any payload
+            c.scenario.link_noise_ber_nano = 50_000_000;
+        } else {
+            c.scenario = ScenarioConfig::preset(ScenarioKind::PsCrash);
+            c.scenario.ps_fail_prob = 0.5;
+            c.ground_every = 1;
+        }
+        let mut trial = Trial::new(c, &manifest, &rt).expect("trial");
+        let res = run_clustered(&mut trial, Strategy::fedhc()).expect("recovery-axis run");
+        let l = &res.ledger;
+        println!(
+            "  {label:<16} retx {:>5}   corrupt {:>5}   backoff {:>8.0} s   failov {:>3}   wire {:>13.0} B   time {:>9.0} s   acc {:>5.1}%",
+            l.retransmits,
+            l.corrupted_uploads,
+            l.retry_wait_s,
+            l.failovers,
+            l.wire_bytes,
+            l.time_s,
+            res.final_accuracy * 100.0,
+        );
+        rec_rows.push(Json::obj(vec![
+            ("scenario", Json::str(label)),
+            ("retransmits", Json::num(l.retransmits as f64)),
+            ("corrupted_uploads", Json::num(l.corrupted_uploads as f64)),
+            ("retry_wait_s", Json::num(l.retry_wait_s)),
+            ("failovers", Json::num(l.failovers as f64)),
+            ("wire_bytes", Json::num(l.wire_bytes)),
+            ("time_s", Json::num(l.time_s)),
+            ("best_accuracy", Json::num(res.final_accuracy)),
+        ]));
+        if label == "noisy-links-hot" {
+            assert!(l.retransmits > 0, "hot noise must trigger retransmissions");
+            assert!(l.corrupted_uploads > 0, "hot noise must corrupt uploads");
+            assert!(l.retry_wait_s > 0.0, "retries must bill backoff waits");
+        } else {
+            assert!(l.failovers > 0, "every-pass PS crashes must promote backups");
+        }
+    }
+    println!();
 
     // aggregation axis: FedHC on the churn preset under each `--aggregation`
     // mode — the idle-vs-stale columns quantify the FedBuff tradeoff (sync
@@ -141,6 +202,11 @@ fn main() {
                 ("maml_adaptations", Json::num(c.result.ledger.maml_adaptations as f64)),
                 ("stale_passes", Json::num(c.result.ledger.stale_passes as f64)),
                 ("straggler_wait_s", Json::num(c.result.ledger.straggler_wait_s)),
+                ("retransmits", Json::num(c.result.ledger.retransmits as f64)),
+                ("corrupted_uploads", Json::num(c.result.ledger.corrupted_uploads as f64)),
+                ("failovers", Json::num(c.result.ledger.failovers as f64)),
+                ("retry_wait_s", Json::num(c.result.ledger.retry_wait_s)),
+                ("wire_bytes", Json::num(c.result.ledger.wire_bytes)),
             ])
         })
         .collect();
@@ -150,6 +216,7 @@ fn main() {
         ("rounds", Json::num(cfg.rounds as f64)),
         ("cells", Json::Arr(json_rows)),
         ("aggregation", Json::Arr(agg_rows)),
+        ("recovery", Json::Arr(rec_rows)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scenarios.json");
     std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_scenarios.json");

@@ -19,8 +19,12 @@ use crate::coordinator::trial::Trial;
 use crate::data::Dataset;
 use crate::fl::client::SatClient;
 use crate::fl::evaluate::evaluate;
+use crate::network::retry::transfer_with_retries;
 use crate::network::Payload;
 use crate::sim::engine::Engine;
+use crate::sim::scenario::CORRUPT_GROUND_SALT;
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
 use anyhow::Result;
 
 /// Pick the central satellite: the client nearest any ground station at
@@ -51,7 +55,8 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
     let rt = trial.rt;
     let engine = Engine::new(cfg.workers);
     let pools = RoundPools::new(rt);
-    let central = pick_central(trial);
+    let retry = cfg.retry_policy();
+    let mut central = pick_central(trial);
     // raw-data plane: one sample on the wire is its f32 features plus a
     // one-byte label, billed through the same [`Payload`] seam as model
     // uploads (`--compress` shrinks *parameter* uploads only — raw data
@@ -64,6 +69,16 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
         header_bytes: 1,
     };
     let bits_per_sample = sample_payload.bits();
+    // recovery plane: a central failover ships the model checkpoint to the
+    // promoted satellite, dense on the wire (raw-data collection has no
+    // compressed parameter plane to ride)
+    let model_payload = Payload {
+        values: rt.spec.param_count,
+        value_bits: 32,
+        indices: 0,
+        index_bits: 0,
+        header_bytes: 0,
+    };
 
     // union dataset at the central node
     let kind = trial.clients[0].shard.kind;
@@ -74,7 +89,7 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
         labels.extend_from_slice(&c.shard.labels);
     }
     let union = Dataset::new(kind, images, labels);
-    let cpu_hz = trial.clients[central].cpu_hz;
+    let mut cpu_hz = trial.clients[central].cpu_hz;
     // every client starts from the same init, so the trial-level copy is
     // the central model too (and the only source in the bounded-memory
     // mode, where clients hold no resident parameters)
@@ -96,38 +111,88 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
         // record counts and convergence checks stay comparable)
         let avail = trial.scenario.advance_round(round as u64, &positions);
         trial.ledger.add_faults(avail.faults_injected);
-        if !avail.unreachable[central] {
+        // recovery plane: when any sender sees a nonzero effective BER the
+        // shipments below run detect/retry/backoff; otherwise the plane is
+        // skipped entirely (no RNG streams, no float ops) and the nominal
+        // accounting stays bit-identical
+        let noisy = cfg.ber > 0.0 || avail.ber.iter().any(|&b| b > 0.0);
+        // recovery plane: the central *server process* can crash mid-run
+        // (`Fault::PsFailure`) — the satellite survives and still holds
+        // its model checkpoint, and the union archive is long since
+        // collected, so the role deterministically moves to the live
+        // client nearest any ground station (the criterion that picked
+        // the original central) and the checkpoint ships to it, billed as
+        // one dense model transfer. No live candidate ⇒ the round skips
+        // collection and training exactly like an unreachable central.
+        if avail.ps_failed[central] {
+            let t = trial.clock.now();
+            let gs_dist = |i: usize| -> f64 {
+                trial
+                    .ground
+                    .iter()
+                    .map(|g| positions[i].dist(g.eci(t)))
+                    .fold(f64::INFINITY, f64::min)
+            };
+            let candidate = (0..trial.clients.len())
+                .filter(|&i| i != central && !avail.ps_failed[i] && !avail.unreachable[i])
+                .min_by(|&a, &b| gs_dist(a).total_cmp(&gs_dist(b)));
+            if let Some(next) = candidate {
+                let d = positions[central].dist(positions[next]).max(1.0);
+                let t_x = trial.link.comm_time(model_payload.bits(), d);
+                trial
+                    .ledger
+                    .add_energy(trial.energy.tx_energy(model_payload.bits(), d));
+                trial
+                    .ledger
+                    .add_wire_bytes(trial.link.upload_bytes(&model_payload));
+                trial.ledger.add_failover();
+                trial.ledger.add_time(t_x);
+                trial.clock.advance(t_x);
+                central = next;
+                cpu_hz = trial.clients[central].cpu_hz;
+                // the central epoch now trains on the promoted satellite:
+                // its CPU rate and its `(seed, round, sat)` draw stream
+                node.sat = central;
+                node.cpu_hz = cpu_hz;
+            }
+        }
+        if !avail.unreachable[central] && !avail.ps_failed[central] {
             // every reachable client ships the data it collected this round
-            let uploads: Vec<(usize, crate::orbit::Vec3, f64)> = trial
+            let uploads: Vec<(usize, usize, crate::orbit::Vec3, f64)> = trial
                 .clients
                 .iter()
                 .enumerate()
                 .filter(|(i, _)| *i != central && !avail.unreachable[*i])
-                .map(|(i, c)| (c.data_size(), positions[i], avail.link_factor[i]))
+                .map(|(i, c)| (i, c.data_size(), positions[i], avail.link_factor[i]))
                 .collect();
+            let mut resent_samples = 0usize;
             // per-uploader link costs fanned out on the engine (order-stable)
-            let (t_up, e_up) = if cfg.aggregation == AggregationMode::Sync {
+            let (t_up, e_up) = if !noisy && cfg.aggregation == AggregationMode::Sync {
+                let legacy: Vec<(usize, crate::orbit::Vec3, f64)> =
+                    uploads.iter().map(|&(_, s, p, f)| (s, p, f)).collect();
                 data_upload_with(
                     &engine,
                     &trial.link,
                     &trial.energy,
-                    &uploads,
+                    &legacy,
                     bits_per_sample,
                     positions[central],
                 )
             } else {
-                // buffered/async collection: each shard arrives at its own
-                // offset and the central epoch starts at the goal-th
-                // arrival instead of the slowest upload (`--buffer-size`,
-                // 0 = wait for everyone — which is bit-for-bit the sync
-                // fold). Early arrivals idle until the start; later ones
-                // still join the union epoch but their data is one
-                // collection round stale. Energy is payload-determined and
-                // unchanged.
+                // per-uploader costs on the coordinator thread; under
+                // noise each shipment stretches to its attempts plus
+                // backoff waits drawn from its own `CORRUPT_GROUND_SALT`
+                // stream (the direct-to-hub analogue of the member→PS
+                // streams), with uplink energy billed once per attempt. A
+                // shipment whose retries exhaust costs its full retry
+                // time and energy but loses nothing from the union epoch
+                // — the archive already holds the shard from earlier
+                // collection rounds, so the degradation is pure Eq. 6/7
+                // cost, not a learning-trajectory change.
                 let costs: Vec<(f64, f64)> = uploads
                     .iter()
-                    .map(|&(samples, pos, factor)| {
-                        upload_cost(
+                    .map(|&(i, samples, pos, factor)| {
+                        let (t_i, e_i) = upload_cost(
                             &trial.link,
                             &trial.energy,
                             samples,
@@ -135,41 +200,79 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
                             factor,
                             bits_per_sample,
                             positions[central],
-                        )
+                        );
+                        let eff_ber = if noisy { cfg.ber + avail.ber[i] } else { 0.0 };
+                        if eff_ber > 0.0 {
+                            let mut rng = Rng::new(stream_seed(
+                                cfg.seed ^ CORRUPT_GROUND_SALT,
+                                round as u64,
+                                i as u64,
+                            ));
+                            let bits = samples as f64 * bits_per_sample;
+                            let out =
+                                transfer_with_retries(&retry, eff_ber, bits, t_i, &mut rng);
+                            trial.ledger.add_retransmits(out.retransmits());
+                            trial.ledger.add_corrupted_uploads(out.corrupted());
+                            trial.ledger.add_retry_wait(out.wait_s);
+                            resent_samples += samples * out.retransmits();
+                            (out.total_time(t_i), e_i * out.attempts as f64)
+                        } else {
+                            (t_i, e_i)
+                        }
                     })
                     .collect();
-                let mut e_total = 0.0f64;
-                for &(_, e_i) in &costs {
-                    e_total += e_i;
-                }
-                let mut times: Vec<f64> = costs.iter().map(|&(t, _)| t).collect();
-                times.sort_by(f64::total_cmp);
-                let goal = if cfg.buffer_size == 0 {
-                    times.len()
-                } else {
-                    cfg.buffer_size.min(times.len())
-                };
-                let t_start = goal
-                    .checked_sub(1)
-                    .and_then(|i| times.get(i))
-                    .copied()
-                    .unwrap_or(0.0);
-                if !times.is_empty() {
-                    for &t_i in &times {
-                        if t_i <= t_start {
-                            trial.ledger.add_idle(t_start - t_i);
-                        } else {
-                            trial.ledger.add_staleness(t_i - t_start, 1);
-                        }
+                if cfg.aggregation == AggregationMode::Sync {
+                    // the sync barrier over the (stretched) shipments
+                    let mut t_max = 0.0f64;
+                    let mut e_total = 0.0f64;
+                    for &(t_i, e_i) in &costs {
+                        t_max = t_max.max(t_i);
+                        e_total += e_i;
                     }
-                    trial.ledger.add_buffered_merge();
+                    (t_max, e_total)
+                } else {
+                    // buffered/async collection: each shard arrives at its
+                    // own offset and the central epoch starts at the
+                    // goal-th arrival instead of the slowest upload
+                    // (`--buffer-size`, 0 = wait for everyone — which is
+                    // bit-for-bit the sync fold). Early arrivals idle
+                    // until the start; later ones still join the union
+                    // epoch but their data is one collection round stale.
+                    // Energy is payload-determined and unchanged.
+                    let mut e_total = 0.0f64;
+                    for &(_, e_i) in &costs {
+                        e_total += e_i;
+                    }
+                    let mut times: Vec<f64> = costs.iter().map(|&(t, _)| t).collect();
+                    times.sort_by(f64::total_cmp);
+                    let goal = if cfg.buffer_size == 0 {
+                        times.len()
+                    } else {
+                        cfg.buffer_size.min(times.len())
+                    };
+                    let t_start = goal
+                        .checked_sub(1)
+                        .and_then(|i| times.get(i))
+                        .copied()
+                        .unwrap_or(0.0);
+                    if !times.is_empty() {
+                        for &t_i in &times {
+                            if t_i <= t_start {
+                                trial.ledger.add_idle(t_start - t_i);
+                            } else {
+                                trial.ledger.add_staleness(t_i - t_start, 1);
+                            }
+                        }
+                        trial.ledger.add_buffered_merge();
+                    }
+                    (t_start, e_total)
                 }
-                (t_start, e_total)
             };
-            let round_samples: usize = uploads.iter().map(|&(s, _, _)| s).sum();
-            trial
-                .ledger
-                .add_wire_bytes(trial.link.upload_bytes(&sample_payload) * round_samples as f64);
+            let round_samples: usize = uploads.iter().map(|&(_, s, _, _)| s).sum();
+            trial.ledger.add_wire_bytes(
+                trial.link.upload_bytes(&sample_payload)
+                    * (round_samples + resent_samples) as f64,
+            );
             trial.ledger.add_time(t_up);
             trial.ledger.add_energy(e_up);
             trial.clock.advance(t_up);

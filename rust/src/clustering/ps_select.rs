@@ -151,6 +151,56 @@ fn select_with_rule(
     out
 }
 
+/// Full PS ranking of one cluster's members, best candidate first — the
+/// recovery plane's failover order. Rank 0 reproduces the
+/// [`select_parameter_servers`] choice bit-identically (pinned by the
+/// tests below): in-band candidates (within the 5 % centroid-distance
+/// band) come first, ordered by descending mean peer rate with the
+/// stable sort preserving the selection loop's first-seen-wins ties;
+/// out-of-band members follow by ascending centroid distance. A crashed
+/// PS promotes the next not-crashed, reachable entry.
+pub fn rank_cluster_ps(
+    members: &[usize],
+    centroid_km: &[f64; 3],
+    positions: &[Vec3],
+    link: &LinkModel,
+) -> Vec<usize> {
+    assert!(!members.is_empty(), "ranking an empty cluster");
+    let cent_m = Vec3::new(centroid_km[0] * 1e3, centroid_km[1] * 1e3, centroid_km[2] * 1e3);
+    let dists: Vec<f64> = members.iter().map(|&i| positions[i].dist(cent_m)).collect();
+    let min_d = dists.iter().cloned().fold(f64::INFINITY, f64::min);
+    let band = min_d * 1.05 + 1.0;
+    let in_band: Vec<bool> = dists.iter().map(|&d| d <= band).collect();
+    // the same mean-rate tie-break the selection loop computes (only for
+    // in-band candidates — it is what orders them)
+    let rates: Vec<f64> = members
+        .iter()
+        .enumerate()
+        .map(|(mi, &i)| {
+            if !in_band[mi] {
+                0.0
+            } else if members.len() == 1 {
+                f64::INFINITY
+            } else {
+                members
+                    .iter()
+                    .filter(|&&j| j != i)
+                    .map(|&j| link.rate(positions[i].dist(positions[j]).max(1.0)))
+                    .sum::<f64>()
+                    / (members.len() - 1) as f64
+            }
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..members.len()).collect();
+    order.sort_by(|&a, &b| match (in_band[a], in_band[b]) {
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (true, true) => rates[b].total_cmp(&rates[a]),
+        (false, false) => dists[a].total_cmp(&dists[b]),
+    });
+    order.into_iter().map(|mi| members[mi]).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +297,35 @@ mod tests {
         let with_brute = select_parameter_servers_los(&res, &pos, &link, None, 1e9);
         assert_eq!(classic, with_grid);
         assert_eq!(classic, with_brute);
+    }
+
+    #[test]
+    fn failover_rank_zero_reproduces_the_selection() {
+        let (res, pos, link) = setup(20);
+        let picks = select_parameter_servers(&res, &pos, &link);
+        for (c, members) in res.clusters().iter().enumerate() {
+            let rank = rank_cluster_ps(members, &res.centroids[c], &pos, &link);
+            // a permutation of the membership, led by the selected PS
+            assert_eq!(rank.len(), members.len());
+            let mut sorted = rank.clone();
+            sorted.sort_unstable();
+            let mut expect = members.clone();
+            expect.sort_unstable();
+            assert_eq!(sorted, expect);
+            assert_eq!(rank[0], picks[c].ps, "rank 0 must be the elected PS");
+        }
+    }
+
+    #[test]
+    fn failover_rank_handles_singletons_and_is_deterministic() {
+        let (res, pos, link) = setup(12);
+        let clusters = res.clusters();
+        let one = vec![clusters[0][0]];
+        let rank = rank_cluster_ps(&one, &res.centroids[0], &pos, &link);
+        assert_eq!(rank, one);
+        let a = rank_cluster_ps(&clusters[1], &res.centroids[1], &pos, &link);
+        let b = rank_cluster_ps(&clusters[1], &res.centroids[1], &pos, &link);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod parse;
 
 use crate::data::DatasetKind;
 use crate::fl::CompressMode;
+use crate::network::RetryPolicy;
 use crate::sim::scenario::{ScenarioConfig, ScenarioKind};
 use crate::util::cli::Args;
 use anyhow::{anyhow, bail, Result};
@@ -180,6 +181,17 @@ pub struct ExperimentConfig {
     /// performance switch: the SIMD path is bit-identical to it (see
     /// `runtime::host_model`), so results never change either way.
     pub strict_float: bool,
+    /// Global bit-error-rate floor on every model upload (`--ber`; the
+    /// scenario plane's noise bursts add on top). 0 disables the
+    /// recovery plane's corruption draws entirely — bit-identical to the
+    /// pre-recovery accounting.
+    pub ber: f64,
+    /// Retransmissions allowed per corrupted transfer (`--max-retries`)
+    /// before the contribution is dropped to the stale path.
+    pub max_retries: u32,
+    /// Exponential-backoff growth factor between retransmissions
+    /// (`--retry-backoff`, ≥ 1.0).
+    pub retry_backoff: f64,
     /// Master seed.
     pub seed: u64,
 }
@@ -236,6 +248,9 @@ impl ExperimentConfig {
             window_step_s: 30.0,
             compress: CompressMode::None,
             strict_float: false,
+            ber: 0.0,
+            max_retries: 3,
+            retry_backoff: 2.0,
             seed: 42,
         }
     }
@@ -280,6 +295,9 @@ impl ExperimentConfig {
             window_step_s: 30.0,
             compress: CompressMode::None,
             strict_float: false,
+            ber: 0.0,
+            max_retries: 3,
+            retry_backoff: 2.0,
             seed: 42,
         }
     }
@@ -337,6 +355,9 @@ impl ExperimentConfig {
             window_step_s: 30.0,
             compress: CompressMode::None,
             strict_float: false,
+            ber: 0.0,
+            max_retries: 3,
+            retry_backoff: 2.0,
             seed: 42,
         }
     }
@@ -420,8 +441,8 @@ impl ExperimentConfig {
         if let Some(s) = args.get("scenario") {
             let kind = ScenarioKind::parse(s).ok_or_else(|| {
                 anyhow!(
-                    "unknown scenario '{s}' \
-                     (expected nominal|churn|flaky-ground|stragglers|eclipse)"
+                    "unknown scenario '{s}' (expected nominal|churn|flaky-ground\
+                     |stragglers|eclipse|noisy-links|ps-crash)"
                 )
             })?;
             self.scenario = ScenarioConfig::preset(kind);
@@ -441,6 +462,17 @@ impl ExperimentConfig {
         sc.straggler_milli = (slowdown * 1000.0).round() as u32;
         sc.straggler_rounds = args.get_u64("scenario-straggler-rounds", sc.straggler_rounds)?;
         sc.eclipse = args.get_usize("scenario-eclipse", sc.eclipse as usize)? != 0;
+        sc.link_noise_prob = args.get_f64("scenario-link-noise", sc.link_noise_prob)?;
+        let noise_ber = args.get_f64("scenario-noise-ber", sc.link_noise_ber_nano as f64 / 1e9)?;
+        sc.link_noise_ber_nano = (noise_ber * 1e9).round() as u32;
+        sc.link_noise_rounds = args.get_u64("scenario-noise-rounds", sc.link_noise_rounds)?;
+        sc.ps_fail_prob = args.get_f64("scenario-ps-fail", sc.ps_fail_prob)?;
+        sc.ps_fail_rounds = args.get_u64("scenario-ps-rounds", sc.ps_fail_rounds)?;
+        self.ber = args.get_f64("ber", self.ber)?;
+        let retries = args.get_u64("max-retries", self.max_retries as u64)?;
+        self.max_retries =
+            u32::try_from(retries).map_err(|_| anyhow!("--max-retries too large: {retries}"))?;
+        self.retry_backoff = args.get_f64("retry-backoff", self.retry_backoff)?;
         self.eval_batches = args.get_usize("eval-batches", self.eval_batches)?;
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.workers = args.get_usize("workers", self.workers)?;
@@ -533,7 +565,18 @@ impl ExperimentConfig {
                 bail!("top-k compress fraction must be in (0, 1], got {frac}");
             }
         }
+        if !(0.0..1.0).contains(&self.ber) {
+            bail!("--ber must be a bit-error rate in [0, 1), got {}", self.ber);
+        }
+        if !self.retry_backoff.is_finite() || self.retry_backoff < 1.0 {
+            bail!("--retry-backoff must be at least 1.0, got {}", self.retry_backoff);
+        }
         Ok(())
+    }
+
+    /// The recovery plane's retry knobs as a [`RetryPolicy`].
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy { max_retries: self.max_retries, backoff: self.retry_backoff }
     }
 }
 
@@ -794,6 +837,65 @@ mod tests {
         );
         let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
         assert!(e.to_string().contains("scenario-slowdown"), "{e}");
+    }
+
+    #[test]
+    fn recovery_flag_overrides_apply() {
+        // every preset defaults to a quiet recovery plane
+        for name in ["tiny", "mnist", "cifar10", "mega-sparse", "mega-dense"] {
+            let c = ExperimentConfig::preset(name).unwrap();
+            assert_eq!(c.ber, 0.0, "{name}");
+            assert_eq!(c.max_retries, 3, "{name}");
+            assert_eq!(c.retry_backoff, 2.0, "{name}");
+        }
+        let args = Args::parse(
+            ["--ber", "5e-7", "--max-retries", "5", "--retry-backoff", "1.5"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.ber, 5e-7);
+        assert_eq!(c.max_retries, 5);
+        assert_eq!(c.retry_backoff, 1.5);
+        assert_eq!(c.retry_policy(), RetryPolicy { max_retries: 5, backoff: 1.5 });
+        // the recovery presets and their knobs parse too
+        let args = Args::parse(
+            ["--scenario", "noisy-links", "--scenario-noise-ber", "2e-7"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.scenario.kind, ScenarioKind::NoisyLinks);
+        assert_eq!(c.scenario.link_noise_ber_nano, 200);
+        let args = Args::parse(
+            ["--scenario", "ps-crash", "--scenario-ps-rounds", "4"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.scenario.kind, ScenarioKind::PsCrash);
+        assert_eq!(c.scenario.ps_fail_rounds, 4);
+    }
+
+    #[test]
+    fn bad_recovery_values_are_usage_errors() {
+        let args = Args::parse(["--ber", "1.5"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("--ber"), "{e}");
+        let args = Args::parse(["--retry-backoff", "0.5"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("--retry-backoff"), "{e}");
+        let args = Args::parse(
+            ["--scenario", "noisy-links", "--scenario-noise-ber", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
+        assert!(e.to_string().contains("scenario-noise-ber"), "{e}");
     }
 
     #[test]

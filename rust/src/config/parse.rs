@@ -118,6 +118,28 @@ mod tests {
     }
 
     #[test]
+    fn bad_recovery_values_in_files_are_usage_errors() {
+        // recovery-plane knobs arriving through a config file go through
+        // the same validation as the CLI: out-of-range values surface as
+        // usage errors naming the flag, never panics
+        let reject = |text: &str, needle: &str| {
+            let mut args = Args::parse(std::iter::empty::<String>(), &[]);
+            merge_file_into_args(&mut args, text).unwrap();
+            let err = crate::config::ExperimentConfig::tiny()
+                .with_args(&args)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "'{err}' should mention '{needle}'");
+        };
+        reject("ber = 1.5", "--ber");
+        reject("ber = -0.25", "--ber");
+        reject("retry-backoff = 0.5", "--retry-backoff");
+        reject("max-retries = many", "--max-retries");
+        reject("scenario = noisy-links\nscenario-noise-ber = 1", "scenario-noise-ber");
+        reject("scenario = ps-crash\nscenario-ps-rounds = 0", "scenario-ps-rounds");
+    }
+
+    #[test]
     fn format_parse_roundtrip() {
         let text = "alpha = 0.001\nk = 4\nlr = 0.01\nmaml.beta = 0.002\n";
         let kv = parse_kv(text).unwrap();

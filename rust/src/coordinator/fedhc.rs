@@ -18,7 +18,7 @@ use super::round::{cluster_round_with, member_times, throttle_cpu, MemberWork};
 use super::stages::{cluster_round_events, ClusterAggregateStage, GroundCtx, RoundPools, Stages};
 use super::trial::Trial;
 use crate::clustering::kmeans::KMeans;
-use crate::clustering::ps_select::select_parameter_servers;
+use crate::clustering::ps_select::{rank_cluster_ps, select_parameter_servers};
 use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
 use crate::config::{AggregationMode, Timeline};
@@ -26,12 +26,16 @@ use crate::fl::aggregate::{aggregate, fedavg_weights, fold_stale, staleness_weig
 use crate::fl::compress::{encode_upload, CompressScratch};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
+use crate::network::retry::{transfer_with_retries, TransferOutcome};
 use crate::network::Payload;
 use crate::orbit::index::{ConstellationIndex, SphereGrid};
 use crate::orbit::GroundStation;
 use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
 use crate::sim::events::{Event, EventQueue};
+use crate::sim::scenario::{Availability, CORRUPT_SALT};
+use crate::util::rng::stream_seed;
+use crate::util::Rng;
 use anyhow::Result;
 
 /// Clustering policy.
@@ -293,6 +297,63 @@ fn max_cluster_size(topo: &Topology, k: usize) -> usize {
     counts.into_iter().max().unwrap_or(0)
 }
 
+/// Recovery plane: deterministic mid-round PS failover. A
+/// `Fault::PsFailure` crashes the *server process* on the PS satellite —
+/// the satellite itself keeps training as an ordinary member — so before
+/// the ground pass plan forms, every affected cluster promotes the next
+/// candidate from its [`rank_cluster_ps`] ranking (rank 0 is the original
+/// selection) that is neither crashed nor unreachable. The crashed
+/// process loses its working buffer, not the last *published* cluster
+/// model (that broadcast already reached the members), so the backup
+/// re-collects exactly the cached member updates `migrates` names — no
+/// training is redone; the bill is one Eq. 6 upload time (clusters fail
+/// over in parallel, members within one re-collection in parallel) plus
+/// Eq. 8 transmit energy per salvaged update, on the wire at the full
+/// uplink payload. A cluster with no live candidate keeps its crashed PS
+/// and takes the ordinary stale-pass path until a later round. Returns
+/// the wall-clock cost of the slowest re-collection.
+#[allow(clippy::too_many_arguments)]
+fn fail_over_ps(
+    trial: &mut Trial,
+    topo: &mut Topology,
+    members_of: &[Vec<usize>],
+    avail: &Availability,
+    positions: &[crate::orbit::Vec3],
+    up_bytes: f64,
+    up_bits: f64,
+    migrates: &dyn Fn(usize) -> bool,
+) -> f64 {
+    let mut failover_time = 0.0f64;
+    for c in 0..topo.ps.len() {
+        if !avail.ps_failed[topo.ps[c]] {
+            continue;
+        }
+        let rank = rank_cluster_ps(&members_of[c], &topo.centroids_km[c], positions, &trial.link);
+        let Some(backup) = rank
+            .into_iter()
+            .find(|&s| !avail.ps_failed[s] && !avail.unreachable[s])
+        else {
+            continue;
+        };
+        let mut t_re = 0.0f64;
+        let mut n_re = 0usize;
+        for &m in &members_of[c] {
+            if m == backup || avail.unreachable[m] || !migrates(m) {
+                continue;
+            }
+            let d = positions[m].dist(positions[backup]).max(1.0);
+            t_re = t_re.max(trial.link.comm_time(up_bits, d));
+            trial.ledger.add_energy(trial.energy.tx_energy(up_bits, d));
+            n_re += 1;
+        }
+        trial.ledger.add_wire_bytes(up_bytes * n_re as f64);
+        trial.ledger.add_failover();
+        failover_time = failover_time.max(t_re);
+        topo.ps[c] = backup;
+    }
+    failover_time
+}
+
 fn centroids_of(feats: &[[f64; 3]], assignment: &[usize], k: usize) -> Vec<[f64; 3]> {
     let mut sums = vec![[0.0f64; 3]; k];
     let mut counts = vec![0usize; k];
@@ -375,6 +436,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let wire = cfg.compress.wire(rt.spec.param_count);
     let up_bytes = trial.link.upload_bytes(&cfg.compress.payload(rt.spec.param_count));
     let compressing = !cfg.compress.is_none();
+    let retry = cfg.retry_policy();
     let mut wire_scratch = CompressScratch::new();
     // error-feedback residuals, pooled lazily on first encode: one per
     // member (member → PS uploads) and one per cluster slot (PS → GS)
@@ -442,6 +504,12 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             geo.as_ref().map(|g| g.grid()),
         );
         let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
+        // recovery plane: when any sender sees a nonzero effective BER
+        // (the `--ber` floor plus active noise bursts), member uploads run
+        // the detect/retry/backoff loop; otherwise the whole plane is
+        // skipped — no RNG streams, no float ops — keeping nominal rounds
+        // bit-identical to the pre-recovery accounting
+        let noisy = cfg.ber > 0.0 || avail.ber.iter().any(|&b| b > 0.0);
 
         // ---- local training + cluster aggregation (lines 6–13) ----
         // Sharded per cluster: each cluster scatters its active members
@@ -503,13 +571,45 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
             }
+            // recovery plane: draw each member upload's retry outcome
+            // before the wire encodes anything — a dropped contribution
+            // must not consume its sender's error-feedback residual. Each
+            // outcome is a pure function of `(seed, round, member)` through
+            // its own `CORRUPT_SALT` stream, so it is worker-count
+            // invariant and leaves every other draw stream untouched.
+            let mut outcomes: Vec<TransferOutcome> = Vec::new();
+            if noisy {
+                outcomes.reserve(batch.len());
+                let ps_pos = positions[topo.ps[c]];
+                for (r, w) in batch.iter().zip(&work) {
+                    let (_, t_com, _) = member_times(&trial.link, w, ps_pos, wire.up);
+                    let eff_ber = cfg.ber + avail.ber[r.member];
+                    let out = if eff_ber > 0.0 {
+                        let mut rng = Rng::new(stream_seed(
+                            cfg.seed ^ CORRUPT_SALT,
+                            round as u64,
+                            r.member as u64,
+                        ));
+                        transfer_with_retries(&retry, eff_ber, wire.up, t_com, &mut rng)
+                    } else {
+                        TransferOutcome { attempts: 1, wait_s: 0.0, delivered: true }
+                    };
+                    trial.ledger.add_retransmits(out.retransmits());
+                    trial.ledger.add_corrupted_uploads(out.corrupted());
+                    trial.ledger.add_retry_wait(out.wait_s);
+                    outcomes.push(out);
+                }
+            }
             // wire plane: encode each member → PS upload in member order on
             // the coordinator thread (worker-count invariant), against the
             // cluster model the member trained from; what the encoder drops
             // folds into the member's persistent residual. The merge below
             // then sees exactly what the wire delivered.
             if compressing {
-                for r in batch.iter_mut() {
+                for (i, r) in batch.iter_mut().enumerate() {
+                    if noisy && !outcomes[i].delivered {
+                        continue;
+                    }
                     let res = residuals[r.member]
                         .get_or_insert_with(|| pools.params.take_zeroed());
                     encode_upload(
@@ -521,15 +621,46 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     );
                 }
             }
-            trial.ledger.add_wire_bytes(up_bytes * batch.len() as f64);
+            // every attempt retransmits the full payload and is billed on
+            // the wire; the nominal round is exactly one attempt per member
+            if noisy {
+                let attempts: u32 = outcomes.iter().map(|o| o.attempts).sum();
+                trial.ledger.add_wire_bytes(up_bytes * attempts as f64);
+            } else {
+                trial.ledger.add_wire_bytes(up_bytes * batch.len() as f64);
+            }
             // line 13: aggregate at the PS under the strategy's weighting,
             // merging straight from the trained pooled buffers into the
             // recycled output, then swap it in: the displaced model vector
             // becomes the next merge's output
-            let weights = stages.cluster.member_weights(&losses, &sizes);
-            let rows: Vec<&[f32]> = batch.iter().map(|r| r.params.as_slice()).collect();
-            stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
-            std::mem::swap(&mut topo.models[c], &mut agg_buf);
+            let weights;
+            let rows: Vec<&[f32]>;
+            if noisy && outcomes.iter().any(|o| !o.delivered) {
+                // graceful degradation: contributions whose retries
+                // exhausted never reached the PS, so they are excluded
+                // from the merge (their residuals untouched) and their
+                // members keep the published cluster model — the ordinary
+                // stale path, liveness preserved
+                let mut kept_losses = Vec::with_capacity(batch.len());
+                let mut kept_sizes = Vec::with_capacity(batch.len());
+                let mut kept_rows: Vec<&[f32]> = Vec::with_capacity(batch.len());
+                for (i, r) in batch.iter().enumerate() {
+                    if outcomes[i].delivered {
+                        kept_losses.push(losses[i]);
+                        kept_sizes.push(sizes[i]);
+                        kept_rows.push(r.params.as_slice());
+                    }
+                }
+                weights = stages.cluster.member_weights(&kept_losses, &kept_sizes);
+                rows = kept_rows;
+            } else {
+                weights = stages.cluster.member_weights(&losses, &sizes);
+                rows = batch.iter().map(|r| r.params.as_slice()).collect();
+            }
+            if !rows.is_empty() {
+                stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
+                std::mem::swap(&mut topo.models[c], &mut agg_buf);
+            }
             // recycle the trained buffers: resident mode swaps them into
             // the clients (the displaced vector returns to the pool); the
             // pooled mode returns them directly, keeping resident
@@ -546,25 +677,50 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
 
             // Eq. 7 inner max + Eq. 8/9 energy for this cluster: the
             // closed-form fold and the event replay are bit-identical —
-            // the queue only changes *how* the durations are ordered
-            let (t, e) = match cfg.timeline {
-                Timeline::Analytic => cluster_round_with(
-                    &engine,
-                    &trial.link,
-                    &trial.energy,
-                    &work,
-                    positions[topo.ps[c]],
-                    wire,
-                ),
-                Timeline::Event => cluster_round_events(
-                    &mut queue,
-                    &trial.link,
-                    &trial.energy,
-                    &work,
-                    c,
-                    positions[topo.ps[c]],
-                    wire,
-                ),
+            // the queue only changes *how* the durations are ordered. A
+            // noisy round folds inline instead (valid for both timelines
+            // precisely because their nominal folds agree bitwise): each
+            // upload stretches to its attempts plus backoff waits — the PS
+            // barrier waits through every retry, delivered or not — uplink
+            // energy bills once per attempt, and the closing broadcast
+            // still reaches the farthest member, dropped senders included.
+            let (t, e) = if noisy {
+                let ps_pos = positions[topo.ps[c]];
+                let mut t_max = 0.0f64;
+                let mut e_total = 0.0f64;
+                let mut far: Option<f64> = None;
+                for (w, out) in work.iter().zip(&outcomes) {
+                    let (t_cmp, t_com, d) = member_times(&trial.link, w, ps_pos, wire.up);
+                    t_max = t_max.max(t_cmp + out.total_time(t_com));
+                    e_total += trial.energy.tx_energy(wire.up, d) * out.attempts as f64
+                        + trial.energy.compute_energy(w.samples, w.cpu_hz)
+                        + trial.energy.tx_energy(wire.down, d);
+                    far = Some(far.map_or(d, |a: f64| a.max(d)));
+                }
+                if let Some(d) = far {
+                    t_max += trial.link.comm_time(wire.down, d);
+                }
+                (t_max, e_total)
+            } else {
+                match cfg.timeline {
+                    Timeline::Analytic => cluster_round_with(
+                        &engine,
+                        &trial.link,
+                        &trial.energy,
+                        &work,
+                        positions[topo.ps[c]],
+                        wire,
+                    ),
+                    Timeline::Event => cluster_round_events(
+                        &mut queue,
+                        &trial.link,
+                        &trial.energy,
+                        &work,
+                        c,
+                        positions[topo.ps[c]],
+                        wire,
+                    ),
+                }
             };
             stage_time = stage_time.max(t); // clusters run in parallel
             trial.ledger.add_energy(e);
@@ -662,13 +818,36 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
 
         // ---- ground station aggregation stage (lines 21–24) ----
         if round % cfg.ground_every == 0 {
+            // recovery plane: crashed PS processes fail over before the
+            // pass plan forms — the round's member updates (everything a
+            // non-outaged member sent this round) migrate to the promoted
+            // backup, billed as one re-upload each (see [`fail_over_ps`])
+            if avail.ps_failed.iter().any(|&p| p) {
+                let members_of = topo.clusters(k);
+                let dt = fail_over_ps(
+                    trial,
+                    &mut topo,
+                    &members_of,
+                    &avail,
+                    &positions,
+                    up_bytes,
+                    wire.up,
+                    &|m| !outage.contains(&m),
+                );
+                if dt > 0.0 {
+                    let t_end = trial.clock.now() + dt;
+                    trial.clock.advance_to(t_end);
+                    trial.ledger.advance_to(t_end);
+                }
+            }
             // scenario plane: dark stations drop out of the pass plan and a
             // hard-failed/eclipsed PS cannot serve as its cluster's hub —
-            // both make the affected cluster(s) keep a stale model until a
-            // later pass; a round with no live station (or no live PS)
-            // skips the pass entirely
+            // nor can a crashed PS process that found no live backup; all
+            // of these make the affected cluster(s) keep a stale model
+            // until a later pass, and a round with no live station (or no
+            // live PS) skips the pass entirely
             let live: Vec<usize> = (0..topo.ps.len())
-                .filter(|&c| !avail.unreachable[topo.ps[c]])
+                .filter(|&c| !avail.unreachable[topo.ps[c]] && !avail.ps_failed[topo.ps[c]])
                 .collect();
             trial.ledger.add_stale_passes(topo.ps.len() - live.len());
             let any_station_down = avail.ground_down.iter().any(|&d| d);
@@ -914,6 +1093,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
     let wire = cfg.compress.wire(rt.spec.param_count);
     let up_bytes = trial.link.upload_bytes(&cfg.compress.payload(rt.spec.param_count));
     let compressing = !cfg.compress.is_none();
+    let retry = cfg.retry_policy();
     let mut wire_scratch = CompressScratch::new();
     let mut residuals: Vec<Option<Vec<f32>>> = if compressing {
         (0..trial.clients.len()).map(|_| None).collect()
@@ -985,6 +1165,10 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
             geo.as_ref().map(|g| g.grid()),
         );
         let outage: std::collections::BTreeSet<usize> = churn.outages.iter().copied().collect();
+        // recovery plane (see `run_staged`): zero effective BER skips the
+        // retry machinery entirely, keeping the nominal schedule
+        // bit-identical to the pre-recovery accounting
+        let noisy = cfg.ber > 0.0 || avail.ber.iter().any(|&b| b > 0.0);
 
         // ---- local training + event-driven staleness-weighted merges ----
         let clusters = topo.clusters(k);
@@ -1026,6 +1210,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                 // member order, so ties pop in member order) and bill
                 // energy with exactly the sync path's per-member terms
                 let mut e_total = 0.0f64;
+                let mut retransmit_count = 0usize;
                 for r in batch.iter_mut() {
                     let m = r.member;
                     debug_assert_eq!(r.cluster, c, "gather out of cluster order");
@@ -1046,7 +1231,37 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     };
                     let (t_cmp, t_com, d) =
                         member_times(&trial.link, &work, positions[topo.ps[c]], wire.up);
-                    let arrives = t_cmp + t_com;
+                    // recovery plane: a noisy upload stretches to its
+                    // attempts plus backoff waits before it can arrive;
+                    // one whose retries exhaust never enters the buffer —
+                    // the member keeps the published cluster model (the
+                    // ordinary stale path) while its compute and every
+                    // attempt's uplink still bill through Eq. 8/9
+                    let eff_ber = if noisy { cfg.ber + avail.ber[m] } else { 0.0 };
+                    let arrives = if eff_ber > 0.0 {
+                        let mut rng = Rng::new(stream_seed(
+                            cfg.seed ^ CORRUPT_SALT,
+                            round as u64,
+                            m as u64,
+                        ));
+                        let out =
+                            transfer_with_retries(&retry, eff_ber, wire.up, t_com, &mut rng);
+                        trial.ledger.add_retransmits(out.retransmits());
+                        trial.ledger.add_corrupted_uploads(out.corrupted());
+                        trial.ledger.add_retry_wait(out.wait_s);
+                        retransmit_count += out.retransmits();
+                        e_total += trial.energy.tx_energy(wire.up, d) * out.retransmits() as f64;
+                        if !out.delivered {
+                            e_total += trial.energy.tx_energy(wire.up, d)
+                                + trial.energy.compute_energy(r.samples, cpu_hz)
+                                + trial.energy.tx_energy(wire.down, d);
+                            pools.params.put(std::mem::take(&mut r.params));
+                            continue;
+                        }
+                        t_cmp + out.total_time(t_com)
+                    } else {
+                        t_cmp + t_com
+                    };
                     queue.push(arrives, Event::UploadReady { member: m, cluster: c });
                     e_total += trial.energy.tx_energy(wire.up, d)
                         + trial.energy.compute_energy(r.samples, cpu_hz)
@@ -1076,7 +1291,9 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         based_on_t: pub_time[c],
                     });
                 }
-                trial.ledger.add_wire_bytes(up_bytes * batch.len() as f64);
+                trial
+                    .ledger
+                    .add_wire_bytes(up_bytes * (batch.len() + retransmit_count) as f64);
                 trial.ledger.add_energy(e_total);
             }
 
@@ -1268,8 +1485,33 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
 
         // ---- ground station aggregation stage (lines 21–24) ----
         if round % cfg.ground_every == 0 {
+            // recovery plane: crashed PS processes fail over before the
+            // pass plan forms. Merged versions were already published to
+            // the members (salvaged for free); only contributions still
+            // *parked* at the crashed process migrate, billed as one
+            // re-upload each to the promoted backup (see [`fail_over_ps`];
+            // the eventual broadcast keeps each contribution's
+            // training-time slant range — a conservative simplification)
+            if avail.ps_failed.iter().any(|&p| p) {
+                let members_of = topo.clusters(k);
+                let dt = fail_over_ps(
+                    trial,
+                    &mut topo,
+                    &members_of,
+                    &avail,
+                    &positions,
+                    up_bytes,
+                    wire.up,
+                    &|m| parked[m].is_some(),
+                );
+                if dt > 0.0 {
+                    let t_end = trial.clock.now() + dt;
+                    trial.clock.advance_to(t_end);
+                    trial.ledger.advance_to(t_end);
+                }
+            }
             let live: Vec<usize> = (0..topo.ps.len())
-                .filter(|&c| !avail.unreachable[topo.ps[c]])
+                .filter(|&c| !avail.unreachable[topo.ps[c]] && !avail.ps_failed[topo.ps[c]])
                 .collect();
             trial.ledger.add_stale_passes(topo.ps.len() - live.len());
             let any_station_down = avail.ground_down.iter().any(|&d| d);

@@ -99,7 +99,7 @@ COMMON OPTIONS
                                  exchanges gated by visibility windows
                                  (paper presets default to event; tiny pins
                                  analytic)
-  --scenario nominal|churn|flaky-ground|stragglers|eclipse
+  --scenario nominal|churn|flaky-ground|stragglers|eclipse|noisy-links|ps-crash
                                  fault-injection preset (deterministic,
                                  event-sourced; see sim::scenario). Knobs:
                                  --scenario-sat-fail P --scenario-fail-rounds N
@@ -108,8 +108,23 @@ COMMON OPTIONS
                                  --scenario-link-rounds N --scenario-straggler P
                                  --scenario-slowdown F --scenario-straggler-rounds N
                                  --scenario-eclipse 0|1
+                                 --scenario-link-noise P --scenario-noise-ber F
+                                 --scenario-noise-rounds N
+                                 --scenario-ps-fail P --scenario-ps-rounds N
   --outage P                     transient per-round outage probability
                                  (runs under every scenario preset)
+  --ber F                        recovery plane: global bit-error-rate floor
+                                 on every model/data upload. Corrupted
+                                 transfers are checksum-detected and
+                                 retransmitted with exponential backoff:
+                                 --max-retries N      retransmissions before
+                                                      the contribution is
+                                                      dropped (default 3)
+                                 --retry-backoff F    backoff growth factor
+                                                      ≥ 1 (default 2.0)
+                                 Every attempt bills Eq. 6/7 time and Eq. 8
+                                 energy; a crashed PS process (ps-crash)
+                                 fails over to the next-ranked member
   --aggregation sync|buffered|async
                                  intra-cluster aggregation plane: the round
                                  barrier (default), FedBuff-style buffered
@@ -209,6 +224,7 @@ fn print_result(res: &RunResult) {
     println!("  total energy  : {:.0} J (Eq. 10)", res.ledger.energy_j);
     println!("  reclusters    : {}", res.ledger.reclusters);
     println!("  maml adapts   : {}", res.ledger.maml_adaptations);
+    println!("  wire traffic  : {:.0} bytes uploaded (Eq. 6 payloads)", res.ledger.wire_bytes);
     if res.ledger.ground_wait_s > 0.0 || res.ledger.stale_passes > 0 {
         println!(
             "  ground waits  : {:.0} s over visibility windows, {} stale pass(es)",
@@ -220,6 +236,15 @@ fn print_result(res: &RunResult) {
     }
     if res.ledger.straggler_wait_s > 0.0 {
         println!("  straggler wait: {:.0} s of slowed compute", res.ledger.straggler_wait_s);
+    }
+    if res.ledger.retransmits > 0 || res.ledger.corrupted_uploads > 0 {
+        println!(
+            "  recovery      : {} corrupted upload(s), {} retransmit(s), {:.0} s of backoff",
+            res.ledger.corrupted_uploads, res.ledger.retransmits, res.ledger.retry_wait_s
+        );
+    }
+    if res.ledger.failovers > 0 {
+        println!("  ps failovers  : {} backup promotion(s)", res.ledger.failovers);
     }
     if res.ledger.buffered_merges > 0 {
         println!(

@@ -70,6 +70,21 @@ pub struct Ledger {
     /// the recorded JSON series, so compression sweeps leave the
     /// golden-trajectory files untouched.
     pub wire_bytes: f64,
+    /// Recovery plane: corrupted uploads retransmitted after the
+    /// receiver's checksum rejected them (every retransmission re-bills
+    /// the Eq. 6/7 uplink time and Eq. 8 transmit energy).
+    pub retransmits: usize,
+    /// Recovery plane: upload attempts the receiver detected as corrupted
+    /// (≥ `retransmits`; the gap is attempts whose retry budget was
+    /// already exhausted, dropping the contribution on the stale path).
+    pub corrupted_uploads: usize,
+    /// Recovery plane: mid-round PS failovers — a crashed server process
+    /// deterministically promoted a backup PS (or C-FedAvg central).
+    pub failovers: usize,
+    /// Recovery plane: cumulative exponential-backoff wait before
+    /// retransmissions (already included in `time_s` when the retrying
+    /// member sat on its stage's critical path).
+    pub retry_wait_s: f64,
 }
 
 impl Ledger {
@@ -151,6 +166,28 @@ impl Ledger {
     pub fn add_wire_bytes(&mut self, bytes: f64) {
         assert!(bytes >= 0.0 && bytes.is_finite(), "bad wire bytes {bytes}");
         self.wire_bytes += bytes;
+    }
+
+    /// Record retransmissions of checksum-rejected uploads.
+    pub fn add_retransmits(&mut self, n: usize) {
+        self.retransmits += n;
+    }
+
+    /// Record upload attempts the receiver's checksum rejected.
+    pub fn add_corrupted_uploads(&mut self, n: usize) {
+        self.corrupted_uploads += n;
+    }
+
+    /// Record one mid-round PS (or central-server) failover.
+    pub fn add_failover(&mut self) {
+        self.failovers += 1;
+    }
+
+    /// Record exponential-backoff wait before retransmissions (diagnostic;
+    /// the wait reaches `time_s` through the stage folds).
+    pub fn add_retry_wait(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad retry wait {dt}");
+        self.retry_wait_s += dt;
     }
 
     /// Record an evaluation point at the current totals.
@@ -282,6 +319,29 @@ mod tests {
     #[should_panic(expected = "bad wire bytes")]
     fn rejects_negative_wire_bytes() {
         Ledger::new().add_wire_bytes(-1.0);
+    }
+
+    #[test]
+    fn recovery_counters_accumulate() {
+        let mut l = Ledger::new();
+        l.add_corrupted_uploads(3);
+        l.add_retransmits(2);
+        l.add_corrupted_uploads(1);
+        l.add_retransmits(1);
+        l.add_failover();
+        l.add_failover();
+        l.add_retry_wait(1.5);
+        l.add_retry_wait(0.25);
+        assert_eq!(l.corrupted_uploads, 4);
+        assert_eq!(l.retransmits, 3);
+        assert_eq!(l.failovers, 2);
+        assert_eq!(l.retry_wait_s, 1.75);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad retry wait")]
+    fn rejects_negative_retry_wait() {
+        Ledger::new().add_retry_wait(-0.1);
     }
 
     #[test]

@@ -88,18 +88,30 @@ pub fn format_fig3(
 
 /// Render the scenario-matrix counter table: one row per
 /// `(scenario, method)` cell with the per-scenario ledger counters —
-/// faults injected, reclusters fired, stale passes, straggler wait — next
+/// faults injected, reclusters fired, stale passes, straggler wait, the
+/// recovery plane's retransmissions and PS failovers, wire traffic — next
 /// to the headline accuracy/time/energy numbers.
 pub fn format_scenario_matrix(rows: &[(&str, &str, &Ledger)]) -> String {
     let mut s = String::new();
     s.push_str("Scenario matrix (per-run ledger counters)\n");
     s.push_str(&format!(
-        "{:<14}{:<12}{:>8}{:>8}{:>7}{:>7}{:>11}{:>12}{:>12}\n",
-        "scenario", "method", "faults", "reclst", "maml", "stale", "stragl_s", "time_s", "acc"
+        "{:<14}{:<12}{:>8}{:>8}{:>7}{:>7}{:>11}{:>7}{:>7}{:>13}{:>12}{:>12}\n",
+        "scenario",
+        "method",
+        "faults",
+        "reclst",
+        "maml",
+        "stale",
+        "stragl_s",
+        "retx",
+        "failov",
+        "wire_b",
+        "time_s",
+        "acc"
     ));
     for (scenario, method, ledger) in rows {
         s.push_str(&format!(
-            "{:<14}{:<12}{:>8}{:>8}{:>7}{:>7}{:>11.1}{:>12.0}{:>12.4}\n",
+            "{:<14}{:<12}{:>8}{:>8}{:>7}{:>7}{:>11.1}{:>7}{:>7}{:>13.0}{:>12.0}{:>12.4}\n",
             scenario,
             method,
             ledger.faults_injected,
@@ -107,6 +119,9 @@ pub fn format_scenario_matrix(rows: &[(&str, &str, &Ledger)]) -> String {
             ledger.maml_adaptations,
             ledger.stale_passes,
             ledger.straggler_wait_s,
+            ledger.retransmits,
+            ledger.failovers,
+            ledger.wire_bytes,
             ledger.time_s,
             ledger.best_accuracy(),
         ));
@@ -139,12 +154,18 @@ mod tests {
         l.add_straggler_wait(12.5);
         l.add_time(100.0);
         l.record(1, 0.55, 1.0, true);
+        l.add_retransmits(9);
+        l.add_failover();
+        l.add_wire_bytes(2048.0);
         let out = format_scenario_matrix(&[("churn", "FedHC", &l)]);
         assert!(out.contains("churn"));
         assert!(out.contains("FedHC"));
+        assert!(out.contains("retx") && out.contains("failov") && out.contains("wire_b"));
         let row = out.trim().lines().last().unwrap();
         assert!(row.contains('7') && row.contains('2'), "counters missing:\n{out}");
         assert!(row.contains("12.5"), "straggler wait missing:\n{out}");
+        assert!(row.contains('9'), "retransmits missing:\n{out}");
+        assert!(row.contains("2048"), "wire bytes missing:\n{out}");
         assert!(row.contains("0.5500"), "accuracy missing:\n{out}");
     }
 

@@ -20,7 +20,9 @@
 pub mod energy;
 pub mod link;
 pub mod params;
+pub mod retry;
 
 pub use energy::EnergyModel;
 pub use link::LinkModel;
 pub use params::{NetworkParams, Payload, WireBits};
+pub use retry::{RetryPolicy, TransferOutcome};

@@ -1,0 +1,242 @@
+//! Recovery plane: unreliable transfers with detect/retry/backoff.
+//!
+//! A transfer over a noisy link corrupts with probability
+//! `1 - (1 - BER)^bits` (independent bit errors at the payload size the
+//! wire plane bills). The receiver detects corruption via a payload
+//! [`checksum`] and the sender retransmits after an exponential-backoff
+//! wait, up to `--max-retries` retransmissions; every attempt is billed
+//! through `LinkModel`/`Payload` into the Eq. 6/7 time and energy folds.
+//! Retries exhausted ⇒ the contribution is dropped and the member takes
+//! the existing stale path — graceful degradation, liveness preserved.
+//!
+//! Determinism: the corruption draws come from the same stateless
+//! `stream_seed(seed ^ SALT, round, sender)` streams as the fault plane
+//! (salts in `sim::scenario`), so a transfer's attempt count is a pure
+//! function of `(seed, round, sender)` — bit-identical for any
+//! `--workers` count. When the effective BER is zero the coordinator
+//! skips this module entirely (no RNG construction, no float ops), which
+//! keeps nominal runs bit-identical to the pre-recovery goldens.
+//!
+//! The simulator never materialises corrupted payloads: corruption is a
+//! draw against the analytic probability, and checksum verification is
+//! billed at zero cost (a few hundred cycles against multi-second
+//! transfer times). [`checksum`] exists so the detection mechanism is
+//! real and testable, not hand-waved.
+
+use crate::util::Rng;
+
+/// Retry knobs for one run (from `--max-retries` / `--retry-backoff`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Retransmissions allowed after the first attempt (so a transfer
+    /// makes at most `max_retries + 1` attempts).
+    pub max_retries: u32,
+    /// Backoff growth factor: the wait before retransmission `k` is
+    /// `t_com · backoff^(k-1)` — the first retry waits one transfer
+    /// time, and each further retry waits `backoff` times longer.
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, backoff: 2.0 }
+    }
+}
+
+/// What one (possibly retried) transfer did on the wire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferOutcome {
+    /// Send attempts made (first try + retransmissions), at least 1.
+    pub attempts: u32,
+    /// Total backoff wait, seconds (on top of the per-attempt `t_com`).
+    pub wait_s: f64,
+    /// Whether the final attempt arrived uncorrupted.
+    pub delivered: bool,
+}
+
+impl TransferOutcome {
+    /// Retransmissions billed to the ledger.
+    pub fn retransmits(&self) -> usize {
+        (self.attempts - 1) as usize
+    }
+
+    /// Corrupted (checksum-rejected) arrivals: every attempt but the
+    /// last on a delivered transfer, every attempt on a dropped one.
+    pub fn corrupted(&self) -> usize {
+        if self.delivered {
+            self.retransmits()
+        } else {
+            self.attempts as usize
+        }
+    }
+
+    /// Wall-clock time of the whole exchange given one attempt's
+    /// transfer time: every attempt retransmits the full payload, plus
+    /// the backoff waits between attempts.
+    pub fn total_time(&self, t_com: f64) -> f64 {
+        self.attempts as f64 * t_com + self.wait_s
+    }
+}
+
+/// Probability that a `bits`-sized payload corrupts at bit-error rate
+/// `ber`, assuming independent bit errors: `1 - (1 - ber)^bits`. Stacked
+/// noise bursts can push the additive BER past 1.0; it is clamped so the
+/// probability saturates at certain corruption instead of going NaN.
+pub fn corrupt_prob(ber: f64, bits: f64) -> f64 {
+    debug_assert!(ber >= 0.0 && ber.is_finite(), "bad BER {ber}");
+    debug_assert!(bits >= 0.0 && bits.is_finite(), "bad payload bits {bits}");
+    1.0 - (1.0 - ber.min(1.0)).powf(bits)
+}
+
+/// Run one transfer through the detect/retry/backoff loop. `ber` is the
+/// sender's effective bit-error rate (global `--ber` floor plus any
+/// active noise burst), `bits` the billed payload size, `t_com` one
+/// attempt's transfer time (sets the backoff base), and `rng` the
+/// transfer's own stateless stream — draws are sequential per attempt,
+/// so the outcome replays exactly from `(seed, round, sender)`.
+///
+/// Callers must skip this entirely when the effective BER is zero: the
+/// zero-noise path has to stay free of RNG constructions and float ops
+/// to remain bit-identical to the pre-recovery accounting.
+pub fn transfer_with_retries(
+    policy: &RetryPolicy,
+    ber: f64,
+    bits: f64,
+    t_com: f64,
+    rng: &mut Rng,
+) -> TransferOutcome {
+    debug_assert!(ber > 0.0, "zero-BER transfers must bypass the recovery plane");
+    let p = corrupt_prob(ber, bits);
+    let mut wait_s = 0.0;
+    let mut attempts = 1u32;
+    loop {
+        if rng.uniform() >= p {
+            return TransferOutcome { attempts, wait_s, delivered: true };
+        }
+        if attempts > policy.max_retries {
+            return TransferOutcome { attempts, wait_s, delivered: false };
+        }
+        wait_s += t_com * policy.backoff.powi(attempts as i32 - 1);
+        attempts += 1;
+    }
+}
+
+/// FNV-1a payload checksum over the exact f32 bit patterns — the
+/// receiver-side corruption detector. Any single-bit flip in the payload
+/// changes the digest (pinned by the tests below), which is all the
+/// retry loop needs; this is an integrity check against channel noise,
+/// not a cryptographic MAC.
+pub fn checksum(params: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &v in params {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::stream_seed;
+
+    #[test]
+    fn corrupt_prob_behaves_like_independent_bit_errors() {
+        assert_eq!(corrupt_prob(0.5, 0.0), 0.0, "empty payload never corrupts");
+        assert_eq!(corrupt_prob(1.0, 1.0), 1.0, "certain errors always corrupt");
+        // monotone in both the BER and the payload size
+        assert!(corrupt_prob(1e-7, 2e6) > corrupt_prob(1e-7, 1e6));
+        assert!(corrupt_prob(2e-7, 1e6) > corrupt_prob(1e-7, 1e6));
+        // a realistic upload: ~1.4 Mbit at BER 5e-7 corrupts about half
+        // the time — the regime the noisy-links preset exercises
+        let p = corrupt_prob(5e-7, 1.4e6);
+        assert!((0.3..0.7).contains(&p), "p = {p}");
+        // stacked bursts past BER 1.0 saturate instead of going NaN
+        let p = corrupt_prob(1.7, 1e6);
+        assert_eq!(p, 1.0);
+    }
+
+    #[test]
+    fn exhausted_retries_drop_with_full_backoff_bill() {
+        // BER 1.0 corrupts every attempt: the loop must exhaust exactly
+        // max_retries retransmissions and bill the geometric backoff
+        let policy = RetryPolicy { max_retries: 3, backoff: 2.0 };
+        let mut rng = Rng::new(7);
+        let out = transfer_with_retries(&policy, 1.0, 1e6, 10.0, &mut rng);
+        assert!(!out.delivered);
+        assert_eq!(out.attempts, 4);
+        assert_eq!(out.retransmits(), 3);
+        assert_eq!(out.corrupted(), 4, "every arrival was checksum-rejected");
+        // waits: 10·2⁰ + 10·2¹ + 10·2² = 70 s
+        assert_eq!(out.wait_s, 70.0);
+        assert_eq!(out.total_time(10.0), 4.0 * 10.0 + 70.0);
+    }
+
+    #[test]
+    fn negligible_noise_delivers_first_try() {
+        let policy = RetryPolicy::default();
+        let mut rng = Rng::new(11);
+        let out = transfer_with_retries(&policy, 1e-15, 1e6, 10.0, &mut rng);
+        assert!(out.delivered);
+        assert_eq!(out.attempts, 1);
+        assert_eq!(out.wait_s, 0.0);
+        assert_eq!(out.retransmits(), 0);
+        assert_eq!(out.corrupted(), 0);
+        assert_eq!(out.total_time(10.0), 10.0);
+    }
+
+    #[test]
+    fn outcomes_replay_from_the_stream_seed() {
+        let policy = RetryPolicy::default();
+        for sat in 0..20u64 {
+            let mut a = Rng::new(stream_seed(42, 3, sat));
+            let mut b = Rng::new(stream_seed(42, 3, sat));
+            let oa = transfer_with_retries(&policy, 5e-7, 1.4e6, 8.0, &mut a);
+            let ob = transfer_with_retries(&policy, 5e-7, 1.4e6, 8.0, &mut b);
+            assert_eq!(oa, ob);
+        }
+    }
+
+    #[test]
+    fn moderate_noise_retries_then_delivers() {
+        // at p ≈ 0.5 per attempt, 20 senders must show both first-try
+        // deliveries and retried deliveries, and most must get through
+        let policy = RetryPolicy::default();
+        let (mut delivered, mut retried) = (0, 0);
+        for sat in 0..20u64 {
+            let mut rng = Rng::new(stream_seed(9, 1, sat));
+            let out = transfer_with_retries(&policy, 5e-7, 1.4e6, 8.0, &mut rng);
+            delivered += out.delivered as usize;
+            retried += (out.retransmits() > 0) as usize;
+            if out.retransmits() > 0 {
+                assert!(out.wait_s > 0.0, "retries must bill backoff waits");
+            }
+        }
+        assert!(delivered >= 15, "only {delivered}/20 delivered");
+        assert!(retried >= 3, "only {retried}/20 retried");
+    }
+
+    #[test]
+    fn checksum_detects_any_single_bit_flip() {
+        let params: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let clean = checksum(&params);
+        assert_eq!(clean, checksum(&params), "digest must be deterministic");
+        for word in [0usize, 17, 63] {
+            for bit in 0..32 {
+                let mut flipped = params.clone();
+                flipped[word] = f32::from_bits(flipped[word].to_bits() ^ (1 << bit));
+                assert_ne!(
+                    checksum(&flipped),
+                    clean,
+                    "flip of bit {bit} in word {word} went undetected"
+                );
+            }
+        }
+        // the digest distinguishes payloads from their truncations too
+        assert_ne!(checksum(&params[..63]), clean);
+    }
+}

@@ -2,7 +2,9 @@
 //!
 //! A fault is a *delta* applied to the constellation's availability state:
 //! a satellite hard-failure (and its recovery), a ground-station outage
-//! window, a link-rate degradation, or a compute-straggler slowdown. The
+//! window, a link-rate degradation, a compute-straggler slowdown, an ISL
+//! bit-noise burst, or a PS-process crash (the recovery plane's two fault
+//! processes). The
 //! scenario engine ([`crate::sim::scenario`]) schedules these through the
 //! shared [`crate::sim::events::EventQueue`] at round-indexed timestamps
 //! and replays them into a [`FaultState`]; the coordinator only ever sees
@@ -41,6 +43,19 @@ pub enum Fault {
     SlowdownStart { sat: usize, milli: u32 },
     /// Undo of the matching [`Fault::SlowdownStart`] (same `milli`).
     SlowdownEnd { sat: usize, milli: u32 },
+    /// ISL bit-noise burst (recovery plane): uploads transmitted by this
+    /// satellite corrupt with a bit-error rate of `ber_nano / 1e9` until
+    /// the matching clear. Carried in integer **nano-units** so bursts
+    /// compose additively and the clear undoes exactly its onset's delta.
+    LinkNoise { sat: usize, ber_nano: u32 },
+    /// Undo of the matching [`Fault::LinkNoise`] (same `ber_nano`).
+    LinkNoiseClear { sat: usize, ber_nano: u32 },
+    /// The parameter-server *process* on this satellite crashes (recovery
+    /// plane): the satellite still trains as a member, but a cluster it
+    /// serves as PS must fail over to a backup until the matching restore.
+    PsFailure { sat: usize },
+    /// The server process comes back.
+    PsRestore { sat: usize },
 }
 
 impl Fault {
@@ -53,6 +68,8 @@ impl Fault {
                 | Fault::GroundOutage { .. }
                 | Fault::LinkDegrade { .. }
                 | Fault::SlowdownStart { .. }
+                | Fault::LinkNoise { .. }
+                | Fault::PsFailure { .. }
         )
     }
 
@@ -66,6 +83,8 @@ impl Fault {
             Fault::GroundOutage { station } => Fault::GroundRestore { station },
             Fault::LinkDegrade { sat, milli } => Fault::LinkRestore { sat, milli },
             Fault::SlowdownStart { sat, milli } => Fault::SlowdownEnd { sat, milli },
+            Fault::LinkNoise { sat, ber_nano } => Fault::LinkNoiseClear { sat, ber_nano },
+            Fault::PsFailure { sat } => Fault::PsRestore { sat },
             restore => restore,
         }
     }
@@ -92,6 +111,14 @@ pub struct FaultState {
     pub link_factor: Vec<f64>,
     /// Per-satellite compute-time multiplier (1.0 = nominal, > 1 slower).
     pub compute_slowdown: Vec<f64>,
+    /// Per-satellite upload bit-error rate, nano-units (0 = clean).
+    /// Integer state so overlapping noise bursts compose additively and
+    /// every clear subtracts exactly its onset's delta — bit-exact
+    /// round-trips with no float reassociation.
+    pub ber_nano: Vec<u32>,
+    /// Per-satellite PS-process crash depth (> 0 means the satellite
+    /// cannot act as a parameter server).
+    pub ps_failed: Vec<u32>,
 }
 
 impl FaultState {
@@ -101,6 +128,8 @@ impl FaultState {
             ground_down: vec![0; n_stations],
             link_factor: vec![1.0; n_sats],
             compute_slowdown: vec![1.0; n_sats],
+            ber_nano: vec![0; n_sats],
+            ps_failed: vec![0; n_sats],
         }
     }
 
@@ -141,6 +170,28 @@ impl FaultState {
             Fault::SlowdownEnd { sat, milli } => {
                 self.compute_slowdown[sat] /= milli_factor(milli);
             }
+            Fault::LinkNoise { sat, ber_nano } => {
+                if ber_nano == 0 || ber_nano >= 1_000_000_000 {
+                    bail!("link-noise BER must be in (0, 1), got {ber_nano} nano");
+                }
+                self.ber_nano[sat] = match self.ber_nano[sat].checked_add(ber_nano) {
+                    Some(v) => v,
+                    None => bail!("stacked noise bursts on satellite {sat} overflow"),
+                };
+            }
+            Fault::LinkNoiseClear { sat, ber_nano } => {
+                if self.ber_nano[sat] < ber_nano {
+                    bail!("noise clear for satellite {sat} exceeds its active burst");
+                }
+                self.ber_nano[sat] -= ber_nano;
+            }
+            Fault::PsFailure { sat } => self.ps_failed[sat] += 1,
+            Fault::PsRestore { sat } => {
+                if self.ps_failed[sat] == 0 {
+                    bail!("restore for a PS process on satellite {sat} that never crashed");
+                }
+                self.ps_failed[sat] -= 1;
+            }
         }
         Ok(())
     }
@@ -156,10 +207,14 @@ mod tests {
         assert!(Fault::GroundOutage { station: 1 }.is_onset());
         assert!(Fault::LinkDegrade { sat: 0, milli: 500 }.is_onset());
         assert!(Fault::SlowdownStart { sat: 0, milli: 2000 }.is_onset());
+        assert!(Fault::LinkNoise { sat: 0, ber_nano: 500 }.is_onset());
+        assert!(Fault::PsFailure { sat: 0 }.is_onset());
         assert!(!Fault::SatRecover { sat: 0 }.is_onset());
         assert!(!Fault::GroundRestore { station: 1 }.is_onset());
         assert!(!Fault::LinkRestore { sat: 0, milli: 500 }.is_onset());
         assert!(!Fault::SlowdownEnd { sat: 0, milli: 2000 }.is_onset());
+        assert!(!Fault::LinkNoiseClear { sat: 0, ber_nano: 500 }.is_onset());
+        assert!(!Fault::PsRestore { sat: 0 }.is_onset());
     }
 
     #[test]
@@ -169,6 +224,8 @@ mod tests {
             Fault::GroundOutage { station: 1 },
             Fault::LinkDegrade { sat: 2, milli: 400 },
             Fault::SlowdownStart { sat: 0, milli: 2000 },
+            Fault::LinkNoise { sat: 1, ber_nano: 750 },
+            Fault::PsFailure { sat: 2 },
         ];
         for onset in onsets {
             let rec = onset.recovery();
@@ -182,6 +239,8 @@ mod tests {
             assert_eq!(s.ground_down, vec![0; 2]);
             assert_eq!(s.link_factor, vec![1.0; 4]);
             assert_eq!(s.compute_slowdown, vec![1.0; 4]);
+            assert_eq!(s.ber_nano, vec![0; 4]);
+            assert_eq!(s.ps_failed, vec![0; 4]);
         }
     }
 
@@ -217,5 +276,40 @@ mod tests {
         assert!(s.apply(Fault::LinkDegrade { sat: 0, milli: 0 }).is_err());
         assert!(s.apply(Fault::LinkDegrade { sat: 0, milli: 1000 }).is_err());
         assert!(s.apply(Fault::SlowdownStart { sat: 0, milli: 1000 }).is_err());
+        assert!(s.apply(Fault::LinkNoise { sat: 0, ber_nano: 0 }).is_err());
+        assert!(s
+            .apply(Fault::LinkNoise { sat: 0, ber_nano: 1_000_000_000 })
+            .is_err());
+    }
+
+    #[test]
+    fn noise_bursts_stack_additively_and_clear_exactly() {
+        let mut s = FaultState::new(2, 0);
+        s.apply(Fault::LinkNoise { sat: 0, ber_nano: 300 }).unwrap();
+        s.apply(Fault::LinkNoise { sat: 0, ber_nano: 500 }).unwrap();
+        assert_eq!(s.ber_nano[0], 800, "overlapping bursts compose additively");
+        s.apply(Fault::LinkNoiseClear { sat: 0, ber_nano: 300 }).unwrap();
+        assert_eq!(s.ber_nano[0], 500, "each clear undoes exactly its onset");
+        s.apply(Fault::LinkNoiseClear { sat: 0, ber_nano: 500 }).unwrap();
+        assert_eq!(s.ber_nano, vec![0, 0]);
+        assert!(
+            s.apply(Fault::LinkNoiseClear { sat: 0, ber_nano: 1 }).is_err(),
+            "a clear larger than the active burst is a scheduling bug"
+        );
+    }
+
+    #[test]
+    fn ps_crashes_compose_by_depth() {
+        let mut s = FaultState::new(2, 0);
+        s.apply(Fault::PsFailure { sat: 1 }).unwrap();
+        s.apply(Fault::PsFailure { sat: 1 }).unwrap();
+        s.apply(Fault::PsRestore { sat: 1 }).unwrap();
+        assert_eq!(s.ps_failed[1], 1, "still crashed until the second restore");
+        s.apply(Fault::PsRestore { sat: 1 }).unwrap();
+        assert_eq!(s.ps_failed, vec![0, 0]);
+        assert!(s.apply(Fault::PsRestore { sat: 1 }).is_err());
+        // a crashed server process does not take the satellite down
+        s.apply(Fault::PsFailure { sat: 0 }).unwrap();
+        assert_eq!(s.sat_down, vec![0, 0]);
     }
 }

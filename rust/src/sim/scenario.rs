@@ -40,6 +40,20 @@ use anyhow::{bail, Result};
 const SAT_FAULT_SALT: u64 = 0xFA01_7E5C_11D0_0001;
 const GROUND_FAULT_SALT: u64 = 0xFA01_7E5C_11D0_0002;
 const TRANSIENT_SALT: u64 = 0xFA01_7E5C_11D0_0003;
+/// Recovery plane: link-noise burst onsets. A fresh salt (rather than
+/// extra draws on the `SAT_FAULT_SALT` stream) so enabling the noise
+/// process cannot shift the churn/flaky/straggler trigger or duration
+/// draws of existing presets.
+const NOISE_FAULT_SALT: u64 = 0xFA01_7E5C_11D0_0004;
+/// Recovery plane: PS-process crash onsets (same isolation argument).
+const PS_FAULT_SALT: u64 = 0xFA01_7E5C_11D0_0005;
+/// Recovery plane: per-transfer corruption draws for member → PS uploads
+/// (consumed by the coordinator, one stream per `(round, sender)`).
+pub const CORRUPT_SALT: u64 = 0xFA01_7E5C_11D0_0006;
+/// Recovery plane: per-transfer corruption draws for PS → GS uploads — a
+/// separate salt because the PS satellite's `(round, sat)` stream is
+/// already consumed by its own member upload.
+pub const CORRUPT_GROUND_SALT: u64 = 0xFA01_7E5C_11D0_0007;
 
 /// Named scenario preset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,16 +69,24 @@ pub enum ScenarioKind {
     Stragglers,
     /// Eclipse power-save: satellites in Earth's shadow skip the round.
     Eclipse,
+    /// Recovery plane: ISL bit-noise bursts — uploads corrupt, receivers
+    /// checksum-reject, senders retry with exponential backoff.
+    NoisyLinks,
+    /// Recovery plane: PS-process crashes — clusters fail over to a
+    /// backup PS mid-round.
+    PsCrash,
 }
 
 impl ScenarioKind {
     /// Every preset, in CLI order.
-    pub const ALL: [ScenarioKind; 5] = [
+    pub const ALL: [ScenarioKind; 7] = [
         ScenarioKind::Nominal,
         ScenarioKind::Churn,
         ScenarioKind::FlakyGround,
         ScenarioKind::Stragglers,
         ScenarioKind::Eclipse,
+        ScenarioKind::NoisyLinks,
+        ScenarioKind::PsCrash,
     ];
 
     /// Parse the `--scenario` flag value.
@@ -75,6 +97,8 @@ impl ScenarioKind {
             "flaky-ground" => Some(ScenarioKind::FlakyGround),
             "stragglers" => Some(ScenarioKind::Stragglers),
             "eclipse" => Some(ScenarioKind::Eclipse),
+            "noisy-links" => Some(ScenarioKind::NoisyLinks),
+            "ps-crash" => Some(ScenarioKind::PsCrash),
             _ => None,
         }
     }
@@ -86,6 +110,8 @@ impl ScenarioKind {
             ScenarioKind::FlakyGround => "flaky-ground",
             ScenarioKind::Stragglers => "stragglers",
             ScenarioKind::Eclipse => "eclipse",
+            ScenarioKind::NoisyLinks => "noisy-links",
+            ScenarioKind::PsCrash => "ps-crash",
         }
     }
 }
@@ -122,6 +148,20 @@ pub struct ScenarioConfig {
     /// Geometric eclipse power-save: a satellite inside Earth's shadow
     /// cylinder (sun fixed along +X) skips the round.
     pub eclipse: bool,
+    /// Per-satellite per-round link-noise burst probability (the
+    /// recovery plane's corruption process).
+    pub link_noise_prob: f64,
+    /// Ceiling of the drawn burst BER, nano-units (drawn uniform in
+    /// `1..=ceiling`, i.e. a bit-error rate in `(0, ceiling/1e9]`).
+    pub link_noise_ber_nano: u32,
+    /// Max link-noise burst duration, rounds.
+    pub link_noise_rounds: u64,
+    /// Per-satellite per-round PS-process crash probability (only
+    /// crashes on a satellite currently serving as a PS trigger a
+    /// failover; the rest are harmless process restarts).
+    pub ps_fail_prob: f64,
+    /// Max PS-process outage duration, rounds.
+    pub ps_fail_rounds: u64,
 }
 
 impl Default for ScenarioConfig {
@@ -147,6 +187,11 @@ impl ScenarioConfig {
             straggler_milli: 5000,
             straggler_rounds: 3,
             eclipse: false,
+            link_noise_prob: 0.0,
+            link_noise_ber_nano: 500,
+            link_noise_rounds: 2,
+            ps_fail_prob: 0.0,
+            ps_fail_rounds: 2,
         };
         match kind {
             ScenarioKind::Nominal => off,
@@ -158,6 +203,8 @@ impl ScenarioConfig {
             },
             ScenarioKind::Stragglers => ScenarioConfig { straggler_prob: 0.15, ..off },
             ScenarioKind::Eclipse => ScenarioConfig { eclipse: true, ..off },
+            ScenarioKind::NoisyLinks => ScenarioConfig { link_noise_prob: 0.25, ..off },
+            ScenarioKind::PsCrash => ScenarioConfig { ps_fail_prob: 0.2, ..off },
         }
     }
 
@@ -169,6 +216,8 @@ impl ScenarioConfig {
             ("scenario-ground-outage", self.ground_outage_prob),
             ("scenario-link-degrade", self.link_degrade_prob),
             ("scenario-straggler", self.straggler_prob),
+            ("scenario-link-noise", self.link_noise_prob),
+            ("scenario-ps-fail", self.ps_fail_prob),
         ] {
             if !(0.0..1.0).contains(&p) {
                 bail!("{name} must be a probability in [0, 1), got {p}");
@@ -202,6 +251,20 @@ impl ScenarioConfig {
                 bail!("scenario-straggler-rounds must be at least 1");
             }
         }
+        if self.link_noise_prob > 0.0 {
+            if !(1..1_000_000_000).contains(&self.link_noise_ber_nano) {
+                bail!(
+                    "scenario-noise-ber must be in (0, 1), got {:e}",
+                    self.link_noise_ber_nano as f64 / 1e9
+                );
+            }
+            if self.link_noise_rounds < 1 {
+                bail!("scenario-noise-rounds must be at least 1");
+            }
+        }
+        if self.ps_fail_prob > 0.0 && self.ps_fail_rounds < 1 {
+            bail!("scenario-ps-rounds must be at least 1");
+        }
         Ok(())
     }
 }
@@ -219,6 +282,14 @@ pub struct Availability {
     pub compute_slowdown: Vec<f64>,
     /// Ground stations dark this round.
     pub ground_down: Vec<bool>,
+    /// Per-satellite additive bit-error rate from active noise bursts
+    /// (0.0 nominal; the coordinator adds the global `--ber` floor on
+    /// top before drawing per-transfer corruption).
+    pub ber: Vec<f64>,
+    /// Satellites whose PS *process* is crashed this round. The
+    /// satellite itself still trains as a member; only a cluster whose
+    /// elected PS appears here fails over.
+    pub ps_failed: Vec<bool>,
     /// Fault onsets injected this round (feeds the ledger counter).
     pub faults_injected: usize,
 }
@@ -346,6 +417,8 @@ impl ScenarioEngine {
             link_factor: self.state.link_factor.clone(),
             compute_slowdown: self.state.compute_slowdown.clone(),
             ground_down: self.state.ground_down.iter().map(|&d| d > 0).collect(),
+            ber: self.state.ber_nano.iter().map(|&n| n as f64 / 1e9).collect(),
+            ps_failed: self.state.ps_failed.iter().map(|&d| d > 0).collect(),
             faults_injected: injected,
         }
     }
@@ -393,6 +466,28 @@ impl ScenarioEngine {
                     let dur = 1 + rng.below(c.ground_outage_rounds);
                     self.push(round, Fault::GroundOutage { station });
                     self.push(round + dur, Fault::GroundRestore { station });
+                }
+            }
+        }
+        if c.link_noise_prob > 0.0 {
+            for sat in 0..self.n_sats {
+                let mut rng =
+                    Rng::new(stream_seed(self.seed ^ NOISE_FAULT_SALT, round, sat as u64));
+                if rng.uniform() < c.link_noise_prob && self.state.ber_nano[sat] == 0 {
+                    let ber_nano = 1 + rng.below(c.link_noise_ber_nano as u64) as u32;
+                    let dur = 1 + rng.below(c.link_noise_rounds);
+                    self.push(round, Fault::LinkNoise { sat, ber_nano });
+                    self.push(round + dur, Fault::LinkNoiseClear { sat, ber_nano });
+                }
+            }
+        }
+        if c.ps_fail_prob > 0.0 {
+            for sat in 0..self.n_sats {
+                let mut rng = Rng::new(stream_seed(self.seed ^ PS_FAULT_SALT, round, sat as u64));
+                if rng.uniform() < c.ps_fail_prob && self.state.ps_failed[sat] == 0 {
+                    let dur = 1 + rng.below(c.ps_fail_rounds);
+                    self.push(round, Fault::PsFailure { sat });
+                    self.push(round + dur, Fault::PsRestore { sat });
                 }
             }
         }
@@ -511,6 +606,12 @@ mod tests {
         let mut c = ScenarioConfig::preset(ScenarioKind::Stragglers);
         c.straggler_milli = 900;
         assert!(c.validate().is_err());
+        let mut c = ScenarioConfig::preset(ScenarioKind::NoisyLinks);
+        c.link_noise_ber_nano = 1_000_000_000;
+        assert!(c.validate().is_err());
+        let mut c = ScenarioConfig::preset(ScenarioKind::PsCrash);
+        c.ps_fail_rounds = 0;
+        assert!(c.validate().is_err());
         assert!(ScenarioEngine::new(ScenarioConfig::default(), 1.0, 1, 4, 1).is_err());
     }
 
@@ -524,7 +625,58 @@ mod tests {
             assert!(a.link_factor.iter().all(|&f| f == 1.0));
             assert!(a.compute_slowdown.iter().all(|&f| f == 1.0));
             assert!(a.ground_down.iter().all(|&d| !d));
+            assert!(a.ber.iter().all(|&b| b == 0.0));
+            assert!(a.ps_failed.iter().all(|&p| !p));
         }
+    }
+
+    #[test]
+    fn noisy_links_draws_bursts_within_the_ceiling() {
+        let cfg = ScenarioConfig {
+            link_noise_prob: 0.5,
+            ..ScenarioConfig::preset(ScenarioKind::NoisyLinks)
+        };
+        let mut e = ScenarioEngine::new(cfg, 0.0, 13, 12, 1).unwrap();
+        let ceiling = cfg.link_noise_ber_nano as f64 / 1e9;
+        let mut saw_noise = false;
+        for round in 1..=15u64 {
+            let a = e.advance_round(round, &positions(12));
+            for sat in 0..12 {
+                let b = a.ber[sat];
+                assert!((0.0..=ceiling).contains(&b), "burst BER {b} out of range");
+                if b > 0.0 {
+                    saw_noise = true;
+                    // noise never takes the satellite down by itself
+                    assert!(!a.unreachable[sat]);
+                }
+            }
+        }
+        assert!(saw_noise, "a 50% burst rate must fire within 15 rounds");
+    }
+
+    #[test]
+    fn ps_crashes_persist_until_restore() {
+        let cfg = ScenarioConfig {
+            ps_fail_prob: 0.5,
+            ps_fail_rounds: 3,
+            ..ScenarioConfig::preset(ScenarioKind::PsCrash)
+        };
+        let mut e = ScenarioEngine::new(cfg, 0.0, 21, 16, 1).unwrap();
+        let mut total_injected = 0usize;
+        let mut crashed_rounds = 0usize;
+        for round in 1..=12u64 {
+            let a = e.advance_round(round, &positions(16));
+            total_injected += a.faults_injected;
+            crashed_rounds += a.ps_failed.iter().filter(|&&p| p).count();
+            // a crashed PS process leaves the satellite itself reachable
+            assert!(a.unreachable.iter().all(|&u| !u));
+        }
+        assert!(total_injected > 0, "a 50% crash rate must inject faults");
+        assert!(
+            crashed_rounds > total_injected,
+            "multi-round restores must keep processes down longer than \
+             one round each ({crashed_rounds} vs {total_injected})"
+        );
     }
 
     #[test]
@@ -559,6 +711,8 @@ mod tests {
             link_degrade_prob: 0.2,
             straggler_prob: 0.2,
             ground_outage_prob: 0.3,
+            link_noise_prob: 0.2,
+            ps_fail_prob: 0.2,
             ..ScenarioConfig::preset(ScenarioKind::Churn)
         };
         let mut a = ScenarioEngine::new(cfg, 0.05, 99, 12, 3).unwrap();
@@ -570,6 +724,8 @@ mod tests {
             assert_eq!(ra.link_factor, rb.link_factor);
             assert_eq!(ra.compute_slowdown, rb.compute_slowdown);
             assert_eq!(ra.ground_down, rb.ground_down);
+            assert_eq!(ra.ber, rb.ber);
+            assert_eq!(ra.ps_failed, rb.ps_failed);
             assert_eq!(ra.faults_injected, rb.faults_injected);
         }
     }

@@ -29,14 +29,19 @@ impl Args {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if known_flags.contains(&rest) {
                     out.flags.push(rest.to_string());
-                } else if let Some(next) = it.peek() {
-                    if next.starts_with("--") {
-                        out.flags.push(rest.to_string());
-                    } else {
-                        out.options.insert(rest.to_string(), it.next().unwrap());
-                    }
                 } else {
-                    out.flags.push(rest.to_string());
+                    // a trailing `--key`, or one followed by another
+                    // option, parses as a flag; otherwise the next token
+                    // is its value (taken without unwrap — a peeked
+                    // Peekable cannot come up empty, but a usage mistake
+                    // must never be able to panic the parser)
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let value = it.next().unwrap_or_default();
+                            out.options.insert(rest.to_string(), value);
+                        }
+                        _ => out.flags.push(rest.to_string()),
+                    }
                 }
             } else if out.subcommand.is_none() && out.positional.is_empty() {
                 out.subcommand = Some(a);

@@ -286,7 +286,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -317,8 +318,11 @@ impl<'a> Parser<'a> {
                             if self.i + 4 >= self.b.len() {
                                 return Err(self.err("bad \\u escape"));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
+                            // the four escape bytes can split a multibyte
+                            // UTF-8 character in malformed input — that is
+                            // a parse error, never a panic
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| self.err("bad \\u escape"))?;
                             let code = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
@@ -332,7 +336,10 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 char
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unterminated string"))?;
                     s.push(c);
                     self.i += c.len_utf8();
                 }
@@ -408,6 +415,20 @@ mod tests {
             Json::parse("\"hi\\nthere\"").unwrap(),
             Json::Str("hi\nthere".into())
         );
+    }
+
+    #[test]
+    fn malformed_escapes_are_errors_not_panics() {
+        // a multibyte character straddling the end of the four `\u` digit
+        // bytes used to split the UTF-8 slice and panic; it must surface
+        // as a parse error
+        let e = Json::parse("\"\\u123é\"").unwrap_err();
+        assert!(e.to_string().contains("\\u escape"), "{e}");
+        let e = Json::parse("\"\\uée11\"").unwrap_err();
+        assert!(e.to_string().contains("\\u escape"), "{e}");
+        // truncated escape and bare backslash stay errors too
+        assert!(Json::parse("\"\\u12\"").is_err());
+        assert!(Json::parse("\"\\x\"").is_err());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use fedhc::coordinator::{run_clustered, Strategy, Trial};
 use fedhc::fl::CompressMode;
 use fedhc::metrics::recorder;
 use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::sim::scenario::{ScenarioConfig, ScenarioKind};
 use std::path::PathBuf;
 
 const METHODS: [&str; 4] = ["fedhc", "hbase", "fedce", "cfedavg"];
@@ -184,6 +185,73 @@ fn golden_compressed_trajectories_match_exactly() {
         assert_eq!(
             got, want,
             "golden trajectory drifted for fedhc/{stem} — if the change is \
+             intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
+             --test golden_trajectories` and review the diff"
+        );
+    }
+    if !seeded.is_empty() {
+        eprintln!("seeded {} golden file(s): {seeded:?} — commit them to pin", seeded.len());
+    }
+}
+
+/// The recovery plane gets its own snapshots: FedHC under the
+/// `noisy-links` preset on the analytic timeline (hot bursts so the
+/// detect/retry/backoff loop genuinely engages within 5 rounds), FedHC
+/// under `ps-crash` on the event timeline (mid-round failover through the
+/// visibility-gated pass plan), and C-FedAvg under `ps-crash` (the
+/// central-server failover analogue). These pin the corruption draws, the
+/// per-attempt retry billing, and the failover re-collection byte for
+/// byte.
+fn run_recovery(stem: &str) -> String {
+    let manifest = Manifest::host();
+    let (method, timeline, kind) = match stem {
+        "fedhc_noisy_links" => ("fedhc", Timeline::Analytic, ScenarioKind::NoisyLinks),
+        "fedhc_ps_crash" => ("fedhc", Timeline::Event, ScenarioKind::PsCrash),
+        "cfedavg_ps_crash" => ("cfedavg", Timeline::Analytic, ScenarioKind::PsCrash),
+        other => unreachable!("unknown recovery golden stem {other}"),
+    };
+    let mut cfg = golden_cfg(timeline);
+    cfg.scenario = ScenarioConfig::preset(kind);
+    match kind {
+        // BER up to 5e-2 per burst: corruption is certain in-run
+        ScenarioKind::NoisyLinks => cfg.scenario.link_noise_ber_nano = 50_000_000,
+        ScenarioKind::PsCrash => {
+            cfg.scenario.ps_fail_prob = 0.5;
+            cfg.ground_every = 1;
+        }
+        _ => unreachable!(),
+    }
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = match method {
+        "fedhc" => run_clustered(&mut trial, Strategy::fedhc()).unwrap(),
+        "cfedavg" => run_cfedavg(&mut trial).unwrap(),
+        other => unreachable!("unknown recovery golden method {other}"),
+    };
+    recorder::to_json(&res.ledger).to_pretty() + "\n"
+}
+
+#[test]
+fn golden_recovery_trajectories_match_exactly() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    let mut seeded = Vec::new();
+    for stem in ["fedhc_noisy_links", "fedhc_ps_crash", "cfedavg_ps_crash"] {
+        let name = format!("{stem}.json");
+        let path = dir.join(&name);
+        let got = run_recovery(stem);
+        if update || !path.exists() {
+            std::fs::write(&path, &got).unwrap();
+            if !update {
+                seeded.push(name);
+            }
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            got, want,
+            "golden trajectory drifted for {stem} — if the change is \
              intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
              --test golden_trajectories` and review the diff"
         );

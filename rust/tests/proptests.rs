@@ -22,6 +22,7 @@ use fedhc::orbit::{GroundStation, Vec3};
 use fedhc::runtime::host_model::reference;
 use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
 use fedhc::sim::events::{Event, EventQueue, Scheduled};
+use fedhc::sim::faults::{Fault, FaultState};
 use fedhc::sim::scenario::{ScenarioConfig, ScenarioEngine, ScenarioKind};
 use fedhc::util::quickprop::{property, Gen};
 use fedhc::util::Rng;
@@ -582,6 +583,70 @@ fn prop_fractional_scenario_advances_never_double_fire() {
                 aw.faults_injected, frac_faults,
                 "round {r}: onsets double-fired or went missing"
             );
+        }
+    });
+}
+
+#[test]
+fn prop_onset_recovery_stacks_round_trip_to_nominal_bits() {
+    // the recovery plane's availability contract: a random stack of onset
+    // faults — overlapping hard failures, PS crashes, noise bursts piling
+    // on the same satellite — unwound by each onset's own `recovery()`
+    // leaves the fold bit-identical to a fresh FaultState. Factor faults
+    // (link degrade, slowdown) get at most one active onset per satellite:
+    // their restore divides by exactly the factor its onset multiplied,
+    // which is only a bitwise identity against a nominal 1.0 base.
+    property("onset stack + LIFO recovery == nominal", 60, |g: &mut Gen| {
+        let n_sats = g.usize_in(2, 12);
+        let n_stations = g.usize_in(1, 3);
+        let nominal = FaultState::new(n_sats, n_stations);
+        let mut s = FaultState::new(n_sats, n_stations);
+        let mut factored = vec![false; n_sats];
+        let mut onsets: Vec<Fault> = Vec::new();
+        for _ in 0..g.usize_in(1, 24) {
+            let sat = g.rng().below_usize(n_sats);
+            let f = match g.rng().below_usize(6) {
+                0 => Fault::SatFail { sat },
+                1 => Fault::GroundOutage { station: g.rng().below_usize(n_stations) },
+                2 => Fault::PsFailure { sat },
+                3 => Fault::LinkNoise {
+                    sat,
+                    ber_nano: 1 + g.rng().below_usize(1_000_000) as u32,
+                },
+                // this satellite already carries a factor fault: stack a
+                // depth fault instead of a second multiplier
+                _ if factored[sat] => Fault::LinkNoise { sat, ber_nano: 1 },
+                4 => {
+                    factored[sat] = true;
+                    Fault::LinkDegrade { sat, milli: 1 + g.rng().below_usize(999) as u32 }
+                }
+                _ => {
+                    factored[sat] = true;
+                    Fault::SlowdownStart {
+                        sat,
+                        milli: 1001 + g.rng().below_usize(9_000) as u32,
+                    }
+                }
+            };
+            assert!(f.is_onset(), "{f:?} drawn as an onset");
+            s.apply(f).unwrap();
+            onsets.push(f);
+        }
+        for f in onsets.iter().rev() {
+            let r = f.recovery();
+            assert!(!r.is_onset(), "{f:?} paired with onset {r:?}");
+            assert_eq!(r.recovery(), r, "recovery of a restore is itself");
+            s.apply(r).unwrap();
+        }
+        assert_eq!(s.sat_down, nominal.sat_down, "hard-failure depth leaked");
+        assert_eq!(s.ground_down, nominal.ground_down, "outage depth leaked");
+        assert_eq!(s.ber_nano, nominal.ber_nano, "noise bursts leaked");
+        assert_eq!(s.ps_failed, nominal.ps_failed, "PS crash depth leaked");
+        for (got, want) in s.link_factor.iter().zip(&nominal.link_factor) {
+            assert_eq!(got.to_bits(), want.to_bits(), "link factor drifted");
+        }
+        for (got, want) in s.compute_slowdown.iter().zip(&nominal.compute_slowdown) {
+            assert_eq!(got.to_bits(), want.to_bits(), "slowdown factor drifted");
         }
     });
 }

@@ -210,6 +210,157 @@ fn nominal_preset_reports_only_transient_outages() {
     assert_eq!(res.ledger.straggler_wait_s, 0.0);
 }
 
+/// The recovery plane under fault injection: `noisy-links` bursts corrupt
+/// uploads, the detect/retry/backoff loop re-sends and bills, the run
+/// completes, and the whole trajectory — including every recovery
+/// counter — is bit-identical across worker counts (the corruption draws
+/// come from stateless `(seed ^ SALT, round, sender)` streams, never from
+/// worker-thread state).
+#[test]
+fn noisy_links_preset_retransmits_and_is_worker_deterministic() {
+    let mk = |workers| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 10;
+        cfg.workers = workers;
+        cfg.target_accuracy = None;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::NoisyLinks);
+        // hot bursts (BER up to 5e-2) so corruption is certain in-run
+        cfg.scenario.link_noise_ber_nano = 50_000_000;
+        cfg
+    };
+    let a = run_with(&mk(1), Strategy::fedhc());
+    assert!(a.ledger.faults_injected > 0, "noise bursts must fire");
+    assert!(a.ledger.corrupted_uploads > 0, "bursts must corrupt some upload");
+    assert!(a.ledger.retransmits > 0, "corruption must trigger retransmission");
+    assert!(a.ledger.retry_wait_s > 0.0, "retries must bill backoff waits");
+    assert_eq!(a.ledger.failovers, 0, "this preset crashes no PS process");
+    assert_eq!(a.ledger.records.len(), 10, "the noisy run must still complete");
+
+    let b = run_with(&mk(4), Strategy::fedhc());
+    assert_eq!(a.ledger.records.len(), b.ledger.records.len());
+    for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
+        assert_eq!(x.accuracy, y.accuracy, "round {}: accuracy diverged", x.round);
+        assert_eq!(x.time_s, y.time_s, "round {}: time diverged", x.round);
+        assert_eq!(x.energy_j, y.energy_j, "round {}: energy diverged", x.round);
+    }
+    assert_eq!(a.ledger.retransmits, b.ledger.retransmits);
+    assert_eq!(a.ledger.corrupted_uploads, b.ledger.corrupted_uploads);
+    assert_eq!(a.ledger.retry_wait_s, b.ledger.retry_wait_s);
+    assert_eq!(a.ledger.wire_bytes, b.ledger.wire_bytes);
+}
+
+/// The `ps-crash` preset: mid-round PS process crashes promote the
+/// next-best backup from the deterministic `rank_cluster_ps` ranking,
+/// the ledger counts the promotions, and the trajectory stays
+/// bit-identical across worker counts.
+#[test]
+fn ps_crash_preset_promotes_backups_and_is_worker_deterministic() {
+    let mk = |workers| {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 10;
+        cfg.workers = workers;
+        cfg.target_accuracy = None;
+        // failover happens at the pass barrier: exercise it every round
+        cfg.ground_every = 1;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::PsCrash);
+        cfg.scenario.ps_fail_prob = 0.5;
+        cfg
+    };
+    let a = run_with(&mk(1), Strategy::fedhc());
+    assert!(a.ledger.faults_injected > 0, "PS crashes must fire");
+    assert!(a.ledger.failovers > 0, "a crashed PS must promote a backup");
+    assert_eq!(a.ledger.records.len(), 10, "the run must survive its PSes");
+
+    let b = run_with(&mk(4), Strategy::fedhc());
+    assert_eq!(a.ledger.records.len(), b.ledger.records.len());
+    for (x, y) in a.ledger.records.iter().zip(&b.ledger.records) {
+        assert_eq!(x.accuracy, y.accuracy, "round {}: accuracy diverged", x.round);
+        assert_eq!(x.time_s, y.time_s, "round {}: time diverged", x.round);
+        assert_eq!(x.energy_j, y.energy_j, "round {}: energy diverged", x.round);
+    }
+    assert_eq!(a.ledger.failovers, b.ledger.failovers);
+    assert_eq!(a.ledger.stale_passes, b.ledger.stale_passes);
+    assert_eq!(a.ledger.wire_bytes, b.ledger.wire_bytes);
+}
+
+/// The recovery plane's two bit-identity contracts. With `--ber 0` the
+/// retry knobs are inert — even exotic values must not perturb one bit
+/// of the nominal trajectory (the coordinator gates the whole plane off
+/// before any RNG construction or float op). With a BER floor the plane
+/// runs, and every retransmission shows up as extra Eq. 6/7 time, Eq. 8
+/// energy, and billed wire traffic.
+#[test]
+fn zero_ber_is_bit_identical_and_a_ber_floor_bills_recovery_cost() {
+    let mut base_cfg = ExperimentConfig::tiny();
+    base_cfg.rounds = 8;
+    base_cfg.target_accuracy = None;
+    // pinned topology evolution so the cost comparison is airtight
+    base_cfg.recluster_threshold = 1.0;
+    let base = run_with(&base_cfg, Strategy::fedhc());
+    assert_eq!(base.ledger.retransmits, 0);
+    assert_eq!(base.ledger.corrupted_uploads, 0);
+    assert_eq!(base.ledger.retry_wait_s, 0.0);
+
+    let mut gated = base_cfg.clone();
+    gated.max_retries = 9;
+    gated.retry_backoff = 7.5;
+    let same = run_with(&gated, Strategy::fedhc());
+    assert_eq!(base.ledger.records.len(), same.ledger.records.len());
+    for (x, y) in base.ledger.records.iter().zip(&same.ledger.records) {
+        assert_eq!(x.accuracy, y.accuracy, "round {}: retry knobs leaked", x.round);
+        assert_eq!(x.time_s, y.time_s, "round {}: retry knobs cost time", x.round);
+        assert_eq!(x.energy_j, y.energy_j, "round {}: retry knobs cost energy", x.round);
+    }
+    assert_eq!(base.ledger.wire_bytes, same.ledger.wire_bytes);
+    assert_eq!(same.ledger.retransmits, 0);
+
+    let mut noisy_cfg = base_cfg.clone();
+    noisy_cfg.ber = 1e-4;
+    let noisy = run_with(&noisy_cfg, Strategy::fedhc());
+    assert!(noisy.ledger.retransmits > 0, "a BER floor must corrupt something");
+    assert!(noisy.ledger.corrupted_uploads > 0);
+    assert!(noisy.ledger.retry_wait_s > 0.0, "retries must bill backoff");
+    assert!(
+        noisy.ledger.time_s >= base.ledger.time_s,
+        "retries cannot make the run faster: {} < {}",
+        noisy.ledger.time_s,
+        base.ledger.time_s
+    );
+    assert!(
+        noisy.ledger.energy_j > base.ledger.energy_j,
+        "each retransmission must bill Eq. 8 uplink energy"
+    );
+    assert!(
+        noisy.ledger.wire_bytes > base.ledger.wire_bytes,
+        "each retransmission must be billed on the wire"
+    );
+}
+
+/// Graceful degradation: a near-certain corruption rate with a single
+/// allowed retry exhausts every transfer, so every contribution drops to
+/// the stale path — and the run must still complete every round, under
+/// both the sync barrier and the buffered event plane (no deadlock, no
+/// empty-merge panic).
+#[test]
+fn retry_exhaustion_degrades_to_stale_path_without_deadlock() {
+    for aggregation in [AggregationMode::Sync, AggregationMode::Buffered] {
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 6;
+        cfg.target_accuracy = None;
+        cfg.ber = 0.5; // corrupt_prob ≈ 1 at any real payload size
+        cfg.max_retries = 1;
+        cfg.aggregation = aggregation;
+        let res = run_with(&cfg, Strategy::fedhc());
+        assert_eq!(
+            res.ledger.records.len(),
+            6,
+            "{aggregation:?}: exhausted retries must not stall the run"
+        );
+        assert!(res.ledger.corrupted_uploads > 0, "{aggregation:?}");
+        assert!(res.ledger.retransmits > 0, "{aggregation:?}");
+    }
+}
+
 #[test]
 fn scenario_matrix_sweep_covers_every_cell() {
     let manifest = Manifest::host();
