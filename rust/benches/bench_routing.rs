@@ -1,0 +1,204 @@
+//! Routing-plane bench: multi-hop ISL trees vs the one-hop teleport.
+//!
+//! Two question groups, emitted to `BENCH_routing.json`:
+//!
+//! 1. **Tree construction** — per-cluster BFS route-tree build time on the
+//!    paper shell (and the 5 000-satellite mega shell in full mode), brute
+//!    oracle vs sphere-grid pruned, with bit-identity asserted on every
+//!    comparison (the exactness guarantee is a correctness claim, so it
+//!    panics the bench; timings are reported, never thresholded).
+//! 2. **End-to-end divergence** — FedHC under `--routing direct`, `isl`
+//!    and `isl:ring` on a geometry where routing genuinely engages: the
+//!    tiny shell as one cluster at 9 000 km ISL range (each orbital plane
+//!    becomes a 6-ring, paths reach three hops), plus the `mega-dense`
+//!    preset at its default 2 000 km range in full mode. The structural
+//!    claims: `isl` must traverse hops and fold partial aggregates at
+//!    relays, must never move **more** uplink bytes than direct (the
+//!    in-route aggregation payoff: each tree edge carries exactly one
+//!    pooled upload), and must diverge from the teleport's clock —
+//!    while `direct` stays the committed baseline bit for bit.
+//!
+//!     cargo bench --bench bench_routing [-- --fast]
+
+use fedhc::config::{ExperimentConfig, RoutingMode};
+use fedhc::coordinator::{run_clustered, Strategy, Trial};
+use fedhc::network::build_route_tree;
+use fedhc::orbit::index::SphereGrid;
+use fedhc::orbit::propagate::Constellation;
+use fedhc::orbit::walker::WalkerConstellation;
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::util::json::Json;
+use fedhc::util::stats::{bench_loop, mean, Timer};
+
+/// Route-tree build microbench: one "cluster" spanning most of the shell
+/// (every third satellite dropped so `nodes` exercises the filter path),
+/// brute vs indexed, bit-identity asserted.
+fn tree_suite(fast: bool) -> Json {
+    println!("== route-tree construction: brute vs sphere-grid (bit-identity asserted) ==");
+    let (warmup, iters) = if fast { (1, 8) } else { (2, 30) };
+    let tiers: Vec<(&str, WalkerConstellation, f64)> = if fast {
+        vec![("paper-96", WalkerConstellation::paper_shell(8, 12), 4500e3)]
+    } else {
+        vec![
+            ("paper-96", WalkerConstellation::paper_shell(8, 12), 4500e3),
+            ("mega-5k", WalkerConstellation::mega_shell(40, 125), 2000e3),
+        ]
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    for (label, walker, range_m) in tiers {
+        let c = Constellation::from_walker(&walker);
+        let snap = c.snapshot(1234.5);
+        let feats = snap.features_km();
+        let grid = SphereGrid::build(&feats, SphereGrid::auto_bands(c.len()));
+        let nodes: Vec<usize> = (0..c.len()).filter(|i| i % 3 != 1).collect();
+        let mut scratch = Vec::new();
+        let brute = build_route_tree(
+            &nodes, 0, range_m, &snap.positions, None, &|_| false, &mut scratch,
+        );
+        let indexed = build_route_tree(
+            &nodes, 0, range_m, &snap.positions, Some(&grid), &|_| false, &mut scratch,
+        );
+        assert_eq!(brute, indexed, "{label}: grid-pruned tree drifted from the brute oracle");
+        assert!(brute.max_hops() > 1, "{label}: shell must be multi-hop at {range_m} m");
+        let t_brute = bench_loop(warmup, iters, || {
+            std::hint::black_box(build_route_tree(
+                &nodes, 0, range_m, &snap.positions, None, &|_| false, &mut scratch,
+            ));
+        });
+        let t_index = bench_loop(warmup, iters, || {
+            std::hint::black_box(build_route_tree(
+                &nodes, 0, range_m, &snap.positions, Some(&grid), &|_| false, &mut scratch,
+            ));
+        });
+        let speedup = mean(&t_brute) / mean(&t_index);
+        println!(
+            "  {label:<9} n={:>5} range {:>5.0} km: max_hops {:>2} | brute {:>8.3} ms, \
+             indexed {:>8.3} ms (x{speedup:.2})",
+            nodes.len(),
+            range_m / 1e3,
+            brute.max_hops(),
+            mean(&t_brute) * 1e3,
+            mean(&t_index) * 1e3,
+        );
+        rows.push(Json::obj(vec![
+            ("tier", Json::str(label)),
+            ("n", Json::num(nodes.len() as f64)),
+            ("range_km", Json::num(range_m / 1e3)),
+            ("max_hops", Json::num(brute.max_hops() as f64)),
+            ("build_brute_ms", Json::num(mean(&t_brute) * 1e3)),
+            ("build_indexed_ms", Json::num(mean(&t_index) * 1e3)),
+            ("build_speedup", Json::num(speedup)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+/// The divergence geometries. `tiny-1k9000`: the whole tiny shell as one
+/// cluster at 9 000 km range — each orbital plane is a 6-ring from the
+/// PS's point of view, so store-and-forward paths reach three hops and
+/// every round folds partial aggregates at relays. `mega-dense`: the
+/// 5 000-satellite preset at its default 2 000 km range, where k-means
+/// clusters span more than one hop of the dense ISL mesh.
+fn e2e_configs(fast: bool) -> Vec<(&'static str, ExperimentConfig)> {
+    let mut tiny = ExperimentConfig::tiny();
+    tiny.rounds = 5;
+    tiny.target_accuracy = None;
+    tiny.clusters = 1;
+    tiny.isl_range_km = 9000.0;
+    let mut out = vec![("tiny-1x9000km", tiny)];
+    if !fast {
+        let mut mega = ExperimentConfig::preset("mega-dense").expect("mega preset");
+        mega.rounds = 3;
+        out.push(("mega-dense", mega));
+    }
+    out
+}
+
+fn e2e_suite(fast: bool) -> Json {
+    let manifest = Manifest::host();
+    println!("\n== end-to-end: direct teleport vs multi-hop isl vs ring all-reduce ==");
+    let mut rows: Vec<Json> = Vec::new();
+    for (label, base) in e2e_configs(fast) {
+        let rt = ModelRuntime::load(&manifest, base.variant()).expect("runtime");
+        let rounds = base.rounds as f64;
+        let mut direct_bits: Option<(u64, u64, f64)> = None;
+        for routing in [RoutingMode::Direct, RoutingMode::Isl, RoutingMode::Ring] {
+            let mut cfg = base.clone();
+            cfg.routing = routing;
+            let timer = Timer::start();
+            let mut trial = Trial::new(cfg, &manifest, &rt).expect("trial");
+            let res = run_clustered(&mut trial, Strategy::fedhc()).expect("run");
+            let wall_ms = timer.elapsed_ms();
+            let l = &res.ledger;
+            let hops_per_round = l.route_hops as f64 / rounds;
+            let bytes_per_round = l.wire_bytes / rounds;
+            // structural claims (panics, never perf thresholds)
+            match routing {
+                RoutingMode::Direct => {
+                    assert_eq!(l.route_hops, 0, "{label}: direct must not touch the ISL plane");
+                    assert_eq!(l.relay_merges, 0, "{label}: direct must not merge in-route");
+                    direct_bits =
+                        Some((l.time_s.to_bits(), l.energy_j.to_bits(), bytes_per_round));
+                }
+                RoutingMode::Isl => {
+                    let (t_bits, e_bits, direct_bytes) =
+                        direct_bits.expect("direct runs first");
+                    assert!(l.route_hops > 0, "{label}: isl must traverse ISL hops");
+                    assert!(l.relay_merges > 0, "{label}: isl must fold partial aggregates");
+                    assert!(
+                        l.time_s.to_bits() != t_bits || l.energy_j.to_bits() != e_bits,
+                        "{label}: multi-hop isl must diverge from the one-hop teleport"
+                    );
+                    assert!(
+                        bytes_per_round <= direct_bytes,
+                        "{label}: in-route aggregation must never move more uplink \
+                         bytes than the teleport ({bytes_per_round} vs {direct_bytes})"
+                    );
+                }
+                RoutingMode::Ring => {
+                    assert!(l.route_hops > 0, "{label}: ring must bill its 2(k-1) steps");
+                    assert!(l.relay_merges > 0, "{label}: ring must fold chunk reductions");
+                }
+            }
+            println!(
+                "  {label:<13} {:<6} wall {:>8.1} ms | sim {:>9.0} s, {:>12.0} J, acc {:>5.1}% | \
+                 {:>7.1} hops/round, {:>5} merges, {:>12.0} B/round",
+                routing.name(),
+                wall_ms,
+                l.time_s,
+                l.energy_j,
+                res.final_accuracy * 100.0,
+                hops_per_round,
+                l.relay_merges,
+                bytes_per_round,
+            );
+            rows.push(Json::obj(vec![
+                ("config", Json::str(label)),
+                ("routing", Json::str(routing.name())),
+                ("rounds", Json::num(rounds)),
+                ("wall_ms", Json::num(wall_ms)),
+                ("sim_time_s", Json::num(l.time_s)),
+                ("energy_j", Json::num(l.energy_j)),
+                ("best_accuracy", Json::num(res.final_accuracy)),
+                ("hops_per_round", Json::num(hops_per_round)),
+                ("relay_merges", Json::num(l.relay_merges as f64)),
+                ("bytes_per_round", Json::num(bytes_per_round)),
+            ]));
+        }
+    }
+    Json::Arr(rows)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let trees = tree_suite(fast);
+    let rounds = e2e_suite(fast);
+    let json = Json::obj(vec![
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("trees", trees),
+        ("rounds", rounds),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_routing.json");
+    std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_routing.json");
+    println!("\nwrote {path}");
+}

@@ -137,7 +137,7 @@ pub fn run_cfedavg(trial: &mut Trial) -> Result<RunResult> {
                 .filter(|&i| i != central && !avail.ps_failed[i] && !avail.unreachable[i])
                 .min_by(|&a, &b| gs_dist(a).total_cmp(&gs_dist(b)));
             if let Some(next) = candidate {
-                let d = positions[central].dist(positions[next]).max(1.0);
+                let d = positions[central].dist(positions[next]);
                 let t_x = trial.link.comm_time(model_payload.bits(), d);
                 trial
                     .ledger

@@ -106,7 +106,7 @@ fn select_with_rule(
                         members
                             .iter()
                             .filter(|&&j| j != i)
-                            .map(|&j| link.rate(positions[i].dist(positions[j]).max(1.0)))
+                            .map(|&j| link.rate(positions[i].dist(positions[j])))
                             .sum::<f64>()
                             / (members.len() - 1) as f64
                     }
@@ -124,7 +124,7 @@ fn select_with_rule(
                     let mut n_peers = 0usize;
                     for &j in &neighbors {
                         if result.assignment[j] == c {
-                            sum += link.rate(positions[i].dist(positions[j]).max(1.0));
+                            sum += link.rate(positions[i].dist(positions[j]));
                             n_peers += 1;
                         }
                     }
@@ -185,7 +185,7 @@ pub fn rank_cluster_ps(
                 members
                     .iter()
                     .filter(|&&j| j != i)
-                    .map(|&j| link.rate(positions[i].dist(positions[j]).max(1.0)))
+                    .map(|&j| link.rate(positions[i].dist(positions[j])))
                     .sum::<f64>()
                     / (members.len() - 1) as f64
             }

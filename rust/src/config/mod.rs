@@ -84,6 +84,47 @@ impl AggregationMode {
     }
 }
 
+/// How member uploads travel to their cluster PS (`--routing`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingMode {
+    /// One-hop teleport: every member uploads straight to the PS at its
+    /// line-of-sight distance, however far (the historical accounting;
+    /// bit-identical to the committed goldens).
+    Direct,
+    /// Multi-hop ISL store-and-forward: uploads follow shortest-hop paths
+    /// over the cluster's line-of-sight graph (edges within
+    /// `isl_range_km`, lowest-index tie-breaks), relays partially
+    /// aggregate incoming contributions into one pooled payload before
+    /// forwarding, and every hop is billed through the
+    /// `LinkModel`/`Payload` seam. See [`crate::network::routing`].
+    Isl,
+    /// Ring all-reduce: cluster members form a logical ring (ascending
+    /// index) and reduce-scatter + all-gather the model in `2(k−1)`
+    /// steps of `1/k`-sized chunks — no PS bottleneck link.
+    Ring,
+}
+
+impl RoutingMode {
+    /// Parse the `--routing` flag value (`isl:ring` is accepted as an
+    /// alias for `ring` — the ring runs over the same ISL plane).
+    pub fn parse(s: &str) -> Option<RoutingMode> {
+        match s {
+            "direct" => Some(RoutingMode::Direct),
+            "isl" => Some(RoutingMode::Isl),
+            "ring" | "isl:ring" => Some(RoutingMode::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingMode::Direct => "direct",
+            RoutingMode::Isl => "isl",
+            RoutingMode::Ring => "ring",
+        }
+    }
+}
+
 /// Complete configuration of one FL experiment.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -192,6 +233,16 @@ pub struct ExperimentConfig {
     /// Exponential-backoff growth factor between retransmissions
     /// (`--retry-backoff`, ≥ 1.0).
     pub retry_backoff: f64,
+    /// Intra-cluster routing plane (`--routing direct|isl|ring`).
+    /// `Direct` (default) keeps the historical one-hop accounting
+    /// bit-for-bit; `Isl` routes uploads over the line-of-sight graph
+    /// with partial aggregation at relays; `Ring` replaces the PS merge
+    /// with a ring all-reduce over the same graph.
+    pub routing: RoutingMode,
+    /// Maximum inter-satellite-link range, km (`--isl-range-km`): two
+    /// satellites are graph neighbors when within this range *and* in
+    /// line of sight. Only consulted when `routing != Direct`.
+    pub isl_range_km: f64,
     /// Master seed.
     pub seed: u64,
 }
@@ -251,6 +302,8 @@ impl ExperimentConfig {
             ber: 0.0,
             max_retries: 3,
             retry_backoff: 2.0,
+            routing: RoutingMode::Direct,
+            isl_range_km: 2000.0,
             seed: 42,
         }
     }
@@ -298,6 +351,8 @@ impl ExperimentConfig {
             ber: 0.0,
             max_retries: 3,
             retry_backoff: 2.0,
+            routing: RoutingMode::Direct,
+            isl_range_km: 2000.0,
             seed: 42,
         }
     }
@@ -358,6 +413,8 @@ impl ExperimentConfig {
             ber: 0.0,
             max_retries: 3,
             retry_backoff: 2.0,
+            routing: RoutingMode::Direct,
+            isl_range_km: 2000.0,
             seed: 42,
         }
     }
@@ -473,6 +530,12 @@ impl ExperimentConfig {
         self.max_retries =
             u32::try_from(retries).map_err(|_| anyhow!("--max-retries too large: {retries}"))?;
         self.retry_backoff = args.get_f64("retry-backoff", self.retry_backoff)?;
+        if let Some(r) = args.get("routing") {
+            self.routing = RoutingMode::parse(r).ok_or_else(|| {
+                anyhow!("--routing expects 'direct', 'isl' or 'isl:ring', got '{r}'")
+            })?;
+        }
+        self.isl_range_km = args.get_f64("isl-range-km", self.isl_range_km)?;
         self.eval_batches = args.get_usize("eval-batches", self.eval_batches)?;
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.workers = args.get_usize("workers", self.workers)?;
@@ -570,6 +633,12 @@ impl ExperimentConfig {
         }
         if !self.retry_backoff.is_finite() || self.retry_backoff < 1.0 {
             bail!("--retry-backoff must be at least 1.0, got {}", self.retry_backoff);
+        }
+        if !self.isl_range_km.is_finite() || self.isl_range_km <= 0.0 {
+            bail!(
+                "--isl-range-km must be positive and finite, got {}",
+                self.isl_range_km
+            );
         }
         Ok(())
     }
@@ -896,6 +965,43 @@ mod tests {
         );
         let e = ExperimentConfig::tiny().with_args(&args).unwrap_err();
         assert!(e.to_string().contains("scenario-noise-ber"), "{e}");
+    }
+
+    #[test]
+    fn routing_flag_overrides_apply() {
+        // every preset defaults to the historical direct teleport
+        for name in ["tiny", "mnist", "cifar10", "mega-sparse", "mega-dense"] {
+            let c = ExperimentConfig::preset(name).unwrap();
+            assert_eq!(c.routing, RoutingMode::Direct, "{name}");
+            assert_eq!(c.isl_range_km, 2000.0, "{name}");
+        }
+        let args = Args::parse(
+            ["--routing", "isl", "--isl-range-km", "3500"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+        assert_eq!(c.routing, RoutingMode::Isl);
+        assert_eq!(c.isl_range_km, 3500.0);
+        // both ring spellings parse to the same mode
+        for spelling in ["ring", "isl:ring"] {
+            let args = Args::parse(
+                ["--routing", spelling].iter().map(|s| s.to_string()),
+                &[],
+            );
+            let c = ExperimentConfig::tiny().with_args(&args).unwrap();
+            assert_eq!(c.routing, RoutingMode::Ring, "{spelling}");
+        }
+        let bad = Args::parse(["--routing", "warp"].iter().map(|s| s.to_string()), &[]);
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("--routing"), "{e}");
+        let bad = Args::parse(
+            ["--isl-range-km", "-10"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let e = ExperimentConfig::tiny().with_args(&bad).unwrap_err();
+        assert!(e.to_string().contains("--isl-range-km"), "{e}");
     }
 
     #[test]

@@ -21,19 +21,22 @@ use crate::clustering::kmeans::KMeans;
 use crate::clustering::ps_select::{rank_cluster_ps, select_parameter_servers};
 use crate::clustering::quality::kmeans_nd;
 use crate::clustering::recluster::{align_labels, changed_members, ReclusterPolicy};
-use crate::config::{AggregationMode, Timeline};
+use crate::config::{AggregationMode, RoutingMode, Timeline};
 use crate::fl::aggregate::{aggregate, fedavg_weights, fold_stale, staleness_weight};
 use crate::fl::compress::{encode_upload, CompressScratch};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
 use crate::network::retry::{transfer_with_retries, TransferOutcome};
+use crate::network::routing::{
+    build_route_tree, ring_round, routed_round, HopNode, RouteTree, NO_PARENT,
+};
 use crate::network::Payload;
 use crate::orbit::index::{ConstellationIndex, SphereGrid};
 use crate::orbit::GroundStation;
 use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
 use crate::sim::events::{Event, EventQueue};
-use crate::sim::scenario::{Availability, CORRUPT_SALT};
+use crate::sim::scenario::{Availability, CORRUPT_SALT, RELAY_CORRUPT_SALT};
 use crate::util::rng::stream_seed;
 use crate::util::Rng;
 use anyhow::Result;
@@ -256,7 +259,7 @@ pub fn build_topology(
                             .zip(&mean)
                             .map(|(x, m)| (x - m) * (x - m))
                             .sum();
-                        da.partial_cmp(&db).unwrap()
+                        da.total_cmp(&db)
                     })
                     .unwrap();
                 ps.push(best);
@@ -341,7 +344,7 @@ fn fail_over_ps(
             if m == backup || avail.unreachable[m] || !migrates(m) {
                 continue;
             }
-            let d = positions[m].dist(positions[backup]).max(1.0);
+            let d = positions[m].dist(positions[backup]);
             t_re = t_re.max(trial.link.comm_time(up_bits, d));
             trial.ledger.add_energy(trial.energy.tx_energy(up_bits, d));
             n_re += 1;
@@ -450,6 +453,16 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     } else {
         Vec::new()
     };
+    // routing plane: a relay that re-encodes a pooled partial aggregate
+    // before forwarding keeps its own error-feedback residual, one per
+    // satellite ever acting as a relay (lazily pooled like the above)
+    let mut relay_residuals: Vec<Option<Vec<f32>>> = if compressing
+        && cfg.routing == RoutingMode::Isl
+    {
+        (0..trial.clients.len()).map(|_| None).collect()
+    } else {
+        Vec::new()
+    };
     let resident = cfg.resident_params;
     let policy = ReclusterPolicy::new(cfg.recluster_threshold)?;
     let engine = Engine::new(cfg.workers);
@@ -480,6 +493,10 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     let mut converged_at = None;
     let mut batch_buf = BatchBuf::new(rt);
     let mut jobs: Vec<(usize, usize)> = Vec::new(); // (member, cluster)
+    // routing plane scratch: the routed cluster's node set (ascending
+    // constellation ids) and the BFS neighbour buffer
+    let mut node_ids: Vec<usize> = Vec::new();
+    let mut neigh_scratch: Vec<usize> = Vec::new();
 
     for round in 1..=cfg.rounds {
         let positions = trial.positions();
@@ -570,6 +587,406 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 });
                 losses.push(r.mean_loss);
                 sizes.push(trial.clients[m].data_size());
+            }
+            // routing plane: the intra-cluster route tree for this epoch —
+            // BFS over the LoS ISL graph rooted at the PS, hop-count
+            // shortest paths with lowest-index tie-breaks, degraded relays
+            // demoted to leaves (routes bend around them), out-of-range
+            // members falling back to the direct link. A *flat* tree
+            // (every member one hop from the PS) takes the direct machinery
+            // below verbatim, so `--routing isl` on dense clusters is
+            // bit-identical to `--routing direct` by construction.
+            let tree: Option<RouteTree> = (cfg.routing == RoutingMode::Isl).then(|| {
+                node_ids.clear();
+                node_ids.extend(jobs.iter().map(|&(m, _)| m));
+                if node_ids.binary_search(&topo.ps[c]).is_err() {
+                    node_ids.push(topo.ps[c]);
+                    node_ids.sort_unstable();
+                }
+                let root = node_ids
+                    .binary_search(&topo.ps[c])
+                    .expect("PS present in its own route tree");
+                build_route_tree(
+                    &node_ids,
+                    root,
+                    cfg.isl_range_km * 1e3,
+                    &positions,
+                    geo.as_ref().map(|g| g.grid()),
+                    &|g| avail.link_factor[g] < 1.0,
+                    &mut neigh_scratch,
+                )
+            });
+            let multi_hop = tree.as_ref().is_some_and(|t| t.max_hops() > 1);
+            if cfg.routing == RoutingMode::Ring || multi_hop {
+                let (t, e) = if cfg.routing == RoutingMode::Ring {
+                    // ring all-reduce (`--routing isl:ring`): the active
+                    // members form a ring in ascending id order and exchange
+                    // `wire.up / k`-bit chunks for 2(k−1) steps (reduce-
+                    // scatter, then all-gather). Every member ends holding
+                    // the full fold, so the PS "merge" below is the ring's
+                    // own sequential accumulation — the RingClusterAggregate
+                    // stage pins exactly that order.
+                    let kr = batch.len();
+                    let steps = 2 * kr.saturating_sub(1);
+                    let ps_pos = positions[topo.ps[c]];
+                    let mut hop_nodes: Vec<HopNode> = Vec::with_capacity(kr);
+                    for (i, w) in work.iter().enumerate() {
+                        let succ = batch[(i + 1) % kr].member;
+                        let (t_cmp, _, _) = member_times(&trial.link, w, ps_pos, wire.up);
+                        hop_nodes.push(HopNode {
+                            t_cmp,
+                            e_cmp: trial.energy.compute_energy(w.samples, w.cpu_hz),
+                            link_factor: w.link_factor,
+                            d_up: positions[batch[i].member].dist(positions[succ]),
+                        });
+                    }
+                    // recovery plane: one outcome per member's ring edge,
+                    // replayed by each step; keyed off the dedicated relay
+                    // stream so the direct path's draws stay untouched
+                    let mut outcomes: Vec<TransferOutcome> = Vec::new();
+                    if noisy && kr > 1 {
+                        outcomes.reserve(kr);
+                        let chunk = wire.up / kr as f64;
+                        for (i, h) in hop_nodes.iter().enumerate() {
+                            let m = batch[i].member;
+                            let eff_ber = cfg.ber + avail.ber[m];
+                            let out = if eff_ber > 0.0 {
+                                let t_edge =
+                                    trial.link.comm_time_scaled(chunk, h.d_up, h.link_factor);
+                                let mut rng = Rng::new(stream_seed(
+                                    cfg.seed ^ RELAY_CORRUPT_SALT,
+                                    round as u64,
+                                    m as u64,
+                                ));
+                                transfer_with_retries(&retry, eff_ber, chunk, t_edge, &mut rng)
+                            } else {
+                                TransferOutcome { attempts: 1, wait_s: 0.0, delivered: true }
+                            };
+                            trial.ledger.add_retransmits(out.retransmits() * steps);
+                            trial.ledger.add_corrupted_uploads(out.corrupted() * steps);
+                            trial.ledger.add_retry_wait(out.wait_s * steps as f64);
+                            outcomes.push(out);
+                        }
+                    }
+                    // wire plane: encode survivors in member order (a member
+                    // whose chunk exchange died keeps its residual)
+                    if compressing {
+                        for (i, r) in batch.iter_mut().enumerate() {
+                            if !outcomes.is_empty() && !outcomes[i].delivered {
+                                continue;
+                            }
+                            let res = residuals[r.member]
+                                .get_or_insert_with(|| pools.params.take_zeroed());
+                            encode_upload(
+                                cfg.compress,
+                                &mut r.params,
+                                &topo.models[c],
+                                res,
+                                &mut wire_scratch,
+                            );
+                        }
+                    }
+                    // every step moves k chunks — one model's worth of bits
+                    // per step — and each chunk bills once per attempt
+                    if kr > 1 {
+                        let chunk_bytes = up_bytes / kr as f64;
+                        if outcomes.is_empty() {
+                            trial.ledger.add_wire_bytes(chunk_bytes * (kr * steps) as f64);
+                        } else {
+                            let attempts: u32 = outcomes.iter().map(|o| o.attempts).sum();
+                            trial
+                                .ledger
+                                .add_wire_bytes(chunk_bytes * steps as f64 * attempts as f64);
+                        }
+                        trial.ledger.add_route_hops(steps);
+                        trial.ledger.add_relay_merges(kr - 1);
+                    }
+                    let weights;
+                    let rows: Vec<&[f32]>;
+                    if !outcomes.is_empty() && outcomes.iter().any(|o| !o.delivered) {
+                        let mut kept_losses = Vec::with_capacity(batch.len());
+                        let mut kept_sizes = Vec::with_capacity(batch.len());
+                        let mut kept_rows: Vec<&[f32]> = Vec::with_capacity(batch.len());
+                        for (i, r) in batch.iter().enumerate() {
+                            if outcomes[i].delivered {
+                                kept_losses.push(losses[i]);
+                                kept_sizes.push(sizes[i]);
+                                kept_rows.push(r.params.as_slice());
+                            }
+                        }
+                        weights = stages.cluster.member_weights(&kept_losses, &kept_sizes);
+                        rows = kept_rows;
+                    } else {
+                        weights = stages.cluster.member_weights(&losses, &sizes);
+                        rows = batch.iter().map(|r| r.params.as_slice()).collect();
+                    }
+                    if !rows.is_empty() {
+                        stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
+                        std::mem::swap(&mut topo.models[c], &mut agg_buf);
+                    }
+                    ring_round(
+                        &trial.link,
+                        &trial.energy,
+                        &hop_nodes,
+                        (!outcomes.is_empty()).then_some(outcomes.as_slice()),
+                        wire,
+                    )
+                } else {
+                    // multi-hop store-and-forward (`--routing isl`): every
+                    // member's upload walks its BFS path toward the PS, and
+                    // a relay holding more than one in-flight payload
+                    // partially aggregates before forwarding — each hop then
+                    // carries exactly one model payload. Weights ride along
+                    // as the forwarded weight-sum, so the fold the PS ends
+                    // with is the same weighted average over the same
+                    // members, just associated along the tree.
+                    let tree = tree.as_ref().expect("multi-hop implies a tree");
+                    let n = node_ids.len();
+                    let ps_pos = positions[topo.ps[c]];
+                    // map tree-local nodes ↔ batch rows (the PS is the only
+                    // node that may have trained nothing — it relays only)
+                    let mut local_of: Vec<usize> = Vec::with_capacity(batch.len());
+                    let mut batch_of: Vec<Option<usize>> = vec![None; n];
+                    for (j, r) in batch.iter().enumerate() {
+                        let local = node_ids
+                            .binary_search(&r.member)
+                            .expect("trained member missing from its route tree");
+                        local_of.push(local);
+                        batch_of[local] = Some(j);
+                    }
+                    let mut hop_nodes: Vec<HopNode> = Vec::with_capacity(n);
+                    for local in 0..n {
+                        let d_up = if tree.parent[local] == NO_PARENT {
+                            0.0
+                        } else {
+                            positions[node_ids[local]]
+                                .dist(positions[node_ids[tree.parent[local]]])
+                        };
+                        hop_nodes.push(match batch_of[local] {
+                            Some(j) => {
+                                let w = &work[j];
+                                let (t_cmp, _, _) =
+                                    member_times(&trial.link, w, ps_pos, wire.up);
+                                HopNode {
+                                    t_cmp,
+                                    e_cmp: trial.energy.compute_energy(w.samples, w.cpu_hz),
+                                    link_factor: w.link_factor,
+                                    d_up,
+                                }
+                            }
+                            None => HopNode::relay_only(d_up),
+                        });
+                    }
+                    // recovery plane: one retry outcome per tree edge, each
+                    // a pure function of (seed, round, sender) through the
+                    // dedicated relay stream — worker-count invariant and
+                    // disjoint from the direct path's draws
+                    let mut outcomes: Vec<TransferOutcome> = Vec::new();
+                    if noisy {
+                        outcomes.reserve(n);
+                        for (local, h) in hop_nodes.iter().enumerate() {
+                            if tree.parent[local] == NO_PARENT {
+                                // placeholder keeps edge/node indices aligned
+                                outcomes.push(TransferOutcome {
+                                    attempts: 1,
+                                    wait_s: 0.0,
+                                    delivered: true,
+                                });
+                                continue;
+                            }
+                            let g = node_ids[local];
+                            let eff_ber = cfg.ber + avail.ber[g];
+                            let out = if eff_ber > 0.0 {
+                                let t_hop =
+                                    trial.link.comm_time_scaled(wire.up, h.d_up, h.link_factor);
+                                let mut rng = Rng::new(stream_seed(
+                                    cfg.seed ^ RELAY_CORRUPT_SALT,
+                                    round as u64,
+                                    g as u64,
+                                ));
+                                transfer_with_retries(&retry, eff_ber, wire.up, t_hop, &mut rng)
+                            } else {
+                                TransferOutcome { attempts: 1, wait_s: 0.0, delivered: true }
+                            };
+                            trial.ledger.add_retransmits(out.retransmits());
+                            trial.ledger.add_corrupted_uploads(out.corrupted());
+                            trial.ledger.add_retry_wait(out.wait_s);
+                            outcomes.push(out);
+                        }
+                    }
+                    // a contribution reaches the PS only if *every* edge on
+                    // its path delivered; parents resolve before children in
+                    // reverse merge order (store-and-forward: a payload lost
+                    // on a later hop was still transmitted on earlier ones)
+                    let mut path_ok = vec![true; n];
+                    if noisy {
+                        for &local in tree.order.iter().rev() {
+                            let p = tree.parent[local];
+                            if p != NO_PARENT {
+                                path_ok[local] = outcomes[local].delivered && path_ok[p];
+                            }
+                        }
+                    }
+                    // wire plane: encode in member order against the model
+                    // the member trained from. A first hop that never
+                    // delivered leaves its sender's residual untouched;
+                    // payloads lost deeper already left their sender — its
+                    // residual updates as usual.
+                    if compressing {
+                        for (j, r) in batch.iter_mut().enumerate() {
+                            if noisy && !outcomes[local_of[j]].delivered {
+                                continue;
+                            }
+                            let res = residuals[r.member]
+                                .get_or_insert_with(|| pools.params.take_zeroed());
+                            encode_upload(
+                                cfg.compress,
+                                &mut r.params,
+                                &topo.models[c],
+                                res,
+                                &mut wire_scratch,
+                            );
+                        }
+                    }
+                    // every tree edge carries one full payload per attempt —
+                    // the in-route aggregation is what keeps it to *one*
+                    if noisy {
+                        let attempts: u32 = (0..n)
+                            .filter(|&l| tree.parent[l] != NO_PARENT)
+                            .map(|l| outcomes[l].attempts)
+                            .sum();
+                        trial.ledger.add_wire_bytes(up_bytes * attempts as f64);
+                    } else {
+                        trial.ledger.add_wire_bytes(up_bytes * (n - 1) as f64);
+                    }
+                    trial.ledger.add_route_hops(n - 1);
+                    // the delivered set's strategy weights (Eq. 12 / Eq. 5),
+                    // normalised once over the survivors and carried through
+                    // the tree as absolute weights
+                    let mut kept_losses = Vec::with_capacity(batch.len());
+                    let mut kept_sizes = Vec::with_capacity(batch.len());
+                    for j in 0..batch.len() {
+                        if path_ok[local_of[j]] {
+                            kept_losses.push(losses[j]);
+                            kept_sizes.push(sizes[j]);
+                        }
+                    }
+                    let kept_w = stages.cluster.member_weights(&kept_losses, &kept_sizes);
+                    let mut w_abs = vec![0.0f32; batch.len()];
+                    let mut wi = 0;
+                    for j in 0..batch.len() {
+                        if path_ok[local_of[j]] {
+                            w_abs[j] = kept_w[wi];
+                            wi += 1;
+                        }
+                    }
+                    // the upward fold, children before parents: each node
+                    // pools what its subtree delivered (own row first, then
+                    // child payloads in schedule order), partially
+                    // aggregates when holding more than one, and forwards a
+                    // single payload tagged with the pooled weight-sum
+                    enum Upload<'a> {
+                        Own(&'a [f32]),
+                        Pooled(Vec<f32>),
+                    }
+                    impl Upload<'_> {
+                        fn row(&self) -> &[f32] {
+                            match self {
+                                Upload::Own(r) => r,
+                                Upload::Pooled(b) => b.as_slice(),
+                            }
+                        }
+                    }
+                    let mut inbox: Vec<Vec<(Upload<'_>, f32)>> =
+                        (0..n).map(|_| Vec::new()).collect();
+                    for &local in &tree.order {
+                        let mut items = std::mem::take(&mut inbox[local]);
+                        if path_ok[local] {
+                            if let Some(j) = batch_of[local] {
+                                items.insert(0, (Upload::Own(&batch[j].params), w_abs[j]));
+                            }
+                        }
+                        let p = tree.parent[local];
+                        if p == NO_PARENT {
+                            // the PS folds whatever survived into the model
+                            if !items.is_empty() {
+                                let sw: f32 = items.iter().map(|it| it.1).sum();
+                                let rows: Vec<&[f32]> =
+                                    items.iter().map(|it| it.0.row()).collect();
+                                let weights: Vec<f32> =
+                                    items.iter().map(|it| it.1 / sw).collect();
+                                stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
+                                drop(rows);
+                                std::mem::swap(&mut topo.models[c], &mut agg_buf);
+                                for (up, _) in items {
+                                    if let Upload::Pooled(buf) = up {
+                                        pools.params.put(buf);
+                                    }
+                                }
+                            }
+                            continue;
+                        }
+                        if items.is_empty() {
+                            continue; // nothing survived below this node
+                        }
+                        if items.len() == 1 {
+                            // a lone payload forwards as-is — no merge
+                            inbox[p].push(items.pop().expect("len checked"));
+                            continue;
+                        }
+                        // in-route partial aggregation: locally normalised
+                        // merge; the forwarded weight-sum keeps the final
+                        // fold unchanged
+                        let sw: f32 = items.iter().map(|it| it.1).sum();
+                        let rows: Vec<&[f32]> = items.iter().map(|it| it.0.row()).collect();
+                        let weights: Vec<f32> = items.iter().map(|it| it.1 / sw).collect();
+                        let mut pooled = pools.params.take_zeroed();
+                        stages.cluster.merge(rt, &rows, &weights, &mut pooled)?;
+                        drop(rows);
+                        trial.ledger.add_relay_merges(1);
+                        for (up, _) in items {
+                            if let Upload::Pooled(buf) = up {
+                                pools.params.put(buf);
+                            }
+                        }
+                        // wire plane: the forwarding relay re-encodes the
+                        // pooled payload through its own residual
+                        if compressing {
+                            let res = relay_residuals[node_ids[local]]
+                                .get_or_insert_with(|| pools.params.take_zeroed());
+                            encode_upload(
+                                cfg.compress,
+                                &mut pooled,
+                                &topo.models[c],
+                                res,
+                                &mut wire_scratch,
+                            );
+                        }
+                        inbox[p].push((Upload::Pooled(pooled), sw));
+                    }
+                    routed_round(
+                        &trial.link,
+                        &trial.energy,
+                        tree,
+                        &hop_nodes,
+                        noisy.then_some(outcomes.as_slice()),
+                        wire,
+                    )
+                };
+                // recycle the trained buffers exactly as the direct path
+                // does below — pool bookkeeping only, no numeric effect
+                for r in batch.iter_mut() {
+                    let buf = std::mem::take(&mut r.params);
+                    if resident {
+                        let old = std::mem::replace(&mut trial.clients[r.member].params, buf);
+                        pools.params.put(old);
+                    } else {
+                        pools.params.put(buf);
+                    }
+                }
+                stage_time = stage_time.max(t); // clusters run in parallel
+                trial.ledger.add_energy(e);
+                continue;
             }
             // recovery plane: draw each member upload's retry outcome
             // before the wire encodes anything — a dropped contribution
@@ -784,7 +1201,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     trial.ledger.maml_adaptations += 1;
                     // adaptation cost: one support-batch transfer + one
                     // batch of compute at the member
-                    let d = positions[m].dist(positions[head]).max(1.0);
+                    let d = positions[m].dist(positions[head]);
                     let batch_bits = maml_batch_bits(rt);
                     trial
                         .ledger
@@ -807,7 +1224,11 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             // re-clustering just replaced — flush them to the pool so every
             // sender restarts its error feedback from zero, exactly like
             // parked buffered contributions
-            for slot in residuals.iter_mut().chain(ground_residuals.iter_mut()) {
+            for slot in residuals
+                .iter_mut()
+                .chain(ground_residuals.iter_mut())
+                .chain(relay_residuals.iter_mut())
+            {
                 if let Some(buf) = slot.take() {
                     pools.params.put(buf);
                 }
@@ -966,7 +1387,11 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
     }
 
     // wire plane: residual buffers return to the pool with the run
-    for slot in residuals.iter_mut().chain(ground_residuals.iter_mut()) {
+    for slot in residuals
+        .iter_mut()
+        .chain(ground_residuals.iter_mut())
+        .chain(relay_residuals.iter_mut())
+    {
         if let Some(buf) = slot.take() {
             pools.params.put(buf);
         }
@@ -1139,6 +1564,17 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
     let mut converged_at = None;
     let mut batch_buf = BatchBuf::new(rt);
     let mut jobs: Vec<(usize, usize)> = Vec::new(); // (member, cluster)
+    // routing plane scratch (see `run_staged`). Ring all-reduce needs the
+    // sync round barrier, so under buffered/async timelines `isl:ring`
+    // routes uploads over the same store-and-forward tree as `isl` (the
+    // ring stage still pins the parked-merge fold order). Contributions
+    // arrive at the PS individually — there is no barrier for relays to
+    // pool on — so buffered routing forwards without partial aggregation,
+    // and PS fail-over re-uploads stay direct (the emergency hop).
+    let routing = cfg.routing != RoutingMode::Direct;
+    let mut node_ids: Vec<usize> = Vec::new();
+    let mut neigh_scratch: Vec<usize> = Vec::new();
+    let mut path_scratch: Vec<usize> = Vec::new();
 
     // aggregation-plane bookkeeping: per-cluster model version + publish
     // time, per-member in-flight uploads and parked PS buffers
@@ -1211,6 +1647,30 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                 // energy with exactly the sync path's per-member terms
                 let mut e_total = 0.0f64;
                 let mut retransmit_count = 0usize;
+                // routing plane: this epoch's upload tree over the active
+                // members + PS (flat trees leave every member on the
+                // direct expressions below, bit-identical to `--routing
+                // direct`)
+                let route_tree: Option<RouteTree> = routing.then(|| {
+                    node_ids.clear();
+                    node_ids.extend(jobs.iter().map(|&(mm, _)| mm));
+                    if node_ids.binary_search(&topo.ps[c]).is_err() {
+                        node_ids.push(topo.ps[c]);
+                        node_ids.sort_unstable();
+                    }
+                    let root = node_ids
+                        .binary_search(&topo.ps[c])
+                        .expect("PS present in its own route tree");
+                    build_route_tree(
+                        &node_ids,
+                        root,
+                        cfg.isl_range_km * 1e3,
+                        &positions,
+                        geo.as_ref().map(|g| g.grid()),
+                        &|g| avail.link_factor[g] < 1.0,
+                        &mut neigh_scratch,
+                    )
+                });
                 for r in batch.iter_mut() {
                     let m = r.member;
                     debug_assert_eq!(r.cluster, c, "gather out of cluster order");
@@ -1231,6 +1691,99 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     };
                     let (t_cmp, t_com, d) =
                         member_times(&trial.link, &work, positions[topo.ps[c]], wire.up);
+                    // routing plane: a multi-hop member's upload walks its
+                    // BFS path to the PS hop by hop — per-edge uplink
+                    // times, retries, and billing — then parks exactly like
+                    // a direct arrival. The broadcast leg keeps the direct
+                    // slant range (the PS publishes downward one hop, as in
+                    // the sync routed round's closing broadcast).
+                    if let Some(tree) = route_tree.as_ref() {
+                        let local = node_ids
+                            .binary_search(&m)
+                            .expect("trained member missing from its route tree");
+                        if tree.hops[local] > 1 {
+                            tree.path_senders(local, &mut path_scratch);
+                            let eff_ber = if noisy { cfg.ber + avail.ber[m] } else { 0.0 };
+                            let mut rng = (eff_ber > 0.0).then(|| {
+                                Rng::new(stream_seed(
+                                    cfg.seed ^ RELAY_CORRUPT_SALT,
+                                    round as u64,
+                                    m as u64,
+                                ))
+                            });
+                            let mut t_path = 0.0f64;
+                            let mut sends = 0usize;
+                            let mut delivered = true;
+                            for &s in path_scratch.iter() {
+                                let sg = node_ids[s];
+                                let pg = node_ids[tree.parent[s]];
+                                let d_edge = positions[sg].dist(positions[pg]);
+                                let t_edge = trial.link.comm_time_scaled(
+                                    wire.up,
+                                    d_edge,
+                                    avail.link_factor[sg],
+                                );
+                                trial.ledger.add_route_hops(1);
+                                if let Some(rng) = rng.as_mut() {
+                                    let out = transfer_with_retries(
+                                        &retry, eff_ber, wire.up, t_edge, rng,
+                                    );
+                                    trial.ledger.add_retransmits(out.retransmits());
+                                    trial.ledger.add_corrupted_uploads(out.corrupted());
+                                    trial.ledger.add_retry_wait(out.wait_s);
+                                    sends += out.attempts as usize;
+                                    e_total += trial.energy.tx_energy(wire.up, d_edge)
+                                        * out.attempts as f64;
+                                    t_path += out.total_time(t_edge);
+                                    if !out.delivered {
+                                        // a payload lost mid-route never
+                                        // reaches the buffer; later edges
+                                        // never transmit
+                                        delivered = false;
+                                        break;
+                                    }
+                                } else {
+                                    sends += 1;
+                                    e_total += trial.energy.tx_energy(wire.up, d_edge);
+                                    t_path += t_edge;
+                                }
+                            }
+                            // each edge attempt is one full payload on the
+                            // wire; the shared counter already bills one
+                            // per batch member
+                            retransmit_count += sends - 1;
+                            e_total += trial.energy.compute_energy(r.samples, cpu_hz)
+                                + trial.energy.tx_energy(wire.down, d);
+                            if !delivered {
+                                pools.params.put(std::mem::take(&mut r.params));
+                                continue;
+                            }
+                            let arrives = t_cmp + t_path;
+                            queue.push(arrives, Event::UploadReady { member: m, cluster: c });
+                            async_total += trial.clients[m].data_size();
+                            if compressing {
+                                let res = residuals[m]
+                                    .get_or_insert_with(|| pools.params.take_zeroed());
+                                encode_upload(
+                                    cfg.compress,
+                                    &mut r.params,
+                                    &topo.models[c],
+                                    res,
+                                    &mut wire_scratch,
+                                );
+                            }
+                            in_flight[m] = Some(Contribution {
+                                params: std::mem::take(&mut r.params),
+                                loss: r.mean_loss,
+                                size: trial.clients[m].data_size(),
+                                dist: d,
+                                arrival: stage_start + arrives,
+                                based_on_ver: version[c],
+                                based_on_t: pub_time[c],
+                            });
+                            continue;
+                        }
+                    }
                     // recovery plane: a noisy upload stretches to its
                     // attempts plus backoff waits before it can arrive;
                     // one whose retries exhaust never enters the buffer —
@@ -1462,7 +2015,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     )?;
                     pools.params.put(pooled);
                     trial.ledger.maml_adaptations += 1;
-                    let d = positions[m].dist(positions[head]).max(1.0);
+                    let d = positions[m].dist(positions[head]);
                     let batch_bits = maml_batch_bits(rt);
                     trial
                         .ledger
@@ -1906,5 +2459,134 @@ mod tests {
             // links → more round time than geo clusters
             assert!(t_hbase > t_fedhc, "hbase {t_hbase} vs fedhc {t_fedhc}");
         });
+    }
+
+    /// The routing plane's identity guarantee: at the default 2000 km ISL
+    /// range the tiny shell (satellites ≥ 7600 km apart) has no inter-
+    /// satellite edges at all, so every route tree degenerates to direct
+    /// fallbacks and `--routing isl` must be byte-identical to
+    /// `--routing direct` — in the sync and the buffered timeline alike.
+    #[test]
+    fn sparse_isl_routing_is_bitwise_identical_to_direct() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        for aggregation in [AggregationMode::Sync, AggregationMode::Buffered] {
+            let mut cfg = ExperimentConfig::tiny();
+            cfg.rounds = 5;
+            cfg.target_accuracy = None;
+            cfg.aggregation = aggregation;
+            let mut direct_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+            let direct = run_clustered(&mut direct_t, Strategy::fedhc()).unwrap();
+            cfg.routing = RoutingMode::Isl;
+            let mut isl_t = Trial::new(cfg, &m, &rt).unwrap();
+            let isl = run_clustered(&mut isl_t, Strategy::fedhc()).unwrap();
+            assert_eq!(direct.ledger.time_s.to_bits(), isl.ledger.time_s.to_bits());
+            assert_eq!(direct.ledger.energy_j.to_bits(), isl.ledger.energy_j.to_bits());
+            assert_eq!(direct.final_accuracy.to_bits(), isl.final_accuracy.to_bits());
+            assert_eq!(
+                direct.ledger.wire_bytes.to_bits(),
+                isl.ledger.wire_bytes.to_bits()
+            );
+            assert_eq!(isl.ledger.route_hops, 0, "flat trees — no routed hops");
+            assert_eq!(isl.ledger.relay_merges, 0);
+        }
+    }
+
+    /// Multi-hop routing engaged: one cluster over the whole shell at
+    /// 9000 km ISL range turns each orbital plane into a 6-ring, so
+    /// uploads from the PS's plane store-and-forward through up to three
+    /// hops with partial aggregation at the relays. The accounting must
+    /// diverge from the one-hop teleport and stay worker-count invariant.
+    #[test]
+    fn multi_hop_routing_bills_hops_and_stays_worker_invariant() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 4;
+        cfg.target_accuracy = None;
+        cfg.clusters = 1;
+        cfg.isl_range_km = 9000.0;
+        cfg.workers = 1;
+        let mut direct_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let direct = run_clustered(&mut direct_t, Strategy::fedhc()).unwrap();
+        cfg.routing = RoutingMode::Isl;
+        let mut isl_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let isl = run_clustered(&mut isl_t, Strategy::fedhc()).unwrap();
+        assert!(isl.ledger.route_hops > 0, "the 6-rings must engage multi-hop");
+        assert!(isl.ledger.relay_merges > 0, "relays must partially aggregate");
+        assert_ne!(
+            direct.ledger.time_s.to_bits(),
+            isl.ledger.time_s.to_bits(),
+            "multi-hop routing must change the round schedule"
+        );
+        assert_ne!(direct.ledger.energy_j.to_bits(), isl.ledger.energy_j.to_bits());
+        cfg.workers = 4;
+        let mut w_t = Trial::new(cfg, &m, &rt).unwrap();
+        let w = run_clustered(&mut w_t, Strategy::fedhc()).unwrap();
+        assert_eq!(isl.ledger.time_s.to_bits(), w.ledger.time_s.to_bits());
+        assert_eq!(isl.ledger.energy_j.to_bits(), w.ledger.energy_j.to_bits());
+        assert_eq!(isl.ledger.wire_bytes.to_bits(), w.ledger.wire_bytes.to_bits());
+        assert_eq!(isl.ledger.route_hops, w.ledger.route_hops);
+        assert_eq!(isl.ledger.relay_merges, w.ledger.relay_merges);
+        assert_eq!(isl.final_accuracy.to_bits(), w.final_accuracy.to_bits());
+    }
+
+    /// The ring all-reduce alternative (`--routing isl:ring`): 2(k−1)
+    /// billed steps per cluster round, a relay merge per fold step, and
+    /// the sequential merge order pinned across worker counts.
+    #[test]
+    fn ring_allreduce_bills_steps_and_stays_worker_invariant() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 4;
+        cfg.target_accuracy = None;
+        cfg.routing = RoutingMode::Ring;
+        cfg.workers = 1;
+        let mut a_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let a = run_clustered(&mut a_t, Strategy::fedhc()).unwrap();
+        assert!(a.ledger.route_hops > 0, "ring steps must bill as hops");
+        assert!(a.ledger.relay_merges > 0);
+        assert!(a.final_accuracy > 0.0);
+        assert!(a.ledger.wire_bytes > 0.0);
+        cfg.workers = 4;
+        let mut b_t = Trial::new(cfg, &m, &rt).unwrap();
+        let b = run_clustered(&mut b_t, Strategy::fedhc()).unwrap();
+        assert_eq!(a.ledger.time_s.to_bits(), b.ledger.time_s.to_bits());
+        assert_eq!(a.ledger.energy_j.to_bits(), b.ledger.energy_j.to_bits());
+        assert_eq!(a.ledger.wire_bytes.to_bits(), b.ledger.wire_bytes.to_bits());
+        assert_eq!(a.ledger.route_hops, b.ledger.route_hops);
+        assert_eq!(a.ledger.relay_merges, b.ledger.relay_merges);
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+    }
+
+    /// Routed uploads under the buffered plane: a multi-hop member's
+    /// arrival stretches over its store-and-forward path, every hop is
+    /// billed, and the event schedule stays worker-count invariant.
+    #[test]
+    fn buffered_routed_uploads_bill_hops_and_stay_worker_invariant() {
+        let m = Manifest::host();
+        let rt = ModelRuntime::load(&m, "tiny_mlp").unwrap();
+        let mut cfg = ExperimentConfig::tiny();
+        cfg.rounds = 4;
+        cfg.target_accuracy = None;
+        cfg.clusters = 1;
+        cfg.isl_range_km = 9000.0;
+        cfg.aggregation = AggregationMode::Buffered;
+        cfg.routing = RoutingMode::Isl;
+        cfg.workers = 1;
+        let mut a_t = Trial::new(cfg.clone(), &m, &rt).unwrap();
+        let a = run_clustered(&mut a_t, Strategy::fedhc()).unwrap();
+        assert!(a.ledger.route_hops > 0, "multi-hop arrivals must bill hops");
+        assert_eq!(a.ledger.relay_merges, 0, "buffered relays forward, never pool");
+        assert!(a.final_accuracy > 0.0);
+        cfg.workers = 4;
+        let mut b_t = Trial::new(cfg, &m, &rt).unwrap();
+        let b = run_clustered(&mut b_t, Strategy::fedhc()).unwrap();
+        assert_eq!(a.ledger.time_s.to_bits(), b.ledger.time_s.to_bits());
+        assert_eq!(a.ledger.energy_j.to_bits(), b.ledger.energy_j.to_bits());
+        assert_eq!(a.ledger.wire_bytes.to_bits(), b.ledger.wire_bytes.to_bits());
+        assert_eq!(a.ledger.route_hops, b.ledger.route_hops);
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
     }
 }

@@ -77,7 +77,7 @@ pub fn member_times(
     ps_pos: Vec3,
     up_bits: f64,
 ) -> (f64, f64, f64) {
-    let d = m.pos.dist(ps_pos).max(1.0);
+    let d = m.pos.dist(ps_pos);
     (
         link.compute_time(m.samples, m.cpu_hz),
         link.comm_time_scaled(up_bits, d, m.link_factor),
@@ -180,7 +180,7 @@ pub fn ground_exchange(
     gs_pos: Vec3,
     wire: WireBits,
 ) -> (f64, f64) {
-    let d = ps_pos.dist(gs_pos).max(1.0);
+    let d = ps_pos.dist(gs_pos);
     let t = link.ground_comm_time(wire.up, d) + link.ground_comm_time(wire.down, d);
     // satellite transmits up once; the downlink is ground-powered
     let e = energy.ground_tx_energy(wire.up, d);
@@ -201,7 +201,7 @@ pub fn upload_cost(
     bits_per_sample: f64,
     central_pos: Vec3,
 ) -> (f64, f64) {
-    let d = pos.dist(central_pos).max(1.0);
+    let d = pos.dist(central_pos);
     let bits = samples as f64 * bits_per_sample;
     (
         link.comm_time_scaled(bits, d, link_factor),

@@ -23,7 +23,7 @@
 
 use super::ground;
 use super::round::{ground_exchange, member_times, MemberWork};
-use crate::config::{ExperimentConfig, Timeline};
+use crate::config::{ExperimentConfig, RoutingMode, Timeline};
 use crate::coordinator::fedhc::{Strategy, WeightPolicy};
 use crate::fl::aggregate::{aggregate, fedavg_weights, quality_weights, stale_composed_weights};
 use crate::fl::client::SatClient;
@@ -32,6 +32,7 @@ use crate::network::{EnergyModel, LinkModel, WireBits};
 use crate::orbit::propagate::Constellation;
 use crate::orbit::visibility::next_window_open;
 use crate::orbit::GroundStation;
+use crate::runtime::host::aggregate_host_into;
 use crate::runtime::ModelRuntime;
 use crate::sim::engine::Engine;
 use crate::sim::events::{Event, EventQueue};
@@ -195,6 +196,38 @@ impl ClusterAggregateStage for WeightedClusterAggregate {
             WeightPolicy::Quality => quality_weights(losses),
             WeightPolicy::FedAvg => fedavg_weights(sizes),
         }
+    }
+}
+
+/// Ring all-reduce aggregation (`--routing isl:ring`): the same
+/// strategy-selected weighting as [`WeightedClusterAggregate`], but the
+/// merge is pinned to the strict sequential left fold a ring
+/// reduce-scatter physically performs — every chunk accumulates member by
+/// member in ring order, so the merged bits never depend on the AOT
+/// kernel's slot count. [`crate::network::ring_round`] bills the matching
+/// `2(k−1)`-step timeline.
+pub struct RingClusterAggregate {
+    pub policy: WeightPolicy,
+}
+
+impl ClusterAggregateStage for RingClusterAggregate {
+    fn member_weights(&self, losses: &[f32], sizes: &[usize]) -> Vec<f32> {
+        match self.policy {
+            WeightPolicy::Quality => quality_weights(losses),
+            WeightPolicy::FedAvg => fedavg_weights(sizes),
+        }
+    }
+
+    fn merge(
+        &self,
+        rt: &ModelRuntime,
+        rows: &[&[f32]],
+        weights: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        out.resize(rt.spec.param_count, 0.0);
+        aggregate_host_into(rows, weights, out);
+        Ok(())
     }
 }
 
@@ -450,11 +483,18 @@ impl Stages {
                 window_step_s: cfg.window_step_s,
             }),
         };
+        let cluster: Box<dyn ClusterAggregateStage> = if cfg.routing == RoutingMode::Ring {
+            Box::new(RingClusterAggregate {
+                policy: strategy.weights,
+            })
+        } else {
+            Box::new(WeightedClusterAggregate {
+                policy: strategy.weights,
+            })
+        };
         Stages {
             local: Box::new(EngineLocalTrain),
-            cluster: Box::new(WeightedClusterAggregate {
-                policy: strategy.weights,
-            }),
+            cluster,
             ground,
         }
     }
@@ -508,6 +548,45 @@ mod tests {
             cluster_round(&l, &e, &[], ps, wire),
             cluster_round_events(&mut queue, &l, &e, &[], 0, ps, wire)
         );
+    }
+
+    #[test]
+    fn ring_merge_is_the_sequential_fold_bitwise() {
+        let cfg = ExperimentConfig::tiny();
+        let manifest = crate::runtime::Manifest::host();
+        let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+        let p = rt.spec.param_count;
+        let rows_owned: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..p).map(|i| ((i + 7 * r) % 13) as f32 * 0.1 - 0.5).collect())
+            .collect();
+        let rows: Vec<&[f32]> = rows_owned.iter().map(|r| r.as_slice()).collect();
+        let weights = [0.25f32, 0.35, 0.4];
+        let stage = RingClusterAggregate {
+            policy: WeightPolicy::Quality,
+        };
+        let mut out = Vec::new();
+        stage.merge(&rt, &rows, &weights, &mut out).unwrap();
+        let mut expect = vec![0.0f32; p];
+        for (row, &w) in rows.iter().zip(&weights) {
+            for (o, &x) in expect.iter_mut().zip(row.iter()) {
+                *o += w * x;
+            }
+        }
+        assert_eq!(out.len(), p);
+        for (a, b) in out.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits(), "ring merge must fold in order");
+        }
+        // the weighting itself is the strategy's, unchanged
+        let losses = [0.9f32, 0.4, 1.7];
+        let sizes = [64usize, 48, 80];
+        for policy in [WeightPolicy::Quality, WeightPolicy::FedAvg] {
+            let ring = RingClusterAggregate { policy };
+            let flat = WeightedClusterAggregate { policy };
+            assert_eq!(
+                ring.member_weights(&losses, &sizes),
+                flat.member_weights(&losses, &sizes)
+            );
+        }
     }
 
     #[test]

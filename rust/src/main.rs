@@ -145,6 +145,19 @@ COMMON OPTIONS
                                  billing the actual payload bytes into
                                  Eq. 6/7 time and energy. 'none' (default)
                                  is byte-identical to the historical runs
+  --routing direct|isl|isl:ring
+                                 routing plane: how member uploads reach the
+                                 cluster PS. 'direct' (default) keeps the
+                                 one-hop teleport, byte-identical to the
+                                 historical runs; 'isl' store-and-forwards
+                                 over the LoS ISL graph (BFS shortest paths,
+                                 lowest-index tie-breaks) with partial
+                                 aggregation at relays, billing every hop;
+                                 'isl:ring' swaps in a ring all-reduce over
+                                 wire.up/k chunks (2(k−1) steps). Knob:
+                                 --isl-range-km F     max ISL reach in km
+                                                      (default 2000, LoS-
+                                                      limited either way)
   --strict-float                 pin the scalar (pre-SIMD) compute kernels;
                                  pure speed knob — both paths are
                                  bit-identical (see runtime::host_model)
@@ -198,7 +211,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (manifest, rt) = load_runtime(&cfg)?;
     eprintln!(
         "running {method} on {} (K={}, clients={}, rounds≤{}, timeline={}, scenario={}, \
-         aggregation={}, platform={})",
+         aggregation={}, routing={}, platform={})",
         cfg.dataset.name(),
         cfg.clusters,
         cfg.clients,
@@ -206,6 +219,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.timeline.name(),
         cfg.scenario.kind.name(),
         cfg.aggregation.name(),
+        cfg.routing.name(),
         rt.platform()
     );
     let res = run_method(&cfg, &manifest, &rt, method)?;
@@ -245,6 +259,12 @@ fn print_result(res: &RunResult) {
     }
     if res.ledger.failovers > 0 {
         println!("  ps failovers  : {} backup promotion(s)", res.ledger.failovers);
+    }
+    if res.ledger.route_hops > 0 || res.ledger.relay_merges > 0 {
+        println!(
+            "  routing       : {} ISL hop(s) traversed, {} in-route partial merge(s)",
+            res.ledger.route_hops, res.ledger.relay_merges
+        );
     }
     if res.ledger.buffered_merges > 0 {
         println!(

@@ -85,6 +85,17 @@ pub struct Ledger {
     /// retransmissions (already included in `time_s` when the retrying
     /// member sat on its stage's critical path).
     pub retry_wait_s: f64,
+    /// Routing plane: billed ISL up-hop traversals — one per edge a
+    /// payload crossed on its way to the PS (or per ring step), excluding
+    /// retransmissions of the same hop. Direct runs keep this at 0.
+    /// Diagnostic — like `wire_bytes`, deliberately **not** part of the
+    /// recorded JSON series, so routing sweeps leave the
+    /// golden-trajectory files untouched.
+    pub route_hops: usize,
+    /// Routing plane: partial aggregations performed at non-PS relays —
+    /// contributions folded into a relay's pooled buffer before
+    /// forwarding (diagnostic, not serialised; see `route_hops`).
+    pub relay_merges: usize,
 }
 
 impl Ledger {
@@ -188,6 +199,16 @@ impl Ledger {
     pub fn add_retry_wait(&mut self, dt: f64) {
         assert!(dt >= 0.0 && dt.is_finite(), "bad retry wait {dt}");
         self.retry_wait_s += dt;
+    }
+
+    /// Record billed ISL up-hop traversals (routing plane).
+    pub fn add_route_hops(&mut self, n: usize) {
+        self.route_hops += n;
+    }
+
+    /// Record partial aggregations performed at non-PS relays.
+    pub fn add_relay_merges(&mut self, n: usize) {
+        self.relay_merges += n;
     }
 
     /// Record an evaluation point at the current totals.
@@ -342,6 +363,17 @@ mod tests {
     #[should_panic(expected = "bad retry wait")]
     fn rejects_negative_retry_wait() {
         Ledger::new().add_retry_wait(-0.1);
+    }
+
+    #[test]
+    fn routing_counters_accumulate() {
+        let mut l = Ledger::new();
+        l.add_route_hops(3);
+        l.add_relay_merges(2);
+        l.add_route_hops(1);
+        l.add_relay_merges(1);
+        assert_eq!(l.route_hops, 4);
+        assert_eq!(l.relay_merges, 3);
     }
 
     #[test]

@@ -19,11 +19,13 @@ pub fn to_csv(ledger: &Ledger) -> String {
 
 /// JSON document of the whole ledger.
 ///
-/// `Ledger::wire_bytes` is deliberately **not** serialised: the committed
-/// golden-trajectory JSON predates the wire plane, and keeping the
-/// document shape fixed lets `--compress` sweeps diff against the same
-/// goldens. Benches report bytes-on-the-wire through their own
-/// `bytes_per_round` columns instead.
+/// `Ledger::wire_bytes` — and the routing plane's `route_hops` /
+/// `relay_merges` — are deliberately **not** serialised: the committed
+/// golden-trajectory JSON predates the wire and routing planes, and
+/// keeping the document shape fixed lets `--compress` and `--routing`
+/// sweeps diff against the same goldens. Benches report bytes-on-the-wire
+/// and hop counts through their own `bytes_per_round` /
+/// `hops_per_round` columns instead.
 pub fn to_json(ledger: &Ledger) -> Json {
     Json::obj(vec![
         ("time_s", Json::num(ledger.time_s)),

@@ -11,6 +11,11 @@
 use super::params::{NetworkParams, Payload};
 use crate::orbit::SPEED_OF_LIGHT;
 
+/// Minimum link distance in meters: every rate/time/energy formula clamps
+/// its distance to at least this, so degenerate co-located geometry prices
+/// like a 1 m link instead of tripping a division by zero.
+pub const MIN_LINK_DIST_M: f64 = 1.0;
+
 /// Achievable-rate link model. The paper writes
 /// `r_i = B_i ln(1 + P0 h_i / N0)` (nats/s with ln; we keep the paper's
 /// form — see the module docs and [`LinkModel::rate_bits`]). Channel gain
@@ -26,9 +31,16 @@ impl LinkModel {
         LinkModel { params }
     }
 
-    /// Free-space channel gain at distance `d` meters (linear).
+    /// Free-space channel gain at distance `d` meters (linear). Distances
+    /// under [`MIN_LINK_DIST_M`] are clamped up — a co-located pair (e.g.
+    /// a satellite "uploading" to itself during a failover re-collection)
+    /// prices like a 1 m link instead of dividing by zero. The clamp used
+    /// to be scattered at call sites as `.max(1.0)`; centralising it here
+    /// keeps every clamped value bit-identical (the `max` is an IEEE
+    /// no-op for the d ≥ 1 m geometry every preset produces).
     pub fn channel_gain(&self, d: f64) -> f64 {
-        assert!(d > 0.0, "zero-distance link");
+        assert!(d >= 0.0 && d.is_finite(), "bad link distance {d}");
+        let d = d.max(MIN_LINK_DIST_M);
         let lambda = SPEED_OF_LIGHT / self.params.carrier_hz;
         let fspl = lambda / (4.0 * std::f64::consts::PI * d);
         self.params.antenna_gain * fspl * fspl
@@ -61,6 +73,7 @@ impl LinkModel {
     /// Communication time to upload `bits` over distance `d`:
     /// `t_com = ζ / r_i` (paper §II-C) plus propagation delay.
     pub fn comm_time(&self, bits: f64, d: f64) -> f64 {
+        let d = d.max(MIN_LINK_DIST_M);
         bits / self.rate(d) + d / SPEED_OF_LIGHT
     }
 
@@ -72,11 +85,13 @@ impl LinkModel {
     /// trajectories pin.
     pub fn comm_time_scaled(&self, bits: f64, d: f64, factor: f64) -> f64 {
         debug_assert!(factor > 0.0 && factor <= 1.0, "bad rate factor {factor}");
+        let d = d.max(MIN_LINK_DIST_M);
         bits / (self.rate(d) * factor) + d / SPEED_OF_LIGHT
     }
 
     /// Communication time on a ground link.
     pub fn ground_comm_time(&self, bits: f64, d: f64) -> f64 {
+        let d = d.max(MIN_LINK_DIST_M);
         bits / self.ground_rate(d) + d / SPEED_OF_LIGHT
     }
 
@@ -195,5 +210,29 @@ mod tests {
         let l = link();
         let t = l.comm_time(0.0, 3000e3);
         assert!((t - 3000e3 / SPEED_OF_LIGHT).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_meter_distances_clamp_to_the_one_meter_link() {
+        // co-located pairs price like a 1 m link everywhere — the clamp
+        // that used to live at call sites as `d.max(1.0)`, bit for bit
+        let l = link();
+        for &d in &[0.0, 1e-9, 0.3, 1.0] {
+            assert_eq!(l.channel_gain(d), l.channel_gain(1.0), "gain at d={d}");
+            assert_eq!(l.rate(d), l.rate(1.0), "rate at d={d}");
+            assert_eq!(l.comm_time(1e6, d), l.comm_time(1e6, 1.0), "t_com at d={d}");
+            assert_eq!(
+                l.comm_time_scaled(1e6, d, 0.5),
+                l.comm_time_scaled(1e6, 1.0, 0.5),
+                "scaled t_com at d={d}"
+            );
+            assert_eq!(
+                l.ground_comm_time(1e6, d),
+                l.ground_comm_time(1e6, 1.0),
+                "ground t_com at d={d}"
+            );
+        }
+        // at and above the clamp the distance passes through untouched
+        assert!(l.rate(1.0) > l.rate(2.0));
     }
 }

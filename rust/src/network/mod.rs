@@ -21,8 +21,10 @@ pub mod energy;
 pub mod link;
 pub mod params;
 pub mod retry;
+pub mod routing;
 
 pub use energy::EnergyModel;
 pub use link::LinkModel;
 pub use params::{NetworkParams, Payload, WireBits};
 pub use retry::{RetryPolicy, TransferOutcome};
+pub use routing::{build_route_tree, ring_round, routed_round, HopNode, RouteTree};

@@ -82,10 +82,20 @@ impl TransferOutcome {
 /// `ber`, assuming independent bit errors: `1 - (1 - ber)^bits`. Stacked
 /// noise bursts can push the additive BER past 1.0; it is clamped so the
 /// probability saturates at certain corruption instead of going NaN.
+///
+/// Computed as `-expm1(bits · ln1p(-ber))`: the naive
+/// `1 - (1 - ber).powf(bits)` form loses every significant digit once
+/// `ber` drops below ~1e-16 (the subtraction `1 - ber` rounds to exactly
+/// 1.0 and the whole probability collapses to 0), whereas `ln_1p`/`exp_m1`
+/// keep full precision at tiny BER × huge payloads. At BER = 1 the
+/// `ln_1p(-1) = -∞` chain still saturates to exactly 1.0.
 pub fn corrupt_prob(ber: f64, bits: f64) -> f64 {
     debug_assert!(ber >= 0.0 && ber.is_finite(), "bad BER {ber}");
     debug_assert!(bits >= 0.0 && bits.is_finite(), "bad payload bits {bits}");
-    1.0 - (1.0 - ber.min(1.0)).powf(bits)
+    if bits == 0.0 {
+        return 0.0;
+    }
+    (-(bits * f64::ln_1p(-ber.min(1.0))).exp_m1()).max(0.0)
 }
 
 /// Run one transfer through the detect/retry/backoff loop. `ber` is the
@@ -158,6 +168,42 @@ mod tests {
         // stacked bursts past BER 1.0 saturate instead of going NaN
         let p = corrupt_prob(1.7, 1e6);
         assert_eq!(p, 1.0);
+    }
+
+    #[test]
+    fn corrupt_prob_survives_tiny_ber_times_huge_payload() {
+        // the naive `1 - (1 - ber)^bits` collapses to exactly 0 once
+        // `1 - ber` rounds to 1.0 — the expm1/ln1p form keeps the
+        // first-order probability `ber·bits` instead
+        let p = corrupt_prob(1e-18, 1e9);
+        let expected = 1e-18 * 1e9; // ≈ 1e-9, far below one ulp of 1.0
+        assert!(
+            (p / expected - 1.0).abs() < 1e-6,
+            "p = {p:e}, expected ≈ {expected:e}"
+        );
+        let naive = 1.0 - (1.0 - 1e-18f64).powf(1e9);
+        assert_eq!(naive, 0.0, "the naive form should collapse here");
+    }
+
+    #[test]
+    fn corrupt_prob_matches_naive_form_at_benign_magnitudes() {
+        // where the naive formula is still well-conditioned the two forms
+        // must agree to ~1e-9 relative (measured worst case is ~9e-11
+        // over this whole regime) — the rewrite is a precision fix, not a
+        // model change
+        crate::util::quickprop::property("corrupt_prob ≈ naive", 256, |g| {
+            // log-uniform BER in [1e-6, 1e-2], payload in [1, 1e5] bits
+            let ber = 10f64.powf(g.f64_in(-6.0, -2.0));
+            let bits = 10f64.powf(g.f64_in(0.0, 5.0)).floor();
+            let p = corrupt_prob(ber, bits);
+            let naive = 1.0 - (1.0 - ber).powf(bits);
+            assert!((0.0..=1.0).contains(&p), "p = {p} out of range");
+            let denom = naive.max(1e-300);
+            assert!(
+                ((p - naive) / denom).abs() < 1e-9,
+                "ber={ber:e} bits={bits}: p={p:e} naive={naive:e}"
+            );
+        });
     }
 
     #[test]

@@ -1,0 +1,624 @@
+//! Intra-cluster ISL routing plane: multi-hop store-and-forward trees.
+//!
+//! The baseline aggregation stage teleports every member model to the
+//! cluster PS in one hop, however far away the member is. Real LEO
+//! constellations route over inter-satellite links (ISLs) with a bounded
+//! range and Earth-occluded line of sight, so a member on the far side of
+//! a large cluster reaches its PS through relays. This module provides
+//! the deterministic routing substrate the coordinator composes into
+//! Eq. 6/7 accounting:
+//!
+//! * [`build_route_tree`] — a shortest-path (by hop count) spanning tree
+//!   of one cluster's ISL graph rooted at the PS, built from
+//!   [`SphereGrid::los_neighbors`] (or the brute oracle). Ties break to
+//!   the lowest-indexed candidate parent so the tree is a pure function
+//!   of `(nodes, positions, range)`; degraded relays attach as leaves and
+//!   never forward; nodes with no ISL path fall back to the direct
+//!   one-hop link (today's behaviour) so no member is ever stranded.
+//! * [`routed_round`] — time/energy of one synchronous routed round:
+//!   children-first store-and-forward with **partial aggregation at
+//!   relays** (each relay merges everything below it into one pooled
+//!   upload, so every tree edge carries exactly one uplink payload), plus
+//!   the PS broadcast flooding back down the same edges.
+//! * [`ring_round`] — ring all-reduce alternative (`--routing isl:ring`):
+//!   `2(k−1)` steps of `1/k`-sized chunks around the member ring.
+//!
+//! Both folds optionally take per-edge [`TransferOutcome`]s from the
+//! recovery plane, so a noisy hop retransmits and stretches exactly like
+//! a noisy direct upload does.
+
+use super::energy::EnergyModel;
+use super::link::LinkModel;
+use super::params::WireBits;
+use super::retry::TransferOutcome;
+use crate::orbit::index::{los_neighbors_brute, SphereGrid};
+use crate::orbit::Vec3;
+
+/// `parent` marker for the tree root.
+pub const NO_PARENT: usize = usize::MAX;
+
+/// A spanning tree over one cluster's nodes, rooted at the PS. All
+/// indices are *local* (positions into the `nodes` slice the tree was
+/// built from); the mapping back to constellation ids is the caller's
+/// `nodes[local]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteTree {
+    /// Local parent of each node; [`NO_PARENT`] at the root.
+    pub parent: Vec<usize>,
+    /// Hop distance to the root: 0 at the root, 1 for direct children
+    /// *and* for out-of-range nodes that fell back to the direct link.
+    pub hops: Vec<usize>,
+    /// Local index of the root (the PS).
+    pub root: usize,
+    /// Every local index ordered children-before-parents (descending
+    /// hops, ascending index within a level; the root comes last) — the
+    /// deterministic schedule for the upward store-and-forward fold.
+    pub order: Vec<usize>,
+}
+
+impl RouteTree {
+    /// Number of nodes spanned (members plus the PS).
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Deepest hop count in the tree. `<= 1` means every member talks to
+    /// the PS directly — the flat tree the one-hop baseline assumes.
+    pub fn max_hops(&self) -> usize {
+        self.hops.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The transmitters on `i`'s upload path, in order: `i` itself, then
+    /// each relay up to (but excluding) the root. Every listed node sends
+    /// once to its parent to move `i`'s contribution to the PS.
+    pub fn path_senders(&self, i: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let mut u = i;
+        while u != self.root {
+            out.push(u);
+            u = self.parent[u];
+        }
+    }
+}
+
+/// Build the shortest-path routing tree for one cluster.
+///
+/// * `nodes` — the cluster's constellation indices, strictly ascending
+///   (members plus the PS).
+/// * `root` — *local* index of the PS within `nodes`.
+/// * `positions` — ECI meter positions of the **whole** constellation at
+///   this epoch (neighbor queries are global; results are filtered back
+///   to the cluster).
+/// * `grid` — the epoch's [`SphereGrid`] for pruned neighbor queries, or
+///   `None` for the brute-force oracle (bit-identical results).
+/// * `relay_blocked` — scenario-plane predicate over *constellation*
+///   ids: a blocked node (e.g. a degraded link) still uploads its own
+///   model but never forwards for others, so routes bend around it. The
+///   root always forwards.
+/// * `scratch` — neighbor-list scratch buffer, reused across calls.
+///
+/// Determinism: BFS expands each hop level in ascending node order and
+/// neighbor lists arrive sorted, so every node's parent is the
+/// lowest-indexed neighbor among those closest to the root. Nodes the
+/// BFS never reaches (out of ISL range or occluded from the whole
+/// component) fall back to `parent = root, hops = 1` — the direct PS
+/// link today's accounting bills.
+pub fn build_route_tree(
+    nodes: &[usize],
+    root: usize,
+    max_range_m: f64,
+    positions: &[Vec3],
+    grid: Option<&SphereGrid>,
+    relay_blocked: &dyn Fn(usize) -> bool,
+    scratch: &mut Vec<usize>,
+) -> RouteTree {
+    let n = nodes.len();
+    debug_assert!(root < n, "root {root} outside cluster of {n}");
+    debug_assert!(
+        nodes.windows(2).all(|w| w[0] < w[1]),
+        "cluster nodes must be strictly ascending"
+    );
+    let mut parent = vec![NO_PARENT; n];
+    let mut hops = vec![usize::MAX; n];
+    hops[root] = 0;
+    let mut frontier = vec![root];
+    let mut next: Vec<usize> = Vec::new();
+    while !frontier.is_empty() {
+        for &u in &frontier {
+            if u != root && relay_blocked(nodes[u]) {
+                continue; // degraded: a leaf that never forwards
+            }
+            match grid {
+                Some(g) => g.los_neighbors(nodes[u], max_range_m, positions, scratch),
+                None => los_neighbors_brute(nodes[u], max_range_m, positions, scratch),
+            }
+            for &id in scratch.iter() {
+                if let Ok(v) = nodes.binary_search(&id) {
+                    if hops[v] == usize::MAX {
+                        hops[v] = hops[u] + 1;
+                        parent[v] = u;
+                        next.push(v);
+                    }
+                }
+            }
+        }
+        frontier.clear();
+        std::mem::swap(&mut frontier, &mut next);
+        // neighbor lists of distinct expansions interleave; restore the
+        // ascending order the tie-break rule is defined over
+        frontier.sort_unstable();
+    }
+    for v in 0..n {
+        if hops[v] == usize::MAX {
+            parent[v] = root;
+            hops[v] = 1;
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_unstable_by(|&a, &b| hops[b].cmp(&hops[a]).then(a.cmp(&b)));
+    RouteTree {
+        parent,
+        hops,
+        root,
+        order,
+    }
+}
+
+/// One node's inputs to a routed (or ring) billing fold.
+#[derive(Clone, Copy, Debug)]
+pub struct HopNode {
+    /// Local training time (0 for a node that trained nothing, e.g. a PS
+    /// that only aggregates).
+    pub t_cmp: f64,
+    /// Eq. 9 compute energy matching `t_cmp`.
+    pub e_cmp: f64,
+    /// Scenario-plane ISL rate multiplier on this node's *uplink* edge
+    /// (1.0 = nominal, exactly — see [`crate::coordinator::MemberWork`]).
+    pub link_factor: f64,
+    /// Tree: meters to the parent (0 at the root). Ring: meters to the
+    /// ring successor.
+    pub d_up: f64,
+}
+
+impl HopNode {
+    /// A node that forwards but trained nothing this round.
+    pub fn relay_only(d_up: f64) -> HopNode {
+        HopNode {
+            t_cmp: 0.0,
+            e_cmp: 0.0,
+            link_factor: 1.0,
+            d_up,
+        }
+    }
+}
+
+/// Time + energy of one synchronous routed cluster round (the multi-hop
+/// generalisation of [`crate::coordinator::cluster_round`]).
+///
+/// Upward pass (children first, per [`RouteTree::order`]): a node is
+/// ready when its own compute **and** every child's pooled upload have
+/// arrived; it then merges and forwards one uplink payload (`wire.up`)
+/// to its parent — partial aggregation means each tree edge carries
+/// exactly one upload no matter how large the subtree. With `outcomes`,
+/// edge `i`'s transfer stretches to `outcomes[i].total_time(t_hop)` and
+/// bills `attempts` retransmissions, exactly like a noisy direct upload.
+///
+/// Downward pass: the PS broadcast floods the dense model (`wire.down`)
+/// back along the same edges; the stage ends when it reaches the node
+/// with the slowest cumulative path.
+///
+/// Energy (Eq. 8/9, folded in schedule order): every non-root node bills
+/// one uplink transmit per attempt plus its compute plus its parent's
+/// one broadcast transmit down the shared edge; the root bills only its
+/// compute. Every node bills whether or not its payload ultimately
+/// survives the recovery plane — the synchronous barrier waits and the
+/// radios spend regardless, mirroring the direct path's accounting.
+pub fn routed_round(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    tree: &RouteTree,
+    nodes: &[HopNode],
+    outcomes: Option<&[TransferOutcome]>,
+    wire: WireBits,
+) -> (f64, f64) {
+    let n = nodes.len();
+    assert_eq!(n, tree.len(), "hop nodes do not cover the tree");
+    if let Some(o) = outcomes {
+        assert_eq!(n, o.len(), "outcomes do not cover the tree");
+    }
+    // ready[i]: earliest time node i can transmit (own compute done and
+    // all child payloads merged). order is children-before-parents.
+    let mut ready = vec![0.0f64; n];
+    let mut e_total = 0.0f64;
+    for &i in &tree.order {
+        let h = &nodes[i];
+        ready[i] = ready[i].max(h.t_cmp);
+        if i == tree.root {
+            e_total += h.e_cmp;
+            continue;
+        }
+        let t_hop = link.comm_time_scaled(wire.up, h.d_up, h.link_factor);
+        let (t_edge, attempts) = match outcomes {
+            Some(o) => (o[i].total_time(t_hop), o[i].attempts as f64),
+            None => (t_hop, 1.0),
+        };
+        e_total += energy.tx_energy(wire.up, h.d_up) * attempts
+            + h.e_cmp
+            + energy.tx_energy(wire.down, h.d_up);
+        let p = tree.parent[i];
+        let arrive = ready[i] + t_edge;
+        ready[p] = ready[p].max(arrive);
+    }
+    let t_up = ready[tree.root];
+    // downward broadcast: parents-first (order reversed), reusing the
+    // buffer — each slot is overwritten with the node's cumulative
+    // downlink path time before any child reads it
+    let mut t_down = 0.0f64;
+    for &i in tree.order.iter().rev() {
+        if i == tree.root {
+            ready[i] = 0.0;
+            continue;
+        }
+        let d = ready[tree.parent[i]] + link.comm_time(wire.down, nodes[i].d_up);
+        ready[i] = d;
+        t_down = t_down.max(d);
+    }
+    (t_up + t_down, e_total)
+}
+
+/// Time + energy of one ring all-reduce round (`--routing isl:ring`).
+///
+/// The `k` members form a ring in ascending index order (`nodes[i].d_up`
+/// is the distance to `i`'s successor); reduce-scatter then all-gather
+/// moves `1/k` of the uplink payload `2(k−1)` times around the ring.
+/// Steps are synchronous: every step lasts as long as the slowest edge,
+/// and with `outcomes` edge `i` replays its retry outcome on every step
+/// it transmits. There is no separate PS broadcast — after the
+/// all-gather every member already holds the aggregate (`wire.down`
+/// never travels). A ring of one reduces to local compute.
+pub fn ring_round(
+    link: &LinkModel,
+    energy: &EnergyModel,
+    nodes: &[HopNode],
+    outcomes: Option<&[TransferOutcome]>,
+    wire: WireBits,
+) -> (f64, f64) {
+    let k = nodes.len();
+    if k == 0 {
+        return (0.0, 0.0);
+    }
+    if let Some(o) = outcomes {
+        assert_eq!(k, o.len(), "outcomes do not cover the ring");
+    }
+    let mut t_cmp = 0.0f64;
+    let mut e_total = 0.0f64;
+    for h in nodes {
+        t_cmp = t_cmp.max(h.t_cmp);
+        e_total += h.e_cmp;
+    }
+    if k == 1 {
+        return (t_cmp, e_total);
+    }
+    let chunk = wire.up / k as f64;
+    let steps = (2 * (k - 1)) as f64;
+    let mut t_step = 0.0f64;
+    for (i, h) in nodes.iter().enumerate() {
+        let t_edge = link.comm_time_scaled(chunk, h.d_up, h.link_factor);
+        let (t_eff, attempts) = match outcomes {
+            Some(o) => (o[i].total_time(t_edge), o[i].attempts as f64),
+            None => (t_edge, 1.0),
+        };
+        t_step = t_step.max(t_eff);
+        e_total += energy.tx_energy(chunk, h.d_up) * steps * attempts;
+    }
+    (t_cmp + steps * t_step, e_total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::round::{cluster_round, MemberWork};
+    use crate::network::params::NetworkParams;
+    use crate::orbit::propagate::Constellation;
+    use crate::orbit::walker::WalkerConstellation;
+
+    fn models() -> (LinkModel, EnergyModel) {
+        let l = LinkModel::new(NetworkParams::default().with_model_params(44_426));
+        (l, EnergyModel::new(l))
+    }
+
+    /// `n` satellites on a 7000 km circular arc with adjacent-neighbor
+    /// chord `sep_m` — high enough that short chords clear the Earth.
+    fn arc(n: usize, sep_m: f64) -> Vec<Vec3> {
+        let r = 7.0e6;
+        let dth = 2.0 * ((sep_m / 2.0) / r).asin();
+        (0..n)
+            .map(|i| {
+                let th = i as f64 * dth;
+                Vec3::new(r * th.cos(), r * th.sin(), 0.0)
+            })
+            .collect()
+    }
+
+    fn unblocked() -> impl Fn(usize) -> bool {
+        |_| false
+    }
+
+    fn tree(
+        nodes: &[usize],
+        root: usize,
+        range: f64,
+        pos: &[Vec3],
+        blocked: &dyn Fn(usize) -> bool,
+    ) -> RouteTree {
+        let mut scratch = Vec::new();
+        build_route_tree(nodes, root, range, pos, None, blocked, &mut scratch)
+    }
+
+    #[test]
+    fn chain_routes_hop_by_hop() {
+        // 0—1—2—3 at 800 km spacing, 1000 km range: only adjacent links
+        let pos = arc(4, 800e3);
+        let t = tree(&[0, 1, 2, 3], 0, 1000e3, &pos, &unblocked());
+        assert_eq!(t.parent, vec![NO_PARENT, 0, 1, 2]);
+        assert_eq!(t.hops, vec![0, 1, 2, 3]);
+        assert_eq!(t.max_hops(), 3);
+        assert_eq!(t.order, vec![3, 2, 1, 0]);
+        let mut path = Vec::new();
+        t.path_senders(3, &mut path);
+        assert_eq!(path, vec![3, 2, 1]);
+        t.path_senders(0, &mut path);
+        assert!(path.is_empty(), "the root uploads to nobody");
+    }
+
+    #[test]
+    fn isolated_nodes_fall_back_to_the_direct_link() {
+        // node 4 on the far side of the orbit: no LoS to the chain
+        let mut pos = arc(4, 800e3);
+        pos.push(Vec3::new(-7.0e6, 0.0, 0.0));
+        let t = tree(&[0, 1, 2, 3, 4], 0, 1000e3, &pos, &unblocked());
+        assert_eq!(t.parent[4], 0, "unreachable nodes route direct to the PS");
+        assert_eq!(t.hops[4], 1);
+    }
+
+    #[test]
+    fn dense_clusters_build_flat_trees() {
+        // every node within range of the root: the one-hop baseline shape
+        let pos = arc(4, 800e3);
+        let t = tree(&[0, 1, 2, 3], 0, 3000e3, &pos, &unblocked());
+        assert_eq!(t.parent, vec![NO_PARENT, 0, 0, 0]);
+        assert_eq!(t.max_hops(), 1);
+    }
+
+    /// Diamond: 1 and 2 both see the root and both see 3; the root sees
+    /// neither 1→2 shortcut nor 3. Node 2 sits slightly out of the orbit
+    /// plane so all pairwise ranges stay in the intended regime.
+    fn diamond() -> Vec<Vec3> {
+        let r = 7.0e6;
+        let dth = 2.0 * ((400e3) / r).asin(); // 800 km adjacent chords
+        let th1 = dth;
+        let th3 = 2.0 * dth;
+        let tilt = 0.01; // ~70 km out-of-plane: within range of 1's slots
+        vec![
+            Vec3::new(r, 0.0, 0.0),
+            Vec3::new(r * th1.cos(), r * th1.sin(), 0.0),
+            Vec3::new(r * th1.cos(), r * th1.sin() * tilt.cos(), r * th1.sin() * tilt.sin()),
+            Vec3::new(r * th3.cos(), r * th3.sin(), 0.0),
+        ]
+    }
+
+    #[test]
+    fn ties_break_to_the_lowest_indexed_parent() {
+        let pos = diamond();
+        let t = tree(&[0, 1, 2, 3], 0, 1000e3, &pos, &unblocked());
+        assert_eq!(t.hops, vec![0, 1, 1, 2]);
+        assert_eq!(t.parent[3], 1, "equal-hop parents tie-break low");
+    }
+
+    #[test]
+    fn blocked_relays_are_leaves_and_routes_bend_around_them() {
+        let pos = diamond();
+        let blocked = |id: usize| id == 1;
+        let t = tree(&[0, 1, 2, 3], 0, 1000e3, &pos, &blocked);
+        assert_eq!(t.hops[1], 1, "a blocked node still uploads its own model");
+        assert_eq!(t.parent[3], 2, "the route bends around the blocked relay");
+        assert_eq!(t.hops[3], 2);
+        // blocking every relay degenerates to the direct fallback
+        let all = |id: usize| id != 0;
+        let t = tree(&[0, 1, 2, 3], 0, 1000e3, &pos, &all);
+        assert_eq!(t.parent, vec![NO_PARENT, 0, 0, 0]);
+        assert_eq!(t.max_hops(), 1);
+    }
+
+    #[test]
+    fn grid_and_brute_trees_are_bit_identical() {
+        let c = Constellation::from_walker(&WalkerConstellation::paper_shell(8, 12));
+        let snap = c.snapshot(137.0);
+        let feats = snap.features_km();
+        // an arbitrary ascending subset standing in for one cluster
+        let nodes: Vec<usize> = (0..feats.len()).filter(|i| i % 3 != 1).collect();
+        let mut scratch = Vec::new();
+        for bands in [1usize, 4, 16] {
+            let g = SphereGrid::build(&feats, bands);
+            for range in [4500e3, 7000e3] {
+                let brute = build_route_tree(
+                    &nodes,
+                    0,
+                    range,
+                    &snap.positions,
+                    None,
+                    &unblocked(),
+                    &mut scratch,
+                );
+                let gridded = build_route_tree(
+                    &nodes,
+                    0,
+                    range,
+                    &snap.positions,
+                    Some(&g),
+                    &unblocked(),
+                    &mut scratch,
+                );
+                assert_eq!(brute, gridded, "bands={bands} range={range}");
+                assert!(
+                    brute.max_hops() >= 1,
+                    "shell must be routable at range {range}"
+                );
+            }
+        }
+    }
+
+    /// Two-hop geometry in the high-SNR regime (hops ≤ 2000 km, where
+    /// `2/rate(d/2) ≥ 1/rate(d)`): PS—relay—member on an arc with 800 km
+    /// edges, the member 1600 km from the PS end to end.
+    fn two_hop() -> (Vec<Vec3>, RouteTree) {
+        let pos = arc(3, 800e3);
+        let t = tree(&[0, 1, 2], 0, 1000e3, &pos, &unblocked());
+        assert_eq!(t.hops, vec![0, 1, 2]);
+        (pos, t)
+    }
+
+    #[test]
+    fn billing_a_pure_relay_hop_costs_more_than_the_teleport() {
+        // a member forced through an idle relay pays for both radios —
+        // in-regime, strictly more time and energy than the one-hop
+        // teleport the baseline bills (every hop is on the books)
+        let (l, e) = models();
+        let (pos, t) = two_hop();
+        let wire = WireBits::dense(44_426);
+        let m = MemberWork::nominal(640, 1e9, pos[2]);
+        let (t_direct, e_direct) = cluster_round(&l, &e, &[m], pos[0], wire);
+        let hops = [
+            HopNode::relay_only(0.0),
+            HopNode::relay_only(pos[1].dist(pos[0])),
+            HopNode {
+                t_cmp: l.compute_time(m.samples, m.cpu_hz),
+                e_cmp: e.compute_energy(m.samples, m.cpu_hz),
+                link_factor: 1.0,
+                d_up: pos[2].dist(pos[1]),
+            },
+        ];
+        let (t_routed, e_routed) = routed_round(&l, &e, &t, &hops, None, wire);
+        assert!(t_routed > t_direct, "{t_routed} vs {t_direct}");
+        assert!(e_routed > e_direct, "{e_routed} vs {e_direct}");
+    }
+
+    #[test]
+    fn relay_merging_undercuts_two_direct_uploads() {
+        // when the relay is itself a member, its own model rides the one
+        // pooled forward — cheaper than it and the far member both
+        // radioing the PS directly (the in-route aggregation payoff)
+        let (l, e) = models();
+        let (pos, t) = two_hop();
+        let wire = WireBits::dense(44_426);
+        let relay = MemberWork::nominal(640, 1e9, pos[1]);
+        let member = MemberWork::nominal(640, 1e9, pos[2]);
+        let (_, e_direct) = cluster_round(&l, &e, &[relay, member], pos[0], wire);
+        let hop = |m: &MemberWork, d: f64| HopNode {
+            t_cmp: l.compute_time(m.samples, m.cpu_hz),
+            e_cmp: e.compute_energy(m.samples, m.cpu_hz),
+            link_factor: 1.0,
+            d_up: d,
+        };
+        let hops = [
+            HopNode::relay_only(0.0),
+            hop(&relay, pos[1].dist(pos[0])),
+            hop(&member, pos[2].dist(pos[1])),
+        ];
+        let (_, e_routed) = routed_round(&l, &e, &t, &hops, None, wire);
+        assert!(e_routed < e_direct, "{e_routed} vs {e_direct}");
+    }
+
+    #[test]
+    fn retries_stretch_the_round_and_bill_every_attempt() {
+        let (l, e) = models();
+        let (pos, t) = two_hop();
+        let wire = WireBits::dense(44_426);
+        let hops = [
+            HopNode::relay_only(0.0),
+            HopNode::relay_only(pos[1].dist(pos[0])),
+            HopNode {
+                t_cmp: 1.0,
+                e_cmp: 0.5,
+                link_factor: 1.0,
+                d_up: pos[2].dist(pos[1]),
+            },
+        ];
+        let clean = TransferOutcome {
+            attempts: 1,
+            wait_s: 0.0,
+            delivered: true,
+        };
+        let noisy = TransferOutcome {
+            attempts: 2,
+            wait_s: 0.25,
+            delivered: true,
+        };
+        let base = routed_round(&l, &e, &t, &hops, None, wire);
+        let same = routed_round(&l, &e, &t, &hops, Some(&[clean, clean, clean]), wire);
+        assert_eq!(base, same, "clean outcomes are the nominal path, bitwise");
+        let (t_n, e_n) = routed_round(&l, &e, &t, &hops, Some(&[clean, clean, noisy]), wire);
+        let t_hop = l.comm_time_scaled(wire.up, hops[2].d_up, 1.0);
+        assert!((t_n - (base.0 + t_hop + 0.25)).abs() < 1e-9);
+        let extra = e.tx_energy(wire.up, hops[2].d_up);
+        assert!((e_n - (base.1 + extra)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_of_one_is_compute_only() {
+        let (l, e) = models();
+        let hops = [HopNode {
+            t_cmp: 2.0,
+            e_cmp: 3.0,
+            link_factor: 1.0,
+            d_up: 0.0,
+        }];
+        assert_eq!(
+            ring_round(&l, &e, &hops, None, WireBits::dense(44_426)),
+            (2.0, 3.0)
+        );
+        assert_eq!(ring_round(&l, &e, &[], None, WireBits::dense(44_426)), (0.0, 0.0));
+    }
+
+    #[test]
+    fn ring_steps_and_chunks_match_the_hand_fold() {
+        let (l, e) = models();
+        let pos = arc(3, 800e3);
+        let wire = WireBits::dense(44_426);
+        let ds = [
+            pos[0].dist(pos[1]),
+            pos[1].dist(pos[2]),
+            pos[2].dist(pos[0]),
+        ];
+        let hops: Vec<HopNode> = ds
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| HopNode {
+                t_cmp: 1.0 + i as f64,
+                e_cmp: 0.5,
+                link_factor: 1.0,
+                d_up: d,
+            })
+            .collect();
+        let (t, en) = ring_round(&l, &e, &hops, None, wire);
+        let chunk = wire.up / 3.0;
+        let steps = 4.0; // 2(k-1)
+        let t_step = ds
+            .iter()
+            .map(|&d| l.comm_time(chunk, d))
+            .fold(0.0f64, f64::max);
+        assert!((t - (3.0 + steps * t_step)).abs() < 1e-9);
+        let e_tx: f64 = ds.iter().map(|&d| e.tx_energy(chunk, d) * steps).sum();
+        assert!((en - (1.5 + e_tx)).abs() < 1e-9);
+        // a degraded edge stretches every step it transmits
+        let mut slow = hops.clone();
+        slow[1].link_factor = 0.25;
+        let (t_slow, e_slow) = ring_round(&l, &e, &slow, None, wire);
+        assert!(t_slow > t, "degraded ring edge slows the all-reduce");
+        assert_eq!(e_slow, en, "Eq. 8 energy depends on payload, not rate");
+    }
+}

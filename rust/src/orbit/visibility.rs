@@ -91,7 +91,7 @@ pub fn windows(
             });
         }
     }
-    out.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    out.sort_by(|a, b| a.start.total_cmp(&b.start));
     out
 }
 

@@ -54,6 +54,11 @@ pub const CORRUPT_SALT: u64 = 0xFA01_7E5C_11D0_0006;
 /// separate salt because the PS satellite's `(round, sat)` stream is
 /// already consumed by its own member upload.
 pub const CORRUPT_GROUND_SALT: u64 = 0xFA01_7E5C_11D0_0007;
+/// Routing plane: per-hop corruption draws on multi-hop ISL relays. A
+/// fresh salt keyed by the *transmitting* satellite so routed runs cannot
+/// perturb the direct path's `CORRUPT_SALT` streams (and vice versa) —
+/// `--routing direct` stays bit-identical to the committed goldens.
+pub const RELAY_CORRUPT_SALT: u64 = 0xFA01_7E5C_11D0_0008;
 
 /// Named scenario preset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -21,7 +21,7 @@
 //! subsequent run.
 
 use fedhc::baselines::run_cfedavg;
-use fedhc::config::{AggregationMode, ExperimentConfig, Timeline};
+use fedhc::config::{AggregationMode, ExperimentConfig, RoutingMode, Timeline};
 use fedhc::coordinator::{run_clustered, Strategy, Trial};
 use fedhc::fl::CompressMode;
 use fedhc::metrics::recorder;
@@ -292,4 +292,79 @@ fn golden_serialisation_is_deterministic() {
     let a = run_one("fedhc", Timeline::Analytic);
     let b = run_one("fedhc", Timeline::Analytic);
     assert_eq!(a, b, "same run serialised differently");
+}
+
+/// The routing plane gets its own snapshots: FedHC with the whole tiny
+/// shell as one cluster at 9000 km ISL range, so each orbital plane forms
+/// a 6-ring and `--routing isl` genuinely store-and-forwards (up to three
+/// hops, partial aggregation at the relays), plus the `isl:ring`
+/// all-reduce on the same geometry. These pin the route-tree construction,
+/// the per-hop billing, and the in-route merge folds byte for byte.
+fn run_routed(routing: RoutingMode) -> String {
+    let manifest = Manifest::host();
+    let mut cfg = golden_cfg(Timeline::Analytic);
+    cfg.clusters = 1;
+    cfg.isl_range_km = 9000.0;
+    cfg.routing = routing;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    recorder::to_json(&res.ledger).to_pretty() + "\n"
+}
+
+#[test]
+fn golden_routed_trajectories_match_exactly() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    let mut seeded = Vec::new();
+    for (stem, routing) in [
+        ("fedhc_isl", RoutingMode::Isl),
+        ("fedhc_ring", RoutingMode::Ring),
+    ] {
+        let name = format!("{stem}.json");
+        let path = dir.join(&name);
+        let got = run_routed(routing);
+        if update || !path.exists() {
+            std::fs::write(&path, &got).unwrap();
+            if !update {
+                seeded.push(name);
+            }
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            got, want,
+            "golden trajectory drifted for {stem} — if the change is \
+             intentional, regenerate with `UPDATE_GOLDEN=1 cargo test \
+             --test golden_trajectories` and review the diff"
+        );
+    }
+    if !seeded.is_empty() {
+        eprintln!("seeded {} golden file(s): {seeded:?} — commit them to pin", seeded.len());
+    }
+}
+
+/// `--routing isl` at the default 2000 km ISL range must serialise
+/// byte-identically to the committed direct-routing golden: in-plane
+/// neighbours sit ≥ 7600 km apart and the only sub-2000 km links are
+/// isolated plane-crossing encounters (min 1880 km, never two sharing a
+/// node at any epoch), so every route tree stays flat and degenerates to
+/// the one-hop teleport accounting bit for bit.
+#[test]
+fn sparse_isl_routing_matches_the_direct_golden() {
+    let default = run_one("fedhc", Timeline::Analytic);
+    let manifest = Manifest::host();
+    let mut cfg = golden_cfg(Timeline::Analytic);
+    cfg.routing = RoutingMode::Isl;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg, &manifest, &rt).unwrap();
+    let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    let routed = recorder::to_json(&res.ledger).to_pretty() + "\n";
+    assert_eq!(routed, default, "--routing isl drifted on a flat-tree shell");
+    let path = golden_dir().join("fedhc_analytic.json");
+    if path.exists() && std::env::var("UPDATE_GOLDEN").is_err() {
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(routed, want, "--routing isl drifted from the committed golden");
+    }
 }
