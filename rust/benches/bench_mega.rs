@@ -30,6 +30,7 @@ use fedhc::orbit::visibility::{visible_sats, visible_sats_indexed};
 use fedhc::orbit::walker::WalkerConstellation;
 use fedhc::runtime::{Manifest, ModelRuntime};
 use fedhc::util::json::Json;
+use fedhc::util::profile;
 use fedhc::util::stats::{bench_loop, mean, Timer};
 use fedhc::util::Rng;
 
@@ -266,11 +267,18 @@ fn end_to_end(fast: bool) -> Json {
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
     let geometry = geometry_suite(fast);
+    // wall-clock phase attribution over the mega round loops (host clock
+    // only; the structural assertions inside end_to_end are unaffected)
+    profile::enable();
+    profile::reset();
     let e2e = end_to_end(fast);
+    let ns_per_phase = profile::to_json();
+    println!("\n{}", profile::format_summary());
     let json = Json::obj(vec![
         ("mode", Json::str(if fast { "fast" } else { "full" })),
         ("geometry", geometry),
         ("end_to_end", e2e),
+        ("ns_per_phase", ns_per_phase),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_mega.json");
     std::fs::write(path, json.to_pretty() + "\n").expect("write BENCH_mega.json");

@@ -19,6 +19,7 @@ use fedhc::runtime::host_model::{float_mode, reference};
 use fedhc::runtime::{HostModel, HostScratch, Manifest, ModelRuntime};
 use fedhc::sim::engine::Engine;
 use fedhc::util::json::Json;
+use fedhc::util::profile;
 use fedhc::util::stats::{bench_loop, bench_report, mean, Timer};
 use fedhc::util::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -408,7 +409,14 @@ fn main() {
     let kernels = kernel_before_after(fast);
     let wire = wire_plane(fast);
     engine_sweep_synthetic(fast);
+    // wall-clock phase attribution over the real round loop: the scoped
+    // timers are host-clock observers only, so the sweep's determinism
+    // cross-check still passes with them enabled
+    profile::enable();
+    profile::reset();
     let round_loop = engine_sweep_round_loop(fast);
+    let ns_per_phase = profile::to_json();
+    println!("\n{}", profile::format_summary());
     let allocs = alloc_accounting(fast);
 
     let dir = Manifest::default_dir();
@@ -427,6 +435,7 @@ fn main() {
         ("host_kernels", kernels),
         ("wire_plane", wire),
         ("round_loop", round_loop),
+        ("ns_per_phase", ns_per_phase),
         ("allocs", allocs),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_runtime.json");

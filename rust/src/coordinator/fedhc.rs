@@ -26,6 +26,7 @@ use crate::fl::aggregate::{aggregate, fedavg_weights, fold_stale, staleness_weig
 use crate::fl::compress::{encode_upload, CompressScratch};
 use crate::fl::evaluate::evaluate_with;
 use crate::info;
+use crate::metrics::{Entity, MetricsRegistry, Tracer};
 use crate::network::retry::{transfer_with_retries, TransferOutcome};
 use crate::network::routing::{
     build_route_tree, ring_round, routed_round, HopNode, RouteTree, NO_PARENT,
@@ -37,6 +38,7 @@ use crate::runtime::HostScratch;
 use crate::sim::engine::Engine;
 use crate::sim::events::{Event, EventQueue};
 use crate::sim::scenario::{Availability, CORRUPT_SALT, RELAY_CORRUPT_SALT};
+use crate::util::profile::{Phase, Scope};
 use crate::util::rng::stream_seed;
 use crate::util::Rng;
 use anyhow::Result;
@@ -327,6 +329,7 @@ fn fail_over_ps(
     migrates: &dyn Fn(usize) -> bool,
 ) -> f64 {
     let mut failover_time = 0.0f64;
+    let now = trial.clock.now();
     for c in 0..topo.ps.len() {
         if !avail.ps_failed[topo.ps[c]] {
             continue;
@@ -351,6 +354,8 @@ fn fail_over_ps(
         }
         trial.ledger.add_wire_bytes(up_bytes * n_re as f64);
         trial.ledger.add_failover();
+        trial.trace.instant(now, "failover", Entity::Cluster(c));
+        trial.registry.record_failover(c);
         failover_time = failover_time.max(t_re);
         topo.ps[c] = backup;
     }
@@ -500,6 +505,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
 
     for round in 1..=cfg.rounds {
         let positions = trial.positions();
+        let round_t0 = trial.clock.now();
         // scenario plane: fold this round's fault events into availability
         // (hard failures, eclipse power-save, transient outages, link and
         // compute degradations, dark ground stations)
@@ -549,16 +555,19 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             if jobs.is_empty() {
                 continue;
             }
-            let mut batch = stages.local.train(
-                &engine,
-                rt,
-                &cfg,
-                &trial.clients,
-                &topo.models,
-                &jobs,
-                round as u64,
-                &pools,
-            )?;
+            let mut batch = {
+                let _p = Scope::new(Phase::LocalTrain);
+                stages.local.train(
+                    &engine,
+                    rt,
+                    &cfg,
+                    &trial.clients,
+                    &topo.models,
+                    &jobs,
+                    round as u64,
+                    &pools,
+                )?
+            };
             let mut work = Vec::with_capacity(batch.len());
             let mut losses = Vec::with_capacity(batch.len());
             let mut sizes = Vec::with_capacity(batch.len());
@@ -596,26 +605,30 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             // (every member one hop from the PS) takes the direct machinery
             // below verbatim, so `--routing isl` on dense clusters is
             // bit-identical to `--routing direct` by construction.
-            let tree: Option<RouteTree> = (cfg.routing == RoutingMode::Isl).then(|| {
-                node_ids.clear();
-                node_ids.extend(jobs.iter().map(|&(m, _)| m));
-                if node_ids.binary_search(&topo.ps[c]).is_err() {
-                    node_ids.push(topo.ps[c]);
-                    node_ids.sort_unstable();
-                }
-                let root = node_ids
-                    .binary_search(&topo.ps[c])
-                    .expect("PS present in its own route tree");
-                build_route_tree(
-                    &node_ids,
-                    root,
-                    cfg.isl_range_km * 1e3,
-                    &positions,
-                    geo.as_ref().map(|g| g.grid()),
-                    &|g| avail.link_factor[g] < 1.0,
-                    &mut neigh_scratch,
-                )
-            });
+            let tree: Option<RouteTree> = {
+                let _p = Scope::new(Phase::Routing);
+                (cfg.routing == RoutingMode::Isl).then(|| {
+                    node_ids.clear();
+                    node_ids.extend(jobs.iter().map(|&(m, _)| m));
+                    if node_ids.binary_search(&topo.ps[c]).is_err() {
+                        node_ids.push(topo.ps[c]);
+                        node_ids.sort_unstable();
+                    }
+                    let root = node_ids
+                        .binary_search(&topo.ps[c])
+                        .expect("PS present in its own route tree");
+                    build_route_tree(
+                        &node_ids,
+                        root,
+                        cfg.isl_range_km * 1e3,
+                        &positions,
+                        geo.as_ref().map(|g| g.grid()),
+                        &|g| avail.link_factor[g] < 1.0,
+                        &mut neigh_scratch,
+                    )
+                })
+            };
+            let _p_agg = Scope::new(Phase::ClusterAgg);
             let multi_hop = tree.as_ref().is_some_and(|t| t.max_hops() > 1);
             if cfg.routing == RoutingMode::Ring || multi_hop {
                 let (t, e) = if cfg.routing == RoutingMode::Ring {
@@ -724,13 +737,34 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                         stages.cluster.merge(rt, &rows, &weights, &mut agg_buf)?;
                         std::mem::swap(&mut topo.models[c], &mut agg_buf);
                     }
-                    ring_round(
+                    let out = ring_round(
                         &trial.link,
                         &trial.energy,
                         &hop_nodes,
                         (!outcomes.is_empty()).then_some(outcomes.as_slice()),
                         wire,
-                    )
+                    );
+                    // telemetry plane: the all-reduce is collective, so
+                    // every member's upload span covers the whole exchange
+                    if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                        let chunk_bytes = up_bytes / kr.max(1) as f64;
+                        for (i, r) in batch.iter().enumerate() {
+                            let (retx, att) = if outcomes.is_empty() {
+                                (0usize, 1u32)
+                            } else {
+                                (outcomes[i].retransmits() * steps, outcomes[i].attempts)
+                            };
+                            trial.trace.span(round_t0, out.0, "upload", Entity::Sat(r.member));
+                            trial.registry.record_upload(
+                                r.member,
+                                out.0,
+                                chunk_bytes * steps as f64 * att as f64,
+                                retx,
+                                steps,
+                            );
+                        }
+                    }
+                    out
                 } else {
                     // multi-hop store-and-forward (`--routing isl`): every
                     // member's upload walks its BFS path toward the PS, and
@@ -964,14 +998,49 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                         }
                         inbox[p].push((Upload::Pooled(pooled), sw));
                     }
-                    routed_round(
+                    let out = routed_round(
                         &trial.link,
                         &trial.energy,
                         tree,
                         &hop_nodes,
                         noisy.then_some(outcomes.as_slice()),
                         wire,
-                    )
+                    );
+                    // telemetry plane: one relay_hop instant per tree edge
+                    // (mirroring the ledger's route-hop count), one upload
+                    // span per trained member at its path depth
+                    if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                        for local in 0..n {
+                            if tree.parent[local] == NO_PARENT {
+                                continue;
+                            }
+                            trial
+                                .trace
+                                .instant(round_t0, "relay_hop", Entity::Sat(node_ids[local]));
+                            if noisy && outcomes[local].retransmits() > 0 {
+                                trial
+                                    .trace
+                                    .instant(round_t0, "retry", Entity::Sat(node_ids[local]));
+                            }
+                        }
+                        for (j, r) in batch.iter().enumerate() {
+                            let local = local_of[j];
+                            let (retx, att) = if noisy {
+                                (outcomes[local].retransmits(), outcomes[local].attempts)
+                            } else {
+                                (0usize, 1u32)
+                            };
+                            trial.trace.span(round_t0, out.0, "upload", Entity::Sat(r.member));
+                            trial.registry.record_upload(
+                                r.member,
+                                out.0,
+                                up_bytes * att as f64,
+                                retx,
+                                tree.hops[local],
+                            );
+                        }
+                    }
+                    out
                 };
                 // recycle the trained buffers exactly as the direct path
                 // does below — pool bookkeeping only, no numeric effect
@@ -984,6 +1053,9 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                         pools.params.put(buf);
                     }
                 }
+                trial.trace.span(round_t0, t, "cluster_round", Entity::Cluster(c));
+                trial.trace.instant(round_t0 + t, "merge", Entity::Cluster(c));
+                trial.registry.record_merge(c);
                 stage_time = stage_time.max(t); // clusters run in parallel
                 trial.ledger.add_energy(e);
                 continue;
@@ -1139,18 +1211,53 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                     ),
                 }
             };
+            // telemetry plane: per-member upload spans (compute offset +
+            // transfer incl. retries), retry instants on the deterministic
+            // backoff timeline, and the cluster merge — re-derived from the
+            // same member_times the fold used, only when a sink is enabled
+            if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                trial.trace.span(round_t0, t, "cluster_round", Entity::Cluster(c));
+                let ps_pos = positions[topo.ps[c]];
+                for (i, (r, w)) in batch.iter().zip(&work).enumerate() {
+                    let (t_cmp, t_com, _) = member_times(&trial.link, w, ps_pos, wire.up);
+                    let (dur, retx, att) = if noisy {
+                        let o = &outcomes[i];
+                        (o.total_time(t_com), o.retransmits(), o.attempts)
+                    } else {
+                        (t_com, 0usize, 1u32)
+                    };
+                    trial
+                        .trace
+                        .span(round_t0 + t_cmp, dur, "upload", Entity::Sat(r.member));
+                    for a in 1..att {
+                        trial.trace.instant(
+                            round_t0 + t_cmp + retry.attempt_offset(a, t_com),
+                            "retry",
+                            Entity::Sat(r.member),
+                        );
+                    }
+                    trial
+                        .registry
+                        .record_upload(r.member, dur, up_bytes * att as f64, retx, 1);
+                }
+                trial.trace.instant(round_t0 + t, "merge", Entity::Cluster(c));
+                trial.registry.record_merge(c);
+            }
             stage_time = stage_time.max(t); // clusters run in parallel
             trial.ledger.add_energy(e);
         }
         let stage_end = trial.clock.now() + stage_time;
         trial.clock.advance_to(stage_end);
         trial.ledger.advance_to(stage_end);
+        trial.trace.span(round_t0, stage_time, "cluster_stage", Entity::Run);
 
         // ---- re-clustering check (lines 14–18) ----
         let mut reclustered = false;
         if policy.should_recluster(&churn.stats) {
+            let _p = Scope::new(Phase::Recluster);
             reclustered = true;
             trial.ledger.reclusters += 1;
+            trial.trace.instant(trial.clock.now(), "recluster", Entity::Run);
             let old_assignment = topo.assignment.clone();
             let old_models = topo.models.clone();
             // topology rebuilds at the post-aggregation epoch: re-sync the
@@ -1239,6 +1346,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
 
         // ---- ground station aggregation stage (lines 21–24) ----
         if round % cfg.ground_every == 0 {
+            let _p = Scope::new(Phase::Ground);
             // recovery plane: crashed PS processes fail over before the
             // pass plan forms — the round's member updates (everything a
             // non-outaged member sent this round) migrate to the promoted
@@ -1353,6 +1461,24 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
                 trial.ledger.add_stale_passes(out.stale.len());
                 trial.ledger.add_ground_wait(out.wait_s);
                 let pass_end = t + out.duration_s;
+                // telemetry plane: the pass span on the station's track,
+                // window open/close instants mapped back through `live`
+                if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                    trial
+                        .trace
+                        .span(t, out.duration_s, "ground_pass", Entity::Ground(out.station));
+                    for &(i, open, close) in &out.windows {
+                        let cg = live[i];
+                        trial.trace.instant(t + open, "window_open", Entity::Cluster(cg));
+                        trial.trace.instant(t + close, "window_close", Entity::Cluster(cg));
+                        trial.registry.record_window(cg, close - open);
+                    }
+                    if !exchanged.is_empty() {
+                        trial
+                            .trace
+                            .instant(pass_end, "global_merge", Entity::Ground(out.station));
+                    }
+                }
                 trial.clock.advance_to(pass_end);
                 trial.ledger.advance_to(pass_end);
             }
@@ -1362,7 +1488,11 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
         // The evaluated model is the *logical* global: the data-size-
         // weighted aggregate of the live cluster models (what the next
         // ground pass would produce). Pure instrumentation — no ledger cost.
+        trial
+            .trace
+            .span(round_t0, trial.clock.now() - round_t0, "round", Entity::Run);
         if round % cfg.eval_every == 0 || round == cfg.rounds {
+            let _p = Scope::new(Phase::Eval);
             let sizes: Vec<usize> = topo
                 .clusters(k)
                 .iter()
@@ -1376,6 +1506,7 @@ pub fn run_staged(trial: &mut Trial, strategy: Strategy, stages: &Stages) -> Res
             trial
                 .ledger
                 .record(round, eval.accuracy, eval.loss, reclustered);
+            trial.trace.instant(trial.clock.now(), "eval", Entity::Run);
             if let Some(target) = cfg.target_accuracy {
                 if eval.accuracy >= target && converged_at.is_none() {
                     converged_at =
@@ -1438,7 +1569,10 @@ fn merge_parked(
     stage: &dyn ClusterAggregateStage,
     link: &crate::network::LinkModel,
     ledger: &mut crate::metrics::Ledger,
+    tracer: &mut Tracer,
+    registry: &mut MetricsRegistry,
     pools: &RoundPools,
+    cluster: usize,
     members: &[usize],
     parked: &mut [Option<Contribution>],
     model: &mut Vec<f32>,
@@ -1481,9 +1615,12 @@ fn merge_parked(
         // exact zeros for a same-instant fresh contribution
         ledger.add_idle(now - ct.arrival);
         ledger.add_staleness(*pub_time - ct.based_on_t, staleness[i] as usize);
+        registry.record_staleness(cluster, staleness[i]);
         pools.params.put(ct.params);
     }
     ledger.add_buffered_merge();
+    tracer.instant(now, "merge", Entity::Cluster(cluster));
+    registry.record_merge(cluster);
     *version += 1;
     *pub_time = stage_start + end;
     Ok(end)
@@ -1632,16 +1769,19 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
             debug_assert!(queue.is_empty(), "arrival schedule leaked across clusters");
             let mut async_total = 0usize; // async data-share denominator
             if !jobs.is_empty() {
-                let mut batch = stages.local.train(
-                    &engine,
-                    rt,
-                    &cfg,
-                    &trial.clients,
-                    &topo.models,
-                    &jobs,
-                    round as u64,
-                    &pools,
-                )?;
+                let mut batch = {
+                    let _p = Scope::new(Phase::LocalTrain);
+                    stages.local.train(
+                        &engine,
+                        rt,
+                        &cfg,
+                        &trial.clients,
+                        &topo.models,
+                        &jobs,
+                        round as u64,
+                        &pools,
+                    )?
+                };
                 // schedule every upload at its compute+uplink offset (in
                 // member order, so ties pop in member order) and bill
                 // energy with exactly the sync path's per-member terms
@@ -1651,26 +1791,29 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                 // members + PS (flat trees leave every member on the
                 // direct expressions below, bit-identical to `--routing
                 // direct`)
-                let route_tree: Option<RouteTree> = routing.then(|| {
-                    node_ids.clear();
-                    node_ids.extend(jobs.iter().map(|&(mm, _)| mm));
-                    if node_ids.binary_search(&topo.ps[c]).is_err() {
-                        node_ids.push(topo.ps[c]);
-                        node_ids.sort_unstable();
-                    }
-                    let root = node_ids
-                        .binary_search(&topo.ps[c])
-                        .expect("PS present in its own route tree");
-                    build_route_tree(
-                        &node_ids,
-                        root,
-                        cfg.isl_range_km * 1e3,
-                        &positions,
-                        geo.as_ref().map(|g| g.grid()),
-                        &|g| avail.link_factor[g] < 1.0,
-                        &mut neigh_scratch,
-                    )
-                });
+                let route_tree: Option<RouteTree> = {
+                    let _p = Scope::new(Phase::Routing);
+                    routing.then(|| {
+                        node_ids.clear();
+                        node_ids.extend(jobs.iter().map(|&(mm, _)| mm));
+                        if node_ids.binary_search(&topo.ps[c]).is_err() {
+                            node_ids.push(topo.ps[c]);
+                            node_ids.sort_unstable();
+                        }
+                        let root = node_ids
+                            .binary_search(&topo.ps[c])
+                            .expect("PS present in its own route tree");
+                        build_route_tree(
+                            &node_ids,
+                            root,
+                            cfg.isl_range_km * 1e3,
+                            &positions,
+                            geo.as_ref().map(|g| g.grid()),
+                            &|g| avail.link_factor[g] < 1.0,
+                            &mut neigh_scratch,
+                        )
+                    })
+                };
                 for r in batch.iter_mut() {
                     let m = r.member;
                     debug_assert_eq!(r.cluster, c, "gather out of cluster order");
@@ -1760,6 +1903,28 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                             }
                             let arrives = t_cmp + t_path;
                             queue.push(arrives, Event::UploadReady { member: m, cluster: c });
+                            if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                                trial.trace.span(
+                                    stage_start + t_cmp,
+                                    arrives - t_cmp,
+                                    "upload",
+                                    Entity::Sat(m),
+                                );
+                                for &s in path_scratch.iter().skip(1) {
+                                    trial.trace.instant(
+                                        stage_start + t_cmp,
+                                        "relay_hop",
+                                        Entity::Sat(node_ids[s]),
+                                    );
+                                }
+                                trial.registry.record_upload(
+                                    m,
+                                    arrives - t_cmp,
+                                    up_bytes * sends as f64,
+                                    sends - path_scratch.len(),
+                                    tree.hops[local],
+                                );
+                            }
                             async_total += trial.clients[m].data_size();
                             if compressing {
                                 let res = residuals[m]
@@ -1791,6 +1956,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                     // ordinary stale path) while its compute and every
                     // attempt's uplink still bill through Eq. 8/9
                     let eff_ber = if noisy { cfg.ber + avail.ber[m] } else { 0.0 };
+                    let mut m_retx = 0usize;
                     let arrives = if eff_ber > 0.0 {
                         let mut rng = Rng::new(stream_seed(
                             cfg.seed ^ CORRUPT_SALT,
@@ -1803,6 +1969,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         trial.ledger.add_corrupted_uploads(out.corrupted());
                         trial.ledger.add_retry_wait(out.wait_s);
                         retransmit_count += out.retransmits();
+                        m_retx = out.retransmits();
                         e_total += trial.energy.tx_energy(wire.up, d) * out.retransmits() as f64;
                         if !out.delivered {
                             e_total += trial.energy.tx_energy(wire.up, d)
@@ -1816,6 +1983,28 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         t_cmp + t_com
                     };
                     queue.push(arrives, Event::UploadReady { member: m, cluster: c });
+                    if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                        trial.trace.span(
+                            stage_start + t_cmp,
+                            arrives - t_cmp,
+                            "upload",
+                            Entity::Sat(m),
+                        );
+                        for a in 1..=(m_retx as u32) {
+                            trial.trace.instant(
+                                stage_start + t_cmp + retry.attempt_offset(a, t_com),
+                                "retry",
+                                Entity::Sat(m),
+                            );
+                        }
+                        trial.registry.record_upload(
+                            m,
+                            arrives - t_cmp,
+                            up_bytes * (1 + m_retx) as f64,
+                            m_retx,
+                            1,
+                        );
+                    }
                     e_total += trial.energy.tx_energy(wire.up, d)
                         + trial.energy.compute_energy(r.samples, cpu_hz)
                         + trial.energy.tx_energy(wire.down, d);
@@ -1852,6 +2041,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
 
             let mut cluster_time = 0.0f64;
             let mut last_arrival = 0.0f64;
+            let _p_agg = Scope::new(Phase::ClusterAgg);
             match cfg.aggregation {
                 AggregationMode::Buffered => {
                     let mut buf_count = parked_count;
@@ -1862,6 +2052,15 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         queue.push(0.0, Event::MergeDue { cluster: c });
                     }
                     while let Some(ev) = queue.pop() {
+                        // telemetry plane: one instant per event pop, named
+                        // by the popped variant
+                        if trial.trace.is_enabled() {
+                            let ent = match ev.event {
+                                Event::UploadReady { member, .. } => Entity::Sat(member),
+                                _ => Entity::Cluster(c),
+                            };
+                            trial.trace.instant(stage_start + ev.at, ev.event.kind(), ent);
+                        }
                         match ev.event {
                             Event::UploadReady { member, .. } => {
                                 parked[member] = in_flight[member].take();
@@ -1881,7 +2080,10 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                                     stages.cluster.as_ref(),
                                     &trial.link,
                                     &mut trial.ledger,
+                                    &mut trial.trace,
+                                    &mut trial.registry,
                                     &pools,
+                                    c,
                                     members,
                                     &mut parked,
                                     &mut topo.models[c],
@@ -1909,7 +2111,10 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                             stages.cluster.as_ref(),
                             &trial.link,
                             &mut trial.ledger,
+                            &mut trial.trace,
+                            &mut trial.registry,
                             &pools,
+                            c,
                             members,
                             &mut parked,
                             &mut topo.models[c],
@@ -1934,6 +2139,11 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         let Event::UploadReady { member, .. } = ev.event else {
                             unreachable!("unexpected event in the async drain");
                         };
+                        trial.trace.instant(
+                            stage_start + ev.at,
+                            ev.event.kind(),
+                            Entity::Sat(member),
+                        );
                         let ct = in_flight[member]
                             .take()
                             .expect("async upload without a contribution");
@@ -1944,6 +2154,9 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                         version[c] += 1;
                         trial.ledger.add_buffered_merge();
                         trial.ledger.add_staleness(pub_time[c] - ct.based_on_t, tau as usize);
+                        trial.trace.instant(stage_start + ev.at, "merge", Entity::Cluster(c));
+                        trial.registry.record_merge(c);
+                        trial.registry.record_staleness(c, tau as f64);
                         pub_time[c] = stage_start + ev.at;
                         last_arrival = last_arrival.max(ev.at);
                         far = Some(far.map_or(ct.dist, |a: f64| a.max(ct.dist)));
@@ -1958,17 +2171,23 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                 }
                 AggregationMode::Sync => unreachable!("sync runs the barrier path"),
             }
+            trial
+                .trace
+                .span(stage_start, cluster_time, "cluster_round", Entity::Cluster(c));
             stage_time = stage_time.max(cluster_time); // clusters run in parallel
         }
         let stage_end = trial.clock.now() + stage_time;
         trial.clock.advance_to(stage_end);
         trial.ledger.advance_to(stage_end);
+        trial.trace.span(stage_start, stage_time, "cluster_stage", Entity::Run);
 
         // ---- re-clustering check (lines 14–18) ----
         let mut reclustered = false;
         if policy.should_recluster(&churn.stats) {
+            let _p = Scope::new(Phase::Recluster);
             reclustered = true;
             trial.ledger.reclusters += 1;
+            trial.trace.instant(trial.clock.now(), "recluster", Entity::Run);
             // in-flight work addressed to the old PSes dies with the
             // topology: recycle parked contributions so moved members
             // retrain fresh against their aligned cluster model; the wire
@@ -2038,6 +2257,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
 
         // ---- ground station aggregation stage (lines 21–24) ----
         if round % cfg.ground_every == 0 {
+            let _p = Scope::new(Phase::Ground);
             // recovery plane: crashed PS processes fail over before the
             // pass plan forms. Merged versions were already published to
             // the members (salvaged for free); only contributions still
@@ -2142,6 +2362,24 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
                 trial.ledger.add_energy(out.energy_j);
                 trial.ledger.add_stale_passes(out.stale.len());
                 trial.ledger.add_ground_wait(out.wait_s);
+                // telemetry plane (see `run_staged`): pass span, window
+                // instants mapped through `live`, per-cluster window time
+                if trial.trace.is_enabled() || trial.registry.is_enabled() {
+                    trial
+                        .trace
+                        .span(t, out.duration_s, "ground_pass", Entity::Ground(out.station));
+                    for &(i, open, close) in &out.windows {
+                        let cg = live[i];
+                        trial.trace.instant(t + open, "window_open", Entity::Cluster(cg));
+                        trial.trace.instant(t + close, "window_close", Entity::Cluster(cg));
+                        trial.registry.record_window(cg, close - open);
+                    }
+                    if !exchanged.is_empty() {
+                        trial
+                            .trace
+                            .instant(pass_end, "global_merge", Entity::Ground(out.station));
+                    }
+                }
                 trial.clock.advance_to(pass_end);
                 trial.ledger.advance_to(pass_end);
             }
@@ -2151,6 +2389,9 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
         // cadence decoupled from the round barrier: the round schedules an
         // EvalDue at its completion timestamp; evaluation runs when the
         // event pops, evaluating the same logical global as the sync path
+        trial
+            .trace
+            .span(stage_start, trial.clock.now() - stage_start, "round", Entity::Run);
         if round % cfg.eval_every == 0 || round == cfg.rounds {
             eval_queue.push(trial.clock.now(), Event::EvalDue { round });
         }
@@ -2158,7 +2399,9 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
             .peek_time()
             .is_some_and(|due| due <= trial.clock.now())
         {
+            let _p = Scope::new(Phase::Eval);
             let sched = eval_queue.pop().expect("peeked event vanished");
+            trial.trace.instant(sched.at, sched.event.kind(), Entity::Run);
             let Event::EvalDue { round: due_round } = sched.event else {
                 unreachable!("unexpected event on the eval queue");
             };
@@ -2175,6 +2418,7 @@ fn run_staged_buffered(trial: &mut Trial, strategy: Strategy, stages: &Stages) -
             trial
                 .ledger
                 .record(due_round, eval.accuracy, eval.loss, reclustered);
+            trial.trace.instant(trial.clock.now(), "eval", Entity::Run);
             if let Some(target) = cfg.target_accuracy {
                 if eval.accuracy >= target && converged_at.is_none() {
                     converged_at =

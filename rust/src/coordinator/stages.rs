@@ -255,6 +255,12 @@ pub struct GroundOutcome {
     pub energy_j: f64,
     /// Total time PSes spent waiting for their window to open, seconds.
     pub wait_s: f64,
+    /// Telemetry plane: per served cluster, in antenna-service order,
+    /// `(ps-slice index, window-open offset, service-completion offset)`
+    /// — both offsets from the pass start, seconds. The analytic stage
+    /// has no window machinery and leaves this empty (`Vec::new()`
+    /// allocates nothing, so the nominal path stays allocation-free).
+    pub windows: Vec<(usize, f64, f64)>,
 }
 
 /// Ground-station exchange stage: PS models up (billed at the possibly
@@ -292,6 +298,7 @@ impl GroundExchangeStage for AnalyticGroundExchange {
             duration_s: duration,
             energy_j: energy,
             wait_s: 0.0,
+            windows: Vec::new(),
         }
     }
 }
@@ -355,6 +362,7 @@ impl GroundExchangeStage for EventGroundExchange {
 
         // drain: the antenna serves one transfer at a time in window order
         let mut exchanged = Vec::new();
+        let mut windows: Vec<(usize, f64, f64)> = Vec::new();
         let mut free_off = 0.0f64;
         let mut end_off = 0.0f64;
         let mut wait_s = 0.0f64;
@@ -388,6 +396,7 @@ impl GroundExchangeStage for EventGroundExchange {
                     wait_s += open_off[cluster];
                     energy += e_x;
                     free_off = start + t_x;
+                    windows.push((cluster, open_off[cluster], free_off));
                     queue.push(
                         free_off,
                         Event::TxDone {
@@ -418,6 +427,7 @@ impl GroundExchangeStage for EventGroundExchange {
             duration_s: end_off,
             energy_j: energy,
             wait_s,
+            windows,
         }
     }
 }

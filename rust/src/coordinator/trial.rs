@@ -9,7 +9,7 @@ use crate::config::ExperimentConfig;
 use crate::data::idx::load_or_synth;
 use crate::data::{partition_dirichlet, partition_iid, Dataset};
 use crate::fl::SatClient;
-use crate::metrics::Ledger;
+use crate::metrics::{Ledger, MetricsRegistry, Tracer};
 use crate::network::{EnergyModel, LinkModel, NetworkParams};
 use crate::orbit::geo::default_ground_segment;
 use crate::orbit::propagate::Constellation;
@@ -46,6 +46,12 @@ pub struct Trial<'rt> {
     pub test: Dataset,
     pub clock: SimClock,
     pub ledger: Ledger,
+    /// Telemetry plane: sim-time tracer, disabled by default (`--trace`
+    /// enables it; disabled emit calls are allocation-free no-ops).
+    pub trace: Tracer,
+    /// Telemetry plane: per-entity counters/histograms, disabled by
+    /// default (`--metrics` enables it).
+    pub registry: MetricsRegistry,
     pub rng: Rng,
     /// Whether real benchmark files were found (vs synthetic substitute).
     pub real_data: bool,
@@ -146,6 +152,8 @@ impl<'rt> Trial<'rt> {
             test,
             clock: SimClock::new(),
             ledger: Ledger::new(),
+            trace: Tracer::disabled(),
+            registry: MetricsRegistry::disabled(),
             rng,
             real_data,
         })

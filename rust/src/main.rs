@@ -18,9 +18,10 @@ use fedhc::config::parse::merge_file_into_args;
 use fedhc::config::ExperimentConfig;
 use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
 use fedhc::metrics::recorder;
-use fedhc::metrics::report::{format_fig3, format_table1, TimeEnergy};
+use fedhc::metrics::report::{format_fig3, format_hotspots, format_table1, TimeEnergy};
 use fedhc::runtime::{Manifest, ModelRuntime};
 use fedhc::util::cli::Args;
+use fedhc::util::profile;
 use std::path::Path;
 
 const FLAGS: &[&str] = &[
@@ -31,6 +32,8 @@ const FLAGS: &[&str] = &[
     "pooled-params",
     "resident-params",
     "strict-float",
+    "profile",
+    "record-extended",
 ];
 
 fn main() {
@@ -163,6 +166,24 @@ COMMON OPTIONS
                                  bit-identical (see runtime::host_model)
   --workers N                    round-engine worker threads (0 = all cores;
                                  any value gives identical metrics)
+  --trace FILE                   telemetry plane (run only): record the
+                                 sim-time event trace — round/stage/upload
+                                 spans, retry/relay-hop/merge/failover/
+                                 window instants — as JSON-lines to FILE
+                                 plus Chrome trace_event JSON to
+                                 FILE.chrome.json (open in Perfetto).
+                                 Byte-identical across --workers values;
+                                 off = zero-cost, results unchanged
+  --metrics FILE                 telemetry plane (run only): dump the
+                                 per-entity registry (per-sat/per-cluster
+                                 counters + fixed-bucket histograms) to
+                                 FILE and print the hotspot table
+  --hotspots N                   rows in the hotspot table (default 5)
+  --profile                      print a wall-clock phase profile after the
+                                 run (host ns only; the simulated
+                                 trajectory is unaffected)
+  --record-extended              add per-round wire-byte / retransmit /
+                                 route-hop deltas to the JSON series
   --config FILE                  key=value config file (CLI wins)
   --out DIR                      write CSV/JSON series (default results/)
 
@@ -222,11 +243,57 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.routing.name(),
         rt.platform()
     );
-    let res = run_method(&cfg, &manifest, &rt, method)?;
+    // telemetry plane: the run owns its Trial so the trace and registry
+    // survive the run and can be dumped afterwards
+    let trace_path = args.get("trace").map(str::to_string);
+    let metrics_path = args.get("metrics").map(str::to_string);
+    if args.flag("profile") {
+        profile::enable();
+        profile::reset();
+    }
+    let mut trial = Trial::new(cfg.clone(), &manifest, &rt)?;
+    if trace_path.is_some() {
+        trial.trace.enable();
+    }
+    if metrics_path.is_some() {
+        trial.registry.enable(cfg.clients, cfg.clusters);
+    }
+    let res = match method {
+        "fedhc" => run_clustered(&mut trial, Strategy::fedhc())?,
+        "fedhc-nomaml" => run_clustered(&mut trial, Strategy::fedhc_no_maml())?,
+        "hbase" | "h-base" => run_clustered(&mut trial, Strategy::hbase())?,
+        "fedce" => run_clustered(&mut trial, Strategy::fedce())?,
+        "cfedavg" | "c-fedavg" => run_cfedavg(&mut trial)?,
+        other => bail!("unknown method '{other}'"),
+    };
     print_result(&res);
+    let hotspots = format_hotspots(&trial.registry, args.get_usize("hotspots", 5)?);
+    if !hotspots.is_empty() {
+        print!("{hotspots}");
+    }
+    if args.flag("profile") {
+        print!("{}", profile::format_summary());
+    }
+    if let Some(path) = &trace_path {
+        std::fs::write(path, trial.trace.to_jsonl())?;
+        let chrome = format!("{path}.chrome.json");
+        std::fs::write(&chrome, trial.trace.to_chrome().to_pretty())?;
+        eprintln!(
+            "trace written to {path} ({} events; {chrome} opens in Perfetto)",
+            trial.trace.len()
+        );
+    }
+    if let Some(path) = &metrics_path {
+        std::fs::write(path, trial.registry.to_json().to_pretty())?;
+        eprintln!("metrics registry written to {path}");
+    }
     let out = Path::new(args.get_or("out", "results"));
     let stem = format!("{}_{}_k{}", res.name.to_lowercase(), cfg.dataset.name(), cfg.clusters);
-    recorder::write_series(&res.ledger, out, &stem)?;
+    if args.flag("record-extended") {
+        recorder::write_series_extended(&res.ledger, out, &stem)?;
+    } else {
+        recorder::write_series(&res.ledger, out, &stem)?;
+    }
     eprintln!("series written to {}/{stem}.{{csv,json}}", out.display());
     Ok(())
 }

@@ -21,6 +21,13 @@ pub struct RoundRecord {
     pub loss: f64,
     /// Whether a re-clustering event fired in this round.
     pub reclustered: bool,
+    /// Wire bytes billed since the previous record (telemetry plane;
+    /// serialised only under `--record-extended`).
+    pub d_wire_bytes: f64,
+    /// Retransmissions since the previous record (see `d_wire_bytes`).
+    pub d_retransmits: usize,
+    /// ISL up-hops billed since the previous record (see `d_wire_bytes`).
+    pub d_route_hops: usize,
 }
 
 /// Accumulating ledger.
@@ -96,6 +103,11 @@ pub struct Ledger {
     /// contributions folded into a relay's pooled buffer before
     /// forwarding (diagnostic, not serialised; see `route_hops`).
     pub relay_merges: usize,
+    /// Cumulative totals at the previous [`Ledger::record`] call, used to
+    /// derive the per-record `d_*` deltas (telemetry plane).
+    last_wire_bytes: f64,
+    last_retransmits: usize,
+    last_route_hops: usize,
 }
 
 impl Ledger {
@@ -211,7 +223,9 @@ impl Ledger {
         self.relay_merges += n;
     }
 
-    /// Record an evaluation point at the current totals.
+    /// Record an evaluation point at the current totals, with per-record
+    /// deltas of the wire/recovery/routing counters since the previous
+    /// record.
     pub fn record(&mut self, round: usize, accuracy: f64, loss: f64, reclustered: bool) {
         self.records.push(RoundRecord {
             round,
@@ -220,7 +234,13 @@ impl Ledger {
             accuracy,
             loss,
             reclustered,
+            d_wire_bytes: self.wire_bytes - self.last_wire_bytes,
+            d_retransmits: self.retransmits - self.last_retransmits,
+            d_route_hops: self.route_hops - self.last_route_hops,
         });
+        self.last_wire_bytes = self.wire_bytes;
+        self.last_retransmits = self.retransmits;
+        self.last_route_hops = self.route_hops;
     }
 
     /// First record meeting the target accuracy, if any.
@@ -363,6 +383,31 @@ mod tests {
     #[should_panic(expected = "bad retry wait")]
     fn rejects_negative_retry_wait() {
         Ledger::new().add_retry_wait(-0.1);
+    }
+
+    #[test]
+    fn record_deltas_reset_between_records() {
+        let mut l = Ledger::new();
+        l.add_wire_bytes(100.0);
+        l.add_retransmits(2);
+        l.add_route_hops(3);
+        l.record(1, 0.1, 2.0, false);
+        l.add_wire_bytes(50.0);
+        l.add_route_hops(1);
+        l.record(2, 0.2, 1.5, false);
+        l.record(3, 0.3, 1.0, false);
+        assert_eq!(l.records[0].d_wire_bytes, 100.0);
+        assert_eq!(l.records[0].d_retransmits, 2);
+        assert_eq!(l.records[0].d_route_hops, 3);
+        assert_eq!(l.records[1].d_wire_bytes, 50.0);
+        assert_eq!(l.records[1].d_retransmits, 0);
+        assert_eq!(l.records[1].d_route_hops, 1);
+        assert_eq!(l.records[2].d_wire_bytes, 0.0);
+        assert_eq!(l.records[2].d_retransmits, 0);
+        assert_eq!(l.records[2].d_route_hops, 0);
+        // cumulative totals are untouched by recording
+        assert_eq!(l.wire_bytes, 150.0);
+        assert_eq!(l.route_hops, 4);
     }
 
     #[test]

@@ -1,8 +1,14 @@
-//! Metrics: the per-round time/energy/accuracy ledger (paper Eq. 7 & 10)
-//! and recorders that emit the CSV/JSON series behind Table I and Fig. 3.
+//! Metrics: the per-round time/energy/accuracy ledger (paper Eq. 7 & 10),
+//! recorders that emit the CSV/JSON series behind Table I and Fig. 3, the
+//! telemetry plane's sim-time tracer and per-entity registry, and report
+//! formatters.
 
 pub mod ledger;
 pub mod recorder;
+pub mod registry;
 pub mod report;
+pub mod trace;
 
 pub use ledger::{Ledger, RoundRecord};
+pub use registry::MetricsRegistry;
+pub use trace::{Entity, Tracer};

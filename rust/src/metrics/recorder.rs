@@ -25,8 +25,20 @@ pub fn to_csv(ledger: &Ledger) -> String {
 /// keeping the document shape fixed lets `--compress` and `--routing`
 /// sweeps diff against the same goldens. Benches report bytes-on-the-wire
 /// and hop counts through their own `bytes_per_round` /
-/// `hops_per_round` columns instead.
+/// `hops_per_round` columns instead. `fedhc run --record-extended`
+/// opts into [`to_json_extended`], which adds the per-record
+/// `d_wire_bytes` / `d_retransmits` / `d_route_hops` deltas without
+/// touching this default shape.
 pub fn to_json(ledger: &Ledger) -> Json {
+    to_json_with(ledger, false)
+}
+
+/// [`to_json`] plus per-record telemetry deltas (`--record-extended`).
+pub fn to_json_extended(ledger: &Ledger) -> Json {
+    to_json_with(ledger, true)
+}
+
+fn to_json_with(ledger: &Ledger, extended: bool) -> Json {
     Json::obj(vec![
         ("time_s", Json::num(ledger.time_s)),
         ("energy_j", Json::num(ledger.energy_j)),
@@ -56,14 +68,23 @@ pub fn to_json(ledger: &Ledger) -> Json {
                     .records
                     .iter()
                     .map(|r| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("round", Json::num(r.round as f64)),
                             ("time_s", Json::num(r.time_s)),
                             ("energy_j", Json::num(r.energy_j)),
                             ("accuracy", Json::num(r.accuracy)),
                             ("loss", Json::num(r.loss)),
                             ("reclustered", Json::Bool(r.reclustered)),
-                        ])
+                        ];
+                        if extended {
+                            fields.push(("d_wire_bytes", Json::num(r.d_wire_bytes)));
+                            fields.push((
+                                "d_retransmits",
+                                Json::num(r.d_retransmits as f64),
+                            ));
+                            fields.push(("d_route_hops", Json::num(r.d_route_hops as f64)));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
@@ -73,11 +94,26 @@ pub fn to_json(ledger: &Ledger) -> Json {
 
 /// Write both formats under `dir` with the given stem.
 pub fn write_series(ledger: &Ledger, dir: &Path, stem: &str) -> std::io::Result<()> {
+    write_series_with(ledger, dir, stem, false)
+}
+
+/// [`write_series`] with the extended (telemetry-delta) JSON shape.
+pub fn write_series_extended(ledger: &Ledger, dir: &Path, stem: &str) -> std::io::Result<()> {
+    write_series_with(ledger, dir, stem, true)
+}
+
+fn write_series_with(
+    ledger: &Ledger,
+    dir: &Path,
+    stem: &str,
+    extended: bool,
+) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut c = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
     c.write_all(to_csv(ledger).as_bytes())?;
     let mut j = std::fs::File::create(dir.join(format!("{stem}.json")))?;
-    j.write_all(to_json(ledger).to_pretty().as_bytes())?;
+    let doc = to_json_with(ledger, extended);
+    j.write_all(doc.to_pretty().as_bytes())?;
     Ok(())
 }
 
@@ -117,6 +153,26 @@ mod tests {
         assert_eq!(parsed.get("idle_s").as_f64(), Some(0.0));
         assert_eq!(parsed.get("stale_s").as_f64(), Some(0.0));
         assert_eq!(parsed.get("staleness_hist").as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn extended_adds_deltas_without_touching_default_shape() {
+        let mut l = Ledger::new();
+        l.add_time(5.0);
+        l.add_wire_bytes(128.0);
+        l.add_retransmits(1);
+        l.add_route_hops(2);
+        l.record(1, 0.42, 1.9, false);
+        let default_doc = to_json(&l).to_pretty();
+        assert!(!default_doc.contains("d_wire_bytes"));
+        let rec = &to_json_extended(&l).get("records").as_arr().unwrap()[0];
+        assert_eq!(rec.get("d_wire_bytes").as_f64(), Some(128.0));
+        assert_eq!(rec.get("d_retransmits").as_usize(), Some(1));
+        assert_eq!(rec.get("d_route_hops").as_usize(), Some(2));
+        // top level still excludes the cumulative wire/routing counters
+        let top = to_json_extended(&l);
+        assert_eq!(top.get("wire_bytes"), &crate::util::json::Json::Null);
+        assert_eq!(top.get("route_hops"), &crate::util::json::Json::Null);
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Per-entity metrics registry: per-satellite and per-cluster counters
+//! plus fixed-bucket histograms, populated by the coordinator while a
+//! run executes.
+//!
+//! Where the [`super::Ledger`] answers "how much did the whole run
+//! cost", the registry answers "*which* satellite or cluster is the
+//! hotspot": per-satellite upload counts, retransmits, cumulative comm
+//! time, wire bytes and relay hops; per-cluster merge/failover/stale
+//! counts and contact-window seconds; and run-wide histograms over comm
+//! time, retry counts, staleness, hop counts, and transfer bytes. The
+//! bucket edges are fixed at compile time so two runs' dumps are always
+//! comparable bucket-for-bucket.
+//!
+//! Disabled (the default), every record call is an inlined `None` check
+//! — no allocation, no counters, goldens untouched. `fedhc run
+//! --metrics <path>` enables it, dumps [`MetricsRegistry::to_json`] to
+//! `<path>`, and prints the top-k hotspot table
+//! (`report::format_hotspots`) after the run summary.
+//!
+//! ```
+//! use fedhc::metrics::registry::MetricsRegistry;
+//! let mut reg = MetricsRegistry::disabled();
+//! reg.record_upload(3, 0.5, 1e4, 0, 1); // no-op while disabled
+//! assert!(!reg.is_enabled());
+//! reg.enable(8, 2);
+//! reg.record_upload(3, 0.5, 1e4, 1, 2);
+//! assert_eq!(reg.sats()[3].uploads, 1);
+//! ```
+
+use crate::util::json::Json;
+
+/// Histogram bucket edges (ascending). A value lands in bucket
+/// `partition_point(edges, v >= e)`, so `counts` has `edges.len() + 1`
+/// entries: `(-inf, e0), [e0, e1), ..., [e_last, +inf)`.
+const COMM_S_EDGES: &[f64] = &[0.01, 0.1, 1.0, 10.0, 60.0];
+const RETRY_EDGES: &[f64] = &[1.0, 2.0, 3.0, 4.0];
+const STALENESS_EDGES: &[f64] = &[1.0, 2.0, 4.0, 8.0];
+const HOPS_EDGES: &[f64] = &[2.0, 3.0, 4.0, 6.0];
+const BYTES_EDGES: &[f64] = &[1e3, 1e4, 1e5, 1e6, 1e7];
+
+/// A fixed-bucket histogram.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    edges: &'static [f64],
+    counts: Vec<u64>,
+}
+
+impl Hist {
+    fn new(edges: &'static [f64]) -> Self {
+        Hist {
+            edges,
+            counts: vec![0; edges.len() + 1],
+        }
+    }
+
+    #[inline]
+    fn add(&mut self, v: f64) {
+        let i = self.edges.partition_point(|&e| v >= e);
+        self.counts[i] += 1;
+    }
+
+    /// Bucket counts, `edges.len() + 1` entries.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("edges", Json::arr_f64(self.edges)),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Per-satellite counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SatStats {
+    /// Uploads that reached (or attempted to reach) the PS.
+    pub uploads: u64,
+    /// Extra attempts beyond the first, summed over transfers.
+    pub retransmits: u64,
+    /// Cumulative simulated communication seconds (retries included).
+    pub comm_s: f64,
+    /// Wire bytes sent (every attempt bills a full payload).
+    pub bytes: f64,
+    /// ISL hops traversed by this satellite's uploads.
+    pub hops: u64,
+}
+
+/// Per-cluster counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterStats {
+    /// Aggregations folded into this cluster's model.
+    pub merges: u64,
+    /// PS fail-overs this cluster survived.
+    pub failovers: u64,
+    /// Merged contributions with integer staleness ≥ 1.
+    pub stale_merges: u64,
+    /// Ground contact-window seconds granted to this cluster.
+    pub window_s: f64,
+}
+
+#[derive(Clone, Debug)]
+struct RegistryInner {
+    sats: Vec<SatStats>,
+    clusters: Vec<ClusterStats>,
+    comm_s: Hist,
+    retries: Hist,
+    staleness: Hist,
+    hops: Hist,
+    bytes: Hist,
+}
+
+/// The per-entity registry. `None` inner state means disabled: record
+/// calls return immediately without touching memory.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Option<Box<RegistryInner>>,
+}
+
+impl MetricsRegistry {
+    /// A disabled registry (the default on every trial).
+    pub fn disabled() -> Self {
+        MetricsRegistry { inner: None }
+    }
+
+    /// Allocate per-entity slots and start recording. Idempotent.
+    pub fn enable(&mut self, n_sats: usize, n_clusters: usize) {
+        if self.inner.is_none() {
+            self.inner = Some(Box::new(RegistryInner {
+                sats: vec![SatStats::default(); n_sats],
+                clusters: vec![ClusterStats::default(); n_clusters],
+                comm_s: Hist::new(COMM_S_EDGES),
+                retries: Hist::new(RETRY_EDGES),
+                staleness: Hist::new(STALENESS_EDGES),
+                hops: Hist::new(HOPS_EDGES),
+                bytes: Hist::new(BYTES_EDGES),
+            }));
+        }
+    }
+
+    /// Whether record calls count anything.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// One upload transfer by satellite `sat`: `comm_s` simulated
+    /// seconds on the wire (retries included), `bytes` sent across all
+    /// attempts, `retransmits` extra attempts, `hops` ISL edges.
+    #[inline]
+    pub fn record_upload(
+        &mut self,
+        sat: usize,
+        comm_s: f64,
+        bytes: f64,
+        retransmits: usize,
+        hops: usize,
+    ) {
+        if let Some(inner) = self.inner.as_mut() {
+            if let Some(s) = inner.sats.get_mut(sat) {
+                s.uploads += 1;
+                s.retransmits += retransmits as u64;
+                s.comm_s += comm_s;
+                s.bytes += bytes;
+                s.hops += hops as u64;
+            }
+            inner.comm_s.add(comm_s);
+            inner.retries.add(retransmits as f64);
+            inner.hops.add(hops as f64);
+            inner.bytes.add(bytes);
+        }
+    }
+
+    /// One aggregation folded into `cluster`'s model.
+    #[inline]
+    pub fn record_merge(&mut self, cluster: usize) {
+        if let Some(inner) = self.inner.as_mut() {
+            if let Some(c) = inner.clusters.get_mut(cluster) {
+                c.merges += 1;
+            }
+        }
+    }
+
+    /// One merged contribution with integer staleness `tau`.
+    #[inline]
+    pub fn record_staleness(&mut self, cluster: usize, tau: f64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.staleness.add(tau);
+            if tau >= 1.0 {
+                if let Some(c) = inner.clusters.get_mut(cluster) {
+                    c.stale_merges += 1;
+                }
+            }
+        }
+    }
+
+    /// One PS fail-over in `cluster`.
+    #[inline]
+    pub fn record_failover(&mut self, cluster: usize) {
+        if let Some(inner) = self.inner.as_mut() {
+            if let Some(c) = inner.clusters.get_mut(cluster) {
+                c.failovers += 1;
+            }
+        }
+    }
+
+    /// `dur_s` seconds of ground contact window granted to `cluster`.
+    #[inline]
+    pub fn record_window(&mut self, cluster: usize, dur_s: f64) {
+        if let Some(inner) = self.inner.as_mut() {
+            if let Some(c) = inner.clusters.get_mut(cluster) {
+                c.window_s += dur_s;
+            }
+        }
+    }
+
+    /// Per-satellite stats (empty while disabled).
+    pub fn sats(&self) -> &[SatStats] {
+        self.inner.as_ref().map_or(&[], |i| &i.sats)
+    }
+
+    /// Per-cluster stats (empty while disabled).
+    pub fn clusters(&self) -> &[ClusterStats] {
+        self.inner.as_ref().map_or(&[], |i| &i.clusters)
+    }
+
+    /// Run-wide histograms as `(name, hist)` pairs, fixed order.
+    pub fn histograms(&self) -> Vec<(&'static str, &Hist)> {
+        match self.inner.as_ref() {
+            None => Vec::new(),
+            Some(i) => vec![
+                ("comm_s", &i.comm_s),
+                ("retries", &i.retries),
+                ("staleness", &i.staleness),
+                ("hops", &i.hops),
+                ("bytes", &i.bytes),
+            ],
+        }
+    }
+
+    /// The `--metrics <path>` dump: per-sat and per-cluster arrays
+    /// (indexed by entity id) plus every histogram.
+    pub fn to_json(&self) -> Json {
+        let sats = Json::Arr(
+            self.sats()
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("uploads", Json::num(s.uploads as f64)),
+                        ("retransmits", Json::num(s.retransmits as f64)),
+                        ("comm_s", Json::num(s.comm_s)),
+                        ("bytes", Json::num(s.bytes)),
+                        ("hops", Json::num(s.hops as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let clusters = Json::Arr(
+            self.clusters()
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("merges", Json::num(c.merges as f64)),
+                        ("failovers", Json::num(c.failovers as f64)),
+                        ("stale_merges", Json::num(c.stale_merges as f64)),
+                        ("window_s", Json::num(c.window_s)),
+                    ])
+                })
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.histograms()
+                .into_iter()
+                .map(|(name, h)| (name.to_string(), h.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("sats", sats),
+            ("clusters", clusters),
+            ("histograms", hists),
+        ])
+    }
+
+    /// Indices of the `k` satellites with the most cumulative comm
+    /// time, busiest first (ties break to the lower index).
+    pub fn top_sats_by_comm(&self, k: usize) -> Vec<usize> {
+        let sats = self.sats();
+        let mut idx: Vec<usize> = (0..sats.len()).collect();
+        idx.sort_by(|&a, &b| {
+            sats[b]
+                .comm_s
+                .partial_cmp(&sats[a].comm_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_inert() {
+        let mut reg = MetricsRegistry::disabled();
+        reg.record_upload(0, 1.0, 10.0, 2, 1);
+        reg.record_merge(0);
+        reg.record_staleness(0, 3.0);
+        reg.record_failover(0);
+        reg.record_window(0, 5.0);
+        assert!(!reg.is_enabled());
+        assert!(reg.sats().is_empty());
+        assert!(reg.clusters().is_empty());
+        assert!(reg.histograms().is_empty());
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut reg = MetricsRegistry::disabled();
+        reg.enable(4, 2);
+        reg.record_upload(1, 0.5, 1e4, 0, 1);
+        reg.record_upload(1, 1.5, 2e4, 2, 3);
+        reg.record_merge(0);
+        reg.record_staleness(0, 0.0);
+        reg.record_staleness(0, 2.0);
+        reg.record_failover(1);
+        reg.record_window(1, 120.0);
+        let s = &reg.sats()[1];
+        assert_eq!(s.uploads, 2);
+        assert_eq!(s.retransmits, 2);
+        assert_eq!(s.hops, 4);
+        assert!((s.comm_s - 2.0).abs() < 1e-12);
+        assert!((s.bytes - 3e4).abs() < 1e-9);
+        assert_eq!(reg.clusters()[0].merges, 1);
+        assert_eq!(reg.clusters()[0].stale_merges, 1);
+        assert_eq!(reg.clusters()[1].failovers, 1);
+        assert!((reg.clusters()[1].window_s - 120.0).abs() < 1e-12);
+        // out-of-range entities are ignored, not a panic
+        reg.record_upload(99, 1.0, 1.0, 0, 0);
+        reg.record_merge(99);
+    }
+
+    #[test]
+    fn histogram_bucketing() {
+        let mut h = Hist::new(&[1.0, 10.0]);
+        h.add(0.5); // below first edge
+        h.add(1.0); // exactly on an edge -> upper bucket
+        h.add(5.0);
+        h.add(100.0); // overflow bucket
+        assert_eq!(h.counts(), &[1, 2, 1]);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn top_k_orders_by_comm_time() {
+        let mut reg = MetricsRegistry::disabled();
+        reg.enable(3, 1);
+        reg.record_upload(0, 1.0, 1.0, 0, 0);
+        reg.record_upload(1, 5.0, 1.0, 0, 0);
+        reg.record_upload(2, 3.0, 1.0, 0, 0);
+        assert_eq!(reg.top_sats_by_comm(2), vec![1, 2]);
+        assert_eq!(reg.top_sats_by_comm(10), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let mut reg = MetricsRegistry::disabled();
+        reg.enable(2, 1);
+        reg.record_upload(0, 0.25, 1e5, 1, 2);
+        let j = reg.to_json();
+        assert_eq!(j.get("sats").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("clusters").as_arr().unwrap().len(), 1);
+        let h = j.get("histograms").get("comm_s");
+        assert_eq!(h.get("edges").as_arr().unwrap().len(), 5);
+        assert_eq!(h.get("counts").as_arr().unwrap().len(), 6);
+        // the dump is valid JSON end to end
+        let reparsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(&reparsed, &j);
+    }
+}

@@ -1,7 +1,9 @@
 //! Table/figure formatting: prints the same rows Table I reports and the
-//! Fig. 3 accuracy-vs-round series, in aligned ASCII.
+//! Fig. 3 accuracy-vs-round series, in aligned ASCII, plus the telemetry
+//! plane's per-entity hotspot table.
 
 use super::ledger::Ledger;
+use super::registry::MetricsRegistry;
 
 /// One Table-I cell pair for a (method, K) configuration.
 #[derive(Clone, Copy, Debug)]
@@ -129,6 +131,52 @@ pub fn format_scenario_matrix(rows: &[(&str, &str, &Ledger)]) -> String {
     s
 }
 
+/// Render the telemetry plane's hotspot table: the `k` satellites with
+/// the most cumulative communication time (uploads, retransmits, hops,
+/// bytes, comm seconds), then every cluster's merge/failover/staleness
+/// counters. Empty string while the registry is disabled, so `fedhc run`
+/// can print it unconditionally.
+pub fn format_hotspots(registry: &MetricsRegistry, k: usize) -> String {
+    if !registry.is_enabled() {
+        return String::new();
+    }
+    let mut s = String::new();
+    let top = registry.top_sats_by_comm(k);
+    s.push_str(&format!("Hotspots (top-{} satellites by comm time)\n", top.len()));
+    s.push_str(&format!(
+        "{:<12}{:>9}{:>9}{:>7}{:>13}{:>11}\n",
+        "sat", "uploads", "retx", "hops", "bytes", "comm_s"
+    ));
+    let sats = registry.sats();
+    for i in top {
+        let st = &sats[i];
+        s.push_str(&format!(
+            "{:<12}{:>9}{:>9}{:>7}{:>13.0}{:>11.2}\n",
+            format!("sat:{i}"),
+            st.uploads,
+            st.retransmits,
+            st.hops,
+            st.bytes,
+            st.comm_s,
+        ));
+    }
+    s.push_str(&format!(
+        "{:<12}{:>9}{:>9}{:>7}{:>13}\n",
+        "cluster", "merges", "failov", "stale", "window_s"
+    ));
+    for (c, st) in registry.clusters().iter().enumerate() {
+        s.push_str(&format!(
+            "{:<12}{:>9}{:>9}{:>7}{:>13.1}\n",
+            format!("cluster:{c}"),
+            st.merges,
+            st.failovers,
+            st.stale_merges,
+            st.window_s,
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +215,29 @@ mod tests {
         assert!(row.contains('9'), "retransmits missing:\n{out}");
         assert!(row.contains("2048"), "wire bytes missing:\n{out}");
         assert!(row.contains("0.5500"), "accuracy missing:\n{out}");
+    }
+
+    #[test]
+    fn hotspots_formatting() {
+        let mut reg = MetricsRegistry::disabled();
+        assert_eq!(format_hotspots(&reg, 4), "");
+        reg.enable(3, 2);
+        reg.record_upload(2, 7.5, 4096.0, 3, 2);
+        reg.record_upload(0, 1.0, 1024.0, 0, 1);
+        reg.record_merge(1);
+        reg.record_failover(1);
+        reg.record_staleness(1, 2.0);
+        reg.record_window(0, 90.0);
+        let out = format_hotspots(&reg, 2);
+        let lines: Vec<&str> = out.trim().lines().collect();
+        // title + sat header + 2 sat rows + cluster header + 2 cluster rows
+        assert_eq!(lines.len(), 7, "unexpected shape:\n{out}");
+        assert!(lines[2].starts_with("sat:2"), "busiest sat first:\n{out}");
+        assert!(lines[2].contains("4096") && lines[2].contains("7.50"));
+        assert!(lines[3].starts_with("sat:0"));
+        assert!(lines[6].starts_with("cluster:1"));
+        assert!(lines[6].contains('1'), "cluster counters missing:\n{out}");
+        assert!(lines[5].contains("90.0"), "window seconds missing:\n{out}");
     }
 
     #[test]

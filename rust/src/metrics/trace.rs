@@ -1,0 +1,310 @@
+//! Sim-time structured tracing: spans and instants on the simulated
+//! clock, exported as JSON-lines and Chrome `trace_event` JSON.
+//!
+//! The tracer records what the coordinator *scheduled*, on the
+//! deterministic simulated timeline: round and cluster-stage spans,
+//! per-transfer upload spans, retry/relay-hop/failover instants, ground
+//! contact windows, merges, re-clusters, and evaluations. Every event is
+//! keyed by `(t_sim, kind, entity)` with stable entity IDs (`run`,
+//! `sat:<i>`, `cluster:<c>`, `gs:<g>`), appended in coordinator order —
+//! sim times and fold orders are worker-count invariant, so a given
+//! `--trace` file is byte-identical across `--workers 1|4`.
+//!
+//! Disabled (the default), every emit method is an inlined `None` check
+//! that touches no memory: the steady-state round path stays
+//! zero-allocation and committed goldens are byte-identical.
+//!
+//! Two exports from the same event list:
+//! - [`Tracer::to_jsonl`] — one JSON object per line with `t` (sim
+//!   seconds), `kind`, `entity`, and `dur` for spans; grep/jq friendly.
+//! - [`Tracer::to_chrome`] — Chrome `trace_event` format (`ph:"X"`
+//!   complete spans, `ph:"i"` instants, microsecond timestamps, one
+//!   named pseudo-thread per entity), loadable directly in Perfetto or
+//!   `chrome://tracing`.
+//!
+//! ```
+//! use fedhc::metrics::trace::{Entity, Tracer};
+//! let mut tr = Tracer::disabled();
+//! tr.instant(1.0, "merge", Entity::Cluster(0)); // no-op while disabled
+//! assert!(tr.is_empty());
+//! tr.enable();
+//! tr.span(0.0, 2.5, "round", Entity::Run);
+//! tr.instant(1.5, "retry", Entity::Sat(7));
+//! assert_eq!(tr.to_jsonl().lines().count(), 2);
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Who an event belongs to. IDs are stable across runs and worker
+/// counts: `run`, `sat:<global satellite index>`, `cluster:<label>`,
+/// `gs:<ground station index>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Entity {
+    /// The whole run (rounds, re-clusters, evaluations).
+    Run,
+    /// One satellite, by global constellation index.
+    Sat(usize),
+    /// One cluster, by label.
+    Cluster(usize),
+    /// One ground station, by station index.
+    Ground(usize),
+}
+
+impl Entity {
+    /// The stable ID string.
+    pub fn id(self) -> String {
+        match self {
+            Entity::Run => "run".to_string(),
+            Entity::Sat(i) => format!("sat:{i}"),
+            Entity::Cluster(c) => format!("cluster:{c}"),
+            Entity::Ground(g) => format!("gs:{g}"),
+        }
+    }
+}
+
+/// One recorded event: an instant (`dur == None`) or a span.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Simulated start time, seconds.
+    pub t: f64,
+    /// Span duration in simulated seconds; `None` for instants.
+    pub dur: Option<f64>,
+    /// Event kind (static snake_case vocabulary, e.g. `upload`,
+    /// `retry`, `relay_hop`, `window_open`, `merge`, `failover`).
+    pub kind: &'static str,
+    /// Owning entity.
+    pub entity: Entity,
+}
+
+/// The sim-time tracer. `None` inner state means disabled: emit calls
+/// return immediately without allocating.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    inner: Option<Vec<TraceEvent>>,
+}
+
+impl Tracer {
+    /// A disabled tracer (the default on every [`crate::coordinator::Trial`]).
+    pub fn disabled() -> Self {
+        Tracer { inner: None }
+    }
+
+    /// Start recording. Idempotent; already-recorded events are kept.
+    pub fn enable(&mut self) {
+        if self.inner.is_none() {
+            self.inner = Some(Vec::new());
+        }
+    }
+
+    /// Whether emit calls record anything.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Number of recorded events (0 while disabled).
+    pub fn len(&self) -> usize {
+        self.inner.as_ref().map_or(0, Vec::len)
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The recorded events, in emission order.
+    pub fn events(&self) -> &[TraceEvent] {
+        self.inner.as_deref().unwrap_or(&[])
+    }
+
+    /// Record a span `[t, t + dur]` in simulated seconds.
+    #[inline]
+    pub fn span(&mut self, t: f64, dur: f64, kind: &'static str, entity: Entity) {
+        if let Some(ev) = self.inner.as_mut() {
+            ev.push(TraceEvent {
+                t,
+                dur: Some(dur),
+                kind,
+                entity,
+            });
+        }
+    }
+
+    /// Record an instantaneous event at simulated time `t`.
+    #[inline]
+    pub fn instant(&mut self, t: f64, kind: &'static str, entity: Entity) {
+        if let Some(ev) = self.inner.as_mut() {
+            ev.push(TraceEvent {
+                t,
+                dur: None,
+                kind,
+                entity,
+            });
+        }
+    }
+
+    /// JSON-lines export: one object per event, emission order, keys
+    /// `t`/`kind`/`entity` (+ `dur` on spans). Rust's shortest-roundtrip
+    /// float formatting keeps the bytes deterministic.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            let _ = write!(
+                out,
+                "{{\"t\":{},\"kind\":\"{}\",\"entity\":\"{}\"",
+                ev.t,
+                ev.kind,
+                ev.entity.id()
+            );
+            if let Some(d) = ev.dur {
+                let _ = write!(out, ",\"dur\":{d}");
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// Chrome `trace_event` export. Each entity becomes a named
+    /// pseudo-thread (`tid` assigned by first appearance, so the layout
+    /// is deterministic), spans become `ph:"X"` complete events and
+    /// instants `ph:"i"`, with timestamps in microseconds of simulated
+    /// time. The result opens directly in Perfetto.
+    pub fn to_chrome(&self) -> Json {
+        let mut tids: BTreeMap<String, usize> = BTreeMap::new();
+        let mut order: Vec<String> = Vec::new();
+        let mut events: Vec<Json> = Vec::new();
+        for ev in self.events() {
+            let id = ev.entity.id();
+            let tid = match tids.get(&id) {
+                Some(&t) => t,
+                None => {
+                    let t = order.len() + 1;
+                    tids.insert(id.clone(), t);
+                    order.push(id);
+                    t
+                }
+            };
+            let mut fields = vec![
+                ("cat", Json::str("sim")),
+                ("name", Json::str(ev.kind)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("ts", Json::num(ev.t * 1e6)),
+            ];
+            match ev.dur {
+                Some(d) => {
+                    fields.push(("ph", Json::str("X")));
+                    fields.push(("dur", Json::num(d * 1e6)));
+                }
+                None => {
+                    fields.push(("ph", Json::str("i")));
+                    fields.push(("s", Json::str("t")));
+                }
+            }
+            events.push(Json::obj(fields));
+        }
+        let mut all: Vec<Json> = order
+            .iter()
+            .enumerate()
+            .map(|(i, id)| {
+                Json::obj(vec![
+                    ("ph", Json::str("M")),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num((i + 1) as f64)),
+                    ("name", Json::str("thread_name")),
+                    ("args", Json::obj(vec![("name", Json::str(id))])),
+                ])
+            })
+            .collect();
+        all.extend(events);
+        Json::obj(vec![("traceEvents", Json::Arr(all))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut tr = Tracer::disabled();
+        tr.span(0.0, 1.0, "round", Entity::Run);
+        tr.instant(0.5, "merge", Entity::Cluster(2));
+        assert!(tr.is_empty());
+        assert!(!tr.is_enabled());
+        assert_eq!(tr.to_jsonl(), "");
+        let chrome = tr.to_chrome();
+        assert_eq!(chrome.get("traceEvents").as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn entity_ids_are_stable() {
+        assert_eq!(Entity::Run.id(), "run");
+        assert_eq!(Entity::Sat(12).id(), "sat:12");
+        assert_eq!(Entity::Cluster(3).id(), "cluster:3");
+        assert_eq!(Entity::Ground(0).id(), "gs:0");
+    }
+
+    #[test]
+    fn jsonl_lines_are_valid_json_with_required_keys() {
+        let mut tr = Tracer::disabled();
+        tr.enable();
+        tr.span(0.0, 2.5, "round", Entity::Run);
+        tr.instant(1.25, "retry", Entity::Sat(7));
+        tr.span(0.5, 0.125, "upload", Entity::Sat(7));
+        let text = tr.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let j = Json::parse(line).expect("every trace line parses");
+            assert!(j.get("t").as_f64().is_some(), "t missing: {line}");
+            assert!(j.get("kind").as_str().is_some(), "kind missing: {line}");
+            assert!(j.get("entity").as_str().is_some(), "entity missing: {line}");
+        }
+        assert_eq!(Json::parse(lines[1]).unwrap().get("entity").as_str(), Some("sat:7"));
+        assert_eq!(Json::parse(lines[0]).unwrap().get("dur").as_f64(), Some(2.5));
+        assert_eq!(Json::parse(lines[1]).unwrap().get("dur"), &Json::Null);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let mut tr = Tracer::disabled();
+        tr.enable();
+        tr.span(1.0, 0.5, "upload", Entity::Sat(4));
+        tr.instant(1.5, "merge", Entity::Cluster(0));
+        tr.span(1.0, 0.25, "upload", Entity::Sat(4));
+        let chrome = tr.to_chrome();
+        let evs = chrome.get("traceEvents").as_arr().unwrap();
+        // 2 thread_name metadata records (sat:4, cluster:0) + 3 events
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].get("ph").as_str(), Some("M"));
+        assert_eq!(evs[0].get("args").get("name").as_str(), Some("sat:4"));
+        assert_eq!(evs[1].get("args").get("name").as_str(), Some("cluster:0"));
+        let span = &evs[2];
+        assert_eq!(span.get("ph").as_str(), Some("X"));
+        assert_eq!(span.get("ts").as_f64(), Some(1e6));
+        assert_eq!(span.get("dur").as_f64(), Some(5e5));
+        assert_eq!(span.get("tid").as_usize(), Some(1));
+        let instant = &evs[3];
+        assert_eq!(instant.get("ph").as_str(), Some("i"));
+        assert_eq!(instant.get("s").as_str(), Some("t"));
+        assert_eq!(instant.get("tid").as_usize(), Some(2));
+        // serialised form parses back (what `--trace` writes to disk)
+        let reparsed = Json::parse(&chrome.to_pretty()).unwrap();
+        assert_eq!(&reparsed, &chrome);
+    }
+
+    #[test]
+    fn emission_order_is_preserved() {
+        let mut tr = Tracer::disabled();
+        tr.enable();
+        tr.instant(5.0, "b", Entity::Run);
+        tr.instant(1.0, "a", Entity::Run);
+        let ev = tr.events();
+        assert_eq!(ev[0].kind, "b");
+        assert_eq!(ev[1].kind, "a");
+    }
+}

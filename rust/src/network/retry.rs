@@ -43,6 +43,22 @@ impl Default for RetryPolicy {
     }
 }
 
+impl RetryPolicy {
+    /// Offset (seconds) at which attempt `i` (0-based) of a transfer
+    /// starts, relative to the transfer's own start: attempt 0 starts
+    /// immediately; attempt `i` starts after `i` full `t_com` sends plus
+    /// the geometric backoff waits before retries `1..=i`. Used by the
+    /// telemetry plane to place per-retry instants inside an upload span
+    /// without re-running the corruption draws.
+    pub fn attempt_offset(&self, i: u32, t_com: f64) -> f64 {
+        let mut off = 0.0;
+        for k in 0..i {
+            off += t_com + t_com * self.backoff.powi(k as i32);
+        }
+        off
+    }
+}
+
 /// What one (possibly retried) transfer did on the wire.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TransferOutcome {
@@ -220,6 +236,24 @@ mod tests {
         // waits: 10·2⁰ + 10·2¹ + 10·2² = 70 s
         assert_eq!(out.wait_s, 70.0);
         assert_eq!(out.total_time(10.0), 4.0 * 10.0 + 70.0);
+    }
+
+    #[test]
+    fn attempt_offsets_tile_the_retry_timeline() {
+        let policy = RetryPolicy { max_retries: 3, backoff: 2.0 };
+        assert_eq!(policy.attempt_offset(0, 10.0), 0.0);
+        // attempt 1 starts after one send (10) + first backoff (10·2⁰)
+        assert_eq!(policy.attempt_offset(1, 10.0), 20.0);
+        // attempt 2 after a second send + 10·2¹ wait
+        assert_eq!(policy.attempt_offset(2, 10.0), 50.0);
+        assert_eq!(policy.attempt_offset(3, 10.0), 100.0);
+        // the final attempt's end reproduces the outcome's total time
+        let mut rng = Rng::new(7);
+        let out = transfer_with_retries(&policy, 1.0, 1e6, 10.0, &mut rng);
+        assert_eq!(
+            policy.attempt_offset(out.attempts - 1, 10.0) + 10.0,
+            out.total_time(10.0)
+        );
     }
 
     #[test]

@@ -83,6 +83,17 @@ impl RouteTree {
             u = self.parent[u];
         }
     }
+
+    /// Iterator form of [`RouteTree::path_senders`]: yields `i`, then
+    /// each relay up to (but excluding) the root, with no scratch buffer.
+    /// The telemetry plane walks this to emit one `relay_hop` instant per
+    /// uplink transmission without allocating when tracing is disabled.
+    pub fn path_iter(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        std::iter::successors(Some(i), move |&u| {
+            (u != self.root).then(|| self.parent[u])
+        })
+        .take_while(move |&u| u != self.root)
+    }
 }
 
 /// Build the shortest-path routing tree for one cluster.
@@ -373,6 +384,8 @@ mod tests {
         assert_eq!(path, vec![3, 2, 1]);
         t.path_senders(0, &mut path);
         assert!(path.is_empty(), "the root uploads to nobody");
+        assert_eq!(t.path_iter(3).collect::<Vec<_>>(), vec![3, 2, 1]);
+        assert_eq!(t.path_iter(0).count(), 0, "path_iter matches path_senders at the root");
     }
 
     #[test]

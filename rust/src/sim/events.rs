@@ -53,6 +53,23 @@ pub enum Event {
     Fault { fault: Fault },
 }
 
+impl Event {
+    /// Stable snake_case name of the variant, used by the telemetry
+    /// plane as the `kind` of instants emitted at event pops.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::ComputeDone { .. } => "compute_done",
+            Event::TxDone { .. } => "tx_done",
+            Event::WindowOpen { .. } => "window_open",
+            Event::WindowClose { .. } => "window_close",
+            Event::UploadReady { .. } => "upload_ready",
+            Event::MergeDue { .. } => "merge_due",
+            Event::EvalDue { .. } => "eval_due",
+            Event::Fault { .. } => "fault",
+        }
+    }
+}
+
 /// A timestamped event: ordered by time, ties broken by insertion order.
 #[derive(Clone, Copy, Debug)]
 pub struct Scheduled {
@@ -229,6 +246,17 @@ mod tests {
                 last = Some(s);
             }
         });
+    }
+
+    #[test]
+    fn kinds_are_stable_snake_case() {
+        assert_eq!(Event::ComputeDone { member: 0, cluster: 0 }.kind(), "compute_done");
+        assert_eq!(Event::TxDone { member: 0, cluster: 0 }.kind(), "tx_done");
+        assert_eq!(Event::WindowOpen { cluster: 0 }.kind(), "window_open");
+        assert_eq!(Event::WindowClose { cluster: 0 }.kind(), "window_close");
+        assert_eq!(Event::UploadReady { member: 0, cluster: 0 }.kind(), "upload_ready");
+        assert_eq!(Event::MergeDue { cluster: 0 }.kind(), "merge_due");
+        assert_eq!(Event::EvalDue { round: 0 }.kind(), "eval_due");
     }
 
     #[test]

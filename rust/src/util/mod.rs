@@ -1,11 +1,12 @@
 //! Foundational substrates the offline image does not provide as crates:
 //! a deterministic PRNG, a JSON parser/writer (for the artifact manifest and
-//! experiment records), a CLI argument parser, a leveled logger, a small
-//! property-testing harness, and summary statistics.
+//! experiment records), a CLI argument parser, a leveled logger, wall-clock
+//! phase profiling, a small property-testing harness, and summary statistics.
 
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod profile;
 pub mod quickprop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,233 @@
+//! Telemetry-plane integration tests on the built-in host backend.
+//!
+//! The contracts under test, in order of importance:
+//! 1. a `--trace` export is **byte-identical** across worker counts
+//!    (emission happens on the coordinator thread, keyed by sim time);
+//! 2. enabling the tracer/registry does not perturb the simulated
+//!    trajectory — the metrics a telemetry run records equal a plain
+//!    run's, record for record;
+//! 3. disabled telemetry records nothing and exports empty documents;
+//! 4. the JSONL and Chrome `trace_event` exports are well-formed
+//!    (every line parses with `t`/`kind`/`entity`; metadata-first
+//!    Chrome shape), and the registry/recorder JSON schemas hold on a
+//!    real run, not just the unit fixtures.
+
+use fedhc::config::{AggregationMode, ExperimentConfig};
+use fedhc::coordinator::{run_clustered, RunResult, Strategy, Trial};
+use fedhc::metrics::recorder;
+use fedhc::metrics::report::format_hotspots;
+use fedhc::runtime::{Manifest, ModelRuntime};
+use fedhc::util::json::Json;
+
+/// One traced tiny-preset FedHC run; returns the JSONL export, the
+/// pretty-printed Chrome export, the run result, and the registry dump.
+fn traced_run(
+    workers: usize,
+    tweak: &dyn Fn(&mut ExperimentConfig),
+) -> (String, String, RunResult, Json) {
+    let manifest = Manifest::host();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 5;
+    cfg.workers = workers;
+    cfg.target_accuracy = None;
+    tweak(&mut cfg);
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
+    trial.trace.enable();
+    trial.registry.enable(cfg.clients, cfg.clusters);
+    let res = run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    let jsonl = trial.trace.to_jsonl();
+    let chrome = trial.trace.to_chrome().to_pretty();
+    let registry = trial.registry.to_json();
+    (jsonl, chrome, res, registry)
+}
+
+#[test]
+fn trace_bytes_identical_across_worker_counts() {
+    // a BER floor forces the retry plane (and its trace instants) live
+    let noisy = |cfg: &mut ExperimentConfig| cfg.ber = 1e-6;
+    let (jsonl_1, chrome_1, _, reg_1) = traced_run(1, &noisy);
+    let (jsonl_4, chrome_4, _, reg_4) = traced_run(4, &noisy);
+    assert!(!jsonl_1.is_empty(), "traced run emitted nothing");
+    assert_eq!(jsonl_1, jsonl_4, "JSONL trace differs across --workers 1|4");
+    assert_eq!(chrome_1, chrome_4, "Chrome trace differs across --workers 1|4");
+    assert_eq!(reg_1, reg_4, "registry dump differs across --workers 1|4");
+}
+
+#[test]
+fn buffered_trace_bytes_identical_across_worker_counts() {
+    let buffered = |cfg: &mut ExperimentConfig| {
+        cfg.aggregation = AggregationMode::Buffered;
+        cfg.buffer_size = 2;
+    };
+    let (jsonl_1, chrome_1, _, _) = traced_run(1, &buffered);
+    let (jsonl_4, chrome_4, _, _) = traced_run(4, &buffered);
+    assert!(!jsonl_1.is_empty(), "buffered traced run emitted nothing");
+    assert_eq!(jsonl_1, jsonl_4, "buffered JSONL differs across workers");
+    assert_eq!(chrome_1, chrome_4, "buffered Chrome trace differs across workers");
+}
+
+#[test]
+fn telemetry_does_not_perturb_the_trajectory() {
+    // plain run (telemetry disabled end to end)
+    let manifest = Manifest::host();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 5;
+    cfg.target_accuracy = None;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut plain = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
+    let base = run_clustered(&mut plain, Strategy::fedhc()).unwrap();
+    assert!(plain.trace.is_empty(), "disabled tracer recorded events");
+    assert_eq!(plain.trace.to_jsonl(), "", "disabled tracer exported bytes");
+    assert!(
+        format_hotspots(&plain.registry, 5).is_empty(),
+        "disabled registry rendered a hotspot table"
+    );
+
+    // identical config with every telemetry sink on
+    let (_, _, traced, _) = traced_run(1, &|_| {});
+    assert_eq!(base.ledger.records.len(), traced.ledger.records.len());
+    for (a, b) in base.ledger.records.iter().zip(&traced.ledger.records) {
+        assert!(
+            a.round == b.round
+                && a.time_s == b.time_s
+                && a.energy_j == b.energy_j
+                && a.accuracy == b.accuracy
+                && a.loss == b.loss,
+            "telemetry perturbed round {}: {a:?} vs {b:?}",
+            a.round
+        );
+    }
+    assert_eq!(base.final_accuracy, traced.final_accuracy);
+    assert_eq!(base.ledger.time_s, traced.ledger.time_s);
+}
+
+#[test]
+fn jsonl_export_is_line_parseable_with_required_keys() {
+    let (jsonl, _, _, _) = traced_run(1, &|_| {});
+    let mut kinds: Vec<String> = Vec::new();
+    for line in jsonl.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad trace line {line:?}: {e}"));
+        let t = j.get("t").as_f64().expect("t missing");
+        assert!(t.is_finite() && t >= 0.0, "bad sim time {t}");
+        kinds.push(j.get("kind").as_str().expect("kind missing").to_string());
+        let entity = j.get("entity").as_str().expect("entity missing");
+        assert!(
+            entity == "run"
+                || entity.starts_with("sat:")
+                || entity.starts_with("cluster:")
+                || entity.starts_with("gs:"),
+            "unknown entity id {entity}"
+        );
+    }
+    for expected in ["round", "cluster_stage", "cluster_round", "upload", "merge", "eval"] {
+        assert!(
+            kinds.iter().any(|k| k == expected),
+            "trace is missing any '{expected}' event"
+        );
+    }
+}
+
+#[test]
+fn chrome_export_is_metadata_first_and_well_formed() {
+    let (_, chrome, _, _) = traced_run(1, &|_| {});
+    let doc = Json::parse(&chrome).expect("chrome export parses");
+    let events = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+    assert_eq!(events[0].get("ph").as_str(), Some("M"), "metadata records come first");
+    let mut spans = 0usize;
+    for ev in events {
+        match ev.get("ph").as_str().expect("ph missing") {
+            "M" => {
+                assert_eq!(ev.get("name").as_str(), Some("thread_name"));
+                assert!(ev.get("args").get("name").as_str().is_some());
+            }
+            "X" => {
+                spans += 1;
+                assert!(ev.get("ts").as_f64().is_some());
+                assert!(ev.get("dur").as_f64().is_some());
+            }
+            "i" => assert_eq!(ev.get("s").as_str(), Some("t")),
+            other => panic!("unexpected phase {other:?}"),
+        }
+        assert!(ev.get("pid").as_usize().is_some());
+        assert!(ev.get("tid").as_usize().is_some());
+    }
+    assert!(spans > 0, "no complete spans in the Chrome export");
+}
+
+#[test]
+fn registry_dump_reflects_the_run() {
+    let (_, _, res, registry) = traced_run(1, &|_| {});
+    let sats = registry.get("sats").as_arr().expect("sats array");
+    let clusters = registry.get("clusters").as_arr().expect("clusters array");
+    assert!(!sats.is_empty() && !clusters.is_empty());
+    let uploads: f64 = sats.iter().map(|s| s.get("uploads").as_f64().unwrap()).sum();
+    let merges: f64 = clusters.iter().map(|c| c.get("merges").as_f64().unwrap()).sum();
+    assert!(uploads > 0.0, "no uploads recorded");
+    assert!(merges >= res.ledger.records.len() as f64, "fewer merges than rounds");
+    for name in ["comm_s", "retries", "staleness", "hops", "bytes"] {
+        let h = registry.get("histograms").get(name);
+        let edges = h.get("edges").as_arr().expect("edges").len();
+        let counts = h.get("counts").as_arr().expect("counts").len();
+        assert_eq!(counts, edges + 1, "histogram {name} shape");
+    }
+    // the comm-time histogram saw every upload
+    let comm_total: f64 = registry
+        .get("histograms")
+        .get("comm_s")
+        .get("counts")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.as_f64().unwrap())
+        .sum();
+    assert_eq!(comm_total, uploads, "histogram samples != uploads");
+}
+
+#[test]
+fn hotspot_table_renders_for_an_enabled_registry() {
+    let manifest = Manifest::host();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.rounds = 3;
+    cfg.target_accuracy = None;
+    let rt = ModelRuntime::load(&manifest, cfg.variant()).unwrap();
+    let mut trial = Trial::new(cfg.clone(), &manifest, &rt).unwrap();
+    trial.registry.enable(cfg.clients, cfg.clusters);
+    run_clustered(&mut trial, Strategy::fedhc()).unwrap();
+    let table = format_hotspots(&trial.registry, 3);
+    assert!(table.contains("Hotspots (top-3 satellites by comm time)"), "{table}");
+    assert!(table.contains("sat:") && table.contains("cluster:"), "{table}");
+}
+
+#[test]
+fn recorder_schema_shape_is_pinned_on_a_real_run() {
+    let (_, _, res, _) = traced_run(1, &|_| {});
+    let keys_of = |doc: &Json| -> Vec<String> {
+        let records = doc.get("records").as_arr().expect("records array");
+        records[0].as_obj().expect("record object").keys().cloned().collect()
+    };
+    let default_doc = recorder::to_json(&res.ledger);
+    assert_eq!(
+        keys_of(&default_doc),
+        ["accuracy", "energy_j", "loss", "reclustered", "round", "time_s"],
+        "default per-record schema drifted"
+    );
+    let extended_doc = recorder::to_json_extended(&res.ledger);
+    let extended_keys = keys_of(&extended_doc);
+    assert_eq!(
+        extended_keys,
+        [
+            "accuracy",
+            "d_retransmits",
+            "d_route_hops",
+            "d_wire_bytes",
+            "energy_j",
+            "loss",
+            "reclustered",
+            "round",
+            "time_s"
+        ],
+        "--record-extended per-record schema drifted"
+    );
+}
